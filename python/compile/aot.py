@@ -1,0 +1,139 @@
+"""AOT lowering: jax → HLO *text* artifacts for the rust PJRT runtime.
+
+Emits, per `make artifacts` (spec via --spec / GG_SPEC):
+
+    artifacts/gcn_grad.hlo.txt     (params..6, batch..6) → (loss, correct, grads..6)
+    artifacts/gcn_apply.hlo.txt    (params..6, grads..6, lr) → params..6
+    artifacts/gcn_forward.hlo.txt  (params..6, batch..5) → (logits,)
+    artifacts/meta.json            shapes + argument order contract
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that this image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import Spec
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract(shapes, dtype=jnp.float32):
+    return [jax.ShapeDtypeStruct(s, dtype) for s in shapes]
+
+
+def lower_all(spec: Spec):
+    """Lower grad/apply/forward for `spec`; returns {name: hlo_text}."""
+    pshapes = [spec.param_shapes()[n] for n in model.PARAM_NAMES]
+    bshapes = spec.batch_shapes()
+    params_av = _abstract(pshapes)
+    feats_av = _abstract([bshapes[n] for n in model.BATCH_NAMES[:5]])
+    y_av = jax.ShapeDtypeStruct(bshapes["y"], jnp.int32)
+
+    def grad_fn(*flat):
+        params = list(flat[:6])
+        batch = list(flat[6:])
+        return model.grad_step(params, batch)
+
+    def apply_fn(*flat):
+        params = list(flat[:6])
+        grads = list(flat[6:12])
+        lr = flat[12]
+        return model.apply_step(params, grads, lr)
+
+    def forward_fn(*flat):
+        params = list(flat[:6])
+        batch = list(flat[6:]) + [None]
+        return (model.forward(params, batch),)
+
+    lr_av = jax.ShapeDtypeStruct((), jnp.float32)
+    out = {}
+    out["gcn_grad"] = to_hlo_text(
+        jax.jit(grad_fn).lower(*params_av, *feats_av, y_av)
+    )
+    out["gcn_apply"] = to_hlo_text(
+        jax.jit(apply_fn).lower(*params_av, *params_av, lr_av)
+    )
+    out["gcn_forward"] = to_hlo_text(
+        jax.jit(forward_fn).lower(*params_av, *feats_av)
+    )
+    return out
+
+
+def build_meta(spec: Spec) -> dict:
+    """The argument-order contract consumed by rust/src/train/runtime.rs."""
+    return {
+        "spec": {
+            "batch": spec.batch,
+            "f1": spec.f1,
+            "f2": spec.f2,
+            "dim": spec.dim,
+            "hidden": spec.hidden,
+            "classes": spec.classes,
+        },
+        "param_names": model.PARAM_NAMES,
+        "param_shapes": [list(spec.param_shapes()[n]) for n in model.PARAM_NAMES],
+        "batch_names": model.BATCH_NAMES,
+        "batch_shapes": [list(spec.batch_shapes()[n]) for n in model.BATCH_NAMES],
+        "artifacts": {
+            "grad": {
+                "file": "gcn_grad.hlo.txt",
+                "inputs": model.PARAM_NAMES + model.BATCH_NAMES,
+                "outputs": ["loss", "correct"] + [f"g_{n}" for n in model.PARAM_NAMES],
+            },
+            "apply": {
+                "file": "gcn_apply.hlo.txt",
+                "inputs": model.PARAM_NAMES + [f"g_{n}" for n in model.PARAM_NAMES] + ["lr"],
+                "outputs": model.PARAM_NAMES,
+            },
+            "forward": {
+                "file": "gcn_forward.hlo.txt",
+                "inputs": model.PARAM_NAMES + model.BATCH_NAMES[:5],
+                "outputs": ["logits"],
+            },
+        },
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--spec",
+        default=os.environ.get("GG_SPEC", ""),
+        help='e.g. "b=32,f1=10,f2=5,d=32,h=64,c=8"',
+    )
+    args = parser.parse_args()
+    spec = Spec.parse(args.spec)
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    artifacts = lower_all(spec)
+    for name, text in artifacts.items():
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    meta = build_meta(spec)
+    (out_dir / "meta.json").write_text(json.dumps(meta, indent=2))
+    print(f"wrote {out_dir / 'meta.json'} (spec={spec})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1: Pallas kernels (build-time only) and their pure-jnp references."""
+
+from . import aggregate, fused_gcn, ref  # noqa: F401

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: masked neighbor aggregation (masked mean over K).
+
+The GNN sampling hot-spot: for every node, average the features of its
+(padded) sampled neighbors. Fixed fanout sampling gives static ``[N, K, D]``
+shapes, so the whole aggregation is dense + masked — no dynamic gather on
+the hot path (DESIGN.md §3, hardware adaptation).
+
+TPU mapping: the grid blocks over N; one ``[bN, K, D]`` feature tile and a
+``[bN, K]`` mask tile live in VMEM per step; the reduction over K runs on
+the VPU. ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO with identical
+numerics (see /opt/xla-example/README.md).
+
+The kernel carries a ``jax.custom_vjp``: Pallas calls have no transpose
+rule, and the backward pass is cheap dense math that XLA fuses well. The
+mask cotangent is defined as zero — masks are data, never parameters, so
+no gradient ever flows through them in the model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Grid block over N. 128 rows keeps the VMEM tile small (see DESIGN.md §7)
+# while amortizing grid overhead.
+BLOCK_N = 128
+
+
+def _masked_mean_kernel(x_ref, m_ref, o_ref):
+    x = x_ref[...]  # [bN, K, D]
+    m = m_ref[...].astype(x.dtype)  # [bN, K]
+    s = jnp.sum(x * m[..., None], axis=1)  # [bN, D]
+    cnt = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+    o_ref[...] = s / cnt
+
+
+def _masked_mean_pallas(x: jax.Array, m: jax.Array, block_n: int) -> jax.Array:
+    n, k, d = x.shape
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    return pl.pallas_call(
+        _masked_mean_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def masked_mean(x: jax.Array, m: jax.Array, block_n: int = BLOCK_N) -> jax.Array:
+    """Masked mean over axis 1. ``x: [N, K, D]``, ``m: [N, K]`` → ``[N, D]``.
+
+    Semantics defined by :func:`..ref.masked_mean_ref`.
+    """
+    return _masked_mean_pallas(x, m, block_n)
+
+
+def _masked_mean_fwd(x, m, block_n):
+    out = _masked_mean_pallas(x, m, block_n)
+    return out, (m,)
+
+
+def _masked_mean_bwd(block_n, res, g):
+    (m,) = res
+    del block_n
+    mf = m.astype(g.dtype)
+    cnt = jnp.maximum(jnp.sum(mf, axis=1, keepdims=True), 1.0)  # [N, 1]
+    # d/dx[n,k,d] = g[n,d] * m[n,k] / cnt[n]
+    dx = g[:, None, :] * mf[..., None] / cnt[..., None]
+    # Masks are data (0/1 pads), never parameters: zero cotangent.
+    dm = jnp.zeros_like(m)
+    return dx, dm
+
+
+masked_mean.defvjp(_masked_mean_fwd, _masked_mean_bwd)

@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has its semantics defined *here*; the
+pytest suite asserts `assert_allclose(kernel(x), ref(x))` across a
+hypothesis-driven sweep of shapes and dtypes. The L2 model can also be run
+entirely on these references (`model.forward(..., use_kernels=False)`),
+which is how kernel-vs-reference equivalence is checked end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_mean_ref(x: jax.Array, m: jax.Array) -> jax.Array:
+    """Masked mean over the K axis.
+
+    Args:
+      x: ``[N, K, D]`` neighbor features.
+      m: ``[N, K]`` validity mask (0/1 floats).
+
+    Returns:
+      ``[N, D]`` — ``sum_k x[:, k] * m[:, k] / max(sum_k m[:, k], 1)``.
+      Rows with no valid neighbors yield zeros.
+    """
+    s = jnp.einsum("nkd,nk->nd", x, m.astype(x.dtype))
+    cnt = jnp.maximum(jnp.sum(m, axis=-1, keepdims=True), 1.0).astype(x.dtype)
+    return s / cnt
+
+
+def sage_layer_ref(
+    x_self: jax.Array,
+    x_agg: jax.Array,
+    w_self: jax.Array,
+    w_neigh: jax.Array,
+    b: jax.Array,
+) -> jax.Array:
+    """GraphSAGE-mean layer: ``relu(x_self @ Ws + x_agg @ Wn + b)``.
+
+    Args:
+      x_self:  ``[N, D]`` node's own features.
+      x_agg:   ``[N, D]`` aggregated neighbor features.
+      w_self:  ``[D, H]``; w_neigh: ``[D, H]``; b: ``[H]``.
+
+    Returns:
+      ``[N, H]``.
+    """
+    return jax.nn.relu(x_self @ w_self + x_agg @ w_neigh + b)

@@ -1,0 +1,196 @@
+"""L2: the GCN training step over fixed-shape padded subgraph batches.
+
+A 2-layer GraphSAGE-mean GCN (the paper trains "a GCN model for mini-batch
+training" with 2-hop / fanout-(40,20) sampling; GraphSAGE-mean is the
+standard sampled-neighborhood formulation of that setup):
+
+    agg2[b,i] = masked_mean(x_h2[b,i,:,:], m_h2[b,i,:])        # hop-2 → hop-1
+    h1[b,i]   = relu(x_h1[b,i] @ Ws1 + agg2[b,i] @ Wn1 + b1)   # layer 1
+    s1[b]     = relu(x_seed[b] @ Ws1 + masked_mean(x_h1, m_h1)[b] @ Wn1 + b1)
+    aggh[b]   = masked_mean(h1, m_h1)[b]                        # hop-1 → seed
+    logits[b] = s1[b] @ Ws2 + aggh[b] @ Wn2 + b2                # layer 2
+    loss      = mean softmax-CE(logits, y)
+
+The aggregations and the fused layer-1 are the L1 Pallas kernels; setting
+``use_kernels=False`` swaps in the pure-jnp references (tested equal).
+
+Batch tensor layout (all f32 except y: i32) — the contract with the rust
+runtime (`rust/src/train/batch.rs`), recorded in artifacts/meta.json:
+
+    x_seed [B, D]   x_h1 [B, F1, D]   x_h2 [B, F1, F2, D]
+    m_h1   [B, F1]  m_h2 [B, F1, F2]  y    [B]
+
+Parameter order (everywhere: artifacts, rust ParamStore, AllReduce):
+
+    ws1 [D,H], wn1 [D,H], b1 [H], ws2 [H,C], wn2 [H,C], b2 [C]
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.aggregate import masked_mean
+from .kernels.fused_gcn import sage_layer
+
+PARAM_NAMES: List[str] = ["ws1", "wn1", "b1", "ws2", "wn2", "b2"]
+BATCH_NAMES: List[str] = ["x_seed", "x_h1", "x_h2", "m_h1", "m_h2", "y"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Static shape specification for one compiled artifact set."""
+
+    batch: int = 32
+    f1: int = 10
+    f2: int = 5
+    dim: int = 32
+    hidden: int = 64
+    classes: int = 8
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        return {
+            "ws1": (self.dim, self.hidden),
+            "wn1": (self.dim, self.hidden),
+            "b1": (self.hidden,),
+            "ws2": (self.hidden, self.classes),
+            "wn2": (self.hidden, self.classes),
+            "b2": (self.classes,),
+        }
+
+    def batch_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        b, f1, f2, d = self.batch, self.f1, self.f2, self.dim
+        return {
+            "x_seed": (b, d),
+            "x_h1": (b, f1, d),
+            "x_h2": (b, f1, f2, d),
+            "m_h1": (b, f1),
+            "m_h2": (b, f1, f2),
+            "y": (b,),
+        }
+
+    @staticmethod
+    def parse(s: str) -> "Spec":
+        """Parse ``"b=32,f1=10,f2=5,d=32,h=64,c=8"`` (all keys optional)."""
+        kv = {}
+        for part in filter(None, s.split(",")):
+            k, v = part.split("=")
+            kv[k.strip()] = int(v)
+        return Spec(
+            batch=kv.get("b", 32),
+            f1=kv.get("f1", 10),
+            f2=kv.get("f2", 5),
+            dim=kv.get("d", 32),
+            hidden=kv.get("h", 64),
+            classes=kv.get("c", 8),
+        )
+
+
+def init_params(spec: Spec, key: jax.Array) -> List[jax.Array]:
+    """Glorot-uniform weights, zero biases. Order = PARAM_NAMES."""
+    shapes = spec.param_shapes()
+    out = []
+    for name in PARAM_NAMES:
+        shape = shapes[name]
+        if len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            limit = (6.0 / (shape[0] + shape[1])) ** 0.5
+            out.append(jax.random.uniform(sub, shape, jnp.float32, -limit, limit))
+    return out
+
+
+def forward(params, batch, *, use_kernels: bool = True) -> jax.Array:
+    """Logits ``[B, C]`` for a padded subgraph batch.
+
+    Args:
+      params: list in PARAM_NAMES order.
+      batch: list/tuple in BATCH_NAMES order (y may be None for inference).
+    """
+    ws1, wn1, b1, ws2, wn2, b2 = params
+    x_seed, x_h1, x_h2, m_h1, m_h2 = batch[:5]
+    B, F1, F2, D = x_h2.shape
+    mm = masked_mean if use_kernels else ref.masked_mean_ref
+    layer = sage_layer if use_kernels else ref.sage_layer_ref
+
+    # Hop-2 → hop-1 aggregation: [B*F1, F2, D] → [B*F1, D].
+    agg2 = mm(x_h2.reshape(B * F1, F2, D), m_h2.reshape(B * F1, F2))
+    # Layer 1 on hop-1 nodes (fused kernel): [B*F1, H].
+    h1 = layer(x_h1.reshape(B * F1, D), agg2, ws1, wn1, b1)
+    h1 = h1.reshape(B, F1, -1)
+    # Layer-1 representation of the seed itself.
+    agg1_raw = mm(x_h1, m_h1)  # [B, D]
+    s1 = layer(x_seed, agg1_raw, ws1, wn1, b1)  # [B, H]
+    # Hop-1 → seed aggregation of layer-1 states, then layer 2.
+    aggh = mm(h1, m_h1)  # [B, H]
+    return s1 @ ws2 + aggh @ wn2 + b2
+
+
+def loss_and_acc(params, batch, *, use_kernels: bool = True):
+    """(mean CE loss, #correct) — both f32 scalars."""
+    logits = forward(params, batch, use_kernels=use_kernels)
+    y = batch[5]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), correct
+
+
+def grad_step(params, batch, *, use_kernels: bool = True):
+    """One gradient computation: returns ``(loss, correct, *grads)``.
+
+    This is the function AOT-compiled to ``gcn_grad.hlo.txt``; the rust
+    coordinator AllReduce-averages the grads across workers and feeds them
+    to :func:`apply_step`.
+    """
+
+    def loss_fn(ps):
+        return loss_and_acc(ps, batch, use_kernels=use_kernels)
+
+    (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    return (loss, correct, *grads)
+
+
+def apply_step(params, grads, lr):
+    """SGD update: ``p - lr * g`` for every parameter (order preserved).
+
+    AOT-compiled to ``gcn_apply.hlo.txt``; `lr` is a scalar input so the
+    schedule stays under the coordinator's control without recompilation.
+    """
+    return tuple(p - lr * g for p, g in zip(params, grads))
+
+
+def example_batch(spec: Spec, key: jax.Array, *, learnable: bool = True):
+    """Synthetic batch in BATCH_NAMES order (for tests and AOT tracing).
+
+    With ``learnable=True``, features carry a per-class signal so a few
+    training steps measurably reduce the loss.
+    """
+    ks = jax.random.split(key, 8)
+    b, f1, f2, d, c = spec.batch, spec.f1, spec.f2, spec.dim, spec.classes
+    y = jax.random.randint(ks[0], (b,), 0, c)
+    centroids = jax.random.normal(ks[1], (c, d)) * 2.0
+    noise = lambda k, shape: jax.random.normal(k, shape) * 1.0
+
+    if learnable:
+        x_seed = centroids[y] + noise(ks[2], (b, d))
+        x_h1 = centroids[y][:, None, :] + noise(ks[3], (b, f1, d))
+        x_h2 = centroids[y][:, None, None, :] + noise(ks[4], (b, f1, f2, d))
+    else:
+        x_seed = noise(ks[2], (b, d))
+        x_h1 = noise(ks[3], (b, f1, d))
+        x_h2 = noise(ks[4], (b, f1, f2, d))
+    m_h1 = (jax.random.uniform(ks[5], (b, f1)) < 0.8).astype(jnp.float32)
+    m_h2 = (jax.random.uniform(ks[6], (b, f1, f2)) < 0.8).astype(jnp.float32)
+    m_h2 = m_h2 * m_h1[..., None]  # invalid hop-1 ⇒ invalid hop-2 subtree
+    return [
+        x_seed.astype(jnp.float32),
+        x_h1.astype(jnp.float32),
+        x_h2.astype(jnp.float32),
+        m_h1,
+        m_h2,
+        y.astype(jnp.int32),
+    ]

@@ -1,0 +1,73 @@
+"""AOT pipeline: lowered HLO text artifacts + meta.json contract."""
+
+import json
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.model import Spec
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = Spec(batch=4, f1=3, f2=2, dim=6, hidden=8, classes=3)
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.lower_all(TINY)
+
+
+class TestLowering:
+    def test_emits_all_three(self, artifacts):
+        assert set(artifacts) == {"gcn_grad", "gcn_apply", "gcn_forward"}
+
+    def test_hlo_text_is_parseable_header(self, artifacts):
+        for name, text in artifacts.items():
+            assert text.startswith("HloModule"), name
+            assert "ROOT" in text, name
+
+    def test_grad_signature_arity(self, artifacts):
+        # 6 params + 5 feature tensors + labels = 12 inputs.
+        header = artifacts["gcn_grad"].splitlines()[0]
+        assert header.count("f32[") + header.count("s32[") >= 12
+
+    def test_no_custom_calls(self, artifacts):
+        """interpret=True Pallas must lower to plain HLO (a Mosaic
+        custom-call would be unloadable by the CPU PJRT client)."""
+        for name, text in artifacts.items():
+            assert "custom-call" not in text, f"{name} contains custom-call"
+
+    def test_apply_is_pure_elementwise(self, artifacts):
+        # SGD: subtract/multiply only — no dot ops.
+        assert "dot(" not in artifacts["gcn_apply"]
+
+
+class TestMeta:
+    def test_meta_matches_spec(self):
+        meta = aot.build_meta(TINY)
+        assert meta["spec"]["batch"] == 4
+        assert meta["param_names"] == model.PARAM_NAMES
+        assert meta["batch_shapes"][1] == [4, 3, 6]  # x_h1 [B, F1, D]
+        assert meta["artifacts"]["grad"]["outputs"][0] == "loss"
+        # json-serializable
+        json.dumps(meta)
+
+    def test_meta_input_order_is_params_then_batch(self):
+        meta = aot.build_meta(TINY)
+        inputs = meta["artifacts"]["grad"]["inputs"]
+        assert inputs[:6] == model.PARAM_NAMES
+        assert inputs[6:] == model.BATCH_NAMES
+
+
+class TestEndToEndWrite(object):
+    def test_main_writes_files(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(
+            "sys.argv",
+            ["aot", "--out-dir", str(tmp_path), "--spec", "b=4,f1=3,f2=2,d=6,h=8,c=3"],
+        )
+        aot.main()
+        for f in ["gcn_grad.hlo.txt", "gcn_apply.hlo.txt", "gcn_forward.hlo.txt", "meta.json"]:
+            assert (tmp_path / f).exists(), f
+        meta = json.loads((tmp_path / "meta.json").read_text())
+        assert meta["spec"]["classes"] == 3

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs. pure-jnp references.
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+ref.py — the core correctness signal for the compiled artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.aggregate import masked_mean
+from compile.kernels.fused_gcn import sage_layer
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=17)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestMaskedMean:
+    @settings(max_examples=25, deadline=None)
+    @given(n=dims, k=dims, d=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, k, d, seed):
+        k1, k2 = keys(seed, 2)
+        x = rand(k1, (n, k, d), jnp.float32)
+        m = (jax.random.uniform(k2, (n, k)) < 0.7).astype(jnp.float32)
+        got = masked_mean(x, m)
+        want = ref.masked_mean_ref(x, m)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=dims, k=dims, d=dims, seed=st.integers(0, 2**31 - 1))
+    def test_bfloat16_matches_ref(self, n, k, d, seed):
+        k1, k2 = keys(seed, 2)
+        x = rand(k1, (n, k, d), jnp.bfloat16)
+        m = (jax.random.uniform(k2, (n, k)) < 0.7).astype(jnp.bfloat16)
+        got = masked_mean(x, m)
+        want = ref.masked_mean_ref(x, m)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.array(got, np.float32), np.array(want, np.float32), rtol=3e-2, atol=3e-2
+        )
+
+    def test_all_masked_row_is_zero(self):
+        x = jnp.ones((3, 4, 5))
+        m = jnp.zeros((3, 4))
+        out = masked_mean(x, m)
+        np.testing.assert_array_equal(np.array(out), np.zeros((3, 5)))
+
+    def test_full_mask_is_plain_mean(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (6, 7, 8))
+        m = jnp.ones((6, 7))
+        np.testing.assert_allclose(
+            np.array(masked_mean(x, m)), np.array(x.mean(axis=1)), rtol=1e-5, atol=1e-6
+        )
+
+    def test_blocking_boundary_cases(self):
+        # n not divisible by the block, n == 1, n == block exactly.
+        for n in [1, 127, 128, 129, 300]:
+            x = jax.random.normal(jax.random.PRNGKey(n), (n, 3, 4))
+            m = jnp.ones((n, 3))
+            got = masked_mean(x, m)
+            want = ref.masked_mean_ref(x, m)
+            np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=dims, k=dims, d=dims, seed=st.integers(0, 2**31 - 1))
+    def test_gradient_matches_ref(self, n, k, d, seed):
+        """The custom VJP must agree with jnp autodiff of the reference."""
+        k1, k2, k3 = keys(seed, 3)
+        x = rand(k1, (n, k, d), jnp.float32)
+        m = (jax.random.uniform(k2, (n, k)) < 0.7).astype(jnp.float32)
+        w = rand(k3, (d,), jnp.float32)
+
+        def f_kernel(x):
+            return jnp.sum(masked_mean(x, m) * w)
+
+        def f_ref(x):
+            return jnp.sum(ref.masked_mean_ref(x, m) * w)
+
+        gk = jax.grad(f_kernel)(x)
+        gr = jax.grad(f_ref)(x)
+        np.testing.assert_allclose(np.array(gk), np.array(gr), rtol=1e-4, atol=1e-5)
+
+
+class TestSageLayer:
+    @settings(max_examples=25, deadline=None)
+    @given(n=dims, d=dims, h=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, d, h, seed):
+        k1, k2, k3, k4, k5 = keys(seed, 5)
+        xs = rand(k1, (n, d), jnp.float32)
+        xa = rand(k2, (n, d), jnp.float32)
+        ws = rand(k3, (d, h), jnp.float32)
+        wn = rand(k4, (d, h), jnp.float32)
+        b = rand(k5, (h,), jnp.float32)
+        got = sage_layer(xs, xa, ws, wn, b)
+        want = ref.sage_layer_ref(xs, xa, ws, wn, b)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)
+
+    def test_relu_clamps(self):
+        xs = -jnp.ones((4, 3)) * 100.0
+        xa = jnp.zeros((4, 3))
+        ws = jnp.eye(3)
+        wn = jnp.zeros((3, 3))
+        b = jnp.zeros((3,))
+        out = sage_layer(xs, xa, ws, wn, b)
+        np.testing.assert_array_equal(np.array(out), np.zeros((4, 3)))
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=dims, d=dims, h=dims, seed=st.integers(0, 2**31 - 1))
+    def test_gradients_match_ref(self, n, d, h, seed):
+        k1, k2, k3, k4, k5 = keys(seed, 5)
+        xs = rand(k1, (n, d), jnp.float32)
+        xa = rand(k2, (n, d), jnp.float32)
+        ws = rand(k3, (d, h), jnp.float32)
+        wn = rand(k4, (d, h), jnp.float32)
+        b = rand(k5, (h,), jnp.float32)
+
+        def f_kernel(ws, wn, b, xs, xa):
+            return jnp.sum(sage_layer(xs, xa, ws, wn, b) ** 2)
+
+        def f_ref(ws, wn, b, xs, xa):
+            return jnp.sum(ref.sage_layer_ref(xs, xa, ws, wn, b) ** 2)
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2, 3, 4))(ws, wn, b, xs, xa)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2, 3, 4))(ws, wn, b, xs, xa)
+        for a, r in zip(gk, gr):
+            np.testing.assert_allclose(np.array(a), np.array(r), rtol=1e-3, atol=1e-4)
+
+    def test_block_boundaries(self):
+        for n in [1, 127, 128, 129]:
+            key = jax.random.PRNGKey(n)
+            xs = jax.random.normal(key, (n, 5))
+            out = sage_layer(xs, xs, jnp.eye(5), jnp.eye(5), jnp.zeros((5,)))
+            want = ref.sage_layer_ref(xs, xs, jnp.eye(5), jnp.eye(5), jnp.zeros((5,)))
+            np.testing.assert_allclose(np.array(out), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+class TestKernelsInsideJit:
+    def test_kernels_compose_under_jit(self):
+        @jax.jit
+        def f(x, m, ws, wn, b):
+            agg = masked_mean(x, m)
+            return sage_layer(agg, agg, ws, wn, b)
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (9, 4, 6))
+        m = jnp.ones((9, 4))
+        ws = jax.random.normal(jax.random.PRNGKey(1), (6, 3))
+        wn = jax.random.normal(jax.random.PRNGKey(2), (6, 3))
+        b = jnp.zeros((3,))
+        got = f(x, m, ws, wn, b)
+        agg = ref.masked_mean_ref(x, m)
+        want = ref.sage_layer_ref(agg, agg, ws, wn, b)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,148 @@
+"""L2 correctness: GCN model shapes, kernel/reference parity, gradient
+checks against finite differences, and a learnability smoke test."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import Spec
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = Spec(batch=8, f1=4, f2=3, dim=8, hidden=16, classes=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(SMALL, jax.random.PRNGKey(0))
+    batch = model.example_batch(SMALL, jax.random.PRNGKey(1))
+    return params, batch
+
+
+class TestForward:
+    def test_logits_shape(self, setup):
+        params, batch = setup
+        logits = model.forward(params, batch)
+        assert logits.shape == (SMALL.batch, SMALL.classes)
+        assert logits.dtype == jnp.float32
+
+    def test_kernels_equal_reference(self, setup):
+        params, batch = setup
+        with_k = model.forward(params, batch, use_kernels=True)
+        without = model.forward(params, batch, use_kernels=False)
+        np.testing.assert_allclose(np.array(with_k), np.array(without), rtol=2e-5, atol=2e-5)
+
+    def test_masked_neighbors_do_not_leak(self, setup):
+        """Changing features of masked-out neighbors must not change logits."""
+        params, batch = setup
+        x_seed, x_h1, x_h2, m_h1, m_h2, y = batch
+        logits0 = model.forward(params, batch)
+        # Poison every masked position with huge values.
+        x_h1_p = x_h1 + (1.0 - m_h1)[..., None] * 1e6
+        x_h2_p = x_h2 + (1.0 - m_h2)[..., None] * 1e6
+        logits1 = model.forward(params, [x_seed, x_h1_p, x_h2_p, m_h1, m_h2, y])
+        np.testing.assert_allclose(np.array(logits0), np.array(logits1), rtol=1e-4, atol=1e-3)
+
+    def test_batch_independence(self, setup):
+        """Row b of the logits depends only on row b of the batch."""
+        params, batch = setup
+        logits = model.forward(params, batch)
+        # Zero out everything except row 0.
+        cut = [
+            jnp.concatenate([t[:1], jnp.zeros_like(t[1:])], axis=0) for t in batch[:5]
+        ] + [batch[5]]
+        logits_cut = model.forward(params, cut)
+        np.testing.assert_allclose(
+            np.array(logits[0]), np.array(logits_cut[0]), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestLossAndGrad:
+    def test_loss_is_finite_positive(self, setup):
+        params, batch = setup
+        loss, correct = model.loss_and_acc(params, batch)
+        assert np.isfinite(float(loss)) and float(loss) > 0
+        assert 0 <= float(correct) <= SMALL.batch
+
+    def test_grad_step_output_arity(self, setup):
+        params, batch = setup
+        out = model.grad_step(params, batch)
+        assert len(out) == 2 + len(model.PARAM_NAMES)
+        for g, p in zip(out[2:], params):
+            assert g.shape == p.shape
+
+    def test_grads_match_finite_differences(self, setup):
+        params, batch = setup
+        out = model.grad_step(params, batch)
+        grads = out[2:]
+        # Check a few random coordinates of each parameter.
+        rng = np.random.RandomState(0)
+        eps = 1e-3
+        for pi in range(len(params)):
+            p = np.array(params[pi])
+            flat_idx = rng.choice(p.size, size=min(3, p.size), replace=False)
+            for fi in flat_idx:
+                idx = np.unravel_index(fi, p.shape)
+                bump = np.zeros_like(p)
+                bump[idx] = eps
+                pp = [
+                    jnp.array(np.array(q) + (bump if qi == pi else 0))
+                    for qi, q in enumerate(params)
+                ]
+                pm = [
+                    jnp.array(np.array(q) - (bump if qi == pi else 0))
+                    for qi, q in enumerate(params)
+                ]
+                lp, _ = model.loss_and_acc(pp, batch, use_kernels=False)
+                lm, _ = model.loss_and_acc(pm, batch, use_kernels=False)
+                fd = (float(lp) - float(lm)) / (2 * eps)
+                an = float(np.array(grads[pi])[idx])
+                assert abs(fd - an) < 5e-3 + 0.05 * abs(an), (
+                    f"param {model.PARAM_NAMES[pi]} idx {idx}: fd={fd} an={an}"
+                )
+
+    def test_kernel_grads_equal_reference_grads(self, setup):
+        params, batch = setup
+        with_k = model.grad_step(params, batch, use_kernels=True)
+        without = model.grad_step(params, batch, use_kernels=False)
+        for a, b in zip(with_k, without):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-5)
+
+
+class TestTraining:
+    def test_loss_decreases_on_learnable_data(self):
+        spec = SMALL
+        params = list(model.init_params(spec, jax.random.PRNGKey(2)))
+        losses = []
+        for step in range(60):
+            batch = model.example_batch(spec, jax.random.PRNGKey(100 + step % 8))
+            out = model.grad_step(params, batch)
+            losses.append(float(out[0]))
+            params = list(model.apply_step(params, out[2:], 0.05))
+        assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:5]), losses[::10]
+
+    def test_apply_step_is_sgd(self, setup):
+        params, _ = setup
+        grads = [jnp.ones_like(p) for p in params]
+        new = model.apply_step(params, grads, 0.5)
+        for p, n in zip(params, new):
+            np.testing.assert_allclose(np.array(n), np.array(p) - 0.5, rtol=1e-6)
+
+
+class TestSpec:
+    def test_parse_roundtrip(self):
+        s = Spec.parse("b=16,f1=7,f2=2,d=12,h=24,c=3")
+        assert (s.batch, s.f1, s.f2, s.dim, s.hidden, s.classes) == (16, 7, 2, 12, 24, 3)
+
+    def test_parse_defaults(self):
+        s = Spec.parse("")
+        assert s == Spec()
+        s2 = Spec.parse("b=4")
+        assert s2.batch == 4 and s2.f1 == Spec().f1
+
+    def test_shapes_consistent(self):
+        s = Spec()
+        assert s.batch_shapes()["x_h2"] == (s.batch, s.f1, s.f2, s.dim)
+        assert s.param_shapes()["ws2"] == (s.hidden, s.classes)

@@ -1,0 +1,67 @@
+//! E2 — worker scaling (paper: 5.9 M nodes/s *on 256 workers*).
+//!
+//! Sweeps the simulated cluster width on a fixed R-MAT workload and
+//! reports **modeled cluster throughput** (this container has one core;
+//! see `cluster::costmodel`). Expected shape: near-linear scaling while
+//! scan work dominates, flattening as the fixed-cost merge rounds and
+//! per-message latency take over — the same knee the paper's 256-worker
+//! deployment sits past. Real 1-core wall time is reported for reference.
+
+use graphgen_plus::bench_harness::{render_markdown, Bench};
+use graphgen_plus::cluster::CostModel;
+use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
+use graphgen_plus::engines::{EngineConfig, NullSink, SubgraphEngine};
+use graphgen_plus::graph::generator;
+use graphgen_plus::sampler::FanoutSpec;
+use graphgen_plus::util::bytes::{fmt_rate, fmt_secs};
+
+fn main() {
+    let gen = generator::from_spec("rmat:n=65536,e=1048576", 2).unwrap();
+    let g = gen.csr();
+    let seeds: Vec<u32> = (0..8192u32).map(|i| i * 5 % g.num_nodes()).collect();
+    let model = CostModel::calibrated();
+    let mut bench = Bench::new("e2_scaling");
+    let mut rows = Vec::new();
+    let mut base_rate = None;
+    for workers in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let cfg = EngineConfig {
+            workers,
+            wave_size: 4096,
+            fanout: FanoutSpec::paper(),
+            ..Default::default()
+        };
+        let name = format!("workers={workers}");
+        let mut nodes = 0u64;
+        let mut sim = 0.0f64;
+        bench.measure(&name, None, || {
+            let sink = NullSink::default();
+            let r = GraphGenPlus.generate(&g, &seeds, &cfg, &sink).unwrap();
+            nodes = r.sampled_nodes;
+            sim = r.sim(&model).total_secs;
+        });
+        let rate = nodes as f64 / sim;
+        let base = *base_rate.get_or_insert(rate);
+        rows.push(vec![
+            workers.to_string(),
+            fmt_secs(sim),
+            fmt_rate(rate, "nodes"),
+            format!("{:.2}x", rate / base),
+            fmt_rate(rate / workers as f64, "nodes"),
+        ]);
+    }
+    bench.report(None);
+    println!(
+        "{}",
+        render_markdown(
+            "e2 modeled scaling (paper: 5.9 M nodes/s on 256 workers ≈ 23 k/s/worker)",
+            &[
+                "workers".into(),
+                "cluster time".into(),
+                "throughput".into(),
+                "speedup".into(),
+                "per-worker".into()
+            ],
+            &rows
+        )
+    );
+}

@@ -1,0 +1,196 @@
+//! E4 — hierarchical tree reduction vs. flat aggregation (hot nodes).
+//!
+//! Paper §2 step 3 / §3: the tree-reduction strategy "addresses hot node
+//! load issues" and contributes to the 1.3× over GraphGen. Two views:
+//!
+//! 1. **Communication**: the busiest receiver's bytes (the aggregator hot
+//!    spot) for flat vs. tree across degree-skew levels — flat funnels
+//!    every partial result into one worker; the tree spreads them.
+//! 2. **Wall time**: merge-dominated reduction of large partial maps,
+//!    tree (parallel rounds) vs. flat (serial fold), sweeping hub degree.
+//!
+//! Also validates exactness: tree output ≡ flat output (associative
+//! reservoir merges), asserted every iteration.
+
+use graphgen_plus::bench_harness::{render_markdown, Bench};
+use graphgen_plus::cluster::Fabric;
+use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
+use graphgen_plus::engines::{CollectSink, EngineConfig, NullSink, ReduceTopology, SubgraphEngine};
+use graphgen_plus::graph::generator;
+use graphgen_plus::mapreduce::{flat_reduce, tree_reduce_with_fabric};
+use graphgen_plus::sampler::FanoutSpec;
+use graphgen_plus::util::bytes::fmt_bytes;
+
+fn main() {
+    // --- 1. communication hot spot on star graphs ------------------------
+    let mut rows = Vec::new();
+    for hub_n in [8192u32, 32768, 131072] {
+        let gen = generator::from_spec(&format!("star:n={hub_n},hubs=2"), 1).unwrap();
+        let g = gen.csr();
+        let seeds: Vec<u32> = (0..1024u32).collect();
+        let run = |reduce| {
+            let cfg = EngineConfig {
+                workers: 8,
+                wave_size: 1024,
+                reduce,
+                fanout: FanoutSpec::paper(),
+                ..Default::default()
+            };
+            let sink = NullSink::default();
+            GraphGenPlus.generate(&g, &seeds, &cfg, &sink).unwrap()
+        };
+        let tree = run(ReduceTopology::Tree { arity: 4 });
+        let flat = run(ReduceTopology::Flat);
+        let hot = |r: &graphgen_plus::engines::GenReport| {
+            *r.fabric.per_worker_recv.iter().max().unwrap_or(&0)
+        };
+        let model = graphgen_plus::cluster::CostModel::calibrated();
+        rows.push(vec![
+            format!("{}", g.max_degree().1),
+            fmt_bytes(hot(&flat)),
+            fmt_bytes(hot(&tree)),
+            format!("{:.2}x", hot(&flat) as f64 / hot(&tree) as f64),
+            format!(
+                "{:.2}x",
+                flat.sim(&model).total_secs / tree.sim(&model).total_secs
+            ),
+        ]);
+    }
+    println!(
+        "{}",
+        render_markdown(
+            "e4 aggregator hot-spot (busiest receiver bytes + modeled time)",
+            &[
+                "hub degree".into(),
+                "flat".into(),
+                "tree".into(),
+                "byte reduction".into(),
+                "modeled speedup".into()
+            ],
+            &rows
+        )
+    );
+
+    // --- 2. merge wall time: big partial maps, serial vs tree ------------
+    // Model the reduce phase directly: P partial results each holding R
+    // reservoirs of K entries (what a hop round produces under load).
+    use graphgen_plus::sampler::reservoir::TopK;
+    use graphgen_plus::util::fxhash::FxHashMap;
+    use graphgen_plus::util::rng::Xoshiro256;
+    let make_partials = |p: usize, r: usize, k: usize, seed: u64| -> Vec<FxHashMap<u64, TopK>> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..p)
+            .map(|_| {
+                let mut m = FxHashMap::default();
+                for key in 0..r as u64 {
+                    let mut t = TopK::new(k);
+                    for _ in 0..k {
+                        t.insert(rng.next_u64(), rng.next_u32());
+                    }
+                    m.insert(key, t);
+                }
+                m
+            })
+            .collect()
+    };
+    let merge = |mut a: FxHashMap<u64, TopK>, b: FxHashMap<u64, TopK>| {
+        for (k, v) in b {
+            match a.entry(k) {
+                std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().merge(&v),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+            }
+        }
+        a
+    };
+    let mut bench = Bench::new("e4_merge");
+    for (p, r) in [(32usize, 2_000usize), (64, 8_000)] {
+        let label_f = format!("flat p={p} r={r}");
+        let label_t = format!("tree p={p} r={r}");
+        bench.measure(&label_f, Some(((p * r) as f64, "reservoirs")), || {
+            let parts = make_partials(p, r, 20, 9);
+            flat_reduce(parts, merge, None).unwrap().len()
+        });
+        bench.measure(&label_t, Some(((p * r) as f64, "reservoirs")), || {
+            let parts = make_partials(p, r, 20, 9);
+            tree_reduce_with_fabric(parts, 4, merge, None).unwrap().len()
+        });
+        // Exactness: tree ≡ flat.
+        let flat = flat_reduce(make_partials(p, r, 20, 9), merge, None).unwrap();
+        let fabric = Fabric::new(8);
+        let size: &(dyn Fn(&FxHashMap<u64, TopK>) -> u64 + Sync) = &|_| 1;
+        let tree =
+            tree_reduce_with_fabric(make_partials(p, r, 20, 9), 4, merge, Some((&fabric, size)))
+                .unwrap();
+        assert_eq!(flat.len(), tree.len());
+        for (k, v) in &flat {
+            assert_eq!(tree.get(k), Some(v), "tree != flat at key {k}");
+        }
+    }
+    bench.report(None);
+
+    // --- 3. end-to-end engine modeled time: the flat aggregator becomes
+    // the bottleneck as the cluster grows (the paper runs 256 workers);
+    // the tree's log-depth rounds keep the reduce phase flat. -------------
+    let model = graphgen_plus::cluster::CostModel::calibrated();
+    let mut rows3 = Vec::new();
+    let gen = generator::from_spec("rmat:n=65536,e=1048576", 5).unwrap();
+    let g = gen.csr();
+    let seeds: Vec<u32> = (0..8192u32).map(|i| i % g.num_nodes()).collect();
+    for workers in [8usize, 32, 128, 256] {
+        let mut sims = Vec::new();
+        for reduce in [ReduceTopology::Tree { arity: 4 }, ReduceTopology::Flat] {
+            let cfg = EngineConfig {
+                workers,
+                wave_size: 4096,
+                reduce,
+                fanout: FanoutSpec::paper(),
+                ..Default::default()
+            };
+            let sink = CollectSink::default();
+            let r = GraphGenPlus.generate(&g, &seeds, &cfg, &sink).unwrap();
+            sims.push(r.sim(&model).total_secs);
+        }
+        rows3.push(vec![
+            workers.to_string(),
+            graphgen_plus::util::bytes::fmt_secs(sims[0]),
+            graphgen_plus::util::bytes::fmt_secs(sims[1]),
+            format!("{:.2}x", sims[1] / sims[0]),
+        ]);
+    }
+    println!(
+        "{}",
+        render_markdown(
+            "e4 modeled generation time vs cluster width (rmat, tree vs flat)",
+            &["workers".into(), "tree".into(), "flat".into(), "tree speedup".into()],
+            &rows3
+        )
+    );
+
+    // --- 4. design-choice ablation: tree arity at 256 workers -------------
+    let mut rows4 = Vec::new();
+    for arity in [2usize, 4, 8, 16, 64] {
+        let cfg = EngineConfig {
+            workers: 256,
+            wave_size: 4096,
+            reduce: ReduceTopology::Tree { arity },
+            fanout: FanoutSpec::paper(),
+            ..Default::default()
+        };
+        let sink = CollectSink::default();
+        let r = GraphGenPlus.generate(&g, &seeds, &cfg, &sink).unwrap();
+        rows4.push(vec![
+            arity.to_string(),
+            graphgen_plus::util::bytes::fmt_secs(r.sim(&model).total_secs),
+        ]);
+    }
+    println!(
+        "{}",
+        render_markdown(
+            "e4 arity ablation (256 workers; higher arity ⇒ taller owner fan-in, lower ⇒ more interior rounds)",
+            &["arity".into(), "modeled time".into()],
+            &rows4
+        )
+    );
+}

@@ -1,0 +1,131 @@
+//! E5 — storage & I/O overhead of precomputed subgraphs.
+//!
+//! Paper §1: offline precomputation (GraphGen/AGL) "requires substantial
+//! storage … and incurs high I/O costs during training"; GraphGen+
+//! "eliminat[es] the need for external storage". This bench quantifies
+//! both sides on identical workloads:
+//!
+//! * bytes on disk (plain + compressed) per subgraph vs. zero for the
+//!   in-memory queue;
+//! * write + read-back wall time (the "delays" the paper cites) vs. the
+//!   queue handoff;
+//! * storage scaling with seed count — the reason precomputation does not
+//!   survive industry scale (extrapolated to the paper's 530 M nodes).
+
+use graphgen_plus::bench_harness::{render_markdown, Bench};
+use graphgen_plus::engines::graphgen::GraphGenOffline;
+use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
+use graphgen_plus::engines::{EngineConfig, NullSink, SubgraphEngine};
+use graphgen_plus::graph::generator;
+use graphgen_plus::sampler::FanoutSpec;
+use graphgen_plus::util::bytes::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let gen = generator::from_spec("rmat:n=65536,e=1048576", 4).unwrap();
+    let g = gen.csr();
+    let mut rows = Vec::new();
+    for n_seeds in [2048u32, 8192, 32768] {
+        let seeds: Vec<u32> = (0..n_seeds).map(|i| i * 7 % g.num_nodes()).collect();
+        let mk = |compress| EngineConfig {
+            workers: 8,
+            wave_size: 4096,
+            fanout: FanoutSpec::paper(),
+            spill_compress: compress,
+            spill_dir: Some(std::env::temp_dir().join(format!(
+                "gg-e5-{n_seeds}-{compress}-{}",
+                std::process::id()
+            ))),
+            ..Default::default()
+        };
+        let sink = NullSink::default();
+        let off = GraphGenOffline.generate(&g, &seeds, &mk(false), &sink).unwrap();
+        let off_c = GraphGenOffline.generate(&g, &seeds, &mk(true), &sink).unwrap();
+        let plus = GraphGenPlus.generate(&g, &seeds, &mk(false), &sink).unwrap();
+        let sp = off.spill.as_ref().unwrap();
+        let sp_c = off_c.spill.as_ref().unwrap();
+        rows.push(vec![
+            n_seeds.to_string(),
+            fmt_bytes(sp.disk_bytes),
+            fmt_bytes(sp_c.disk_bytes),
+            fmt_secs(sp.write_time.as_secs_f64() + sp.read_time.as_secs_f64()),
+            "0 B".to_string(),
+            format!(
+                "{:.1}%",
+                100.0 * (off.wall.as_secs_f64() - plus.wall.as_secs_f64())
+                    / off.wall.as_secs_f64()
+            ),
+        ]);
+    }
+    println!(
+        "{}",
+        render_markdown(
+            "e5 storage overhead (offline spill vs in-memory queue)",
+            &[
+                "seeds".into(),
+                "disk".into(),
+                "disk (deflate)".into(),
+                "I/O time".into(),
+                "graphgen+ storage".into(),
+                "wall saved".into()
+            ],
+            &rows
+        )
+    );
+
+    // Extrapolation to paper scale: bytes/subgraph × 530 M seeds.
+    let seeds: Vec<u32> = (0..8192u32).collect();
+    let cfg = EngineConfig {
+        workers: 8,
+        fanout: FanoutSpec::paper(),
+        spill_dir: Some(std::env::temp_dir().join(format!("gg-e5x-{}", std::process::id()))),
+        ..Default::default()
+    };
+    let sink = NullSink::default();
+    let off = GraphGenOffline.generate(&g, &seeds, &cfg, &sink).unwrap();
+    let sp = off.spill.as_ref().unwrap();
+    let per_sg = sp.disk_bytes as f64 / sp.subgraphs as f64;
+    println!(
+        "bytes/subgraph ≈ {:.0}; extrapolated to the paper's 530 M-node graph: {}",
+        per_sg,
+        fmt_bytes((per_sg * 530e6) as u64)
+    );
+
+    // Micro: spill write+read vs queue push+pop for the same subgraphs.
+    let mut bench = Bench::new("e5_handoff");
+    let subs: Vec<graphgen_plus::sampler::Subgraph> = {
+        let sink = graphgen_plus::engines::CollectSink::default();
+        GraphGenPlus
+            .generate(&g, &seeds, &cfg, &sink)
+            .unwrap();
+        sink.take_sorted()
+    };
+    bench.measure("disk spill (write+read)", Some((subs.len() as f64, "subgraphs")), || {
+        let dir = std::env::temp_dir().join(format!("gg-e5m-{}", std::process::id()));
+        let mut store = graphgen_plus::storage::SpillStore::create(dir, false).unwrap();
+        for s in &subs {
+            store.write(s).unwrap();
+        }
+        store.finish_writes().unwrap();
+        let mut n = 0u64;
+        store.read_all(|_| {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        store.cleanup().unwrap();
+        n
+    });
+    bench.measure("in-memory queue (push+pop)", Some((subs.len() as f64, "subgraphs")), || {
+        let q = graphgen_plus::pipeline::BoundedQueue::new(usize::MAX >> 1);
+        for s in &subs {
+            q.push(s.clone()).unwrap();
+        }
+        q.close();
+        let mut n = 0u64;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+    bench.report(Some("disk spill (write+read)"));
+}

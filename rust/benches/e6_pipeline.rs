@@ -1,0 +1,162 @@
+//! E6 — concurrent generation+training & nodes-per-iteration scaling.
+//!
+//! Paper §2 step 4 / §3: "subgraph generation and training are executed
+//! concurrently … Our system is capable of training on up to 1 million
+//! nodes per iteration." Two parts:
+//!
+//! 1. Pipeline composition: concurrent (GraphGen+) vs sequential vs the
+//!    offline engine (which *must* be sequential and pays disk I/O).
+//!    Generation threads are capped at half the cores so training has
+//!    compute to overlap into (the paper's cluster trains on separate
+//!    resources; a single box must split them).
+//! 2. Nodes/iteration scaling: replicas × batch × (1+f1+f1·f2) — how far
+//!    this testbed gets toward the paper's 1 M (bounded by queue memory,
+//!    reported per step).
+//!
+//! Requires `make artifacts`; skips gracefully without them.
+
+use graphgen_plus::bench_harness::render_markdown;
+use graphgen_plus::engines::graphgen::GraphGenOffline;
+use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
+use graphgen_plus::engines::{EngineConfig, SubgraphEngine};
+use graphgen_plus::graph::features::FeatureStore;
+use graphgen_plus::graph::generator;
+use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
+use graphgen_plus::sampler::FanoutSpec;
+use graphgen_plus::train::trainer::TrainConfig;
+use graphgen_plus::train::ModelRuntime;
+use graphgen_plus::util::bytes::{fmt_count, fmt_secs};
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("meta.json").exists() {
+        println!("e6_pipeline: skipped (run `make artifacts`)");
+        return;
+    }
+    let runtime = ModelRuntime::load(artifacts, 2).unwrap();
+    let spec = runtime.meta().spec;
+    let gen = generator::from_spec("planted:n=65536,e=524288,c=8", 6).unwrap();
+    let g = gen.csr();
+    let features =
+        FeatureStore::with_labels(spec.dim, spec.classes as u32, gen.labels.clone().unwrap(), 2);
+
+    let replicas = 2usize;
+    let iters = 60usize;
+    let seeds: Vec<u32> = (0..(spec.batch * replicas * iters) as u32)
+        .map(|i| i % g.num_nodes())
+        .collect();
+    // Leave half the cores to training (see module docs).
+    let gen_threads = (graphgen_plus::util::pool::default_threads() / 2).max(2);
+    let ecfg = EngineConfig {
+        workers: 8,
+        threads: gen_threads,
+        wave_size: 2048,
+        fanout: FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]),
+        spill_dir: Some(std::env::temp_dir().join(format!("gg-e6-{}", std::process::id()))),
+        ..Default::default()
+    };
+    let tcfg = TrainConfig { replicas, lr: 0.05, curve_every: 1000, ..Default::default() };
+
+    // Modeled cluster view: on the paper's deployment, generation runs on
+    // the cluster's CPUs while training runs on accelerator-attached
+    // workers, so the concurrent pipeline's wall ≈ max(gen, train) while
+    // any offline/sequential flow pays gen + train (+ disk). This 1-core
+    // container serializes everything, so we report both views.
+    let model = graphgen_plus::cluster::CostModel::calibrated();
+    let mut rows = Vec::new();
+    for (label, engine, mode) in [
+        ("graphgen+ concurrent", &GraphGenPlus as &dyn SubgraphEngine, PipelineMode::Concurrent),
+        ("graphgen+ sequential", &GraphGenPlus, PipelineMode::Sequential),
+        ("graphgen offline (disk)", &GraphGenOffline, PipelineMode::Sequential),
+    ] {
+        let r = run_pipeline(&g, &seeds, engine, &ecfg, &features, &runtime, &tcfg, mode).unwrap();
+        let gen_sim = r.gen.sim(&model).total_secs;
+        let train_secs = r.train.wall.as_secs_f64();
+        let modeled = match mode {
+            PipelineMode::Concurrent => gen_sim.max(train_secs),
+            PipelineMode::Sequential => gen_sim + train_secs,
+        };
+        rows.push(vec![
+            label.to_string(),
+            fmt_secs(r.wall.as_secs_f64()),
+            fmt_secs(gen_sim),
+            fmt_secs(train_secs),
+            fmt_secs(modeled),
+            format!("{:.4}", r.train.final_loss),
+            r.gen
+                .spill
+                .as_ref()
+                .map(|s| graphgen_plus::util::bytes::fmt_bytes(s.disk_bytes))
+                .unwrap_or_else(|| "0 B".into()),
+        ]);
+        println!("{label}: {}", r.render());
+    }
+    println!(
+        "\n{}",
+        render_markdown(
+            "e6 pipeline composition (same workload, same losses)",
+            &[
+                "pipeline".into(),
+                "1-core wall".into(),
+                "gen (modeled)".into(),
+                "train".into(),
+                "modeled e2e".into(),
+                "final loss".into(),
+                "disk".into()
+            ],
+            &rows
+        )
+    );
+
+    // --- nodes per iteration scaling --------------------------------------
+    let nodes_per_subgraph = 1 + spec.f1 + spec.f1 * spec.f2;
+    let mut rows2 = Vec::new();
+    for replicas in [1usize, 2, 4, 8, 16, 32] {
+        let nodes_per_iter = replicas * spec.batch * nodes_per_subgraph;
+        // Memory bound: queue capacity × max subgraph footprint.
+        let queue_cap = graphgen_plus::pipeline::driver::default_queue_cap(
+            &TrainConfig { replicas, ..tcfg.clone() },
+            spec.batch,
+        );
+        let bytes = queue_cap * (nodes_per_subgraph * 4 + 16);
+        // Projection to the paper's fanout (40, 20): 841 nodes/subgraph.
+        let paper_nodes_per_iter = replicas * spec.batch * (1 + 40 + 40 * 20);
+        rows2.push(vec![
+            replicas.to_string(),
+            fmt_count(nodes_per_iter as f64),
+            fmt_count(paper_nodes_per_iter as f64),
+            graphgen_plus::util::bytes::fmt_bytes(bytes as u64),
+        ]);
+    }
+    println!(
+        "{}",
+        render_markdown(
+            "e6 nodes/iteration scaling (paper: 1 M nodes/iteration)",
+            &[
+                "replicas".into(),
+                format!("nodes/iter (fanout {},{})", spec.f1, spec.f2),
+                "nodes/iter (paper fanout 40,20)".into(),
+                "queue memory".into()
+            ],
+            &rows2
+        )
+    );
+    // One measured point: the largest configuration that fits comfortably.
+    let big_replicas = 8usize;
+    let iters = 8usize;
+    let seeds: Vec<u32> = (0..(spec.batch * big_replicas * iters) as u32)
+        .map(|i| i % g.num_nodes())
+        .collect();
+    let t = TrainConfig { replicas: big_replicas, ..tcfg.clone() };
+    let r = run_pipeline(
+        &g, &seeds, &GraphGenPlus, &ecfg, &features, &runtime, &t,
+        PipelineMode::Concurrent,
+    )
+    .unwrap();
+    println!(
+        "measured at replicas={big_replicas}: {} nodes/iteration sustained, wall {}",
+        fmt_count((r.train.nodes_trained / r.train.iterations.max(1)) as f64),
+        fmt_secs(r.wall.as_secs_f64())
+    );
+    runtime.shutdown();
+}

@@ -1,0 +1,205 @@
+//! Load-Balanced Subgraph Mapping — step (2) of the GraphGen+ workflow
+//! and Algorithm 1 lines 3–13 of the paper.
+//!
+//! The coordinator builds a *balance table* mapping seed nodes to workers:
+//! seeds are shuffled (line 4, "avoid sequential bias"), assigned
+//! round-robin (line 11, `M[it] ← W[i mod |W|]`), and the remainder
+//! `|S| mod |W|` is **discarded** (line 6, `max_i ← ⌊|S|/|W|⌋ × |W|`) so
+//! every worker processes exactly the same number of subgraphs.
+//!
+//! For the E3 ablation two non-paper strategies are provided:
+//! [`MappingStrategy::Contiguous`] (what GraphGen, the predecessor,
+//! effectively does) and [`MappingStrategy::HashMod`].
+
+use crate::graph::NodeId;
+use crate::util::rng::{mix2, Xoshiro256};
+use crate::util::stats::Samples;
+
+/// Seed→worker mapping strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingStrategy {
+    /// Paper: shuffle, round-robin, discard remainder.
+    ShuffledRoundRobin,
+    /// Predecessor baseline: contiguous blocks of the *given* seed order.
+    Contiguous,
+    /// Stateless: worker = hash(seed) % |W| (no discard, possibly uneven).
+    HashMod,
+}
+
+impl std::str::FromStr for MappingStrategy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "shuffled-round-robin" | "paper" => Ok(Self::ShuffledRoundRobin),
+            "contiguous" => Ok(Self::Contiguous),
+            "hash" => Ok(Self::HashMod),
+            other => Err(format!("unknown mapping strategy '{other}'")),
+        }
+    }
+}
+
+/// The balance table: which worker generates which seed's subgraph.
+#[derive(Debug, Clone)]
+pub struct BalanceTable {
+    pub strategy: MappingStrategy,
+    pub num_workers: usize,
+    /// Assigned seeds in assignment order; `worker_of[i]` owns `seeds[i]`.
+    pub seeds: Vec<NodeId>,
+    pub worker_of: Vec<u32>,
+    /// Seeds dropped to keep per-worker counts equal (paper semantics).
+    pub discarded: Vec<NodeId>,
+}
+
+impl BalanceTable {
+    /// Build the table. `shuffle_seed` drives line 4's shuffle
+    /// (ShuffledRoundRobin) and the HashMod hash.
+    pub fn build(
+        seeds: &[NodeId],
+        num_workers: usize,
+        strategy: MappingStrategy,
+        shuffle_seed: u64,
+    ) -> Self {
+        assert!(num_workers >= 1, "need at least one worker");
+        match strategy {
+            MappingStrategy::ShuffledRoundRobin => {
+                let mut s = seeds.to_vec();
+                let mut rng = Xoshiro256::seed_from_u64(mix2(shuffle_seed, 0xba1a)); // line 4
+                rng.shuffle(&mut s);
+                let max_i = (s.len() / num_workers) * num_workers; // line 6
+                let discarded = s.split_off(max_i);
+                let worker_of = (0..s.len()).map(|i| (i % num_workers) as u32).collect(); // line 11
+                Self { strategy, num_workers, seeds: s, worker_of, discarded }
+            }
+            MappingStrategy::Contiguous => {
+                let s = seeds.to_vec();
+                let block = s.len().div_ceil(num_workers).max(1);
+                let worker_of = (0..s.len())
+                    .map(|i| ((i / block).min(num_workers - 1)) as u32)
+                    .collect();
+                Self { strategy, num_workers, seeds: s, worker_of, discarded: Vec::new() }
+            }
+            MappingStrategy::HashMod => {
+                let s = seeds.to_vec();
+                let worker_of = s
+                    .iter()
+                    .map(|&v| (mix2(shuffle_seed, v as u64) % num_workers as u64) as u32)
+                    .collect();
+                Self { strategy, num_workers, seeds: s, worker_of, discarded: Vec::new() }
+            }
+        }
+    }
+
+    /// Seeds assigned to `worker`, in assignment order.
+    pub fn seeds_for(&self, worker: usize) -> Vec<NodeId> {
+        self.seeds
+            .iter()
+            .zip(&self.worker_of)
+            .filter(|&(_, &w)| w as usize == worker)
+            .map(|(&s, _)| s)
+            .collect()
+    }
+
+    /// Per-worker seed counts.
+    pub fn counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_workers];
+        for &w in &self.worker_of {
+            c[w as usize] += 1;
+        }
+        c
+    }
+
+    /// Imbalance of an arbitrary per-seed cost function (max/mean over
+    /// per-worker summed costs) — the E3 metric. Cost is typically the
+    /// seed's expected sampling work (e.g. degree).
+    pub fn cost_imbalance(&self, cost: impl Fn(NodeId) -> f64) -> f64 {
+        let mut per_worker = vec![0.0f64; self.num_workers];
+        for (&s, &w) in self.seeds.iter().zip(&self.worker_of) {
+            per_worker[w as usize] += cost(s);
+        }
+        Samples::from_iter(per_worker).imbalance()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Cases;
+
+    #[test]
+    fn paper_semantics_counts_equal_and_remainder_discarded() {
+        let seeds: Vec<NodeId> = (0..103).collect();
+        let t = BalanceTable::build(&seeds, 10, MappingStrategy::ShuffledRoundRobin, 1);
+        assert_eq!(t.seeds.len(), 100);
+        assert_eq!(t.discarded.len(), 3);
+        assert!(t.counts().iter().all(|&c| c == 10));
+        // Nothing lost: assigned ∪ discarded == input.
+        let mut all: Vec<NodeId> = t.seeds.iter().chain(&t.discarded).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, seeds);
+    }
+
+    #[test]
+    fn shuffle_avoids_sequential_bias() {
+        let seeds: Vec<NodeId> = (0..1000).collect();
+        let t = BalanceTable::build(&seeds, 4, MappingStrategy::ShuffledRoundRobin, 7);
+        // Worker 0 should not get only low ids: its mean seed id ≈ 500.
+        let w0 = t.seeds_for(0);
+        let mean: f64 = w0.iter().map(|&v| v as f64).sum::<f64>() / w0.len() as f64;
+        assert!((mean - 500.0).abs() < 120.0, "mean {mean}");
+    }
+
+    #[test]
+    fn contiguous_keeps_input_order() {
+        let seeds: Vec<NodeId> = (0..10).collect();
+        let t = BalanceTable::build(&seeds, 2, MappingStrategy::Contiguous, 0);
+        assert_eq!(t.seeds_for(0), (0..5).collect::<Vec<_>>());
+        assert_eq!(t.seeds_for(1), (5..10).collect::<Vec<_>>());
+        assert!(t.discarded.is_empty());
+    }
+
+    #[test]
+    fn paper_mapping_beats_contiguous_on_skewed_costs() {
+        // Cost skewed by position: early seeds are 100x more expensive
+        // (models id-correlated degree, common in crawled graphs).
+        let seeds: Vec<NodeId> = (0..400).collect();
+        let cost = |v: NodeId| if v < 40 { 100.0 } else { 1.0 };
+        let paper = BalanceTable::build(&seeds, 8, MappingStrategy::ShuffledRoundRobin, 3);
+        let contig = BalanceTable::build(&seeds, 8, MappingStrategy::Contiguous, 3);
+        assert!(
+            paper.cost_imbalance(cost) < contig.cost_imbalance(cost) / 2.0,
+            "paper {} vs contiguous {}",
+            paper.cost_imbalance(cost),
+            contig.cost_imbalance(cost)
+        );
+    }
+
+    #[test]
+    fn property_every_assignment_valid() {
+        Cases::new("balance table validity", 100).run(|rng| {
+            let n = rng.gen_range(500) as usize;
+            let w = 1 + rng.gen_range(16) as usize;
+            let seeds: Vec<NodeId> = (0..n as u32).map(|_| rng.gen_range(1 << 20) as NodeId).collect();
+            for strat in [
+                MappingStrategy::ShuffledRoundRobin,
+                MappingStrategy::Contiguous,
+                MappingStrategy::HashMod,
+            ] {
+                let t = BalanceTable::build(&seeds, w, strat, rng.next_u64());
+                assert_eq!(t.seeds.len(), t.worker_of.len());
+                assert!(t.worker_of.iter().all(|&x| (x as usize) < w));
+                assert_eq!(t.seeds.len() + t.discarded.len(), n);
+                if strat == MappingStrategy::ShuffledRoundRobin {
+                    let c = t.counts();
+                    assert!(c.iter().all(|&x| x == c[0]), "equal counts: {c:?}");
+                    assert!(t.discarded.len() < w);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!("paper".parse::<MappingStrategy>().unwrap(), MappingStrategy::ShuffledRoundRobin);
+        assert!("x".parse::<MappingStrategy>().is_err());
+    }
+}

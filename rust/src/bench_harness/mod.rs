@@ -1,0 +1,313 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed-iteration measurement with summary statistics,
+//! throughput reporting, and rendering to aligned-markdown tables — the
+//! format used by the `benches/e*_*.rs` targets to regenerate the paper's
+//! evaluation rows. Also emits machine-readable JSON next to the human
+//! table when `GG_BENCH_JSON` points at a directory.
+
+use std::time::{Duration, Instant};
+
+use crate::util::bytes::{fmt_count, fmt_secs};
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// Measurement settings. Tuned down automatically for slow benchmarks: a
+/// run stops early once both `min_iters` and `min_time` are satisfied.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub max_iters: u32,
+    pub min_time: Duration,
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            min_time: Duration::from_millis(300),
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick settings for CI / `GG_BENCH_FAST=1`.
+    pub fn fast() -> Self {
+        Self {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 3,
+            min_time: Duration::ZERO,
+            max_time: Duration::from_secs(2),
+        }
+    }
+
+    pub fn from_env() -> Self {
+        if std::env::var("GG_BENCH_FAST").is_ok() {
+            Self::fast()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time samples (seconds).
+    pub secs: Samples,
+    /// Work items processed per iteration (for throughput), if reported.
+    pub items_per_iter: Option<f64>,
+    pub item_unit: String,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.secs.mean()
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.secs.mean())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let mut secs = self.secs.clone();
+        o.set("name", self.name.clone())
+            .set("iters", self.secs.len())
+            .set("mean_s", self.mean_secs())
+            .set("p50_s", secs.percentile(50.0))
+            .set("min_s", self.secs.min())
+            .set("max_s", self.secs.max())
+            .set("stddev_s", self.secs.stddev());
+        if let Some(t) = self.throughput() {
+            o.set("throughput_per_s", t).set("item_unit", self.item_unit.clone());
+        }
+        o
+    }
+}
+
+/// Named group of measurements = one experiment table.
+pub struct Bench {
+    pub group: String,
+    pub config: BenchConfig,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        crate::util::logging::init();
+        Self { group: group.to_string(), config: BenchConfig::from_env(), results: Vec::new() }
+    }
+
+    /// Measure `f` (whole-iteration timing). `items` is the amount of work
+    /// per iteration for throughput reporting, with its unit name.
+    pub fn measure<T>(
+        &mut self,
+        name: &str,
+        items: Option<(f64, &str)>,
+        mut f: impl FnMut() -> T,
+    ) -> &Measurement {
+        let cfg = &self.config;
+        for _ in 0..cfg.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut secs = Samples::new();
+        let t_start = Instant::now();
+        let mut iters = 0u32;
+        loop {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+            let total = t_start.elapsed();
+            let enough = iters >= cfg.min_iters && total >= cfg.min_time;
+            if enough || iters >= cfg.max_iters || total >= cfg.max_time {
+                break;
+            }
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            secs,
+            items_per_iter: items.map(|(n, _)| n),
+            item_unit: items.map(|(_, u)| u.to_string()).unwrap_or_default(),
+        };
+        log::info!(
+            target: "bench",
+            "{}/{name}: mean {} ({} iters){}",
+            self.group,
+            fmt_secs(m.mean_secs()),
+            m.secs.len(),
+            m.throughput()
+                .map(|t| format!(", {} {}/s", fmt_count(t), m.item_unit))
+                .unwrap_or_default()
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Mean seconds of a previously measured entry (by name).
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|m| m.name == name).map(|m| m.mean_secs())
+    }
+
+    /// Render the group as an aligned markdown table; `baseline` (if given
+    /// and present) adds a speedup-vs-baseline column.
+    pub fn render_table(&self, baseline: Option<&str>) -> String {
+        let base = baseline.and_then(|b| self.mean_of(b));
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        let mut header = vec![
+            "variant".to_string(),
+            "mean".to_string(),
+            "min".to_string(),
+            "iters".to_string(),
+        ];
+        let has_tp = self.results.iter().any(|m| m.items_per_iter.is_some());
+        if has_tp {
+            header.push("throughput".to_string());
+        }
+        if base.is_some() {
+            header.push("speedup".to_string());
+        }
+        for m in &self.results {
+            let mut row = vec![
+                m.name.clone(),
+                fmt_secs(m.mean_secs()),
+                fmt_secs(m.secs.min()),
+                format!("{}", m.secs.len()),
+            ];
+            if has_tp {
+                row.push(
+                    m.throughput()
+                        .map(|t| format!("{} {}/s", fmt_count(t), m.item_unit))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            if let Some(b) = base {
+                row.push(format!("{:.2}x", b / m.mean_secs()));
+            }
+            rows.push(row);
+        }
+        render_markdown(&self.group, &header, &rows)
+    }
+
+    /// Print the table and optionally write JSON (GG_BENCH_JSON=dir).
+    pub fn report(&self, baseline: Option<&str>) {
+        println!("\n{}", self.render_table(baseline));
+        if let Ok(dir) = std::env::var("GG_BENCH_JSON") {
+            let mut o = Json::obj();
+            o.set("group", self.group.clone()).set(
+                "results",
+                Json::Arr(self.results.iter().map(|m| m.to_json()).collect()),
+            );
+            let path = std::path::Path::new(&dir).join(format!("{}.json", self.group));
+            let _ = std::fs::create_dir_all(&dir);
+            if let Err(e) = std::fs::write(&path, o.to_pretty()) {
+                log::warn!("failed to write {}: {e}", path.display());
+            }
+        }
+    }
+}
+
+/// Render an aligned markdown table with a title line.
+pub fn render_markdown(title: &str, header: &[String], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = format!("### {title}\n");
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for i in 0..cols {
+            let cell = cells.get(i).map(String::as_str).unwrap_or("");
+            let pad = widths[i] - cell.chars().count();
+            line.push(' ');
+            line.push_str(cell);
+            line.push_str(&" ".repeat(pad + 1));
+            line.push('|');
+        }
+        line
+    };
+    out.push_str(&fmt_row(header, &widths));
+    out.push('\n');
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&"-".repeat(w + 2));
+        sep.push('|');
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_records_iterations() {
+        let mut b = Bench::new("unit");
+        b.config = BenchConfig::fast();
+        let m = b.measure("noop", Some((100.0, "items")), || 1 + 1);
+        assert!(m.secs.len() >= 1);
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn speedup_column_uses_baseline() {
+        let mut b = Bench::new("unit2");
+        b.config = BenchConfig::fast();
+        b.measure("slow", None, || std::thread::sleep(Duration::from_millis(4)));
+        b.measure("fastv", None, || std::thread::sleep(Duration::from_micros(100)));
+        let table = b.render_table(Some("slow"));
+        assert!(table.contains("speedup"), "{table}");
+        assert!(table.contains("1.00x"), "{table}");
+        // fast variant should show >1x speedup vs slow baseline
+        let fast_line = table.lines().find(|l| l.contains("fastv")).unwrap();
+        let x: f64 = fast_line
+            .split('|')
+            .rev()
+            .nth(1)
+            .unwrap()
+            .trim()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(x > 1.0, "{table}");
+    }
+
+    #[test]
+    fn markdown_alignment() {
+        let t = render_markdown(
+            "t",
+            &["a".into(), "bb".into()],
+            &[vec!["xxx".into(), "y".into()]],
+        );
+        assert!(t.contains("| a   | bb |"));
+        assert!(t.contains("| xxx | y  |"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut b = Bench::new("unit3");
+        b.config = BenchConfig::fast();
+        b.measure("x", Some((10.0, "u")), || ());
+        let j = b.results[0].to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("x"));
+        assert!(parsed.get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated `--help` text. Declarative enough for
+//! the launcher in `main.rs` while staying dependency-free.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` if the option takes a value; `false` for boolean flags.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A declared subcommand.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments for a (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("unknown command '{0}'")]
+    UnknownCommand(String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{0}: '{1}' ({2})")]
+    InvalidValue(String, String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError::InvalidValue(key.into(), v.into(), e.to_string())),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, CliError> {
+        self.get(key).ok_or_else(|| CliError::MissingRequired(key.to_string()))
+    }
+
+    /// All `--key value` pairs, for config overrides.
+    pub fn values(&self) -> &BTreeMap<String, String> {
+        &self.values
+    }
+}
+
+/// Top-level application CLI: name, about, subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    /// Parse argv (excluding `argv[0]`). On `--help`/`-h`/`help`, prints help
+    /// and returns `CliError::HelpRequested` (the caller exits 0).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        if args.is_empty()
+            || args[0] == "--help"
+            || args[0] == "-h"
+            || (args[0] == "help" && args.len() == 1)
+        {
+            println!("{}", self.help());
+            return Err(CliError::HelpRequested);
+        }
+        let cmd_name = &args[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError::UnknownCommand(cmd_name.clone()))?;
+        let mut parsed = Parsed { command: cmd.name.to_string(), ..Default::default() };
+        // Seed defaults.
+        for opt in &cmd.opts {
+            if let Some(d) = opt.default {
+                parsed.values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.command_help(cmd));
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = cmd.opts.iter().find(|o| o.name == key);
+                match spec {
+                    None => return Err(CliError::UnknownOption(key)),
+                    Some(spec) if spec.takes_value => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                args.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                            }
+                        };
+                        parsed.values.insert(key, val);
+                    }
+                    Some(_) => {
+                        if let Some(v) = inline_val {
+                            // allow --flag=true/false
+                            if v == "true" {
+                                parsed.flags.push(key);
+                            }
+                        } else {
+                            parsed.flags.push(key);
+                        }
+                    }
+                }
+            } else {
+                parsed.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        let w = self.commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+        for c in &self.commands {
+            s.push_str(&format!("  {:w$}  {}\n", c.name, c.about, w = w));
+        }
+        s.push_str("\nRun '<command> --help' for command options.");
+        s
+    }
+
+    pub fn command_help(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, cmd.name, cmd.about);
+        let w = cmd.opts.iter().map(|o| o.name.len()).max().unwrap_or(0);
+        for o in &cmd.opts {
+            let d = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let v = if o.takes_value { " <v>" } else { "    " };
+            s.push_str(&format!("  --{:w$}{v}  {}{d}\n", o.name, o.help, w = w));
+        }
+        s
+    }
+}
+
+/// Convenience constructor for an option that takes a value.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec { name, help, takes_value: true, default }
+}
+
+/// Convenience constructor for a boolean flag.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, takes_value: false, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "gg",
+            about: "test app",
+            commands: vec![
+                CommandSpec {
+                    name: "run",
+                    about: "run things",
+                    opts: vec![
+                        opt("workers", "worker count", Some("4")),
+                        opt("graph", "graph file", None),
+                        flag("verbose", "more output"),
+                    ],
+                },
+                CommandSpec { name: "ls", about: "list", opts: vec![] },
+            ],
+        }
+    }
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let p = app()
+            .parse(&args(&["run", "--workers", "8", "--verbose", "--graph=g.bin", "extra"]))
+            .unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.get("workers"), Some("8"));
+        assert_eq!(p.get("graph"), Some("g.bin"));
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = app().parse(&args(&["run"])).unwrap();
+        assert_eq!(p.get_or::<usize>("workers", 0).unwrap(), 4);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_parsing_errors() {
+        let p = app().parse(&args(&["run", "--workers", "abc"])).unwrap();
+        assert!(matches!(
+            p.get_parse::<usize>("workers"),
+            Err(CliError::InvalidValue(..))
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(matches!(
+            app().parse(&args(&["nope"])),
+            Err(CliError::UnknownCommand(_))
+        ));
+        assert!(matches!(
+            app().parse(&args(&["run", "--bogus", "1"])),
+            Err(CliError::UnknownOption(_))
+        ));
+        assert!(matches!(
+            app().parse(&args(&["run", "--graph"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let p = app().parse(&args(&["run"])).unwrap();
+        assert!(matches!(p.require("graph"), Err(CliError::MissingRequired(_))));
+    }
+
+    #[test]
+    fn help_text_lists_commands() {
+        let h = app().help();
+        assert!(h.contains("run"));
+        assert!(h.contains("ls"));
+    }
+}

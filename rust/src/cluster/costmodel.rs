@@ -1,0 +1,408 @@
+//! Simulated-cluster cost model.
+//!
+//! This container exposes a **single CPU core** (`nproc` = 1), so real
+//! wall-clock time cannot exhibit the parallel effects the paper's
+//! evaluation is about (worker scaling, tree-reduction speedup, pipeline
+//! overlap). Per the substitution methodology (DESIGN.md §2), the engines
+//! therefore keep *work ledgers* — exact counters of scanned edge-entries,
+//! merged reservoir entries, shuffled bytes, sorted rows and disk bytes,
+//! attributed to simulated workers and reduction rounds — and this module
+//! converts a ledger into **modeled cluster time**:
+//!
+//! ```text
+//! phase time  = max over workers   (work_w · cost constants)     (parallel)
+//!             | Σ over rounds max over groups (...)              (tree)
+//! total time  = Σ phase times
+//! ```
+//!
+//! Compute constants are *calibrated on this machine* (timed microloops,
+//! see [`CostModel::calibrated`]); network and disk constants are the
+//! documented assumptions of a commodity cluster (25 GbE, NVMe). Real
+//! wall time is always reported alongside modeled time in the benches.
+
+use std::collections::BTreeMap;
+
+/// Work counters attributable to one worker (or one tree-merge group).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WorkUnits {
+    /// Edge×interested-subgraph pairs scanned (map phase inner loop).
+    pub scan_edge_entries: u64,
+    /// Reservoir entries moved during merging (reduce phase).
+    pub merge_entries: u64,
+    /// Materialized + sorted join rows (SQL-like engine only).
+    pub sort_rows: u64,
+    /// Join-output rows materialized (allocated + written) before any
+    /// sampling (SQL-like engine only).
+    pub materialize_rows: u64,
+    /// Bytes received over the network.
+    pub net_bytes: u64,
+    /// Network messages received.
+    pub msgs: u64,
+    /// Bytes written to + read from disk.
+    pub disk_bytes: u64,
+}
+
+impl WorkUnits {
+    pub fn add(&mut self, o: &WorkUnits) {
+        self.scan_edge_entries += o.scan_edge_entries;
+        self.merge_entries += o.merge_entries;
+        self.sort_rows += o.sort_rows;
+        self.materialize_rows += o.materialize_rows;
+        self.net_bytes += o.net_bytes;
+        self.msgs += o.msgs;
+        self.disk_bytes += o.disk_bytes;
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == WorkUnits::default()
+    }
+}
+
+/// One phase of a generation run.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseWork {
+    /// Work executed concurrently, one slot per simulated worker.
+    pub per_worker: Vec<WorkUnits>,
+    /// Tree-structured work: `rounds[r]` holds one entry per merge group;
+    /// groups within a round run in parallel, rounds are sequential.
+    pub rounds: Vec<Vec<WorkUnits>>,
+}
+
+impl PhaseWork {
+    pub fn new(workers: usize) -> Self {
+        Self { per_worker: vec![WorkUnits::default(); workers], rounds: Vec::new() }
+    }
+}
+
+/// Per-phase work ledger for one generation run.
+#[derive(Debug, Clone, Default)]
+pub struct WorkLedger {
+    pub workers: usize,
+    pub phases: BTreeMap<String, PhaseWork>,
+}
+
+impl WorkLedger {
+    pub fn new(workers: usize) -> Self {
+        Self { workers, phases: BTreeMap::new() }
+    }
+
+    pub fn phase_mut(&mut self, name: &str) -> &mut PhaseWork {
+        let w = self.workers;
+        self.phases.entry(name.to_string()).or_insert_with(|| PhaseWork::new(w))
+    }
+
+    /// Attribute `units` to `worker` in `phase`.
+    pub fn charge(&mut self, phase: &str, worker: usize, units: WorkUnits) {
+        let w = worker % self.workers.max(1);
+        self.phase_mut(phase).per_worker[w].add(&units);
+    }
+
+    /// Append a tree round (one `WorkUnits` per parallel group).
+    pub fn charge_round(&mut self, phase: &str, groups: Vec<WorkUnits>) {
+        self.phase_mut(phase).rounds.push(groups);
+    }
+
+    pub fn merge(&mut self, other: &WorkLedger) {
+        for (name, pw) in &other.phases {
+            let mine = self.phase_mut(name);
+            for (a, b) in mine.per_worker.iter_mut().zip(&pw.per_worker) {
+                a.add(b);
+            }
+            mine.rounds.extend(pw.rounds.iter().cloned());
+        }
+    }
+
+    /// Total work across all workers and rounds (for sanity checks).
+    pub fn total(&self) -> WorkUnits {
+        let mut t = WorkUnits::default();
+        for pw in self.phases.values() {
+            for u in &pw.per_worker {
+                t.add(u);
+            }
+            for r in &pw.rounds {
+                for u in r {
+                    t.add(u);
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Cost constants (nanoseconds per unit).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub scan_ns_per_edge_entry: f64,
+    pub merge_ns_per_entry: f64,
+    pub sort_ns_per_row: f64,
+    /// Per join-output row materialized (allocation + 24-byte write +
+    /// exchange-operator serialization — what a SQL engine pays before it
+    /// can sort).
+    pub materialize_ns_per_row: f64,
+    /// Per received byte (NIC bandwidth). 25 GbE ≈ 0.32 ns/B.
+    pub net_ns_per_byte: f64,
+    /// Per message (switch + stack latency, pipelined ⇒ amortized).
+    pub net_ns_per_msg: f64,
+    /// Per disk byte, write+read averaged. NVMe ~2.5 GB/s ⇒ 0.4 ns/B.
+    pub disk_ns_per_byte: f64,
+}
+
+impl CostModel {
+    /// Documented cluster assumptions with *measured* compute constants
+    /// for this container (see [`calibrated`](Self::calibrated)).
+    pub fn calibrated() -> Self {
+        let (scan, merge, sort, mat) = calibrate_compute();
+        Self {
+            scan_ns_per_edge_entry: scan,
+            merge_ns_per_entry: merge,
+            sort_ns_per_row: sort,
+            materialize_ns_per_row: mat,
+            net_ns_per_byte: 0.32,
+            net_ns_per_msg: 2_000.0,
+            disk_ns_per_byte: 0.4,
+        }
+    }
+
+    /// Fixed constants (unit tests / reproducible examples).
+    pub fn fixed() -> Self {
+        Self {
+            scan_ns_per_edge_entry: 6.0,
+            merge_ns_per_entry: 40.0,
+            sort_ns_per_row: 110.0,
+            materialize_ns_per_row: 60.0,
+            net_ns_per_byte: 0.32,
+            net_ns_per_msg: 2_000.0,
+            disk_ns_per_byte: 0.4,
+        }
+    }
+
+    fn units_ns(&self, u: &WorkUnits) -> f64 {
+        u.scan_edge_entries as f64 * self.scan_ns_per_edge_entry
+            + u.merge_entries as f64 * self.merge_ns_per_entry
+            + u.sort_rows as f64 * self.sort_ns_per_row
+            + u.materialize_rows as f64 * self.materialize_ns_per_row
+            + u.net_bytes as f64 * self.net_ns_per_byte
+            + u.msgs as f64 * self.net_ns_per_msg
+            + u.disk_bytes as f64 * self.disk_ns_per_byte
+    }
+
+    /// Modeled seconds for one phase: parallel part (max over workers)
+    /// plus sequential tree rounds (max over groups each).
+    pub fn phase_secs(&self, p: &PhaseWork) -> f64 {
+        let parallel: f64 = p
+            .per_worker
+            .iter()
+            .map(|u| self.units_ns(u))
+            .fold(0.0, f64::max);
+        let rounds: f64 = p
+            .rounds
+            .iter()
+            .map(|groups| groups.iter().map(|u| self.units_ns(u)).fold(0.0, f64::max))
+            .sum();
+        (parallel + rounds) * 1e-9
+    }
+
+    /// Modeled total + per-phase breakdown.
+    pub fn breakdown(&self, ledger: &WorkLedger) -> SimBreakdown {
+        let per_phase: Vec<(String, f64)> = ledger
+            .phases
+            .iter()
+            .map(|(name, p)| (name.clone(), self.phase_secs(p)))
+            .collect();
+        SimBreakdown { total_secs: per_phase.iter().map(|(_, s)| s).sum(), per_phase }
+    }
+}
+
+/// Modeled time report.
+#[derive(Debug, Clone)]
+pub struct SimBreakdown {
+    pub total_secs: f64,
+    pub per_phase: Vec<(String, f64)>,
+}
+
+impl SimBreakdown {
+    pub fn render(&self) -> String {
+        let phases: Vec<String> = self
+            .per_phase
+            .iter()
+            .filter(|(_, s)| *s > 0.0)
+            .map(|(n, s)| format!("{n}={}", crate::util::bytes::fmt_secs(*s)))
+            .collect();
+        format!(
+            "modeled cluster time {} [{}]",
+            crate::util::bytes::fmt_secs(self.total_secs),
+            phases.join(" ")
+        )
+    }
+}
+
+/// Measure per-unit compute costs with timed microloops (~10 ms total).
+/// Returns (scan, merge, sort, materialize) ns/unit.
+fn calibrate_compute() -> (f64, f64, f64, f64) {
+    use crate::sampler::reservoir::TopK;
+    use crate::util::rng::Xoshiro256;
+    use std::time::Instant;
+
+    // Scan: priority hash + reservoir threshold check per edge entry.
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut res = TopK::new(40);
+    let n = 400_000u64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let p = crate::sampler::priority(7, 1, 3, 5, (i % 65536) as u32);
+        res.insert(p, (i % 65536) as u32);
+    }
+    std::hint::black_box(&res);
+    let scan = t0.elapsed().as_nanos() as f64 / n as f64;
+
+    // Merge: moving reservoir entries between maps.
+    let mut maps: Vec<crate::util::fxhash::FxHashMap<u64, TopK>> = (0..8)
+        .map(|s| {
+            let mut m = crate::util::fxhash::FxHashMap::default();
+            for k in 0..2_000u64 {
+                let mut t = TopK::new(20);
+                for _ in 0..20 {
+                    t.insert(rng.next_u64(), rng.next_u32());
+                }
+                m.insert(k.wrapping_mul(s + 1), t);
+            }
+            m
+        })
+        .collect();
+    let entries: u64 = maps.iter().map(|m| m.values().map(|t| t.len() as u64).sum::<u64>()).sum();
+    let t0 = Instant::now();
+    let mut acc = maps.swap_remove(0);
+    for m in maps {
+        for (k, v) in m {
+            match acc.entry(k) {
+                std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().merge(&v),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+            }
+        }
+    }
+    std::hint::black_box(&acc);
+    let merge = t0.elapsed().as_nanos() as f64 / entries as f64;
+
+    // Sort: 24-byte rows by (key, order).
+    let mut rows: Vec<(u64, u64, u64)> =
+        (0..300_000u64).map(|_| (rng.next_u64() % 512, rng.next_u64(), rng.next_u64())).collect();
+    let t0 = Instant::now();
+    rows.sort_unstable();
+    std::hint::black_box(&rows);
+    let sort = t0.elapsed().as_nanos() as f64 / rows.len() as f64;
+
+    // Materialize: per-row allocation+write+concat of 24-byte rows, the
+    // way the SQL engine's join output is produced.
+    let n_rows = 200_000usize;
+    let t0 = Instant::now();
+    let mut chunks: Vec<Vec<(u64, u64, u64)>> = Vec::new();
+    let mut cur = Vec::new();
+    for i in 0..n_rows {
+        cur.push((rng.next_u64(), rng.next_u64(), i as u64));
+        if cur.len() == 4096 {
+            chunks.push(std::mem::take(&mut cur));
+        }
+    }
+    chunks.push(cur);
+    let mut all: Vec<(u64, u64, u64)> = Vec::with_capacity(n_rows);
+    for mut c in chunks {
+        all.append(&mut c);
+    }
+    std::hint::black_box(&all);
+    let mat = t0.elapsed().as_nanos() as f64 / n_rows as f64;
+
+    (scan, merge, sort, mat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn units(scan: u64, merge: u64) -> WorkUnits {
+        WorkUnits { scan_edge_entries: scan, merge_entries: merge, ..Default::default() }
+    }
+
+    #[test]
+    fn phase_time_is_makespan_not_sum() {
+        let model = CostModel::fixed();
+        let mut p = PhaseWork::new(4);
+        p.per_worker[0] = units(1000, 0);
+        p.per_worker[1] = units(1000, 0);
+        let balanced = model.phase_secs(&p);
+        let mut q = PhaseWork::new(4);
+        q.per_worker[0] = units(2000, 0);
+        let skewed = model.phase_secs(&q);
+        assert!(skewed > balanced * 1.9, "{skewed} vs {balanced}");
+    }
+
+    #[test]
+    fn tree_rounds_are_sequential_groups_parallel() {
+        let model = CostModel::fixed();
+        let mut p = PhaseWork::new(4);
+        p.rounds.push(vec![units(0, 100), units(0, 100)]); // parallel → 100
+        p.rounds.push(vec![units(0, 50)]); // → 50
+        let secs = model.phase_secs(&p);
+        let want = (150.0 * model.merge_ns_per_entry) * 1e-9;
+        assert!((secs - want).abs() < 1e-12, "{secs} vs {want}");
+    }
+
+    #[test]
+    fn ledger_charges_and_merges() {
+        let mut a = WorkLedger::new(2);
+        a.charge("scan", 0, units(10, 0));
+        a.charge("scan", 3, units(5, 0)); // wraps to worker 1
+        let mut b = WorkLedger::new(2);
+        b.charge("scan", 1, units(7, 0));
+        b.charge_round("merge", vec![units(0, 3)]);
+        a.merge(&b);
+        assert_eq!(a.phases["scan"].per_worker[0].scan_edge_entries, 10);
+        assert_eq!(a.phases["scan"].per_worker[1].scan_edge_entries, 12);
+        assert_eq!(a.phases["merge"].rounds.len(), 1);
+        assert_eq!(a.total().scan_edge_entries, 22);
+        assert_eq!(a.total().merge_entries, 3);
+    }
+
+    #[test]
+    fn flat_vs_tree_model_ordering() {
+        // 32 partials × 1000 entries: flat = serial 32k entries on one
+        // worker; tree arity 4 = 3 rounds of parallel groups.
+        let model = CostModel::fixed();
+        let mut flat = PhaseWork::new(8);
+        flat.per_worker[0] = units(0, 32_000);
+        // tree: round 1: 8 groups × 4 partials (3 merged each → 3000)
+        let mut tree = PhaseWork::new(8);
+        tree.rounds.push(vec![units(0, 3_000); 8]);
+        tree.rounds.push(vec![units(0, 12_000); 2]); // 2 groups of 4 level-2 maps
+        tree.rounds.push(vec![units(0, 8_000)]); // final merge of 2
+        assert!(
+            model.phase_secs(&tree) < model.phase_secs(&flat) / 1.3,
+            "tree {} flat {}",
+            model.phase_secs(&tree),
+            model.phase_secs(&flat)
+        );
+    }
+
+    #[test]
+    fn calibration_returns_sane_constants() {
+        let m = CostModel::calibrated();
+        assert!(m.scan_ns_per_edge_entry > 0.1 && m.scan_ns_per_edge_entry < 1_000.0);
+        assert!(m.merge_ns_per_entry > 1.0 && m.merge_ns_per_entry < 10_000.0);
+        assert!(m.sort_ns_per_row > 1.0 && m.sort_ns_per_row < 10_000.0);
+        assert!(m.materialize_ns_per_row > 0.5 && m.materialize_ns_per_row < 10_000.0);
+    }
+
+    #[test]
+    fn breakdown_sums_phases() {
+        let model = CostModel::fixed();
+        let mut l = WorkLedger::new(2);
+        l.charge("a", 0, units(1000, 0));
+        l.charge("b", 1, units(0, 1000));
+        let b = model.breakdown(&l);
+        assert_eq!(b.per_phase.len(), 2);
+        let sum: f64 = b.per_phase.iter().map(|(_, s)| s).sum();
+        assert!((b.total_secs - sum).abs() < 1e-15);
+        assert!(b.render().contains("modeled cluster time"));
+    }
+}

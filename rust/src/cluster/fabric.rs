@@ -1,0 +1,175 @@
+//! Network fabric accounting: every inter-worker transfer is charged here.
+//!
+//! Real wall-clock performance on this testbed comes from actual thread
+//! parallelism; the fabric's job is *observability* (how many bytes would
+//! cross the network, the tree-reduction fan-in, replication overhead) and
+//! an optional analytic cost model that converts the traffic into
+//! estimated cluster time for the EXPERIMENTS.md projections.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared, thread-safe traffic accounting for one simulated cluster.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    workers: usize,
+    /// Bytes sent by each worker.
+    sent_bytes: Vec<AtomicU64>,
+    /// Bytes received by each worker.
+    recv_bytes: Vec<AtomicU64>,
+    messages: AtomicU64,
+}
+
+/// Snapshot of fabric counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricStats {
+    pub workers: usize,
+    pub total_bytes: u64,
+    pub total_messages: u64,
+    pub per_worker_sent: Vec<u64>,
+    pub per_worker_recv: Vec<u64>,
+}
+
+impl FabricStats {
+    /// Max-over-mean of per-worker received bytes — the fan-in hot spot
+    /// metric that the tree reduction is designed to flatten (E4).
+    pub fn recv_imbalance(&self) -> f64 {
+        crate::util::stats::Samples::from_iter(self.per_worker_recv.iter().map(|&b| b as f64))
+            .imbalance()
+    }
+
+    /// Analytic transfer-time estimate (seconds) under an α-β cost model:
+    /// `messages * latency + bottleneck_bytes / bandwidth`, where the
+    /// bottleneck is the busiest receiver (links are full-duplex,
+    /// per-worker NICs).
+    pub fn estimate_time(&self, latency_s: f64, bandwidth_bps: f64) -> f64 {
+        let bottleneck = self
+            .per_worker_recv
+            .iter()
+            .chain(self.per_worker_sent.iter())
+            .copied()
+            .max()
+            .unwrap_or(0) as f64;
+        self.total_messages as f64 * latency_s + bottleneck * 8.0 / bandwidth_bps
+    }
+}
+
+impl Fabric {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1);
+        Self {
+            inner: Arc::new(Inner {
+                workers,
+                sent_bytes: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+                recv_bytes: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+                messages: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inner.workers
+    }
+
+    /// Charge a transfer of `bytes` from `src` to `dst`.
+    #[inline]
+    pub fn charge(&self, src: usize, dst: usize, bytes: u64) {
+        self.inner.sent_bytes[src].fetch_add(bytes, Ordering::Relaxed);
+        self.inner.recv_bytes[dst].fetch_add(bytes, Ordering::Relaxed);
+        self.inner.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        let per_worker_sent: Vec<u64> =
+            self.inner.sent_bytes.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let per_worker_recv: Vec<u64> =
+            self.inner.recv_bytes.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        FabricStats {
+            workers: self.inner.workers,
+            total_bytes: per_worker_sent.iter().sum(),
+            total_messages: self.inner.messages.load(Ordering::Relaxed),
+            per_worker_sent,
+            per_worker_recv,
+        }
+    }
+
+    pub fn reset(&self) {
+        for a in &self.inner.sent_bytes {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in &self.inner.recv_bytes {
+            a.store(0, Ordering::Relaxed);
+        }
+        self.inner.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let f = Fabric::new(3);
+        f.charge(0, 1, 100);
+        f.charge(0, 2, 50);
+        f.charge(2, 1, 25);
+        let s = f.stats();
+        assert_eq!(s.total_bytes, 175);
+        assert_eq!(s.total_messages, 3);
+        assert_eq!(s.per_worker_sent, vec![150, 0, 25]);
+        assert_eq!(s.per_worker_recv, vec![0, 125, 50]);
+    }
+
+    #[test]
+    fn imbalance_detects_fan_in() {
+        let f = Fabric::new(4);
+        // Everyone sends to worker 0 — the flat-aggregation hot spot.
+        for w in 1..4 {
+            f.charge(w, 0, 1000);
+        }
+        assert!(f.stats().recv_imbalance() > 3.9);
+    }
+
+    #[test]
+    fn cost_model_monotone_in_traffic() {
+        let f = Fabric::new(2);
+        f.charge(0, 1, 1_000_000);
+        let t1 = f.stats().estimate_time(1e-5, 10e9);
+        f.charge(0, 1, 9_000_000);
+        let t2 = f.stats().estimate_time(1e-5, 10e9);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let f = Fabric::new(2);
+        f.charge(0, 1, 10);
+        f.reset();
+        assert_eq!(f.stats().total_bytes, 0);
+        assert_eq!(f.stats().total_messages, 0);
+    }
+
+    #[test]
+    fn concurrent_charges_are_consistent() {
+        let f = Fabric::new(8);
+        std::thread::scope(|s| {
+            for w in 0..8 {
+                let f = f.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        f.charge(w, (w + 1) % 8, 3);
+                    }
+                });
+            }
+        });
+        let st = f.stats();
+        assert_eq!(st.total_bytes, 8 * 1000 * 3);
+        assert_eq!(st.total_messages, 8000);
+    }
+}

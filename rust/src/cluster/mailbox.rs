@@ -1,0 +1,158 @@
+//! Typed point-to-point messaging between simulated workers, with every
+//! transfer charged to the [`super::Fabric`].
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use super::Fabric;
+
+/// Types that know their serialized wire size (for fabric accounting —
+/// messages travel in-process, but the byte counts drive the cluster
+/// traffic analysis in EXPERIMENTS.md).
+pub trait Payload: Send {
+    fn wire_bytes(&self) -> u64;
+}
+
+impl Payload for Vec<f32> {
+    fn wire_bytes(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+}
+
+impl Payload for Vec<u8> {
+    fn wire_bytes(&self) -> u64 {
+        self.len() as u64
+    }
+}
+
+impl Payload for crate::sampler::Subgraph {
+    fn wire_bytes(&self) -> u64 {
+        self.encoded_len() as u64
+    }
+}
+
+impl<T: Payload> Payload for Option<T> {
+    fn wire_bytes(&self) -> u64 {
+        // 1-byte tag + payload
+        1 + self.as_ref().map(|t| t.wire_bytes()).unwrap_or(0)
+    }
+}
+
+/// All-to-all endpoints for `n` workers: `Endpoints::new(n)` returns one
+/// [`Endpoint`] per worker, each able to send to any rank and receive its
+/// own mail. Dropping an endpoint closes its senders (receivers observe
+/// disconnection).
+pub struct Endpoints<M: Payload> {
+    pub endpoints: Vec<Endpoint<M>>,
+}
+
+pub struct Endpoint<M: Payload> {
+    pub rank: usize,
+    fabric: Fabric,
+    txs: Vec<Sender<(usize, M)>>,
+    rx: Receiver<(usize, M)>,
+}
+
+impl<M: Payload> Endpoints<M> {
+    pub fn new(n: usize, fabric: &Fabric) -> Self {
+        assert_eq!(n, fabric.workers());
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let endpoints = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Endpoint { rank, fabric: fabric.clone(), txs: txs.clone(), rx })
+            .collect();
+        Self { endpoints }
+    }
+
+    /// Take all endpoints (for distributing to worker threads).
+    pub fn into_vec(self) -> Vec<Endpoint<M>> {
+        self.endpoints
+    }
+}
+
+impl<M: Payload> Endpoint<M> {
+    /// Send `msg` to `dst`, charging the fabric. Sending to self is
+    /// allowed and charged at zero bytes (local handoff).
+    pub fn send(&self, dst: usize, msg: M) -> anyhow::Result<()> {
+        if dst != self.rank {
+            self.fabric.charge(self.rank, dst, msg.wire_bytes());
+        }
+        self.txs[dst]
+            .send((self.rank, msg))
+            .map_err(|_| anyhow::anyhow!("worker {dst} mailbox closed"))
+    }
+
+    /// Blocking receive: (source rank, message).
+    pub fn recv(&self) -> anyhow::Result<(usize, M)> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("all senders to {} closed", self.rank))
+    }
+
+    /// Receive with timeout, `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, d: Duration) -> anyhow::Result<Option<(usize, M)>> {
+        match self.rx.recv_timeout(d) {
+            Ok(v) => Ok(Some(v)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow::anyhow!("all senders to {} closed", self.rank))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery_and_accounting() {
+        let fabric = Fabric::new(3);
+        let eps = Endpoints::<Vec<f32>>::new(3, &fabric).into_vec();
+        std::thread::scope(|s| {
+            let mut it = eps.into_iter();
+            let (e0, e1, e2) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+            s.spawn(move || {
+                e0.send(1, vec![1.0, 2.0]).unwrap();
+                e0.send(2, vec![3.0]).unwrap();
+            });
+            s.spawn(move || {
+                let (src, m) = e1.recv().unwrap();
+                assert_eq!(src, 0);
+                assert_eq!(m, vec![1.0, 2.0]);
+            });
+            s.spawn(move || {
+                let (src, m) = e2.recv().unwrap();
+                assert_eq!(src, 0);
+                assert_eq!(m, vec![3.0]);
+            });
+        });
+        let st = fabric.stats();
+        assert_eq!(st.total_bytes, 8 + 4);
+        assert_eq!(st.total_messages, 2);
+    }
+
+    #[test]
+    fn self_send_is_free() {
+        let fabric = Fabric::new(1);
+        let eps = Endpoints::<Vec<u8>>::new(1, &fabric).into_vec();
+        eps[0].send(0, vec![9; 100]).unwrap();
+        let (src, m) = eps[0].recv().unwrap();
+        assert_eq!((src, m.len()), (0, 100));
+        assert_eq!(fabric.stats().total_bytes, 0);
+    }
+
+    #[test]
+    fn timeout_returns_none() {
+        let fabric = Fabric::new(2);
+        let eps = Endpoints::<Vec<u8>>::new(2, &fabric).into_vec();
+        let got = eps[1].recv_timeout(Duration::from_millis(10)).unwrap();
+        assert!(got.is_none());
+        drop(eps);
+    }
+}

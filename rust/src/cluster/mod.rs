@@ -1,0 +1,17 @@
+//! Simulated worker cluster.
+//!
+//! Stands in for the paper's 256-container Docker cluster (DESIGN.md §2):
+//! workers are OS threads, links are channels, and every transfer is
+//! accounted on a [`fabric::Fabric`] (bytes + messages, with an optional
+//! bandwidth/latency cost model for what-if analysis). The collective
+//! operations used by training — ring/tree AllReduce — live in
+//! [`collective`].
+
+pub mod collective;
+pub mod costmodel;
+pub mod fabric;
+pub mod mailbox;
+
+pub use costmodel::{CostModel, SimBreakdown, WorkLedger, WorkUnits};
+pub use fabric::{Fabric, FabricStats};
+pub use mailbox::{Endpoints, Payload};

@@ -1,0 +1,231 @@
+//! Typed run configuration: JSON file + `--key value` CLI overrides.
+//!
+//! One [`RunConfig`] describes a whole pipeline run (workload, engine,
+//! cluster, training). Precedence: defaults < `--config file.json` <
+//! explicit CLI flags — the launcher passes CLI values through
+//! [`RunConfig::apply_override`].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::balance::MappingStrategy;
+use crate::cluster::collective::AllReduceAlgo;
+use crate::engines::{EngineConfig, ReduceTopology};
+use crate::sampler::FanoutSpec;
+use crate::train::trainer::TrainConfig;
+use crate::util::json::Json;
+
+/// Everything one run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Generator spec, e.g. `planted:n=65536,e=524288,c=8`.
+    pub graph: String,
+    /// Graph generation seed.
+    pub graph_seed: u64,
+    /// Number of seed nodes (drawn 0..n or random).
+    pub num_seeds: usize,
+    pub engine: String,
+    pub workers: usize,
+    pub threads: usize,
+    pub wave_size: usize,
+    pub fanout: String,
+    pub sample_seed: u64,
+    pub mapping: String,
+    pub reduce_arity: usize,
+    /// `tree` or `flat`.
+    pub reduce: String,
+    // training
+    pub artifacts: String,
+    pub replicas: usize,
+    pub lr: f64,
+    pub allreduce: String,
+    pub mode: String,
+    pub pjrt_pool: usize,
+    pub feature_seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            graph: "planted:n=16384,e=131072,c=8".into(),
+            graph_seed: 7,
+            num_seeds: 4096,
+            engine: "graphgen+".into(),
+            workers: 8,
+            threads: crate::util::pool::default_threads(),
+            wave_size: 4096,
+            fanout: "10,5".into(),
+            sample_seed: 0x5eed,
+            mapping: "paper".into(),
+            reduce_arity: 4,
+            reduce: "tree".into(),
+            artifacts: "artifacts".into(),
+            replicas: 2,
+            lr: 0.05,
+            allreduce: "ring".into(),
+            mode: "concurrent".into(),
+            pjrt_pool: 1,
+            feature_seed: 5,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON object file; unknown keys are rejected (typo
+    /// protection), missing keys keep defaults.
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        let obj = j.as_obj().context("config root must be an object")?;
+        let mut cfg = Self::default();
+        for (k, v) in obj {
+            let as_text = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            cfg.apply_override(k, &as_text)
+                .with_context(|| format!("config key '{k}'"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `key=value` override.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(v: &str, key: &str) -> Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            v.parse::<T>().map_err(|e| anyhow::anyhow!("bad {key}='{v}': {e}"))
+        }
+        match key {
+            "graph" => self.graph = value.into(),
+            "graph_seed" => self.graph_seed = p(value, key)?,
+            "num_seeds" => self.num_seeds = p(value, key)?,
+            "engine" => self.engine = value.into(),
+            "workers" => self.workers = p(value, key)?,
+            "threads" => self.threads = p(value, key)?,
+            "wave_size" => self.wave_size = p(value, key)?,
+            "fanout" => self.fanout = value.into(),
+            "sample_seed" => self.sample_seed = p(value, key)?,
+            "mapping" => self.mapping = value.into(),
+            "reduce_arity" => self.reduce_arity = p(value, key)?,
+            "reduce" => self.reduce = value.into(),
+            "artifacts" => self.artifacts = value.into(),
+            "replicas" => self.replicas = p(value, key)?,
+            "lr" => self.lr = p(value, key)?,
+            "allreduce" => self.allreduce = value.into(),
+            "mode" => self.mode = value.into(),
+            "pjrt_pool" => self.pjrt_pool = p(value, key)?,
+            "feature_seed" => self.feature_seed = p(value, key)?,
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Materialize the engine config.
+    pub fn engine_config(&self) -> Result<EngineConfig> {
+        let mapping: MappingStrategy =
+            self.mapping.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        let reduce = match self.reduce.as_str() {
+            "tree" => ReduceTopology::Tree { arity: self.reduce_arity.max(2) },
+            "flat" => ReduceTopology::Flat,
+            other => anyhow::bail!("unknown reduce topology '{other}'"),
+        };
+        Ok(EngineConfig {
+            workers: self.workers.max(1),
+            threads: self.threads.max(1),
+            wave_size: self.wave_size.max(1),
+            fanout: FanoutSpec::parse(&self.fanout)?,
+            sample_seed: self.sample_seed,
+            mapping,
+            reduce,
+            spill_dir: None,
+            spill_compress: false,
+        })
+    }
+
+    /// Materialize the train config.
+    pub fn train_config(&self) -> Result<TrainConfig> {
+        let allreduce: AllReduceAlgo =
+            self.allreduce.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        Ok(TrainConfig {
+            replicas: self.replicas.max(1),
+            lr: self.lr as f32,
+            allreduce,
+            init_seed: 0x11,
+            curve_every: 10,
+        })
+    }
+
+    /// Render as pretty JSON (for `--dump-config`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("graph", self.graph.clone())
+            .set("graph_seed", self.graph_seed)
+            .set("num_seeds", self.num_seeds)
+            .set("engine", self.engine.clone())
+            .set("workers", self.workers)
+            .set("threads", self.threads)
+            .set("wave_size", self.wave_size)
+            .set("fanout", self.fanout.clone())
+            .set("sample_seed", self.sample_seed)
+            .set("mapping", self.mapping.clone())
+            .set("reduce_arity", self.reduce_arity)
+            .set("reduce", self.reduce.clone())
+            .set("artifacts", self.artifacts.clone())
+            .set("replicas", self.replicas)
+            .set("lr", self.lr)
+            .set("allreduce", self.allreduce.clone())
+            .set("mode", self.mode.clone())
+            .set("pjrt_pool", self.pjrt_pool)
+            .set("feature_seed", self.feature_seed);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_materialize() {
+        let c = RunConfig::default();
+        let e = c.engine_config().unwrap();
+        assert_eq!(e.workers, 8);
+        assert_eq!(e.fanout.fanouts, vec![10, 5]);
+        let t = c.train_config().unwrap();
+        assert_eq!(t.replicas, 2);
+    }
+
+    #[test]
+    fn overrides_apply_and_reject_unknown() {
+        let mut c = RunConfig::default();
+        c.apply_override("workers", "16").unwrap();
+        c.apply_override("fanout", "40,20").unwrap();
+        assert_eq!(c.workers, 16);
+        assert_eq!(c.engine_config().unwrap().fanout.fanouts, vec![40, 20]);
+        assert!(c.apply_override("bogus", "1").is_err());
+        assert!(c.apply_override("workers", "abc").is_err());
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let c = RunConfig::default();
+        let dir = std::env::temp_dir().join(format!("ggcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        std::fs::write(&path, c.to_json().to_pretty()).unwrap();
+        let loaded = RunConfig::from_json_file(&path).unwrap();
+        assert_eq!(loaded.to_json(), c.to_json());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_reduce_topology_rejected() {
+        let mut c = RunConfig::default();
+        c.apply_override("reduce", "diagonal").unwrap();
+        assert!(c.engine_config().is_err());
+    }
+}

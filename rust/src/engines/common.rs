@@ -1,0 +1,557 @@
+//! Shared machinery for the generation engines: wave state, frontier
+//! indexing, edge-centric scan tasks and partial-result merging.
+//!
+//! Terminology (paper §2): generation proceeds in *waves* of seeds (a wave
+//! corresponds to one training iteration's worth of subgraphs — completed
+//! subgraphs stream to the sink between waves). Within a wave each hop is
+//! one edge-centric MapReduce round:
+//!
+//! ```text
+//! map    : scan edge chunks, probe the frontier inverted index,
+//!          insert admitted neighbors into per-task TopK reservoirs
+//! reduce : merge per-task partial maps (tree or flat topology)
+//! assign : write merged reservoirs into each subgraph slot
+//! ```
+
+use crate::balance::BalanceTable;
+use crate::cluster::costmodel::{WorkLedger, WorkUnits};
+use crate::cluster::Fabric;
+use crate::graph::csr::Csr;
+use crate::graph::NodeId;
+use crate::mapreduce::{flat_reduce, tree_reduce_with_fabric};
+use crate::sampler::inverted::InvertedIndex;
+use crate::sampler::reservoir::TopK;
+use crate::sampler::Subgraph;
+use crate::util::fxhash::FxHashMap;
+use crate::util::pool::parallel_map;
+
+use super::{EngineConfig, ReduceTopology};
+
+/// In-progress subgraphs of one wave.
+pub struct WaveSlots {
+    /// Seed of each slot.
+    pub seeds: Vec<NodeId>,
+    /// Owning worker of each slot (from the balance table).
+    pub worker_of: Vec<u32>,
+    /// Sampled hop-1 neighbors per slot (filled by hop 1).
+    pub hop1: Vec<Vec<NodeId>>,
+    /// `hop2[slot][i]` = sampled neighbors of `hop1[slot][i]`.
+    pub hop2: Vec<Vec<Vec<NodeId>>>,
+}
+
+impl WaveSlots {
+    pub fn new(seeds: Vec<NodeId>, worker_of: Vec<u32>) -> Self {
+        let n = seeds.len();
+        assert_eq!(n, worker_of.len());
+        Self { seeds, worker_of, hop1: vec![Vec::new(); n], hop2: vec![Vec::new(); n] }
+    }
+
+    /// Frontier entries for `hop` (1-based): (node, slot, position).
+    pub fn frontier(&self, hop: u32) -> Vec<(NodeId, u32, u32)> {
+        match hop {
+            1 => self
+                .seeds
+                .iter()
+                .enumerate()
+                .map(|(slot, &s)| (s, slot as u32, 0))
+                .collect(),
+            2 => {
+                let mut out = Vec::new();
+                for (slot, h1) in self.hop1.iter().enumerate() {
+                    for (i, &v) in h1.iter().enumerate() {
+                        out.push((v, slot as u32, i as u32));
+                    }
+                }
+                out
+            }
+            _ => panic!("2-hop engines only"),
+        }
+    }
+
+    /// Finalize into subgraphs, consuming the wave.
+    pub fn into_subgraphs(self) -> impl Iterator<Item = (u32, Subgraph)> {
+        self.seeds
+            .into_iter()
+            .zip(self.worker_of)
+            .zip(self.hop1.into_iter().zip(self.hop2))
+            .map(|((seed, worker), (hop1, hop2))| {
+                (worker, Subgraph { seed, hop1, hop2 })
+            })
+    }
+}
+
+/// Reservoir map key: slot in the high half, frontier position low.
+#[inline]
+pub fn slot_key(slot: u32, pos: u32) -> u64 {
+    ((slot as u64) << 32) | pos as u64
+}
+
+/// Partial (and final) reduction state of one hop round.
+pub type ReservoirMap = FxHashMap<u64, TopK>;
+
+/// Build the inverted index over a frontier.
+pub fn build_index(frontier: &[(NodeId, u32, u32)]) -> InvertedIndex {
+    let mut ix = InvertedIndex::with_capacity(frontier.len());
+    for &(node, slot, pos) in frontier {
+        ix.insert(node, slot, pos);
+    }
+    ix
+}
+
+/// One contiguous slice of a frontier node's adjacency list.
+#[derive(Debug, Clone, Copy)]
+pub struct ScanChunk {
+    pub node: NodeId,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+/// Split the frontier's adjacency into ~`num_tasks` edge-balanced scan
+/// tasks. Hot nodes are split across tasks (`chunk_cap` edges per chunk) —
+/// the essence of *edge-centric* parallelism: no single task is stuck with
+/// a hub's entire neighbor list (contrast [`super::agl`]).
+pub fn make_scan_tasks(
+    g: &Csr,
+    frontier_nodes: impl Iterator<Item = NodeId>,
+    num_tasks: usize,
+) -> Vec<Vec<ScanChunk>> {
+    let mut chunks: Vec<ScanChunk> = Vec::new();
+    let mut total_edges = 0u64;
+    for v in frontier_nodes {
+        let deg = g.degree(v);
+        total_edges += deg as u64;
+        if deg == 0 {
+            continue;
+        }
+        chunks.push(ScanChunk { node: v, lo: 0, hi: deg });
+    }
+    if chunks.is_empty() {
+        return Vec::new();
+    }
+    let num_tasks = num_tasks.max(1);
+    let target = total_edges.div_ceil(num_tasks as u64).max(64);
+    // Split chunks larger than the target so hubs spread across tasks.
+    let mut split: Vec<ScanChunk> = Vec::with_capacity(chunks.len());
+    for c in chunks {
+        let deg = (c.hi - c.lo) as u64;
+        if deg <= target {
+            split.push(c);
+        } else {
+            let pieces = deg.div_ceil(target);
+            let step = deg.div_ceil(pieces) as u32;
+            let mut lo = c.lo;
+            while lo < c.hi {
+                let hi = (lo + step).min(c.hi);
+                split.push(ScanChunk { node: c.node, lo, hi });
+                lo = hi;
+            }
+        }
+    }
+    // First-fit pack into tasks of ~target edges.
+    let mut tasks: Vec<Vec<ScanChunk>> = Vec::with_capacity(num_tasks);
+    let mut cur: Vec<ScanChunk> = Vec::new();
+    let mut cur_edges = 0u64;
+    for c in split {
+        cur_edges += (c.hi - c.lo) as u64;
+        cur.push(c);
+        if cur_edges >= target {
+            tasks.push(std::mem::take(&mut cur));
+            cur_edges = 0;
+        }
+    }
+    if !cur.is_empty() {
+        tasks.push(cur);
+    }
+    tasks
+}
+
+/// Scan one task's chunks, producing its partial reservoir map and the
+/// number of edge-entries scanned (for the work ledger).
+pub fn scan_task(
+    g: &Csr,
+    index: &InvertedIndex,
+    task: &[ScanChunk],
+    sample_seed: u64,
+    hop: u32,
+    k: usize,
+    seeds: &[NodeId],
+) -> (ReservoirMap, u64) {
+    let mut map = ReservoirMap::default();
+    let mut scanned = 0u64;
+    for chunk in task {
+        let neigh = &g.neighbors(chunk.node)[chunk.lo as usize..chunk.hi as usize];
+        let entries = index.get(chunk.node);
+        scanned += (neigh.len() * entries.len()) as u64;
+        for &(slot, pos) in entries {
+            let seed = seeds[slot as usize];
+            // Hoist the loop-invariant half of the hash (§Perf): one
+            // mix64 per edge instead of three.
+            let base = crate::sampler::priority_base(sample_seed, hop, seed, chunk.node);
+            let res = map
+                .entry(slot_key(slot, pos))
+                .or_insert_with(|| TopK::new(k));
+            let mut threshold = res.threshold();
+            for &nbr in neigh {
+                let p = crate::sampler::priority_from_base(base, nbr);
+                // Branchy fast-reject: skip the binary-search insert path
+                // entirely for the overwhelming majority of candidates
+                // once the reservoir is full.
+                if p < threshold {
+                    res.insert(p, nbr);
+                    threshold = res.threshold();
+                }
+            }
+        }
+    }
+    (map, scanned)
+}
+
+/// Record the reduce-phase work of merging `partials` under a topology.
+///
+/// Interpretation of the paper's two designs (§2 step 3, DESIGN.md §6):
+///
+/// * **Flat (GraphGen)** — workers send each subgraph's contributions
+///   directly to its owning worker with no in-network aggregation ("all
+///   workers communicate directly with a central aggregator [per
+///   subgraph]"): a hot key's *entire* fan-in — every contribution from
+///   every scan task — lands on one worker and is folded serially there.
+/// * **Tree (GraphGen+)** — each subgraph's reservoirs are merged *on its
+///   owning worker* (per the balance table), and a hot key's many
+///   contributions are **pre-aggregated through the worker tree** before
+///   reaching the owner ("each non-leaf worker partially processes and
+///   aggregates its assigned subgraphs before passing the results to its
+///   parent"). Reservoirs are top-k capped, so pre-aggregation bounds the
+///   owner-side fan-in of a hot key at `arity` contributions of ≤ k
+///   entries; the interior pre-aggregation work spreads evenly across the
+///   tree's nodes. Consequently *both* of the paper's mechanisms show up
+///   here: the mapping strategy determines the owner-work makespan, and
+///   the tree flattens hot-key fan-in.
+pub fn ledger_merge(
+    ledger: &mut WorkLedger,
+    phase: &str,
+    partials: &[ReservoirMap],
+    k: usize,
+    reduce: super::ReduceTopology,
+    worker_of: &[u32],
+    workers: usize,
+) {
+    const BYTES_PER_ENTRY: u64 = 12;
+    // Per-key contribution stats: (#partials containing it, total entries).
+    let mut stats: FxHashMap<u64, (u32, u32)> = FxHashMap::default();
+    for m in partials {
+        for (&key, t) in m.iter() {
+            let e = stats.entry(key).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += t.len() as u32;
+        }
+    }
+    match reduce {
+        super::ReduceTopology::Flat => {
+            // Direct-to-owner, no pre-aggregation: the owner absorbs the
+            // full fan-in of each of its keys.
+            let mut owner_work = vec![0u64; workers];
+            let mut owner_msgs = vec![0u64; workers];
+            for (&key, &(c, e)) in stats.iter() {
+                let slot = (key >> 32) as usize;
+                let owner = worker_of[slot] as usize % workers;
+                owner_work[owner] += e as u64;
+                owner_msgs[owner] += c as u64;
+            }
+            for (w, work) in owner_work.iter().enumerate() {
+                ledger.charge(
+                    phase,
+                    w,
+                    WorkUnits {
+                        merge_entries: *work,
+                        net_bytes: *work * BYTES_PER_ENTRY,
+                        msgs: owner_msgs[w],
+                        ..Default::default()
+                    },
+                );
+            }
+        }
+        super::ReduceTopology::Tree { arity } => {
+            let mut owner_work = vec![0u64; workers];
+            let mut interior = 0u64;
+            for (&key, &(c, e)) in stats.iter() {
+                let slot = (key >> 32) as usize;
+                let owner = worker_of[slot] as usize % workers;
+                // Owner receives at most `arity` pre-aggregated
+                // contributions of ≤ k entries each.
+                let at_owner = (e as u64).min(c.min(arity as u32) as u64 * k as u64);
+                owner_work[owner] += at_owner;
+                interior += e as u64 - at_owner;
+            }
+            // Interior pre-aggregation parallelizes across tree nodes.
+            let share = interior / workers as u64;
+            for (w, work) in owner_work.iter().enumerate() {
+                let moved = work + share;
+                ledger.charge(
+                    phase,
+                    w,
+                    WorkUnits {
+                        merge_entries: moved,
+                        net_bytes: moved * BYTES_PER_ENTRY,
+                        msgs: arity as u64,
+                        ..Default::default()
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Serialized size of a partial map — drives reduce-phase fabric charges.
+pub fn map_wire_bytes(m: &ReservoirMap) -> u64 {
+    m.values().map(|t| 8 + 12 * t.len() as u64).sum()
+}
+
+/// Merge two reservoir maps (associative + commutative).
+pub fn merge_maps(mut a: ReservoirMap, b: ReservoirMap) -> ReservoirMap {
+    for (key, res) in b {
+        match a.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().merge(&res),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(res);
+            }
+        }
+    }
+    a
+}
+
+/// Run one edge-centric hop round for `slots`, filling `hop1` or `hop2`.
+///
+/// Work is recorded on `ledger` per simulated worker / tree round so the
+/// cost model can project cluster time (this testbed has a single core —
+/// see [`crate::cluster::costmodel`]).
+pub fn edge_centric_hop(
+    g: &Csr,
+    slots: &mut WaveSlots,
+    hop: u32,
+    cfg: &EngineConfig,
+    fabric: &Fabric,
+    ledger: &mut WorkLedger,
+) {
+    let k = cfg.fanout.fanouts[(hop - 1) as usize] as usize;
+    let frontier = slots.frontier(hop);
+    if frontier.is_empty() {
+        return;
+    }
+    let index = build_index(&frontier);
+    // Scan tasks play the role of the simulated workers' map tasks: use
+    // a multiple of the cluster width so each worker gets several, and at
+    // least a few per OS thread for stragglerless packing.
+    let num_tasks = (cfg.workers * 4).max(cfg.threads * 4);
+    let tasks = make_scan_tasks(g, index.iter().map(|(n, _)| n), num_tasks);
+    // --- map phase (parallel) ---
+    let scan_phase = format!("hop{hop}.scan");
+    let results: Vec<(ReservoirMap, u64)> = parallel_map(&tasks, cfg.threads, |task| {
+        scan_task(g, &index, task, cfg.sample_seed, hop, k, &slots.seeds)
+    });
+    let mut partials = Vec::with_capacity(results.len());
+    for (t, (map, scanned)) in results.into_iter().enumerate() {
+        ledger.charge(
+            &scan_phase,
+            t % cfg.workers,
+            WorkUnits { scan_edge_entries: scanned, ..Default::default() },
+        );
+        partials.push(map);
+    }
+    // --- reduce phase (tree or flat) ---
+    let merge_phase = format!("hop{hop}.merge");
+    ledger_merge(ledger, &merge_phase, &partials, k, cfg.reduce, &slots.worker_of, cfg.workers);
+    let size_of: &(dyn Fn(&ReservoirMap) -> u64 + Sync) = &map_wire_bytes;
+    let merged = match cfg.reduce {
+        ReduceTopology::Tree { arity } => {
+            tree_reduce_with_fabric(partials, arity, merge_maps, Some((fabric, size_of)))
+        }
+        ReduceTopology::Flat => flat_reduce(partials, merge_maps, Some((fabric, &map_wire_bytes))),
+    }
+    .unwrap_or_default();
+    // --- assignment phase: write reservoirs into slots; charge the edge
+    // replication transfer reducer→owning worker ("append E to Graph(S)
+    // on worker M[S]"). Per-worker net bytes expose mapping imbalance.
+    let assign_phase = format!("hop{hop}.assign");
+    for (key, res) in merged.iter() {
+        let slot = (key >> 32) as usize;
+        let dst = slots.worker_of[slot] as usize % cfg.workers;
+        ledger.charge(
+            &assign_phase,
+            dst,
+            WorkUnits {
+                merge_entries: res.len() as u64,
+                net_bytes: 8 + 12 * res.len() as u64,
+                msgs: 1,
+                ..Default::default()
+            },
+        );
+    }
+    assign_hop(slots, hop, merged, fabric, cfg.workers);
+}
+
+/// Write merged reservoirs into the wave's hop vectors.
+pub fn assign_hop(slots: &mut WaveSlots, hop: u32, merged: ReservoirMap, fabric: &Fabric, workers: usize) {
+    for (key, res) in merged {
+        let slot = (key >> 32) as usize;
+        let pos = (key & 0xffff_ffff) as usize;
+        let dst = slots.worker_of[slot] as usize % workers;
+        // The reducer that produced this reservoir hands it to the slot's
+        // owning worker ("append E to Graph(S) on worker M[S]").
+        let src = (key as usize) % workers;
+        if src != dst {
+            fabric.charge(src, dst, 8 + 12 * res.len() as u64);
+        }
+        match hop {
+            1 => {
+                debug_assert_eq!(pos, 0);
+                slots.hop1[slot] = res.nodes().collect();
+            }
+            2 => {
+                let h2 = &mut slots.hop2[slot];
+                if h2.len() < slots.hop1[slot].len() {
+                    h2.resize(slots.hop1[slot].len(), Vec::new());
+                }
+                h2[pos] = res.nodes().collect();
+            }
+            _ => unreachable!(),
+        }
+    }
+    // Slots whose hop-1 nodes had no admitted hop-2 neighbors still need
+    // correctly shaped hop2 groups.
+    if hop == 2 {
+        for (slot, h1) in slots.hop1.iter().enumerate() {
+            slots.hop2[slot].resize(h1.len(), Vec::new());
+        }
+    }
+}
+
+/// Build the global balance table and slice it into waves.
+pub fn plan_waves(
+    seeds: &[NodeId],
+    cfg: &EngineConfig,
+) -> (BalanceTable, Vec<std::ops::Range<usize>>) {
+    let table = BalanceTable::build(seeds, cfg.workers, cfg.mapping, cfg.sample_seed);
+    let n = table.seeds.len();
+    let mut waves = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let end = (start + cfg.wave_size).min(n);
+        waves.push(start..end);
+        start = end;
+    }
+    (table, waves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sampler::FanoutSpec;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            workers: 4,
+            threads: 4,
+            wave_size: 64,
+            fanout: FanoutSpec::new(vec![4, 3]),
+            sample_seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scan_tasks_cover_all_edges_once() {
+        let g = generator::from_spec("star:n=512,hubs=1", 2).unwrap().csr();
+        let frontier: Vec<NodeId> = (0..20).collect();
+        let tasks = make_scan_tasks(&g, frontier.iter().copied(), 8);
+        // Sum of chunk widths == sum of degrees; no overlap per node.
+        let mut per_node: std::collections::HashMap<NodeId, Vec<(u32, u32)>> = Default::default();
+        for t in &tasks {
+            for c in t {
+                per_node.entry(c.node).or_default().push((c.lo, c.hi));
+            }
+        }
+        for v in frontier {
+            let mut ranges = per_node.remove(&v).unwrap_or_default();
+            ranges.sort_unstable();
+            let mut covered = 0;
+            for (lo, hi) in ranges {
+                assert_eq!(lo, covered, "gap/overlap at node {v}");
+                covered = hi;
+            }
+            assert_eq!(covered, g.degree(v), "node {v} not fully covered");
+        }
+        // The hub (node 0, degree ~511) must be split across chunks.
+        let hub_chunks = tasks.iter().flatten().filter(|c| c.node == 0).count();
+        assert!(hub_chunks > 1, "hub not split: {hub_chunks} chunk(s)");
+    }
+
+    #[test]
+    fn hop_round_fills_slots_within_fanout() {
+        let g = generator::from_spec("rmat:n=1024,e=8192", 3).unwrap().csr();
+        let cfg = cfg();
+        let fabric = Fabric::new(cfg.workers);
+        let seeds: Vec<NodeId> = (0..64).collect();
+        let worker_of: Vec<u32> = seeds.iter().map(|&s| s % 4).collect();
+        let mut slots = WaveSlots::new(seeds, worker_of);
+        let mut ledger = WorkLedger::new(cfg.workers);
+        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger);
+        edge_centric_hop(&g, &mut slots, 2, &cfg, &fabric, &mut ledger);
+        for (slot, h1) in slots.hop1.iter().enumerate() {
+            assert!(h1.len() <= 4);
+            // hop1 ⊆ neighbors(seed)
+            for v in h1 {
+                assert!(g.neighbors(slots.seeds[slot]).contains(v));
+            }
+            assert_eq!(slots.hop2[slot].len(), h1.len());
+            for (i, h2) in slots.hop2[slot].iter().enumerate() {
+                assert!(h2.len() <= 3);
+                for v in h2 {
+                    assert!(g.neighbors(h1[i]).contains(v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hop_round_is_thread_count_invariant() {
+        let g = generator::from_spec("rmat:n=512,e=4096", 5).unwrap().csr();
+        let run = |threads: usize| {
+            let mut c = cfg();
+            c.threads = threads;
+            let fabric = Fabric::new(c.workers);
+            let seeds: Vec<NodeId> = (0..32).collect();
+            let mut slots = WaveSlots::new(seeds.clone(), vec![0; 32]);
+            let mut ledger = WorkLedger::new(c.workers);
+            edge_centric_hop(&g, &mut slots, 1, &c, &fabric, &mut ledger);
+            edge_centric_hop(&g, &mut slots, 2, &c, &fabric, &mut ledger);
+            (slots.hop1, slots.hop2)
+        };
+        assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    fn full_fanout_when_degree_allows() {
+        // Complete-ish graph: every seed should get exactly f1 neighbors.
+        let g = generator::from_spec("er:n=64,e=4000", 1).unwrap().csr();
+        let cfg = cfg();
+        let fabric = Fabric::new(cfg.workers);
+        let seeds: Vec<NodeId> = (0..16).collect();
+        let mut slots = WaveSlots::new(seeds, vec![0; 16]);
+        let mut ledger = WorkLedger::new(cfg.workers);
+        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger);
+        for (slot, h1) in slots.hop1.iter().enumerate() {
+            let deg = g.degree(slots.seeds[slot]) as usize;
+            assert_eq!(h1.len(), deg.min(4), "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn plan_waves_slices_cover_table() {
+        let seeds: Vec<NodeId> = (0..1000).collect();
+        let (table, waves) = plan_waves(&seeds, &cfg());
+        let covered: usize = waves.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, table.seeds.len());
+        assert!(waves.iter().all(|r| r.len() <= 64));
+    }
+}

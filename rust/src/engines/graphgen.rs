@@ -1,0 +1,170 @@
+//! **GraphGen** — the offline predecessor (Jin et al., EuroSys'24 poster),
+//! reconstructed as the paper describes its deltas:
+//!
+//! * same distributed edge-centric extraction, but **no balance table**:
+//!   seeds map to workers in contiguous blocks of the input order;
+//! * **flat aggregation**: every scan task's partial result funnels into a
+//!   single aggregator (the hot-node bottleneck tree reduction fixes);
+//! * **precomputed subgraphs**: every subgraph is serialized to spill
+//!   shards on disk, and only after *all* generation finishes are they
+//!   read back and handed to the consumer — the storage + I/O overhead
+//!   GraphGen+ eliminates (E5), and the reason generation cannot overlap
+//!   training (E6).
+
+use crate::balance::MappingStrategy;
+use crate::cluster::Fabric;
+use crate::graph::csr::Csr;
+use crate::graph::NodeId;
+use crate::storage::SpillStore;
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+use super::common::{edge_centric_hop, plan_waves, WaveSlots};
+use super::{EngineConfig, GenReport, ReduceTopology, SubgraphEngine, SubgraphSink};
+
+pub struct GraphGenOffline;
+
+impl SubgraphEngine for GraphGenOffline {
+    fn name(&self) -> &'static str {
+        "graphgen"
+    }
+
+    fn generate(
+        &self,
+        graph: &Csr,
+        seeds: &[NodeId],
+        cfg: &EngineConfig,
+        sink: &dyn SubgraphSink,
+    ) -> anyhow::Result<GenReport> {
+        let wall = Stopwatch::new();
+        let mut phases = PhaseTimer::new();
+        let fabric = Fabric::new(cfg.workers);
+        let mut ledger = crate::cluster::WorkLedger::new(cfg.workers);
+        // Predecessor semantics regardless of what the caller configured:
+        // contiguous mapping + flat aggregation.
+        let mut cfg = cfg.clone();
+        cfg.mapping = MappingStrategy::Contiguous;
+        cfg.reduce = ReduceTopology::Flat;
+        let spill_dir = cfg.spill_dir.clone().unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("graphgen-spill-{}", std::process::id()))
+        });
+        let mut store = SpillStore::create(spill_dir, cfg.spill_compress)?;
+
+        let (table, waves) = phases.time("map.balance", || plan_waves(seeds, &cfg));
+        let mut subgraphs = 0u64;
+        let mut sampled_nodes = 0u64;
+        for wave in waves {
+            let wave_seeds = table.seeds[wave.clone()].to_vec();
+            let wave_workers = table.worker_of[wave].to_vec();
+            let mut slots = WaveSlots::new(wave_seeds, wave_workers);
+            for hop in 1..=cfg.fanout.hops() as u32 {
+                phases.time(&format!("hop{hop}"), || {
+                    edge_centric_hop(graph, &mut slots, hop, &cfg, &fabric, &mut ledger)
+                });
+            }
+            // Offline: subgraphs go to DISK, not to the consumer.
+            phases.time("spill.write", || -> anyhow::Result<()> {
+                for (worker, sg) in slots.into_subgraphs() {
+                    subgraphs += 1;
+                    sampled_nodes += sg.num_nodes();
+                    // Each worker writes (and training later reads) its
+                    // own subgraphs: disk bytes ×2 for the round trip.
+                    ledger.charge(
+                        "spill",
+                        worker as usize,
+                        crate::cluster::WorkUnits {
+                            disk_bytes: 2 * sg.encoded_len() as u64,
+                            ..Default::default()
+                        },
+                    );
+                    store.write(&sg)?;
+                }
+                Ok(())
+            })?;
+        }
+        phases.time("spill.write", || store.finish_writes())?;
+        // Training-time read-back: decode every subgraph from disk and
+        // deliver it (worker = contiguous block position, as generated).
+        let workers = cfg.workers;
+        let per_worker = (table.seeds.len() / workers.max(1)).max(1);
+        let mut idx = 0usize;
+        phases.time("spill.read", || {
+            store.read_all(|sg| {
+                let worker = (idx / per_worker).min(workers - 1);
+                idx += 1;
+                sink.accept(worker, sg)
+            })
+        })?;
+        let spill_report = store.report().clone();
+        store.cleanup()?;
+        Ok(GenReport {
+            engine: self.name(),
+            subgraphs,
+            sampled_nodes,
+            wall: wall.elapsed(),
+            phases,
+            fabric: fabric.stats(),
+            spill: Some(spill_report),
+            discarded_seeds: table.discarded.len() as u64,
+            ledger,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::graphgen_plus::GraphGenPlus;
+    use crate::engines::CollectSink;
+    use crate::graph::generator;
+    use crate::sampler::FanoutSpec;
+
+    fn cfg(tag: &str) -> EngineConfig {
+        EngineConfig {
+            workers: 4,
+            threads: 4,
+            wave_size: 32,
+            fanout: FanoutSpec::new(vec![4, 3]),
+            sample_seed: 77,
+            spill_dir: Some(std::env::temp_dir().join(format!(
+                "ggtest-offline-{tag}-{}",
+                std::process::id()
+            ))),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn produces_same_subgraphs_as_graphgen_plus() {
+        // The engines differ in mapping/aggregation/storage — but sampling
+        // decisions are shared, so the *set* of subgraphs per seed matches.
+        let g = generator::from_spec("rmat:n=1024,e=8192", 4).unwrap().csr();
+        let seeds: Vec<NodeId> = (0..64).collect();
+        let off_sink = CollectSink::default();
+        let on_sink = CollectSink::default();
+        let off = GraphGenOffline.generate(&g, &seeds, &cfg("cmp"), &off_sink).unwrap();
+        GraphGenPlus.generate(&g, &seeds, &cfg("cmp2"), &on_sink).unwrap();
+        assert_eq!(off_sink.take_sorted(), on_sink.take_sorted());
+        assert_eq!(off.subgraphs, 64);
+    }
+
+    #[test]
+    fn reports_storage_overhead() {
+        let g = generator::from_spec("rmat:n=512,e=4096", 2).unwrap().csr();
+        let seeds: Vec<NodeId> = (0..64).collect();
+        let sink = CollectSink::default();
+        let report = GraphGenOffline.generate(&g, &seeds, &cfg("sto"), &sink).unwrap();
+        let spill = report.spill.as_ref().expect("offline engine spills");
+        assert_eq!(spill.subgraphs, 64);
+        assert!(spill.disk_bytes > 0);
+        assert!(report.phases.get("spill.read") > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn spill_dir_is_cleaned_up() {
+        let g = generator::from_spec("er:n=128,e=512", 1).unwrap().csr();
+        let c = cfg("clean");
+        let sink = CollectSink::default();
+        GraphGenOffline.generate(&g, &(0..16).collect::<Vec<_>>(), &c, &sink).unwrap();
+        assert!(!c.spill_dir.unwrap().exists());
+    }
+}

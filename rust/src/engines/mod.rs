@@ -1,0 +1,210 @@
+//! Subgraph generation engines.
+//!
+//! Four implementations behind one trait, reproducing the paper's E1
+//! comparison (DESIGN.md §5):
+//!
+//! | engine | paradigm | of the paper |
+//! |---|---|---|
+//! | [`graphgen_plus`] | edge-centric MapReduce, balance table, tree reduction, streams in-memory | **the contribution** |
+//! | [`graphgen`] | edge-centric, contiguous mapping, flat aggregation, spills to disk | offline predecessor (EuroSys'24) |
+//! | [`agl`] | node-centric MapReduce: one task per frontier node | AGL (VLDB'20) |
+//! | [`sql_like`] | per-hop join materialization + sort + group-sample | "traditional SQL-like methods" |
+//!
+//! All engines use the same hash-priority sampling (see [`crate::sampler`]),
+//! so **they produce identical subgraphs** for identical inputs — verified
+//! by integration tests — and differ only in cost structure, which is the
+//! point of the benchmark.
+
+pub mod agl;
+pub mod common;
+pub mod graphgen;
+pub mod graphgen_plus;
+pub mod sql_like;
+
+use std::time::Duration;
+
+use crate::balance::MappingStrategy;
+use crate::cluster::costmodel::{CostModel, SimBreakdown, WorkLedger};
+use crate::cluster::FabricStats;
+use crate::graph::csr::Csr;
+use crate::graph::NodeId;
+use crate::sampler::{FanoutSpec, Subgraph};
+use crate::storage::SpillReport;
+use crate::util::timer::PhaseTimer;
+
+/// Where completed subgraphs go. Implementations: in-memory collection,
+/// the training pipeline's bounded queue, or a discarding sink for pure
+/// generation benchmarks.
+pub trait SubgraphSink: Sync {
+    /// Accept a completed subgraph generated on `worker`.
+    fn accept(&self, worker: usize, sg: Subgraph) -> anyhow::Result<()>;
+}
+
+/// Collects into a mutex-guarded vector (tests, small runs).
+#[derive(Default)]
+pub struct CollectSink {
+    pub collected: std::sync::Mutex<Vec<Subgraph>>,
+}
+
+impl SubgraphSink for CollectSink {
+    fn accept(&self, _worker: usize, sg: Subgraph) -> anyhow::Result<()> {
+        self.collected.lock().unwrap().push(sg);
+        Ok(())
+    }
+}
+
+impl CollectSink {
+    /// Take the collected subgraphs, sorted by seed for comparisons.
+    pub fn take_sorted(&self) -> Vec<Subgraph> {
+        let mut v = std::mem::take(&mut *self.collected.lock().unwrap());
+        v.sort_by_key(|s| s.seed);
+        v
+    }
+}
+
+/// Counts and discards (pure generation throughput benchmarks).
+#[derive(Default)]
+pub struct NullSink {
+    pub subgraphs: std::sync::atomic::AtomicU64,
+    pub nodes: std::sync::atomic::AtomicU64,
+}
+
+impl SubgraphSink for NullSink {
+    fn accept(&self, _worker: usize, sg: Subgraph) -> anyhow::Result<()> {
+        use std::sync::atomic::Ordering;
+        self.subgraphs.fetch_add(1, Ordering::Relaxed);
+        self.nodes.fetch_add(sg.num_nodes(), Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Reduction topology for merging per-scan-task partial results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceTopology {
+    /// Hierarchical tree with the given arity (paper; default arity 4).
+    Tree { arity: usize },
+    /// Single sequential aggregator (the hot-spot baseline).
+    Flat,
+}
+
+/// Engine-independent generation settings.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Simulated cluster width (fabric accounting granularity).
+    pub workers: usize,
+    /// OS threads for scan/merge tasks.
+    pub threads: usize,
+    /// Seeds per generation wave (a wave ≈ the paper's "iteration": its
+    /// subgraphs stream to the sink before the next wave starts).
+    pub wave_size: usize,
+    pub fanout: FanoutSpec,
+    /// Sampling determinism seed (shared by all engines → same output).
+    pub sample_seed: u64,
+    pub mapping: MappingStrategy,
+    pub reduce: ReduceTopology,
+    /// Spill directory for the offline engine.
+    pub spill_dir: Option<std::path::PathBuf>,
+    /// Compress spill shards.
+    pub spill_compress: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 8,
+            threads: crate::util::pool::default_threads(),
+            wave_size: 4096,
+            fanout: FanoutSpec::paper(),
+            sample_seed: 0x5eed,
+            mapping: MappingStrategy::ShuffledRoundRobin,
+            reduce: ReduceTopology::Tree { arity: 4 },
+            spill_dir: None,
+            spill_compress: false,
+        }
+    }
+}
+
+/// Result of one generation run.
+#[derive(Debug, Clone)]
+pub struct GenReport {
+    pub engine: &'static str,
+    pub subgraphs: u64,
+    /// Total sampled node slots (the paper's "nodes" in nodes/second).
+    pub sampled_nodes: u64,
+    pub wall: Duration,
+    pub phases: PhaseTimer,
+    pub fabric: FabricStats,
+    /// Disk I/O report (offline engine only).
+    pub spill: Option<SpillReport>,
+    pub discarded_seeds: u64,
+    /// Work counters for the simulated-cluster cost model.
+    pub ledger: WorkLedger,
+}
+
+impl GenReport {
+    /// The paper's headline generation metric (real wall clock — on this
+    /// 1-core testbed, see [`sim`](Self::sim) for the cluster projection).
+    pub fn nodes_per_sec(&self) -> f64 {
+        self.sampled_nodes as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Modeled cluster time under a cost model (DESIGN.md §2).
+    pub fn sim(&self, model: &CostModel) -> SimBreakdown {
+        model.breakdown(&self.ledger)
+    }
+
+    /// Modeled nodes/second on the simulated cluster.
+    pub fn sim_nodes_per_sec(&self, model: &CostModel) -> f64 {
+        self.sampled_nodes as f64 / self.sim(model).total_secs.max(1e-12)
+    }
+
+    pub fn render(&self) -> String {
+        use crate::util::bytes::{fmt_bytes, fmt_rate, fmt_secs};
+        let mut s = format!(
+            "engine={} subgraphs={} nodes={} wall={} rate={} shuffle={} [{}]",
+            self.engine,
+            self.subgraphs,
+            self.sampled_nodes,
+            fmt_secs(self.wall.as_secs_f64()),
+            fmt_rate(self.nodes_per_sec(), "nodes"),
+            fmt_bytes(self.fabric.total_bytes),
+            self.phases.render(),
+        );
+        if let Some(sp) = &self.spill {
+            s.push_str(&format!(
+                " storage={} write={} read={}",
+                fmt_bytes(sp.disk_bytes),
+                fmt_secs(sp.write_time.as_secs_f64()),
+                fmt_secs(sp.read_time.as_secs_f64()),
+            ));
+        }
+        s
+    }
+}
+
+/// A subgraph generation engine. `Sync` so the pipeline driver can run
+/// generation on a spawned thread while training consumes.
+pub trait SubgraphEngine: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Generate subgraphs for `seeds` over `graph`, streaming completed
+    /// subgraphs into `sink`.
+    fn generate(
+        &self,
+        graph: &Csr,
+        seeds: &[NodeId],
+        cfg: &EngineConfig,
+        sink: &dyn SubgraphSink,
+    ) -> anyhow::Result<GenReport>;
+}
+
+/// Construct an engine by name (CLI / bench dispatch).
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn SubgraphEngine>> {
+    match name {
+        "graphgen+" | "graphgen_plus" | "plus" => Ok(Box::new(graphgen_plus::GraphGenPlus)),
+        "graphgen" | "offline" => Ok(Box::new(graphgen::GraphGenOffline)),
+        "agl" | "node-centric" => Ok(Box::new(agl::AglNodeCentric)),
+        "sql" | "sql-like" => Ok(Box::new(sql_like::SqlLike)),
+        other => anyhow::bail!("unknown engine '{other}'"),
+    }
+}

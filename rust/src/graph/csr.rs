@@ -1,0 +1,158 @@
+//! Compressed sparse row (CSR) graph — the frozen, read-only adjacency
+//! structure every engine samples from.
+
+use super::edgelist::EdgeList;
+use super::NodeId;
+
+/// CSR adjacency: `neighbors(v)` is `adj[offsets[v] .. offsets[v+1]]`.
+///
+/// Neighbor lists are sorted, which the samplers rely on for deterministic
+/// iteration order.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    offsets: Vec<u64>,
+    adj: Vec<NodeId>,
+}
+
+impl Csr {
+    /// Build from an edge list (interpreted as directed edges).
+    /// Duplicates and self-loops should have been removed by the caller
+    /// (`EdgeList::sort_dedup`); they are tolerated but preserved.
+    pub fn from_edge_list(el: &EdgeList) -> Self {
+        let n = el.num_nodes as usize;
+        let mut counts = vec![0u64; n + 1];
+        for e in &el.edges {
+            counts[e.src as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts;
+        let mut cursor = offsets.clone();
+        let mut adj = vec![0 as NodeId; el.edges.len()];
+        for e in &el.edges {
+            let c = &mut cursor[e.src as usize];
+            adj[*c as usize] = e.dst;
+            *c += 1;
+        }
+        // Sort each adjacency run for deterministic sampling.
+        for v in 0..n {
+            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+            adj[s..e].sort_unstable();
+        }
+        Self { offsets, adj }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> NodeId {
+        (self.offsets.len() - 1) as NodeId
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        self.adj.len() as u64
+    }
+
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> u32 {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        &self.adj[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Iterate all edges as (src, dst) in CSR order.
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        (0..self.num_nodes()).flat_map(move |v| self.neighbors(v).iter().map(move |&d| (v, d)))
+    }
+
+    /// Max degree and the node achieving it.
+    pub fn max_degree(&self) -> (NodeId, u32) {
+        let mut best = (0, 0);
+        for v in 0..self.num_nodes() {
+            let d = self.degree(v);
+            if d > best.1 {
+                best = (v, d);
+            }
+        }
+        best
+    }
+
+    /// Mean out-degree.
+    pub fn mean_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            return 0.0;
+        }
+        self.num_edges() as f64 / self.num_nodes() as f64
+    }
+
+    /// Approximate in-memory footprint in bytes.
+    pub fn memory_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.adj.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        let mut el = EdgeList::new(5);
+        for &(s, d) in &[(0, 1), (0, 2), (1, 2), (3, 0), (3, 4), (2, 4)] {
+            el.push(s, d);
+        }
+        el.sort_dedup();
+        Csr::from_edge_list(&el)
+    }
+
+    #[test]
+    fn structure_matches_input() {
+        let g = small();
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.neighbors(2), &[4]);
+        assert_eq!(g.neighbors(3), &[0, 4]);
+        assert_eq!(g.neighbors(4), &[] as &[NodeId]);
+    }
+
+    #[test]
+    fn degrees_and_stats() {
+        let g = small();
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(4), 0);
+        assert_eq!(g.max_degree().1, 2);
+        assert!((g.mean_degree() - 6.0 / 5.0).abs() < 1e-12);
+        assert!(g.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn edges_iterator_roundtrips() {
+        let g = small();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges.len(), 6);
+        assert!(edges.contains(&(3, 4)));
+        assert!(edges.contains(&(0, 1)));
+    }
+
+    #[test]
+    fn neighbors_sorted_even_if_input_unsorted() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 2);
+        el.push(0, 1);
+        let g = Csr::from_edge_list(&el);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let el = EdgeList::new(0);
+        let g = Csr::from_edge_list(&el);
+        assert_eq!(g.num_nodes(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.mean_degree(), 0.0);
+    }
+}

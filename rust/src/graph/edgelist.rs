@@ -1,0 +1,130 @@
+//! Growable edge-list container — the raw form graphs are generated and
+//! shuffled in before being frozen into [`crate::graph::csr::Csr`].
+
+use super::{Edge, NodeId};
+
+/// A list of directed edges plus the node-count bound.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    pub num_nodes: NodeId,
+    pub edges: Vec<Edge>,
+}
+
+impl EdgeList {
+    pub fn new(num_nodes: NodeId) -> Self {
+        Self { num_nodes, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(num_nodes: NodeId, cap: usize) -> Self {
+        Self { num_nodes, edges: Vec::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, src: NodeId, dst: NodeId) {
+        debug_assert!(src < self.num_nodes && dst < self.num_nodes);
+        self.edges.push(Edge::new(src, dst));
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Sort by (src, dst) and remove duplicate edges and self-loops.
+    pub fn sort_dedup(&mut self) {
+        self.edges.retain(|e| e.src != e.dst);
+        self.edges.sort_unstable();
+        self.edges.dedup();
+    }
+
+    /// Make the list symmetric: for every (u, v) ensure (v, u) exists.
+    /// Implies [`sort_dedup`](Self::sort_dedup).
+    pub fn symmetrize(&mut self) {
+        let mut rev: Vec<Edge> = self.edges.iter().map(|e| e.reversed()).collect();
+        self.edges.append(&mut rev);
+        self.sort_dedup();
+    }
+
+    /// Out-degree of every node.
+    pub fn degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.num_nodes as usize];
+        for e in &self.edges {
+            d[e.src as usize] += 1;
+        }
+        d
+    }
+
+    /// Highest-degree nodes as (node, degree), descending — used to locate
+    /// hot nodes for the tree-reduction experiments.
+    pub fn top_degree_nodes(&self, k: usize) -> Vec<(NodeId, u32)> {
+        let degs = self.degrees();
+        let mut idx: Vec<NodeId> = (0..self.num_nodes).collect();
+        idx.sort_unstable_by_key(|&n| std::cmp::Reverse(degs[n as usize]));
+        idx.truncate(k);
+        idx.into_iter().map(|n| (n, degs[n as usize])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_len() {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(1, 2);
+        assert_eq!(el.len(), 2);
+        assert!(!el.is_empty());
+    }
+
+    #[test]
+    fn sort_dedup_removes_loops_and_dupes() {
+        let mut el = EdgeList::new(4);
+        el.push(1, 2);
+        el.push(1, 2);
+        el.push(3, 3); // self-loop
+        el.push(0, 1);
+        el.sort_dedup();
+        assert_eq!(el.edges, vec![Edge::new(0, 1), Edge::new(1, 2)]);
+    }
+
+    #[test]
+    fn symmetrize_adds_reverse_edges() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.symmetrize();
+        assert_eq!(
+            el.edges,
+            vec![
+                Edge::new(0, 1),
+                Edge::new(1, 0),
+                Edge::new(1, 2),
+                Edge::new(2, 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn degrees_and_top_nodes() {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(0, 2);
+        el.push(0, 3);
+        el.push(1, 2);
+        let d = el.degrees();
+        assert_eq!(d, vec![3, 1, 0, 0]);
+        let top = el.top_degree_nodes(2);
+        assert_eq!(top[0], (0, 3));
+        assert_eq!(top[1], (1, 1));
+    }
+
+    #[test]
+    fn edge_canonical() {
+        assert_eq!(Edge::new(5, 2).canonical(), Edge::new(2, 5));
+        assert_eq!(Edge::new(2, 5).canonical(), Edge::new(2, 5));
+    }
+}

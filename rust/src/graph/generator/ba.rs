@@ -1,0 +1,73 @@
+//! Barabási–Albert preferential attachment: each new node attaches to `m`
+//! existing nodes with probability proportional to their current degree.
+//! Classic scale-free graphs; used for generator-diversity in tests and
+//! the fraud-detection example.
+
+use crate::graph::edgelist::EdgeList;
+use crate::graph::NodeId;
+use crate::util::rng::{mix2, Xoshiro256};
+
+use super::Generated;
+
+/// Generate a BA graph with `n` nodes, `m` attachments per node.
+pub fn generate(n: NodeId, m: u32, seed: u64) -> Generated {
+    let m = m.max(1);
+    assert!(n as u64 > m as u64, "need n > m");
+    let mut rng = Xoshiro256::seed_from_u64(mix2(seed, 0xba));
+    // Repeated-endpoints list: sampling uniformly from it = degree-biased.
+    let mut endpoints: Vec<NodeId> = Vec::with_capacity(2 * (n as usize) * m as usize);
+    let mut el = EdgeList::with_capacity(n, (n as usize) * m as usize * 2);
+    // Seed clique over the first m+1 nodes.
+    for i in 0..=m {
+        for j in (i + 1)..=m {
+            el.push(i, j);
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    for v in (m + 1)..n {
+        // Vec + contains (m is small) keeps insertion order deterministic;
+        // HashSet iteration order would make the generator seed-unstable.
+        let mut chosen: Vec<NodeId> = Vec::with_capacity(m as usize);
+        let mut guard = 0;
+        while chosen.len() < m as usize && guard < 10 * m {
+            let t = endpoints[rng.gen_range(endpoints.len() as u64) as usize];
+            if !chosen.contains(&t) {
+                chosen.push(t);
+            }
+            guard += 1;
+        }
+        for &t in &chosen {
+            el.push(v, t);
+            endpoints.push(v);
+            endpoints.push(t);
+        }
+    }
+    el.symmetrize();
+    Generated { name: format!("ba(n={n},m={m},seed={seed})"), edges: el, labels: None, num_classes: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_and_edge_counts() {
+        let g = generate(500, 4, 11);
+        assert_eq!(g.edges.num_nodes, 500);
+        // Roughly n*m undirected edges → 2*n*m directed after symmetrize.
+        assert!(g.edges.len() as u64 > 2 * 450 * 4);
+    }
+
+    #[test]
+    fn early_nodes_become_hubs() {
+        let g = generate(2000, 4, 3);
+        let degs = g.edges.degrees();
+        let early_max = degs[..10].iter().max().copied().unwrap();
+        let late_max = degs[1990..].iter().max().copied().unwrap();
+        assert!(
+            early_max > 3 * late_max,
+            "preferential attachment should favor early nodes ({early_max} vs {late_max})"
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Erdős–Rényi G(n, m): `num_edges` uniform random pairs. The no-skew
+//! control workload for the tree-reduction ablation (E4) — tree reduction
+//! should win little here, unlike on hot-node graphs.
+
+use crate::graph::edgelist::EdgeList;
+use crate::graph::NodeId;
+use crate::util::rng::{mix2, Xoshiro256};
+
+use super::Generated;
+
+pub fn generate(n: NodeId, num_edges: u64, seed: u64) -> Generated {
+    assert!(n >= 2);
+    let mut rng = Xoshiro256::seed_from_u64(mix2(seed, 0xe6));
+    let mut el = EdgeList::with_capacity(n, num_edges as usize * 2);
+    for _ in 0..num_edges {
+        let a = rng.gen_range(n as u64) as NodeId;
+        let b = rng.gen_range(n as u64) as NodeId;
+        if a != b {
+            el.push(a, b);
+        }
+    }
+    el.symmetrize();
+    Generated { name: format!("er(n={n},e={num_edges},seed={seed})"), edges: el, labels: None, num_classes: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrees_are_flat() {
+        let g = generate(1000, 16_000, 5);
+        let degs = g.edges.degrees();
+        let mean = degs.iter().map(|&d| d as f64).sum::<f64>() / degs.len() as f64;
+        let max = *degs.iter().max().unwrap() as f64;
+        // Poisson-ish: max should stay within a small factor of the mean.
+        assert!(max < 3.0 * mean, "unexpected skew: max {max} mean {mean}");
+    }
+}

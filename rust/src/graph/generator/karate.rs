@@ -1,0 +1,69 @@
+//! Zachary's karate club (34 nodes, 78 undirected edges) — the classic
+//! *real* social graph, embedded so examples and tests exercise the full
+//! pipeline on non-synthetic data without any network access. Labels are
+//! the historical club split (Mr. Hi = 0 vs. Officer = 1).
+//!
+//! Source: W. W. Zachary, "An information flow model for conflict and
+//! fission in small groups", J. Anthropological Research 33 (1977).
+
+use crate::graph::edgelist::EdgeList;
+
+use super::Generated;
+
+/// 1-indexed undirected edges, as published.
+const EDGES_1IDX: [(u32, u32); 78] = [
+    (1, 2), (1, 3), (2, 3), (1, 4), (2, 4), (3, 4), (1, 5), (1, 6), (1, 7),
+    (5, 7), (6, 7), (1, 8), (2, 8), (3, 8), (4, 8), (1, 9), (3, 9), (3, 10),
+    (1, 11), (5, 11), (6, 11), (1, 12), (1, 13), (4, 13), (1, 14), (2, 14),
+    (3, 14), (4, 14), (6, 17), (7, 17), (1, 18), (2, 18), (1, 20), (2, 20),
+    (1, 22), (2, 22), (24, 26), (25, 26), (3, 28), (24, 28), (25, 28),
+    (3, 29), (24, 30), (27, 30), (2, 31), (9, 31), (1, 32), (25, 32),
+    (26, 32), (29, 32), (3, 33), (9, 33), (15, 33), (16, 33), (19, 33),
+    (21, 33), (23, 33), (24, 33), (30, 33), (31, 33), (32, 33), (9, 34),
+    (10, 34), (14, 34), (15, 34), (16, 34), (19, 34), (20, 34), (21, 34),
+    (23, 34), (24, 34), (27, 34), (28, 34), (29, 34), (30, 34), (31, 34),
+    (32, 34), (33, 34),
+];
+
+/// Mr. Hi's faction, 1-indexed (everyone else sided with the officer).
+const MR_HI: [u32; 17] = [1, 2, 3, 4, 5, 6, 7, 8, 11, 12, 13, 14, 17, 18, 20, 22, 9];
+
+pub fn generate() -> Generated {
+    let mut el = EdgeList::with_capacity(34, 78 * 2);
+    for &(a, b) in &EDGES_1IDX {
+        el.push(a - 1, b - 1);
+    }
+    el.symmetrize();
+    let mut labels = vec![1u32; 34];
+    for &v in &MR_HI {
+        labels[(v - 1) as usize] = 0;
+    }
+    // Node 9 (1-indexed) historically joined the officer's club despite
+    // ties to Mr. Hi; keep the standard assignment.
+    labels[8] = 1;
+    Generated { name: "karate".to_string(), edges: el, labels: Some(labels), num_classes: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_counts() {
+        let g = generate();
+        assert_eq!(g.edges.num_nodes, 34);
+        assert_eq!(g.edges.len(), 78 * 2); // symmetrized
+        let labels = g.labels.as_ref().unwrap();
+        assert_eq!(labels.iter().filter(|&&l| l == 0).count(), 16);
+        assert_eq!(labels.iter().filter(|&&l| l == 1).count(), 18);
+    }
+
+    #[test]
+    fn node_33_is_the_hub() {
+        // 0-indexed node 33 ("node 34", the officer) has degree 17.
+        let g = generate();
+        let degs = g.edges.degrees();
+        assert_eq!(degs[33], 17);
+        assert_eq!(degs[0], 16); // Mr. Hi
+    }
+}

@@ -1,0 +1,121 @@
+//! Deterministic synthetic graph generators.
+//!
+//! These stand in for the paper's 530 M-node / 5 B-edge production graph
+//! (DESIGN.md §2): the generation engines' behaviour depends on degree
+//! skew, seed count and fanout, all of which these generators control.
+//!
+//! * [`rmat`] — R-MAT, the classic skewed power-law-ish generator; the
+//!   default workload for the E1/E2 throughput experiments (hot nodes).
+//! * [`planted`] — planted-partition communities with zipf degrees and
+//!   community-correlated labels, so the end-to-end GCN actually learns.
+//! * [`ba`] — Barabási–Albert preferential attachment.
+//! * [`er`] — Erdős–Rényi G(n, m), the no-skew control.
+//! * [`star`] — adversarial hot-node graphs for the E4 tree-reduction
+//!   ablation.
+//! * [`karate`] — Zachary's karate club, the embedded *real* graph used by
+//!   the quickstart example and tests.
+
+pub mod ba;
+pub mod er;
+pub mod karate;
+pub mod planted;
+pub mod rmat;
+pub mod star;
+
+use super::edgelist::EdgeList;
+use super::csr::Csr;
+
+/// Uniform description of a generated workload graph.
+pub struct Generated {
+    pub name: String,
+    pub edges: EdgeList,
+    /// Ground-truth community/label per node, when the generator has one.
+    pub labels: Option<Vec<u32>>,
+    pub num_classes: u32,
+}
+
+impl Generated {
+    pub fn csr(&self) -> Csr {
+        Csr::from_edge_list(&self.edges)
+    }
+}
+
+/// Parse a generator spec string used by the CLI and benches:
+/// `rmat:n=65536,e=524288`, `planted:n=10000,e=80000,c=8`,
+/// `star:n=1000,hubs=4`, `er:n=1000,e=8000`, `ba:n=1000,m=8`, `karate`.
+pub fn from_spec(spec: &str, seed: u64) -> anyhow::Result<Generated> {
+    let (kind, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    let mut kv = std::collections::BTreeMap::new();
+    for part in rest.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad generator param '{part}' in '{spec}'"))?;
+        kv.insert(k.to_string(), v.to_string());
+    }
+    let get = |key: &str, default: u64| -> anyhow::Result<u64> {
+        match kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("bad value for {key} in '{spec}': {e}")),
+        }
+    };
+    match kind {
+        "rmat" => {
+            let n = get("n", 1 << 14)?;
+            let e = get("e", n * 8)?;
+            Ok(rmat::generate(n as u32, e, seed))
+        }
+        "planted" => {
+            let n = get("n", 1 << 13)?;
+            let e = get("e", n * 8)?;
+            let c = get("c", 8)?;
+            Ok(planted::generate(n as u32, e, c as u32, seed))
+        }
+        "ba" => {
+            let n = get("n", 1 << 13)?;
+            let m = get("m", 8)?;
+            Ok(ba::generate(n as u32, m as u32, seed))
+        }
+        "er" => {
+            let n = get("n", 1 << 13)?;
+            let e = get("e", n * 8)?;
+            Ok(er::generate(n as u32, e, seed))
+        }
+        "star" => {
+            let n = get("n", 1 << 12)?;
+            let hubs = get("hubs", 1)?;
+            Ok(star::generate(n as u32, hubs as u32, seed))
+        }
+        "karate" => Ok(karate::generate()),
+        other => anyhow::bail!("unknown generator '{other}' (spec '{spec}')"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_dispatches() {
+        let g = from_spec("rmat:n=256,e=1024", 1).unwrap();
+        assert_eq!(g.edges.num_nodes, 256);
+        assert!(g.edges.len() >= 1024); // symmetrized
+        let g = from_spec("karate", 0).unwrap();
+        assert_eq!(g.edges.num_nodes, 34);
+        assert!(from_spec("nope", 0).is_err());
+        assert!(from_spec("rmat:n=abc", 0).is_err());
+        assert!(from_spec("rmat:n", 0).is_err());
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        for spec in ["rmat:n=128,e=512", "planted:n=128,e=512,c=4", "ba:n=128,m=4", "er:n=128,e=512", "star:n=64,hubs=2"] {
+            let a = from_spec(spec, 7).unwrap();
+            let b = from_spec(spec, 7).unwrap();
+            assert_eq!(a.edges.edges, b.edges.edges, "{spec} not deterministic");
+            let c = from_spec(spec, 8).unwrap();
+            assert_ne!(a.edges.edges, c.edges.edges, "{spec} ignores seed");
+        }
+    }
+}

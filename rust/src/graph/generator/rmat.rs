@@ -1,0 +1,96 @@
+//! R-MAT generator (Chakrabarti, Zhan & Faloutsos, SDM'04) with the
+//! Graph500 parameters (a, b, c) = (0.57, 0.19, 0.19): recursively drop
+//! each edge into a quadrant of the adjacency matrix. Produces the heavy-
+//! tailed degree distribution that motivates the paper's tree-reduction
+//! strategy (hot nodes).
+
+use crate::graph::edgelist::EdgeList;
+use crate::graph::NodeId;
+use crate::util::pool::{default_threads, parallel_map};
+use crate::util::rng::{mix2, Xoshiro256};
+
+use super::Generated;
+
+const A: f64 = 0.57;
+const B: f64 = 0.19;
+const C: f64 = 0.19;
+
+/// Generate an undirected (symmetrized) R-MAT graph with `n` nodes
+/// (rounded up to a power of two internally) and ~`num_edges` directed
+/// edges before dedup/symmetrization.
+pub fn generate(n: NodeId, num_edges: u64, seed: u64) -> Generated {
+    let scale = (n.max(2) as f64).log2().ceil() as u32;
+    // Sample edges in parallel chunks; each chunk's RNG is derived from
+    // (seed, chunk) so the result is independent of thread count.
+    let chunk_size = 64 * 1024;
+    let chunks: Vec<u64> = (0..num_edges.div_ceil(chunk_size)).collect();
+    let per_chunk = parallel_map(&chunks, default_threads(), |&ci| {
+        let mut rng = Xoshiro256::seed_from_u64(mix2(seed, ci));
+        let count = chunk_size.min(num_edges - ci * chunk_size);
+        let mut edges = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let (mut x, mut y) = (0u64, 0u64);
+            for _ in 0..scale {
+                let r = rng.gen_f64();
+                let (dx, dy) = if r < A {
+                    (0, 0)
+                } else if r < A + B {
+                    (0, 1)
+                } else if r < A + B + C {
+                    (1, 0)
+                } else {
+                    (1, 1)
+                };
+                x = (x << 1) | dx;
+                y = (y << 1) | dy;
+            }
+            // Fold the power-of-two id space onto [0, n).
+            let src = (x % n as u64) as NodeId;
+            let dst = (y % n as u64) as NodeId;
+            edges.push((src, dst));
+        }
+        edges
+    });
+    let mut el = EdgeList::with_capacity(n, num_edges as usize * 2);
+    for chunk in per_chunk {
+        for (s, d) in chunk {
+            el.push(s, d);
+        }
+    }
+    el.symmetrize();
+    Generated { name: format!("rmat(n={n},e={num_edges},seed={seed})"), edges: el, labels: None, num_classes: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_bounds() {
+        let g = generate(1000, 8000, 42);
+        assert_eq!(g.edges.num_nodes, 1000);
+        assert!(g.edges.edges.iter().all(|e| e.src < 1000 && e.dst < 1000));
+        // Symmetrized: reverse of every edge present.
+        let set: std::collections::HashSet<_> = g.edges.edges.iter().copied().collect();
+        assert!(g.edges.edges.iter().all(|e| set.contains(&e.reversed())));
+    }
+
+    #[test]
+    fn skew_exists() {
+        let g = generate(4096, 64 * 4096, 7);
+        let degs = g.edges.degrees();
+        let max = *degs.iter().max().unwrap() as f64;
+        let mean = degs.iter().map(|&d| d as f64).sum::<f64>() / degs.len() as f64;
+        // R-MAT should produce hubs well above the mean degree.
+        assert!(max > 6.0 * mean, "max {max} mean {mean}: no skew?");
+    }
+
+    #[test]
+    fn independent_of_thread_count() {
+        // parallel_map chunking is keyed by chunk index, not thread; verify
+        // via the GG_THREADS env being irrelevant to the hash of output.
+        let a = generate(512, 4096, 3);
+        let b = generate(512, 4096, 3);
+        assert_eq!(a.edges.edges, b.edges.edges);
+    }
+}

@@ -1,0 +1,49 @@
+//! Star / multi-hub graphs: `hubs` central nodes each connected to every
+//! other node, plus a sparse random background. The adversarial hot-node
+//! workload for the E4 tree-reduction experiments — one node's neighbor
+//! list dominates all work.
+
+use crate::graph::edgelist::EdgeList;
+use crate::graph::NodeId;
+use crate::util::rng::{mix2, Xoshiro256};
+
+use super::Generated;
+
+pub fn generate(n: NodeId, hubs: u32, seed: u64) -> Generated {
+    assert!(n > hubs, "need n > hubs");
+    let mut rng = Xoshiro256::seed_from_u64(mix2(seed, 0x57a7));
+    let mut el = EdgeList::with_capacity(n, (n as usize) * (hubs as usize + 1));
+    for h in 0..hubs {
+        for v in hubs..n {
+            el.push(h, v);
+        }
+    }
+    // Background ring + sparse chords so non-hub nodes have >1 neighbor.
+    for v in hubs..n {
+        let next = if v + 1 == n { hubs } else { v + 1 };
+        el.push(v, next);
+        if rng.gen_bool(0.25) {
+            let w = hubs + rng.gen_range((n - hubs) as u64) as NodeId;
+            if w != v {
+                el.push(v, w);
+            }
+        }
+    }
+    el.symmetrize();
+    Generated { name: format!("star(n={n},hubs={hubs},seed={seed})"), edges: el, labels: None, num_classes: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hubs_dominate_degree() {
+        let g = generate(1000, 2, 1);
+        let degs = g.edges.degrees();
+        assert!(degs[0] >= 998 - 2);
+        assert!(degs[1] >= 998 - 2);
+        let non_hub_max = degs[2..].iter().max().copied().unwrap();
+        assert!(non_hub_max < 20);
+    }
+}

@@ -1,0 +1,175 @@
+//! Graph I/O: tab-separated edge-list text (interop with the usual SNAP
+//! style dumps) and a compact binary format with magic + version header
+//! (what the offline baseline and the CLI's `partition` command use).
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::edgelist::EdgeList;
+use super::NodeId;
+
+const MAGIC: &[u8; 8] = b"GGPLUS01";
+
+/// Write `el` as `src\tdst\n` lines with a `# nodes: N` header comment.
+pub fn save_text(el: &EdgeList, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# nodes: {}", el.num_nodes)?;
+    for e in &el.edges {
+        writeln!(w, "{}\t{}", e.src, e.dst)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a text edge list. Lines starting with `#` are comments; a
+/// `# nodes: N` comment fixes the node count, otherwise max-id+1 is used.
+pub fn load_text(path: &Path) -> Result<EdgeList> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let r = BufReader::new(f);
+    let mut el = EdgeList::new(0);
+    let mut max_id: NodeId = 0;
+    let mut declared: Option<NodeId> = None;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix('#') {
+            if let Some(n) = rest.trim().strip_prefix("nodes:") {
+                declared = Some(
+                    n.trim()
+                        .parse()
+                        .with_context(|| format!("bad nodes header at line {}", lineno + 1))?,
+                );
+            }
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (a, b) = (it.next(), it.next());
+        match (a, b) {
+            (Some(a), Some(b)) => {
+                let src: NodeId =
+                    a.parse().with_context(|| format!("bad src at line {}", lineno + 1))?;
+                let dst: NodeId =
+                    b.parse().with_context(|| format!("bad dst at line {}", lineno + 1))?;
+                max_id = max_id.max(src).max(dst);
+                el.edges.push(super::Edge::new(src, dst));
+            }
+            _ => bail!("malformed line {} in {}", lineno + 1, path.display()),
+        }
+    }
+    el.num_nodes = declared.unwrap_or(if el.edges.is_empty() { 0 } else { max_id + 1 });
+    if el.edges.iter().any(|e| e.src >= el.num_nodes || e.dst >= el.num_nodes) {
+        bail!("edge endpoint >= declared node count in {}", path.display());
+    }
+    Ok(el)
+}
+
+/// Write the compact binary format: magic, node count, edge count, then
+/// little-endian u32 pairs.
+pub fn save_binary(el: &EdgeList, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(el.num_nodes as u64).to_le_bytes())?;
+    w.write_all(&(el.edges.len() as u64).to_le_bytes())?;
+    // Bulk-encode for speed.
+    let mut buf = Vec::with_capacity(el.edges.len() * 8);
+    for e in &el.edges {
+        buf.extend_from_slice(&e.src.to_le_bytes());
+        buf.extend_from_slice(&e.dst.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load the binary format written by [`save_binary`].
+pub fn load_binary(path: &Path) -> Result<EdgeList> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a GraphGen+ binary graph (bad magic)", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let num_nodes = u64::from_le_bytes(u64buf);
+    r.read_exact(&mut u64buf)?;
+    let num_edges = u64::from_le_bytes(u64buf) as usize;
+    if num_nodes > NodeId::MAX as u64 {
+        bail!("node count {num_nodes} exceeds u32 id space");
+    }
+    let mut buf = vec![0u8; num_edges * 8];
+    r.read_exact(&mut buf)?;
+    let mut el = EdgeList::with_capacity(num_nodes as NodeId, num_edges);
+    for c in buf.chunks_exact(8) {
+        let src = NodeId::from_le_bytes(c[0..4].try_into().unwrap());
+        let dst = NodeId::from_le_bytes(c[4..8].try_into().unwrap());
+        el.edges.push(super::Edge::new(src, dst));
+    }
+    if el.edges.iter().any(|e| e.src as u64 >= num_nodes || e.dst as u64 >= num_nodes) {
+        bail!("corrupt graph file {}: endpoint out of range", path.display());
+    }
+    Ok(el)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ggtest-{}-{:?}", std::process::id(), std::thread::current().id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let g = generator::from_spec("rmat:n=128,e=512", 1).unwrap();
+        let p = tmpdir().join("g.tsv");
+        save_text(&g.edges, &p).unwrap();
+        let loaded = load_text(&p).unwrap();
+        assert_eq!(loaded.num_nodes, g.edges.num_nodes);
+        assert_eq!(loaded.edges, g.edges.edges);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = generator::from_spec("planted:n=200,e=900,c=4", 2).unwrap();
+        let p = tmpdir().join("g.bin");
+        save_binary(&g.edges, &p).unwrap();
+        let loaded = load_binary(&p).unwrap();
+        assert_eq!(loaded.num_nodes, g.edges.num_nodes);
+        assert_eq!(loaded.edges, g.edges.edges);
+    }
+
+    #[test]
+    fn text_without_header_infers_nodes() {
+        let p = tmpdir().join("noheader.tsv");
+        std::fs::write(&p, "0\t5\n5 2\n").unwrap();
+        let el = load_text(&p).unwrap();
+        assert_eq!(el.num_nodes, 6);
+        assert_eq!(el.edges.len(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let d = tmpdir();
+        let p = d.join("bad.tsv");
+        std::fs::write(&p, "0\n").unwrap();
+        assert!(load_text(&p).is_err());
+        let p2 = d.join("bad.bin");
+        std::fs::write(&p2, b"NOTMAGIC........").unwrap();
+        assert!(load_binary(&p2).is_err());
+        let p3 = d.join("oob.tsv");
+        std::fs::write(&p3, "# nodes: 2\n0\t9\n").unwrap();
+        assert!(load_text(&p3).is_err());
+    }
+}

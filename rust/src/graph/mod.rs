@@ -1,0 +1,44 @@
+//! Graph substrate: edge lists, CSR storage, synthetic generators,
+//! feature/label synthesis, partitioners and on-disk formats.
+//!
+//! Node ids are `u32` — industry graphs need 64 bits, but at this
+//! testbed's scale (≤ hundreds of millions of edges) 32 bits halves the
+//! memory footprint and cache pressure of every hot loop. The public
+//! types use the [`NodeId`] alias throughout so widening is mechanical.
+
+pub mod csr;
+pub mod edgelist;
+pub mod features;
+pub mod generator;
+pub mod io;
+pub mod partition;
+
+/// Node identifier.
+pub type NodeId = u32;
+
+/// A directed edge (for undirected graphs both directions are stored).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+}
+
+impl Edge {
+    pub fn new(src: NodeId, dst: NodeId) -> Self {
+        Self { src, dst }
+    }
+
+    /// The edge with endpoints swapped.
+    pub fn reversed(self) -> Self {
+        Edge { src: self.dst, dst: self.src }
+    }
+
+    /// Canonical orientation (src <= dst), for undirected dedup.
+    pub fn canonical(self) -> Self {
+        if self.src <= self.dst {
+            self
+        } else {
+            self.reversed()
+        }
+    }
+}

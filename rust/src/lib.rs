@@ -1,0 +1,34 @@
+//! # GraphGen+
+//!
+//! A reproduction of *"GraphGen+: Advancing Distributed Subgraph Generation
+//! and Graph Learning On Industrial Graphs"* (Jin, Liu & Hong, Ant Group,
+//! 2025) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: graph
+//!   partitioning, the load-balance table, edge-centric distributed
+//!   subgraph generation with hierarchical tree reduction for hot nodes,
+//!   and a concurrent generation→training in-memory pipeline.
+//! * **L2 (`python/compile/model.py`)** — a 2-layer GCN over fixed-shape
+//!   padded 2-hop subgraph batches, AOT-lowered to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for masked
+//!   neighbor aggregation and the fused GCN layer.
+//!
+//! Python runs only at build time (`make artifacts`); the rust runtime
+//! loads the HLO artifacts through PJRT (`xla` crate) and is otherwise
+//! self-contained. See `DESIGN.md` for the full system inventory and the
+//! experiment index, and `EXPERIMENTS.md` for measured results.
+
+pub mod balance;
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod engines;
+pub mod graph;
+pub mod storage;
+pub mod mapreduce;
+pub mod pipeline;
+pub mod sampler;
+pub mod train;
+pub mod testkit;
+pub mod util;

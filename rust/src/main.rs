@@ -1,0 +1,355 @@
+//! GraphGen+ launcher.
+//!
+//! ```text
+//! graphgen-plus generate   # distributed subgraph generation, one engine
+//! graphgen-plus compare    # all four engines on one workload (mini E1)
+//! graphgen-plus pipeline   # generation + in-memory training (E6/E7)
+//! graphgen-plus partition  # partitioner diagnostics
+//! graphgen-plus inspect    # graph/degree diagnostics
+//! graphgen-plus make-graph # generate + save a graph file
+//! ```
+//!
+//! Every command accepts `--config run.json` plus individual overrides
+//! (see `config::RunConfig`).
+
+use anyhow::{Context, Result};
+use graphgen_plus::cli::{flag, opt, App, CliError, CommandSpec, Parsed};
+use graphgen_plus::config::RunConfig;
+use graphgen_plus::engines::{self, NullSink};
+use graphgen_plus::graph::features::FeatureStore;
+use graphgen_plus::graph::{generator, io, partition};
+use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
+use graphgen_plus::train::ModelRuntime;
+use graphgen_plus::util::bytes::{fmt_bytes, fmt_count, fmt_rate, fmt_secs};
+use graphgen_plus::util::stats::Samples;
+
+fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
+    vec![
+        opt("config", "JSON config file (see config::RunConfig)", None),
+        opt("graph", "generator spec, e.g. rmat:n=65536,e=524288", None),
+        opt("graph-seed", "graph generation seed", None),
+        opt("num-seeds", "number of seed nodes", None),
+        opt("workers", "simulated cluster width", None),
+        opt("threads", "OS threads", None),
+        opt("wave-size", "seeds per generation wave", None),
+        opt("fanout", "per-hop fanouts, e.g. 40,20", None),
+        opt("sample-seed", "sampling determinism seed", None),
+        opt("mapping", "seed mapping: paper|contiguous|hash", None),
+        opt("reduce", "aggregation: tree|flat", None),
+        opt("reduce-arity", "tree reduction arity", None),
+        flag("dump-config", "print the effective config and exit"),
+    ]
+}
+
+fn build_app() -> App {
+    App {
+        name: "graphgen-plus",
+        about: "distributed subgraph generation + in-memory graph learning (GraphGen+ reproduction)",
+        commands: vec![
+            CommandSpec {
+                name: "generate",
+                about: "run one generation engine and report throughput",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(opt("engine", "graphgen+|graphgen|agl|sql-like", Some("graphgen+")));
+                    o
+                },
+            },
+            CommandSpec {
+                name: "compare",
+                about: "run all four engines on the same workload (mini E1)",
+                opts: common_opts(),
+            },
+            CommandSpec {
+                name: "pipeline",
+                about: "generation + concurrent in-memory GCN training",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(opt("engine", "generation engine", Some("graphgen+")));
+                    o.push(opt("artifacts", "AOT artifact directory", Some("artifacts")));
+                    o.push(opt("replicas", "training replicas", None));
+                    o.push(opt("lr", "learning rate", None));
+                    o.push(opt("allreduce", "ring|tree", None));
+                    o.push(opt("mode", "concurrent|sequential", None));
+                    o.push(opt("pjrt-pool", "PJRT executor threads", None));
+                    o.push(opt("save-ckpt", "write trained params to this path", None));
+                    o.push(opt("eval-seeds", "evaluate on N held-out seeds after training", None));
+                    o
+                },
+            },
+            CommandSpec {
+                name: "partition",
+                about: "partitioner diagnostics on a generated graph",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(opt("strategy", "hash|range|edge-balanced", Some("hash")));
+                    o
+                },
+            },
+            CommandSpec {
+                name: "inspect",
+                about: "graph statistics (degrees, hot nodes, memory)",
+                opts: common_opts(),
+            },
+            CommandSpec {
+                name: "make-graph",
+                about: "generate a graph and save it (.tsv or binary)",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(opt("out", "output path (.tsv → text, else binary)", Some("graph.bin")));
+                    o
+                },
+            },
+        ],
+    }
+}
+
+/// Fold CLI values into a RunConfig (config file first, then flags).
+fn run_config(p: &Parsed) -> Result<RunConfig> {
+    let mut cfg = match p.get("config") {
+        Some(path) => RunConfig::from_json_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    for (k, v) in p.values() {
+        if k == "config" {
+            continue;
+        }
+        let key = k.replace('-', "_");
+        // CLI names map 1:1 onto config keys (dash→underscore); options
+        // consumed directly by a command handler are passed through.
+        const COMMAND_LOCAL: &[&str] = &["engine", "strategy", "out", "save_ckpt", "eval_seeds"];
+        if cfg.apply_override(&key, v).is_err() && !COMMAND_LOCAL.contains(&key.as_str()) {
+            anyhow::bail!("unknown option --{k}");
+        }
+    }
+    Ok(cfg)
+}
+
+fn seeds_for(cfg: &RunConfig, n: u32) -> Vec<u32> {
+    // Deterministic seed draw without replacement.
+    let mut rng =
+        graphgen_plus::util::rng::Xoshiro256::seed_from_u64(cfg.sample_seed ^ 0x5eed_5eed);
+    let take = cfg.num_seeds.min(n as usize);
+    rng.sample_indices(n as usize, take).into_iter().map(|v| v as u32).collect()
+}
+
+fn cmd_generate(p: &Parsed) -> Result<()> {
+    let cfg = run_config(p)?;
+    if p.flag("dump-config") {
+        println!("{}", cfg.to_json().to_pretty());
+        return Ok(());
+    }
+    let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
+    let g = gen.csr();
+    let seeds = seeds_for(&cfg, g.num_nodes());
+    let engine = engines::by_name(p.get("engine").unwrap_or(&cfg.engine))?;
+    log::info!("graph {}: {} nodes, {} edges", gen.name, g.num_nodes(), g.num_edges());
+    let sink = NullSink::default();
+    let report = engine.generate(&g, &seeds, &cfg.engine_config()?, &sink)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_compare(p: &Parsed) -> Result<()> {
+    let cfg = run_config(p)?;
+    let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
+    let g = gen.csr();
+    let seeds = seeds_for(&cfg, g.num_nodes());
+    println!(
+        "workload: {} ({} nodes / {} edges), {} seeds, fanout {}",
+        gen.name,
+        fmt_count(g.num_nodes() as f64),
+        fmt_count(g.num_edges() as f64),
+        seeds.len(),
+        cfg.fanout
+    );
+    let mut rows = Vec::new();
+    let mut baseline = None;
+    for name in ["sql-like", "agl", "graphgen", "graphgen+"] {
+        let engine = engines::by_name(name)?;
+        let sink = NullSink::default();
+        let report = engine.generate(&g, &seeds, &cfg.engine_config()?, &sink)?;
+        if name == "sql-like" {
+            baseline = Some(report.wall.as_secs_f64());
+        }
+        let speedup = baseline
+            .map(|b| format!("{:.2}x", b / report.wall.as_secs_f64()))
+            .unwrap_or_default();
+        rows.push(vec![
+            name.to_string(),
+            fmt_secs(report.wall.as_secs_f64()),
+            fmt_rate(report.nodes_per_sec(), "nodes"),
+            fmt_bytes(report.fabric.total_bytes),
+            speedup,
+        ]);
+        println!("  {}", report.render());
+    }
+    println!(
+        "\n{}",
+        graphgen_plus::bench_harness::render_markdown(
+            "engine comparison (speedup vs sql-like)",
+            &["engine".into(), "wall".into(), "throughput".into(), "shuffle".into(), "speedup".into()],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_pipeline(p: &Parsed) -> Result<()> {
+    let cfg = run_config(p)?;
+    if p.flag("dump-config") {
+        println!("{}", cfg.to_json().to_pretty());
+        return Ok(());
+    }
+    let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
+    let g = gen.csr();
+    let seeds = seeds_for(&cfg, g.num_nodes());
+    let runtime = ModelRuntime::load(std::path::Path::new(&cfg.artifacts), cfg.pjrt_pool)
+        .context("load artifacts (run `make artifacts`)")?;
+    let spec = runtime.meta().spec;
+    let mut ecfg = cfg.engine_config()?;
+    // Fanout must match the compiled batch layout.
+    ecfg.fanout = graphgen_plus::sampler::FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]);
+    let classes = spec.classes as u32;
+    let features = match &gen.labels {
+        Some(l) => FeatureStore::with_labels(spec.dim, classes.max(gen.num_classes), l.clone(), cfg.feature_seed),
+        None => FeatureStore::hashed(spec.dim, classes, cfg.feature_seed),
+    };
+    let engine = engines::by_name(p.get("engine").unwrap_or(&cfg.engine))?;
+    let mode: PipelineMode = cfg.mode.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let report = run_pipeline(
+        &g, &seeds, engine.as_ref(), &ecfg, &features, &runtime, &cfg.train_config()?, mode,
+    )?;
+    println!("{}", report.render());
+    println!("{}", report.gen.render());
+    println!("loss curve (iter, loss):");
+    for (i, l) in &report.train.loss_curve {
+        println!("  {i:>6} {l:.4}");
+    }
+    if let Some(path) = p.get("save-ckpt") {
+        graphgen_plus::train::checkpoint::save(
+            std::path::Path::new(path),
+            runtime.meta(),
+            &report.train.params,
+        )?;
+        println!("checkpoint written to {path}");
+    }
+    if let Some(n) = p.get_parse::<u32>("eval-seeds")? {
+        // Held-out seeds: ids not used for training (training drew the
+        // first `num_seeds` draws of the deterministic sampler).
+        let mut rng = graphgen_plus::util::rng::Xoshiro256::seed_from_u64(cfg.sample_seed ^ 0xe7a1);
+        let eval_seeds: Vec<u32> = rng
+            .sample_indices(g.num_nodes() as usize, (n as usize).min(g.num_nodes() as usize))
+            .into_iter()
+            .map(|v| v as u32)
+            .collect();
+        let ev = graphgen_plus::train::eval::evaluate(
+            &runtime, engine.as_ref(), &g, &features, &eval_seeds, &ecfg, &report.train.params,
+        )?;
+        println!(
+            "held-out eval: {}/{} correct = {:.1}%",
+            ev.correct,
+            ev.examples,
+            ev.accuracy * 100.0
+        );
+    }
+    runtime.shutdown();
+    Ok(())
+}
+
+fn cmd_partition(p: &Parsed) -> Result<()> {
+    let cfg = run_config(p)?;
+    let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
+    let g = gen.csr();
+    let strategy: partition::Strategy = p
+        .get("strategy")
+        .unwrap_or("hash")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let parts = partition::partition_graph(&g, cfg.workers, strategy, cfg.sample_seed);
+    println!("strategy={:?} workers={}", strategy, cfg.workers);
+    let mut edges = Samples::new();
+    for part in &parts.parts {
+        println!(
+            "  worker {:>3}: {:>8} nodes {:>10} edges",
+            part.worker,
+            part.nodes.len(),
+            part.num_edges
+        );
+        edges.push(part.num_edges as f64);
+    }
+    println!("edge imbalance (max/mean): {:.3}", parts.edge_imbalance());
+    println!("edge cv: {:.3}", edges.cv());
+    Ok(())
+}
+
+fn cmd_inspect(p: &Parsed) -> Result<()> {
+    let cfg = run_config(p)?;
+    let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
+    let g = gen.csr();
+    println!("graph: {}", gen.name);
+    println!("  nodes: {}", fmt_count(g.num_nodes() as f64));
+    println!("  edges: {}", fmt_count(g.num_edges() as f64));
+    println!("  mean degree: {:.2}", g.mean_degree());
+    let (hot, deg) = g.max_degree();
+    println!("  max degree: {deg} (node {hot})");
+    println!("  csr memory: {}", fmt_bytes(g.memory_bytes()));
+    println!("  top-10 hot nodes:");
+    for (v, d) in gen.edges.top_degree_nodes(10) {
+        println!("    node {v:>9} degree {d}");
+    }
+    if let Some(labels) = &gen.labels {
+        let mut counts = vec![0u64; gen.num_classes as usize];
+        for &l in labels {
+            counts[l as usize] += 1;
+        }
+        println!("  classes: {counts:?}");
+    }
+    Ok(())
+}
+
+fn cmd_make_graph(p: &Parsed) -> Result<()> {
+    let cfg = run_config(p)?;
+    let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
+    let out = std::path::PathBuf::from(p.get("out").unwrap_or("graph.bin"));
+    if out.extension().is_some_and(|e| e == "tsv") {
+        io::save_text(&gen.edges, &out)?;
+    } else {
+        io::save_binary(&gen.edges, &out)?;
+    }
+    println!(
+        "wrote {} ({} nodes, {} edges, {})",
+        out.display(),
+        gen.edges.num_nodes,
+        gen.edges.len(),
+        fmt_bytes(std::fs::metadata(&out)?.len())
+    );
+    Ok(())
+}
+
+fn main() {
+    graphgen_plus::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app = build_app();
+    let parsed = match app.parse(&args) {
+        Ok(p) => p,
+        Err(CliError::HelpRequested) => return,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", app.help());
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed.command.as_str() {
+        "generate" => cmd_generate(&parsed),
+        "compare" => cmd_compare(&parsed),
+        "pipeline" => cmd_pipeline(&parsed),
+        "partition" => cmd_partition(&parsed),
+        "inspect" => cmd_inspect(&parsed),
+        "make-graph" => cmd_make_graph(&parsed),
+        other => Err(anyhow::anyhow!("unhandled command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,275 @@
+//! Generic map → shuffle → reduce over in-memory partitions.
+
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::Fabric;
+
+/// Execution statistics for one MapReduce round.
+#[derive(Debug, Clone, Default)]
+pub struct MapReduceStats {
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    pub emitted_pairs: u64,
+    pub shuffled_bytes: u64,
+}
+
+fn key_hash<K: Hash>(k: &K) -> u64 {
+    // FxHash-style: cheap and deterministic (std RandomState is seeded per
+    // process, which would make reducer assignment nondeterministic).
+    struct FxHasher(u64);
+    impl Hasher for FxHasher {
+        fn finish(&self) -> u64 {
+            self.0
+        }
+        fn write(&mut self, bytes: &[u8]) {
+            for &b in bytes {
+                self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        fn write_u32(&mut self, v: u32) {
+            self.0 = (self.0 ^ v as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        fn write_u64(&mut self, v: u64) {
+            self.0 = (self.0 ^ v).wrapping_mul(0x100_0000_01b3);
+        }
+        fn write_usize(&mut self, v: usize) {
+            self.write_u64(v as u64);
+        }
+    }
+    let mut h = FxHasher(0xcbf2_9ce4_8422_2325);
+    k.hash(&mut h);
+    crate::util::rng::mix64(h.finish())
+}
+
+/// Run one MapReduce round.
+///
+/// * `inputs` — one entry per map task (e.g. an edge partition).
+/// * `map_fn(task_idx, input, emit)` — calls `emit(key, value)`.
+/// * `wire_bytes(key, value)` — serialized size for shuffle accounting.
+/// * `init()` / `fold(acc, key, value)` — reducer state per reduce task.
+///
+/// Keys are routed to reducer `hash(key) % reduce_tasks`. Map tasks run on
+/// `threads` OS threads; each keeps per-reducer local buffers (combiner
+/// style) that are handed to reducers after the map barrier, then reducers
+/// fold in parallel. Shuffle traffic is charged on `fabric` with map task
+/// `t` acting as worker `t % fabric.workers()`.
+#[allow(clippy::too_many_arguments)]
+pub fn map_shuffle_reduce<I, K, V, A>(
+    inputs: &[I],
+    reduce_tasks: usize,
+    threads: usize,
+    fabric: &Fabric,
+    map_fn: impl Fn(usize, &I, &mut dyn FnMut(K, V)) + Sync,
+    wire_bytes: impl Fn(&K, &V) -> u64 + Sync,
+    init: impl Fn() -> A + Sync,
+    fold: impl Fn(&mut A, K, V) + Sync,
+) -> (Vec<A>, MapReduceStats)
+where
+    I: Sync,
+    K: Hash + Send,
+    V: Send,
+    A: Send,
+{
+    assert!(reduce_tasks >= 1);
+    let w = fabric.workers();
+    // --- map phase: per-task emission into per-reducer buckets ----------
+    let emitted = std::sync::atomic::AtomicU64::new(0);
+    let shuffled = std::sync::atomic::AtomicU64::new(0);
+    // buckets[r] collects (K, V) destined for reducer r, from all tasks.
+    let buckets: Vec<Mutex<Vec<(K, V)>>> = (0..reduce_tasks).map(|_| Mutex::new(Vec::new())).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1).min(inputs.len().max(1)) {
+            s.spawn(|| loop {
+                let t = next.fetch_add(1, Ordering::Relaxed);
+                if t >= inputs.len() {
+                    break;
+                }
+                let mut local: Vec<Vec<(K, V)>> = (0..reduce_tasks).map(|_| Vec::new()).collect();
+                let mut count = 0u64;
+                let mut bytes = 0u64;
+                {
+                    let mut emit = |k: K, v: V| {
+                        let r = (key_hash(&k) % reduce_tasks as u64) as usize;
+                        bytes += wire_bytes(&k, &v);
+                        count += 1;
+                        local[r].push((k, v));
+                    };
+                    map_fn(t, &inputs[t], &mut emit);
+                }
+                emitted.fetch_add(count, Ordering::Relaxed);
+                shuffled.fetch_add(bytes, Ordering::Relaxed);
+                // Charge shuffle: mapper worker → reducer worker.
+                let src = t % w;
+                for (r, chunk) in local.into_iter().enumerate() {
+                    if chunk.is_empty() {
+                        continue;
+                    }
+                    let dst = r % w;
+                    if src != dst {
+                        let b: u64 = chunk.iter().map(|(k, v)| wire_bytes(k, v)).sum();
+                        fabric.charge(src, dst, b);
+                    }
+                    buckets[r].lock().unwrap().extend(chunk);
+                }
+            });
+        }
+    });
+    // --- reduce phase ----------------------------------------------------
+    let accs: Vec<Mutex<Option<A>>> = (0..reduce_tasks).map(|_| Mutex::new(None)).collect();
+    let next_r = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1).min(reduce_tasks) {
+            s.spawn(|| loop {
+                let r = next_r.fetch_add(1, Ordering::Relaxed);
+                if r >= reduce_tasks {
+                    break;
+                }
+                let pairs = std::mem::take(&mut *buckets[r].lock().unwrap());
+                let mut acc = init();
+                for (k, v) in pairs {
+                    fold(&mut acc, k, v);
+                }
+                *accs[r].lock().unwrap() = Some(acc);
+            });
+        }
+    });
+    let accs: Vec<A> = accs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("reducer ran"))
+        .collect();
+    let stats = MapReduceStats {
+        map_tasks: inputs.len(),
+        reduce_tasks,
+        emitted_pairs: emitted.load(Ordering::Relaxed),
+        shuffled_bytes: shuffled.load(Ordering::Relaxed),
+    };
+    (accs, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Word-count style: count occurrences of u32 keys.
+    #[test]
+    fn word_count_matches_sequential() {
+        let inputs: Vec<Vec<u32>> = (0..16)
+            .map(|t| (0..100).map(|i| ((t * 31 + i * 7) % 13) as u32).collect())
+            .collect();
+        let fabric = Fabric::new(4);
+        let (accs, stats) = map_shuffle_reduce(
+            &inputs,
+            4,
+            4,
+            &fabric,
+            |_, input: &Vec<u32>, emit| {
+                for &x in input {
+                    emit(x, 1u64);
+                }
+            },
+            |_, _| 12,
+            HashMap::<u32, u64>::new,
+            |acc, k, v| *acc.entry(k).or_default() += v,
+        );
+        // Merge reducer outputs.
+        let mut merged: HashMap<u32, u64> = HashMap::new();
+        for a in accs {
+            for (k, v) in a {
+                *merged.entry(k).or_default() += v;
+            }
+        }
+        // Sequential reference.
+        let mut want: HashMap<u32, u64> = HashMap::new();
+        for input in &inputs {
+            for &x in input {
+                *want.entry(x).or_default() += 1;
+            }
+        }
+        assert_eq!(merged, want);
+        assert_eq!(stats.emitted_pairs, 1600);
+        assert_eq!(stats.shuffled_bytes, 1600 * 12);
+        assert!(fabric.stats().total_bytes <= stats.shuffled_bytes);
+        assert!(fabric.stats().total_bytes > 0);
+    }
+
+    #[test]
+    fn key_routing_is_consistent() {
+        // Same key must always land in the same reducer: fold per reducer
+        // into a set of keys, then check disjointness.
+        let inputs: Vec<Vec<u32>> = vec![(0..50).collect(), (0..50).collect()];
+        let fabric = Fabric::new(2);
+        let (accs, _) = map_shuffle_reduce(
+            &inputs,
+            3,
+            2,
+            &fabric,
+            |_, input: &Vec<u32>, emit| {
+                for &x in input {
+                    emit(x, ());
+                }
+            },
+            |_, _| 4,
+            std::collections::HashSet::<u32>::new,
+            |acc, k, _| {
+                acc.insert(k);
+            },
+        );
+        for i in 0..accs.len() {
+            for j in (i + 1)..accs.len() {
+                assert!(accs[i].is_disjoint(&accs[j]), "key in two reducers");
+            }
+        }
+        let total: usize = accs.iter().map(|a| a.len()).sum();
+        assert_eq!(total, 50);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let inputs: Vec<Vec<u32>> = (0..8).map(|t| vec![t as u32; 10]).collect();
+        let run = |threads| {
+            let fabric = Fabric::new(2);
+            let (accs, _) = map_shuffle_reduce(
+                &inputs,
+                4,
+                threads,
+                &fabric,
+                |_, input: &Vec<u32>, emit| {
+                    for &x in input {
+                        emit(x, 1u64);
+                    }
+                },
+                |_, _| 1,
+                HashMap::<u32, u64>::new,
+                |acc, k, v| *acc.entry(k).or_default() += v,
+            );
+            accs.into_iter().map(|a| {
+                let mut v: Vec<_> = a.into_iter().collect();
+                v.sort_unstable();
+                v
+            }).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let inputs: Vec<Vec<u32>> = vec![];
+        let fabric = Fabric::new(1);
+        let (accs, stats) = map_shuffle_reduce(
+            &inputs,
+            2,
+            4,
+            &fabric,
+            |_, _: &Vec<u32>, _| {},
+            |_, _| 0,
+            || 0u64,
+            |acc, _k: u32, _v: ()| *acc += 1,
+        );
+        assert_eq!(accs, vec![0, 0]);
+        assert_eq!(stats.emitted_pairs, 0);
+    }
+}

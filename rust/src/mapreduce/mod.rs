@@ -1,0 +1,20 @@
+//! In-memory MapReduce engine with hierarchical tree reduction.
+//!
+//! GraphGen+ (like GraphGen and AGL before it) phrases subgraph generation
+//! as MapReduce rounds; this module is the execution substrate:
+//!
+//! * [`map_shuffle_reduce`] — generic map → hash-shuffle → fold, running
+//!   map tasks on a thread pool and charging shuffle traffic to a
+//!   [`crate::cluster::Fabric`].
+//! * [`tree_reduce`] / [`flat_reduce`] — the two aggregation topologies
+//!   compared in E4. The paper's hot-node fix organizes workers into a
+//!   reduction *tree* where each non-leaf merges its children's partial
+//!   results ("partially processes and aggregates ... before passing the
+//!   results to its parent"); the flat variant funnels everything into a
+//!   single aggregator.
+
+pub mod engine;
+pub mod tree;
+
+pub use engine::{map_shuffle_reduce, MapReduceStats};
+pub use tree::{flat_reduce, tree_reduce, tree_reduce_with_fabric};

@@ -1,0 +1,177 @@
+//! Hierarchical tree reduction vs. flat aggregation — the paper's hot-node
+//! strategy (§2 step 3) and its E4 ablation partner.
+//!
+//! "Instead of having all workers communicate directly with a central
+//! aggregator, we organize them into a hierarchical tree structure. Each
+//! non-leaf worker partially processes and aggregates its assigned
+//! subgraphs before passing the results to its parent."
+//!
+//! The merge operators used in this codebase (reservoir top-k, subgraph
+//! accumulators) are associative + commutative, so `tree_reduce` is exact.
+
+use crate::cluster::Fabric;
+use crate::util::pool::parallel_map;
+
+/// Flat aggregation: a single aggregator consumes every partial result
+/// sequentially — the serial hot-spot the paper replaces. If `fabric` is
+/// given, each partial is charged as a transfer from its producer to
+/// worker 0 with `size_of` bytes.
+pub fn flat_reduce<T>(
+    mut items: Vec<T>,
+    merge: impl Fn(T, T) -> T,
+    fabric: Option<(&Fabric, &dyn Fn(&T) -> u64)>,
+) -> Option<T> {
+    if let Some((f, size_of)) = fabric {
+        let w = f.workers();
+        for (i, it) in items.iter().enumerate() {
+            let src = i % w;
+            if src != 0 {
+                f.charge(src, 0, size_of(it));
+            }
+        }
+    }
+    let mut it = items.drain(..);
+    let first = it.next()?;
+    Some(it.fold(first, merge))
+}
+
+/// Hierarchical tree reduction with the given `arity`: items are merged in
+/// rounds of `arity`-sized groups, each group's merge running in parallel
+/// (each group is an independent non-leaf "worker"). Returns `None` for
+/// empty input.
+pub fn tree_reduce<T: Send>(
+    items: Vec<T>,
+    arity: usize,
+    merge: impl Fn(T, T) -> T + Sync,
+) -> Option<T> {
+    tree_reduce_with_fabric(items, arity, merge, None)
+}
+
+/// [`tree_reduce`] with fabric accounting: at every round, each group's
+/// non-first members are charged as transfers to the group leader. Worker
+/// identity for item `i` at round r is its current slot index modulo the
+/// fabric's worker count.
+pub fn tree_reduce_with_fabric<T: Send>(
+    items: Vec<T>,
+    arity: usize,
+    merge: impl Fn(T, T) -> T + Sync,
+    fabric: Option<(&Fabric, &(dyn Fn(&T) -> u64 + Sync))>,
+) -> Option<T> {
+    assert!(arity >= 2, "tree arity must be >= 2");
+    if items.is_empty() {
+        return None;
+    }
+    let threads = crate::util::pool::default_threads();
+    let mut level: Vec<T> = items;
+    while level.len() > 1 {
+        if let Some((f, size_of)) = fabric {
+            let w = f.workers();
+            for (i, it) in level.iter().enumerate() {
+                if i % arity != 0 {
+                    let src = i % w;
+                    let dst = (i - i % arity) % w;
+                    if src != dst {
+                        f.charge(src, dst, size_of(it));
+                    }
+                }
+            }
+        }
+        // Group into arity-sized chunks and merge each group in parallel.
+        let mut groups: Vec<Vec<T>> = Vec::with_capacity(level.len().div_ceil(arity));
+        let mut cur: Vec<T> = Vec::with_capacity(arity);
+        for item in level {
+            cur.push(item);
+            if cur.len() == arity {
+                groups.push(std::mem::replace(&mut cur, Vec::with_capacity(arity)));
+            }
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+        // parallel_map needs &[T] → wrap each group in a Mutex<Option> to
+        // move out. Simpler: consume via into_iter + scoped threads.
+        level = parallel_merge(groups, threads, &merge);
+    }
+    level.pop()
+}
+
+fn parallel_merge<T: Send>(
+    groups: Vec<Vec<T>>,
+    threads: usize,
+    merge: &(impl Fn(T, T) -> T + Sync),
+) -> Vec<T> {
+    // Move groups into Options so worker threads can take them by index.
+    let slots: Vec<std::sync::Mutex<Option<Vec<T>>>> =
+        groups.into_iter().map(|g| std::sync::Mutex::new(Some(g))).collect();
+    let merged = parallel_map(&slots, threads, |slot| {
+        let group = slot.lock().unwrap().take().expect("group taken once");
+        let mut it = group.into_iter();
+        let first = it.next().expect("non-empty group");
+        it.fold(first, merge)
+    });
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Cases;
+
+    #[test]
+    fn tree_equals_flat_for_sums() {
+        let items: Vec<u64> = (1..=100).collect();
+        let flat = flat_reduce(items.clone(), |a, b| a + b, None).unwrap();
+        for arity in [2, 3, 8] {
+            let tree = tree_reduce(items.clone(), arity, |a, b| a + b).unwrap();
+            assert_eq!(tree, flat);
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(tree_reduce(Vec::<u64>::new(), 2, |a, b| a + b), None);
+        assert_eq!(tree_reduce(vec![7u64], 2, |a, b| a + b), Some(7));
+        assert_eq!(flat_reduce(Vec::<u64>::new(), |a, b| a + b, None), None);
+    }
+
+    #[test]
+    fn property_tree_equals_flat_for_reservoirs() {
+        use crate::sampler::reservoir::TopK;
+        Cases::new("tree == flat for TopK merge", 50).run(|rng| {
+            let k = 1 + rng.gen_range(6) as usize;
+            let parts: Vec<TopK> = (0..1 + rng.gen_range(20) as usize)
+                .map(|_| {
+                    let mut r = TopK::new(k);
+                    for _ in 0..rng.gen_range(10) {
+                        r.insert(rng.next_u64(), rng.gen_range(100) as u32);
+                    }
+                    r
+                })
+                .collect();
+            let merge = |mut a: TopK, b: TopK| {
+                a.merge(&b);
+                a
+            };
+            let flat = flat_reduce(parts.clone(), merge, None);
+            let arity = 2 + rng.gen_range(3) as usize;
+            let tree = tree_reduce(parts, arity, merge);
+            assert_eq!(flat, tree);
+        });
+    }
+
+    #[test]
+    fn fabric_accounting_tree_flattens_fan_in() {
+        let fabric_flat = Fabric::new(8);
+        let fabric_tree = Fabric::new(8);
+        let items: Vec<u64> = (0..64).collect();
+        let size: &(dyn Fn(&u64) -> u64 + Sync) = &|_| 1000;
+        flat_reduce(items.clone(), |a, b| a + b, Some((&fabric_flat, &|_| 1000)));
+        tree_reduce_with_fabric(items, 2, |a, b| a + b, Some((&fabric_tree, size)));
+        let flat_hot = *fabric_flat.stats().per_worker_recv.iter().max().unwrap();
+        let tree_hot = *fabric_tree.stats().per_worker_recv.iter().max().unwrap();
+        assert!(
+            tree_hot < flat_hot,
+            "tree should flatten the aggregator hot spot: {tree_hot} vs {flat_hot}"
+        );
+    }
+}

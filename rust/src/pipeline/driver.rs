@@ -1,0 +1,202 @@
+//! Pipeline driver: composes a generation engine with the trainer, either
+//! **concurrently** (GraphGen+: subgraphs stream straight into training)
+//! or **sequentially** (generate-everything-then-train, what any offline
+//! or storage-backed flow does). The E6 experiment is exactly this
+//! comparison.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::engines::{EngineConfig, GenReport, SubgraphEngine};
+use crate::graph::csr::Csr;
+use crate::graph::features::FeatureStore;
+use crate::graph::NodeId;
+use crate::sampler::Subgraph;
+use crate::train::trainer::{train, TrainConfig, TrainReport};
+use crate::train::ModelRuntime;
+use crate::util::timer::Stopwatch;
+
+use super::queue::{BoundedQueue, QueueSink, QueueStats};
+
+/// How generation and training are composed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Generation streams into training through the bounded queue
+    /// (the paper's design: "subgraph generation and training are
+    /// executed concurrently").
+    Concurrent,
+    /// Generation fully completes before training starts (ablation; also
+    /// the inherent behaviour of the offline engine).
+    Sequential,
+}
+
+impl std::str::FromStr for PipelineMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "concurrent" => Ok(Self::Concurrent),
+            "sequential" => Ok(Self::Sequential),
+            other => Err(format!("unknown pipeline mode '{other}'")),
+        }
+    }
+}
+
+/// Combined outcome of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub mode: PipelineMode,
+    pub gen: GenReport,
+    pub train: TrainReport,
+    pub queue: QueueStats,
+    /// End-to-end wall time (≤ gen.wall + train.wall when concurrent).
+    pub wall: Duration,
+}
+
+impl PipelineReport {
+    /// Overlap efficiency: how much wall time the concurrency saved
+    /// relative to running the two phases back-to-back.
+    pub fn overlap_ratio(&self) -> f64 {
+        let serial = self.gen.wall.as_secs_f64() + self.train.wall.as_secs_f64();
+        1.0 - self.wall.as_secs_f64() / serial
+    }
+
+    pub fn render(&self) -> String {
+        use crate::util::bytes::fmt_secs;
+        format!(
+            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% queue_max={}",
+            self.mode,
+            fmt_secs(self.wall.as_secs_f64()),
+            fmt_secs(self.gen.wall.as_secs_f64()),
+            fmt_secs(self.train.wall.as_secs_f64()),
+            self.train.iterations,
+            self.train.final_loss,
+            self.train.accuracy,
+            self.overlap_ratio() * 100.0,
+            self.queue.max_depth,
+        )
+    }
+}
+
+/// Queue capacity: enough for a few iteration groups of backlog — small
+/// enough that generation feels backpressure instead of ballooning memory
+/// (that bounded footprint is the "in-memory, no external storage" claim).
+pub fn default_queue_cap(tcfg: &TrainConfig, batch: usize) -> usize {
+    (tcfg.replicas * batch * 4).max(64)
+}
+
+/// Run `engine` over `seeds` and train on the produced subgraphs.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline(
+    graph: &Csr,
+    seeds: &[NodeId],
+    engine: &dyn SubgraphEngine,
+    ecfg: &EngineConfig,
+    features: &FeatureStore,
+    runtime: &ModelRuntime,
+    tcfg: &TrainConfig,
+    mode: PipelineMode,
+) -> Result<PipelineReport> {
+    let wall = Stopwatch::new();
+    let cap = default_queue_cap(tcfg, runtime.meta().spec.batch);
+    let queue = BoundedQueue::<Subgraph>::new(cap);
+    let (gen_report, train_report) = match mode {
+        PipelineMode::Concurrent => std::thread::scope(|scope| -> Result<_> {
+            let gen_handle = scope.spawn(|| {
+                let r = engine.generate(graph, seeds, ecfg, &QueueSink { queue: &queue });
+                queue.close(); // close even on error so the trainer exits
+                r
+            });
+            let train_report = train(runtime, features, &queue, tcfg)?;
+            let gen_report = gen_handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("generator panicked"))??;
+            Ok((gen_report, train_report))
+        })?,
+        PipelineMode::Sequential => {
+            // Unbounded staging (the memory cost sequential pays).
+            let staging = BoundedQueue::<Subgraph>::new(usize::MAX >> 1);
+            let gen_report =
+                engine.generate(graph, seeds, ecfg, &QueueSink { queue: &staging })?;
+            staging.close();
+            // Only after generation fully completed: forward into the
+            // training queue while the trainer consumes.
+            std::thread::scope(|scope| -> Result<_> {
+                let fwd = scope.spawn(|| {
+                    while let Some(sg) = staging.pop() {
+                        if queue.push(sg).is_err() {
+                            break;
+                        }
+                    }
+                    queue.close();
+                });
+                let train_report = train(runtime, features, &queue, tcfg)?;
+                fwd.join().map_err(|_| anyhow::anyhow!("forwarder panicked"))?;
+                Ok(train_report)
+            })
+            .map(|t| (gen_report, t))?
+        }
+    };
+    Ok(PipelineReport {
+        mode,
+        queue: queue.stats(),
+        gen: gen_report,
+        train: train_report,
+        wall: wall.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::graphgen_plus::GraphGenPlus;
+    use crate::graph::generator;
+    use crate::sampler::FanoutSpec;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("meta.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn concurrent_and_sequential_agree_on_results() {
+        let Some(dir) = artifacts_dir() else { return };
+        let runtime = ModelRuntime::load(&dir, 1).unwrap();
+        let spec = runtime.meta().spec;
+        let gen = generator::from_spec("planted:n=1024,e=8192,c=8", 7).unwrap();
+        let g = gen.csr();
+        let features =
+            FeatureStore::with_labels(spec.dim, spec.classes as u32, gen.labels.clone().unwrap(), 2);
+        let seeds: Vec<NodeId> = (0..(spec.batch as u32 * 2 * 4)).collect();
+        let ecfg = EngineConfig {
+            workers: 4,
+            wave_size: 128,
+            fanout: FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]),
+            ..Default::default()
+        };
+        let tcfg = TrainConfig { replicas: 2, curve_every: 1, ..Default::default() };
+        let conc = run_pipeline(
+            &g, &seeds, &GraphGenPlus, &ecfg, &features, &runtime, &tcfg,
+            PipelineMode::Concurrent,
+        )
+        .unwrap();
+        let seq = run_pipeline(
+            &g, &seeds, &GraphGenPlus, &ecfg, &features, &runtime, &tcfg,
+            PipelineMode::Sequential,
+        )
+        .unwrap();
+        // Same subgraphs, same order, same replicas → same losses.
+        assert_eq!(conc.train.iterations, seq.train.iterations);
+        assert_eq!(conc.train.iterations, 4);
+        assert!((conc.train.final_loss - seq.train.final_loss).abs() < 1e-5);
+        // Concurrent must overlap: wall < gen.wall + train.wall.
+        assert!(conc.wall <= conc.gen.wall + conc.train.wall + Duration::from_millis(50));
+        assert!(conc.queue.max_depth <= default_queue_cap(&tcfg, spec.batch));
+        runtime.shutdown();
+    }
+}

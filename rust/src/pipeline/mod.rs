@@ -1,0 +1,15 @@
+//! The in-memory generation→training pipeline — the paper's headline
+//! integration: "as new subgraphs are generated, they are directly loaded
+//! into memory and used for training" (§2 step 4).
+//!
+//! * [`queue`] — bounded MPMC queue with blocking push/pop, close
+//!   semantics and backpressure counters. This queue *is* the "in-memory
+//!   graph learning" handoff: it replaces GraphGen's disk round trip.
+//! * [`driver`] — runs generation and training concurrently (GraphGen+)
+//!   or sequentially (ablation), producing the E6 comparison.
+
+pub mod driver;
+pub mod queue;
+
+pub use driver::{run_pipeline, PipelineMode, PipelineReport};
+pub use queue::{BoundedQueue, QueueSink, QueueStats};

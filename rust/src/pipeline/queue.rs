@@ -1,0 +1,228 @@
+//! Bounded MPMC queue with close semantics and backpressure accounting.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::engines::SubgraphSink;
+use crate::sampler::Subgraph;
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    // stats
+    pushes: u64,
+    pops: u64,
+    max_depth: usize,
+    push_blocks: u64,
+    pop_blocks: u64,
+}
+
+/// Backpressure counters snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueueStats {
+    pub pushes: u64,
+    pub pops: u64,
+    pub max_depth: usize,
+    /// Producer had to wait (queue full) this many times.
+    pub push_blocks: u64,
+    /// Consumer had to wait (queue empty) this many times.
+    pub pop_blocks: u64,
+}
+
+/// Blocking bounded queue. `push` blocks at capacity (backpressure on the
+/// generator), `pop` blocks when empty and returns `None` once the queue
+/// is closed and drained.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        Self {
+            cap,
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                closed: false,
+                pushes: 0,
+                pops: 0,
+                max_depth: 0,
+                push_blocks: 0,
+                pop_blocks: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Blocking push. Returns `Err` if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() >= self.cap && !st.closed {
+            st.push_blocks += 1;
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        st.pushes += 1;
+        st.max_depth = st.max_depth.max(st.items.len());
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                st.pops += 1;
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st.pop_blocks += 1;
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        let st = self.state.lock().unwrap();
+        QueueStats {
+            pushes: st.pushes,
+            pops: st.pops,
+            max_depth: st.max_depth,
+            push_blocks: st.push_blocks,
+            pop_blocks: st.pop_blocks,
+        }
+    }
+}
+
+/// Adapter: lets a generation engine stream into a queue.
+pub struct QueueSink<'a> {
+    pub queue: &'a BoundedQueue<Subgraph>,
+}
+
+impl SubgraphSink for QueueSink<'_> {
+    fn accept(&self, _worker: usize, sg: Subgraph) -> anyhow::Result<()> {
+        self.queue
+            .push(sg)
+            .map_err(|_| anyhow::anyhow!("pipeline queue closed while generating"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                q2.push(i).unwrap();
+            }
+            q2.close();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // Producer can be at most cap ahead.
+        assert!(q.len() <= 2);
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+        let st = q.stats();
+        assert!(st.push_blocks > 0, "producer should have hit backpressure");
+        assert_eq!(st.pushes, 100);
+        assert_eq!(st.pops, 100);
+        assert!(st.max_depth <= 2);
+    }
+
+    #[test]
+    fn close_unblocks_everyone() {
+        let q = Arc::new(BoundedQueue::<u32>::new(1));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+        assert!(q.push(1).is_err());
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let total = 4 * 500;
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    q.push(p * 500 + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut local = Vec::new();
+                while let Some(v) = q.pop() {
+                    local.push(v);
+                }
+                local
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..total).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,93 @@
+//! Frontier inverted index: node → subgraphs that want its neighbors.
+//!
+//! The edge-centric pass (Alg. 1 step 15-21) scans *edges* and must answer
+//! "which seeds' current frontiers contain this edge's source?" in O(1).
+//! This index is rebuilt per hop from the previous hop's sampled frontier.
+//! Values are compact subgraph slot indices (`u32`), not node ids.
+
+use std::collections::HashMap;
+
+use crate::graph::NodeId;
+
+/// node → list of (subgraph slot, frontier position) pairs.
+///
+/// The frontier position disambiguates *which* hop-1 node of the subgraph
+/// this frontier entry corresponds to, so hop-2 samples can be attached to
+/// the right parent (a node can appear in several subgraphs and even at
+/// several positions of one subgraph's frontier).
+#[derive(Debug, Default, Clone)]
+pub struct InvertedIndex {
+    map: HashMap<NodeId, Vec<(u32, u32)>>,
+    entries: usize,
+}
+
+impl InvertedIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { map: HashMap::with_capacity(cap), entries: 0 }
+    }
+
+    pub fn insert(&mut self, node: NodeId, slot: u32, position: u32) {
+        self.map.entry(node).or_default().push((slot, position));
+        self.entries += 1;
+    }
+
+    /// All (slot, position) pairs interested in `node`.
+    #[inline]
+    pub fn get(&self, node: NodeId) -> &[(u32, u32)] {
+        self.map.get(&node).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    #[inline]
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.map.contains_key(&node)
+    }
+
+    /// Number of distinct frontier nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Total (node, slot) entries — the replication factor numerator.
+    pub fn num_entries(&self) -> usize {
+        self.entries
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, &[(u32, u32)])> {
+        self.map.iter().map(|(&k, v)| (k, v.as_slice()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_lookup() {
+        let mut ix = InvertedIndex::new();
+        ix.insert(5, 0, 0);
+        ix.insert(5, 3, 1);
+        ix.insert(9, 1, 0);
+        assert_eq!(ix.get(5), &[(0, 0), (3, 1)]);
+        assert_eq!(ix.get(9), &[(1, 0)]);
+        assert_eq!(ix.get(42), &[] as &[(u32, u32)]);
+        assert!(ix.contains(5));
+        assert!(!ix.contains(42));
+        assert_eq!(ix.num_nodes(), 2);
+        assert_eq!(ix.num_entries(), 3);
+    }
+
+    #[test]
+    fn replication_counts_duplicates() {
+        let mut ix = InvertedIndex::new();
+        // Same node wanted by 3 subgraphs = replication factor 3 for its edges.
+        for slot in 0..3 {
+            ix.insert(1, slot, 0);
+        }
+        assert_eq!(ix.num_nodes(), 1);
+        assert_eq!(ix.num_entries(), 3);
+    }
+}

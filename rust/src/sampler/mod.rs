@@ -1,0 +1,51 @@
+//! Subgraph sampling primitives shared by all generation engines.
+//!
+//! The paper samples a 2-hop neighborhood per seed with fanouts (40, 20).
+//! The key design decision here is *deterministic, mergeable* sampling:
+//! each candidate neighbor gets a hash priority derived from
+//! `(sample_seed, hop, seed-node, frontier-node, neighbor)`, and "sample k
+//! of N" means "keep the k smallest priorities" ([`reservoir::TopK`]).
+//! Because top-k-by-priority merges associatively and commutatively,
+//!
+//! * every engine (edge-centric, node-centric, SQL-like) produces **the
+//!   same subgraphs** for the same sample seed — engines are comparable
+//!   apples-to-apples and cross-validated in tests; and
+//! * the hierarchical tree reduction of partial results (the paper's
+//!   hot-node strategy) is *exact*, not approximate (flat ≡ tree, also
+//!   property-tested).
+
+pub mod inverted;
+pub mod reservoir;
+pub mod spec;
+pub mod subgraph;
+
+pub use spec::FanoutSpec;
+pub use subgraph::Subgraph;
+
+use crate::graph::NodeId;
+
+/// Loop-invariant part of the priority hash: everything except the
+/// neighbor. The scan hot loop hoists this out of the per-edge iteration
+/// (one `mix64` per edge instead of three — see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn priority_base(sample_seed: u64, hop: u32, seed_node: NodeId, frontier: NodeId) -> u64 {
+    crate::util::rng::mix2(
+        sample_seed ^ ((hop as u64) << 56),
+        ((seed_node as u64) << 32) | frontier as u64,
+    )
+}
+
+/// Finish the priority hash for one neighbor. Smaller = preferred.
+#[inline]
+pub fn priority_from_base(base: u64, neighbor: NodeId) -> u64 {
+    crate::util::rng::mix64(base ^ (neighbor as u64).rotate_left(16))
+}
+
+/// Sampling priority of `neighbor` as a hop-`hop` candidate under
+/// `frontier` within `seed_node`'s subgraph. Smaller = preferred.
+/// Equivalent to `priority_from_base(priority_base(..), neighbor)` —
+/// property-tested in `reservoir` tests.
+#[inline]
+pub fn priority(sample_seed: u64, hop: u32, seed_node: NodeId, frontier: NodeId, neighbor: NodeId) -> u64 {
+    priority_from_base(priority_base(sample_seed, hop, seed_node, frontier), neighbor)
+}

@@ -1,0 +1,86 @@
+//! Fanout specification: how many neighbors to keep per hop.
+
+/// Per-hop fanout, e.g. the paper's `FanoutSpec::paper()` = (40, 20).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FanoutSpec {
+    pub fanouts: Vec<u32>,
+}
+
+impl FanoutSpec {
+    pub fn new(fanouts: Vec<u32>) -> Self {
+        assert!(!fanouts.is_empty(), "need at least one hop");
+        assert!(fanouts.iter().all(|&f| f > 0), "fanouts must be positive");
+        Self { fanouts }
+    }
+
+    /// The paper's evaluation setting: 2-hop, 40 then 20.
+    pub fn paper() -> Self {
+        Self::new(vec![40, 20])
+    }
+
+    /// Small spec matched to the default AOT training artifact.
+    pub fn small() -> Self {
+        Self::new(vec![10, 5])
+    }
+
+    pub fn hops(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Maximum sampled nodes per subgraph, *excluding* the seed:
+    /// f1 + f1*f2 + f1*f2*f3 + ...
+    pub fn max_nodes(&self) -> u64 {
+        let mut total = 0u64;
+        let mut layer = 1u64;
+        for &f in &self.fanouts {
+            layer *= f as u64;
+            total += layer;
+        }
+        total
+    }
+
+    /// Parse `"40,20"`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let fanouts: Result<Vec<u32>, _> = s.split(',').map(|p| p.trim().parse::<u32>()).collect();
+        let fanouts = fanouts.map_err(|e| anyhow::anyhow!("bad fanout spec '{s}': {e}"))?;
+        if fanouts.is_empty() || fanouts.iter().any(|&f| f == 0) {
+            anyhow::bail!("bad fanout spec '{s}': need positive per-hop fanouts");
+        }
+        Ok(Self::new(fanouts))
+    }
+}
+
+impl std::fmt::Display for FanoutSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s: Vec<String> = self.fanouts.iter().map(|x| x.to_string()).collect();
+        write!(f, "{}", s.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_spec() {
+        let s = FanoutSpec::paper();
+        assert_eq!(s.hops(), 2);
+        assert_eq!(s.max_nodes(), 40 + 40 * 20);
+    }
+
+    #[test]
+    fn parse_and_display() {
+        let s = FanoutSpec::parse("10, 5").unwrap();
+        assert_eq!(s.fanouts, vec![10, 5]);
+        assert_eq!(s.to_string(), "10,5");
+        assert!(FanoutSpec::parse("10,0").is_err());
+        assert!(FanoutSpec::parse("").is_err());
+        assert!(FanoutSpec::parse("a,b").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_fanout_panics() {
+        FanoutSpec::new(vec![0]);
+    }
+}

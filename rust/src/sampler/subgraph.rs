@@ -1,0 +1,173 @@
+//! The sampled subgraph type produced by every generation engine and
+//! consumed by batch assembly ([`crate::train::batch`]).
+
+use crate::graph::NodeId;
+
+use super::spec::FanoutSpec;
+
+/// A 2-hop (generally k-hop) sampled neighborhood rooted at `seed`.
+///
+/// Layered tree representation matching the fixed-fanout training layout:
+/// `hop1` holds up to `f1` neighbors of the seed; `hop2[i]` holds up to
+/// `f2` neighbors of `hop1[i]`, and so on. Engines must emit hops in
+/// priority order (what [`super::reservoir::TopK::nodes`] yields) so that
+/// identical sampling decisions produce byte-identical subgraphs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Subgraph {
+    pub seed: NodeId,
+    pub hop1: Vec<NodeId>,
+    /// `hop2[i]` = sampled neighbors of `hop1[i]`. `hop2.len() == hop1.len()`.
+    pub hop2: Vec<Vec<NodeId>>,
+}
+
+impl Subgraph {
+    pub fn new(seed: NodeId) -> Self {
+        Self { seed, hop1: Vec::new(), hop2: Vec::new() }
+    }
+
+    /// Total sampled node slots including the seed (counting multiplicity;
+    /// the padded training layout also counts this way). This is the unit
+    /// behind the paper's "nodes per second" generation metric.
+    pub fn num_nodes(&self) -> u64 {
+        1 + self.hop1.len() as u64 + self.hop2.iter().map(|h| h.len() as u64).sum::<u64>()
+    }
+
+    /// Number of tree edges (seed→hop1 plus hop1→hop2).
+    pub fn num_edges(&self) -> u64 {
+        self.hop1.len() as u64 + self.hop2.iter().map(|h| h.len() as u64).sum::<u64>()
+    }
+
+    /// Check structural invariants against a fanout spec.
+    pub fn validate(&self, spec: &FanoutSpec) -> Result<(), String> {
+        if spec.hops() != 2 {
+            return Err("Subgraph currently models 2-hop trees".into());
+        }
+        let (f1, f2) = (spec.fanouts[0] as usize, spec.fanouts[1] as usize);
+        if self.hop1.len() > f1 {
+            return Err(format!("hop1 {} > fanout {}", self.hop1.len(), f1));
+        }
+        if self.hop2.len() != self.hop1.len() {
+            return Err(format!(
+                "hop2 groups {} != hop1 nodes {}",
+                self.hop2.len(),
+                self.hop1.len()
+            ));
+        }
+        for (i, h) in self.hop2.iter().enumerate() {
+            if h.len() > f2 {
+                return Err(format!("hop2[{i}] {} > fanout {f2}", h.len()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialized size in bytes (used for storage/IO accounting and the
+    /// offline-baseline spill format).
+    pub fn encoded_len(&self) -> usize {
+        // seed + hop1 len + hop1 + per-group len + hop2
+        4 + 2 + 4 * self.hop1.len() + self.hop2.iter().map(|h| 2 + 4 * h.len()).sum::<usize>()
+    }
+
+    /// Append the binary encoding to `out` (little-endian, u16 lengths).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.hop1.len() as u16).to_le_bytes());
+        for &v in &self.hop1 {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for h in &self.hop2 {
+            out.extend_from_slice(&(h.len() as u16).to_le_bytes());
+            for &v in h {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode one subgraph from `buf` starting at `pos`; advances `pos`.
+    pub fn decode_from(buf: &[u8], pos: &mut usize) -> anyhow::Result<Self> {
+        let take4 = |buf: &[u8], pos: &mut usize| -> anyhow::Result<[u8; 4]> {
+            let b = buf
+                .get(*pos..*pos + 4)
+                .ok_or_else(|| anyhow::anyhow!("truncated subgraph"))?;
+            *pos += 4;
+            Ok(b.try_into().unwrap())
+        };
+        let take2 = |buf: &[u8], pos: &mut usize| -> anyhow::Result<u16> {
+            let b = buf
+                .get(*pos..*pos + 2)
+                .ok_or_else(|| anyhow::anyhow!("truncated subgraph"))?;
+            *pos += 2;
+            Ok(u16::from_le_bytes(b.try_into().unwrap()))
+        };
+        let seed = NodeId::from_le_bytes(take4(buf, pos)?);
+        let n1 = take2(buf, pos)? as usize;
+        let mut hop1 = Vec::with_capacity(n1);
+        for _ in 0..n1 {
+            hop1.push(NodeId::from_le_bytes(take4(buf, pos)?));
+        }
+        let mut hop2 = Vec::with_capacity(n1);
+        for _ in 0..n1 {
+            let n2 = take2(buf, pos)? as usize;
+            let mut h = Vec::with_capacity(n2);
+            for _ in 0..n2 {
+                h.push(NodeId::from_le_bytes(take4(buf, pos)?));
+            }
+            hop2.push(h);
+        }
+        Ok(Self { seed, hop1, hop2 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Subgraph {
+        Subgraph {
+            seed: 7,
+            hop1: vec![1, 2],
+            hop2: vec![vec![3, 4, 5], vec![]],
+        }
+    }
+
+    #[test]
+    fn counts() {
+        let s = sample();
+        assert_eq!(s.num_nodes(), 1 + 2 + 3);
+        assert_eq!(s.num_edges(), 2 + 3);
+    }
+
+    #[test]
+    fn validate_against_spec() {
+        let s = sample();
+        assert!(s.validate(&FanoutSpec::new(vec![2, 3])).is_ok());
+        assert!(s.validate(&FanoutSpec::new(vec![1, 3])).is_err()); // hop1 too big
+        assert!(s.validate(&FanoutSpec::new(vec![2, 2])).is_err()); // hop2 group too big
+        let mut bad = sample();
+        bad.hop2.pop();
+        assert!(bad.validate(&FanoutSpec::new(vec![2, 3])).is_err());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = sample();
+        let mut buf = Vec::new();
+        s.encode_into(&mut buf);
+        assert_eq!(buf.len(), s.encoded_len());
+        let mut pos = 0;
+        let d = Subgraph::decode_from(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(d, s);
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let s = sample();
+        let mut buf = Vec::new();
+        s.encode_into(&mut buf);
+        for cut in [0, 3, buf.len() - 1] {
+            let mut pos = 0;
+            assert!(Subgraph::decode_from(&buf[..cut], &mut pos).is_err());
+        }
+    }
+}

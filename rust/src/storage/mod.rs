@@ -1,0 +1,12 @@
+//! External subgraph storage — what GraphGen (the offline predecessor)
+//! needs and GraphGen+ eliminates.
+//!
+//! The offline baseline precomputes every subgraph, serializes it to
+//! sharded spill files (optionally deflate-compressed), and training later
+//! reads the shards back. [`spill::SpillStore`] implements that store and
+//! accounts bytes written/read plus wall time, feeding the E5 storage-
+//! overhead experiment.
+
+pub mod spill;
+
+pub use spill::{SpillReport, SpillStore};

@@ -1,0 +1,224 @@
+//! Sharded on-disk subgraph store for the offline (GraphGen) baseline.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::sampler::Subgraph;
+
+/// Shard target size before rotation (pre-compression).
+const SHARD_BYTES: usize = 4 << 20;
+
+/// I/O accounting for one store lifetime.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpillReport {
+    pub subgraphs: u64,
+    pub shards: u32,
+    /// Logical (uncompressed) bytes.
+    pub logical_bytes: u64,
+    /// Bytes on disk (after optional compression).
+    pub disk_bytes: u64,
+    pub write_time: Duration,
+    pub read_time: Duration,
+}
+
+/// Writer/reader for sharded subgraph spill files.
+///
+/// Format per shard: `u32` subgraph count, then concatenated
+/// [`Subgraph::encode_into`] records; optionally the whole shard is
+/// deflate-compressed (`.z` suffix).
+pub struct SpillStore {
+    dir: PathBuf,
+    compress: bool,
+    // write state
+    buf: Vec<u8>,
+    buf_count: u32,
+    report: SpillReport,
+}
+
+impl SpillStore {
+    /// Create (and wipe) a spill directory.
+    pub fn create(dir: PathBuf, compress: bool) -> Result<Self> {
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir).with_context(|| format!("wipe {}", dir.display()))?;
+        }
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+        Ok(Self { dir, compress, buf: Vec::with_capacity(SHARD_BYTES + 4096), buf_count: 0, report: SpillReport::default() })
+    }
+
+    /// Append one subgraph (buffered; shards rotate at ~4 MiB).
+    pub fn write(&mut self, sg: &Subgraph) -> Result<()> {
+        let t0 = Instant::now();
+        sg.encode_into(&mut self.buf);
+        self.buf_count += 1;
+        self.report.subgraphs += 1;
+        if self.buf.len() >= SHARD_BYTES {
+            self.flush_shard()?;
+        }
+        self.report.write_time += t0.elapsed();
+        Ok(())
+    }
+
+    fn shard_path(&self, idx: u32) -> PathBuf {
+        let ext = if self.compress { "sg.z" } else { "sg" };
+        self.dir.join(format!("shard-{idx:05}.{ext}"))
+    }
+
+    fn flush_shard(&mut self) -> Result<()> {
+        if self.buf_count == 0 {
+            return Ok(());
+        }
+        let path = self.shard_path(self.report.shards);
+        let f = File::create(&path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(&self.buf_count.to_le_bytes())?;
+        self.report.logical_bytes += self.buf.len() as u64 + 4;
+        if self.compress {
+            let mut enc = flate2::write::DeflateEncoder::new(w, flate2::Compression::fast());
+            enc.write_all(&self.buf)?;
+            enc.finish()?.flush()?;
+        } else {
+            w.write_all(&self.buf)?;
+            w.flush()?;
+        }
+        self.report.disk_bytes += std::fs::metadata(&path)?.len();
+        self.report.shards += 1;
+        self.buf.clear();
+        self.buf_count = 0;
+        Ok(())
+    }
+
+    /// Flush pending writes; call once generation finishes.
+    pub fn finish_writes(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        self.flush_shard()?;
+        self.report.write_time += t0.elapsed();
+        Ok(())
+    }
+
+    /// Read every stored subgraph back (in shard order), invoking `f`.
+    pub fn read_all(&mut self, mut f: impl FnMut(Subgraph) -> Result<()>) -> Result<()> {
+        let t0 = Instant::now();
+        for idx in 0..self.report.shards {
+            let path = self.shard_path(idx);
+            let mut file = File::open(&path).with_context(|| format!("open {}", path.display()))?;
+            let mut count_buf = [0u8; 4];
+            file.read_exact(&mut count_buf)?;
+            let count = u32::from_le_bytes(count_buf);
+            let mut data = Vec::new();
+            if self.compress {
+                flate2::read::DeflateDecoder::new(file).read_to_end(&mut data)?;
+            } else {
+                file.read_to_end(&mut data)?;
+            }
+            let mut pos = 0usize;
+            for _ in 0..count {
+                f(Subgraph::decode_from(&data, &mut pos)?)?;
+            }
+            anyhow::ensure!(pos == data.len(), "trailing bytes in {}", path.display());
+        }
+        self.report.read_time += t0.elapsed();
+        Ok(())
+    }
+
+    pub fn report(&self) -> &SpillReport {
+        &self.report
+    }
+
+    /// Remove the spill directory.
+    pub fn cleanup(self) -> Result<()> {
+        std::fs::remove_dir_all(&self.dir).with_context(|| format!("rm {}", self.dir.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeId;
+
+    fn sg(seed: NodeId, width: usize) -> Subgraph {
+        Subgraph {
+            seed,
+            hop1: (0..width as NodeId).collect(),
+            hop2: (0..width).map(|i| vec![seed + i as NodeId; width]).collect(),
+        }
+    }
+
+    fn dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ggspill-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_uncompressed() {
+        let mut store = SpillStore::create(dir("u"), false).unwrap();
+        let subs: Vec<Subgraph> = (0..500).map(|i| sg(i, 8)).collect();
+        for s in &subs {
+            store.write(s).unwrap();
+        }
+        store.finish_writes().unwrap();
+        assert_eq!(store.report().subgraphs, 500);
+        assert!(store.report().disk_bytes > 0);
+        let mut got = Vec::new();
+        store.read_all(|s| {
+            got.push(s);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, subs);
+        store.cleanup().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_compressed_and_smaller() {
+        let subs: Vec<Subgraph> = (0..2000).map(|i| sg(i % 10, 10)).collect();
+        let mut plain = SpillStore::create(dir("p"), false).unwrap();
+        let mut comp = SpillStore::create(dir("c"), true).unwrap();
+        for s in &subs {
+            plain.write(s).unwrap();
+            comp.write(s).unwrap();
+        }
+        plain.finish_writes().unwrap();
+        comp.finish_writes().unwrap();
+        assert!(comp.report().disk_bytes < plain.report().disk_bytes);
+        let mut got = Vec::new();
+        comp.read_all(|s| {
+            got.push(s);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, subs);
+        plain.cleanup().unwrap();
+        comp.cleanup().unwrap();
+    }
+
+    #[test]
+    fn shard_rotation() {
+        let mut store = SpillStore::create(dir("r"), false).unwrap();
+        // Each subgraph ~ (1+64)*... make them chunky to force >1 shard.
+        for i in 0..3000 {
+            store.write(&sg(i, 20)).unwrap();
+        }
+        store.finish_writes().unwrap();
+        assert!(store.report().shards > 1, "expected rotation, got 1 shard");
+        let mut n = 0;
+        store.read_all(|_| {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 3000);
+        store.cleanup().unwrap();
+    }
+
+    #[test]
+    fn empty_store() {
+        let mut store = SpillStore::create(dir("e"), false).unwrap();
+        store.finish_writes().unwrap();
+        assert_eq!(store.report().shards, 0);
+        store.read_all(|_| panic!("no data")).unwrap();
+        store.cleanup().unwrap();
+    }
+}

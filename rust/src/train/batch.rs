@@ -1,0 +1,147 @@
+//! Batch assembly: pad sampled subgraphs into the fixed tensor layout the
+//! compiled artifacts expect (in-memory, straight from the generation
+//! pipeline — never from disk).
+
+use anyhow::Result;
+
+use crate::graph::features::FeatureStore;
+use crate::sampler::Subgraph;
+
+use super::meta::ModelSpec;
+use super::runtime::HostBatch;
+
+/// Stateless batch builder bound to a spec + feature store.
+pub struct BatchBuilder<'a> {
+    pub spec: ModelSpec,
+    pub features: &'a FeatureStore,
+}
+
+impl<'a> BatchBuilder<'a> {
+    pub fn new(spec: ModelSpec, features: &'a FeatureStore) -> Self {
+        assert_eq!(features.dim, spec.dim, "feature dim must match artifact spec");
+        Self { spec, features }
+    }
+
+    /// Assemble exactly `spec.batch` subgraphs into a batch.
+    ///
+    /// Hops longer than the spec's fanout are truncated (priority order —
+    /// the kept prefix is the top-priority sample); shorter hops are
+    /// zero-padded with mask 0. An invalid hop-1 slot forces its whole
+    /// hop-2 group invalid.
+    pub fn build(&self, subgraphs: &[Subgraph]) -> Result<HostBatch> {
+        let s = self.spec;
+        anyhow::ensure!(
+            subgraphs.len() == s.batch,
+            "batch needs exactly {} subgraphs, got {}",
+            s.batch,
+            subgraphs.len()
+        );
+        let (b, f1, f2, d) = (s.batch, s.f1, s.f2, s.dim);
+        let mut out = HostBatch {
+            x_seed: vec![0.0; b * d],
+            x_h1: vec![0.0; b * f1 * d],
+            x_h2: vec![0.0; b * f1 * f2 * d],
+            m_h1: vec![0.0; b * f1],
+            m_h2: vec![0.0; b * f1 * f2],
+            y: vec![0; b],
+            nodes: 0,
+        };
+        for (bi, sg) in subgraphs.iter().enumerate() {
+            out.nodes += sg.num_nodes().min((1 + f1 + f1 * f2) as u64);
+            out.y[bi] = self.features.label(sg.seed) as i32;
+            self.features
+                .write_feature(sg.seed, &mut out.x_seed[bi * d..(bi + 1) * d]);
+            for (i, &v) in sg.hop1.iter().take(f1).enumerate() {
+                let h1_off = (bi * f1 + i) * d;
+                self.features.write_feature(v, &mut out.x_h1[h1_off..h1_off + d]);
+                out.m_h1[bi * f1 + i] = 1.0;
+                if let Some(group) = sg.hop2.get(i) {
+                    for (j, &w) in group.iter().take(f2).enumerate() {
+                        let h2_off = ((bi * f1 + i) * f2 + j) * d;
+                        self.features.write_feature(w, &mut out.x_h2[h2_off..h2_off + d]);
+                        out.m_h2[(bi * f1 + i) * f2 + j] = 1.0;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeId;
+    use crate::train::meta::ModelSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec { batch: 2, f1: 3, f2: 2, dim: 4, hidden: 8, classes: 3 }
+    }
+
+    fn store() -> FeatureStore {
+        FeatureStore::with_labels(4, 3, vec![0, 1, 2, 0, 1, 2, 0, 1], 9)
+    }
+
+    fn sg(seed: NodeId, h1: Vec<NodeId>, h2: Vec<Vec<NodeId>>) -> Subgraph {
+        Subgraph { seed, hop1: h1, hop2: h2 }
+    }
+
+    #[test]
+    fn shapes_masks_and_labels() {
+        let fs = store();
+        let b = BatchBuilder::new(spec(), &fs);
+        let batch = b
+            .build(&[
+                sg(0, vec![1, 2], vec![vec![3], vec![4, 5]]),
+                sg(7, vec![], vec![]),
+            ])
+            .unwrap();
+        assert_eq!(batch.x_seed.len(), 2 * 4);
+        assert_eq!(batch.m_h1, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        // subgraph 0: h2 groups [3] (1 valid of 2) and [4,5] (2 valid)
+        assert_eq!(
+            batch.m_h2,
+            vec![1.0, 0.0, 1.0, 1.0, 0.0, 0.0, /* bi=1 */ 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+        assert_eq!(batch.y, vec![0, 1]);
+        assert_eq!(batch.nodes, (1 + 2 + 3) + 1);
+        // padded features are exactly zero
+        let last_h1 = &batch.x_h1[(1 * 3 + 0) * 4..];
+        assert!(last_h1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn truncates_oversized_hops_in_priority_order() {
+        let fs = store();
+        let b = BatchBuilder::new(spec(), &fs);
+        let batch = b
+            .build(&[
+                sg(
+                    0,
+                    vec![1, 2, 3, 4, 5], // 5 > f1=3
+                    vec![vec![6, 7, 1], vec![2], vec![3], vec![4], vec![5]],
+                ),
+                sg(1, vec![], vec![]),
+            ])
+            .unwrap();
+        // Only the first 3 hop-1 slots are valid; h2 groups follow hop1.
+        assert_eq!(&batch.m_h1[..3], &[1.0, 1.0, 1.0]);
+        // group 0 truncated to f2=2
+        assert_eq!(&batch.m_h2[..2], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn wrong_count_is_error() {
+        let fs = store();
+        let b = BatchBuilder::new(spec(), &fs);
+        assert!(b.build(&[sg(0, vec![], vec![])]).is_err());
+    }
+
+    #[test]
+    fn features_are_deterministic_per_node() {
+        let fs = store();
+        let b = BatchBuilder::new(spec(), &fs);
+        let subs = [sg(3, vec![1], vec![vec![2]]), sg(4, vec![], vec![])];
+        assert_eq!(b.build(&subs).unwrap(), b.build(&subs).unwrap());
+    }
+}

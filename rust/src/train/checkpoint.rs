@@ -1,0 +1,179 @@
+//! Parameter checkpointing: save/restore trained GCN parameters with
+//! shape validation against the artifact metadata. Binary format:
+//! magic, tensor count, then per tensor (rank, dims…, f32 data), all
+//! little-endian, with a trailing xor checksum of the byte stream.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::meta::ModelMeta;
+
+const MAGIC: &[u8; 8] = b"GGCKPT01";
+
+fn xor_checksum(data: &[u8]) -> u64 {
+    let mut acc = 0xDEAD_BEEF_u64;
+    for chunk in data.chunks(8) {
+        let mut b = [0u8; 8];
+        b[..chunk.len()].copy_from_slice(chunk);
+        acc = crate::util::rng::mix64(acc ^ u64::from_le_bytes(b));
+    }
+    acc
+}
+
+/// Save parameters (in `meta.param_shapes` order).
+pub fn save(path: &Path, meta: &ModelMeta, params: &[Vec<f32>]) -> Result<()> {
+    anyhow::ensure!(
+        params.len() == meta.param_shapes.len(),
+        "expected {} tensors, got {}",
+        meta.param_shapes.len(),
+        params.len()
+    );
+    let mut body: Vec<u8> = Vec::new();
+    body.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for (tensor, shape) in params.iter().zip(&meta.param_shapes) {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(tensor.len() == n, "tensor/shape mismatch: {} vs {:?}", tensor.len(), shape);
+        body.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in shape {
+            body.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &v in tensor {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&xor_checksum(&body).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint and validate shapes against `meta`.
+pub fn load(path: &Path, meta: &ModelMeta) -> Result<Vec<Vec<f32>>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a GraphGen+ checkpoint", path.display());
+    }
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum)?;
+    let mut body = Vec::new();
+    r.read_to_end(&mut body)?;
+    if u64::from_le_bytes(sum) != xor_checksum(&body) {
+        bail!("checkpoint {} is corrupt (checksum mismatch)", path.display());
+    }
+    let mut pos = 0usize;
+    let take = |body: &[u8], pos: &mut usize, n: usize| -> Result<Vec<u8>> {
+        let b = body
+            .get(*pos..*pos + n)
+            .ok_or_else(|| anyhow::anyhow!("truncated checkpoint"))?;
+        *pos += n;
+        Ok(b.to_vec())
+    };
+    let count = u32::from_le_bytes(take(&body, &mut pos, 4)?.try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        count == meta.param_shapes.len(),
+        "checkpoint has {count} tensors, model needs {}",
+        meta.param_shapes.len()
+    );
+    let mut out = Vec::with_capacity(count);
+    for shape in &meta.param_shapes {
+        let rank = u32::from_le_bytes(take(&body, &mut pos, 4)?.try_into().unwrap()) as usize;
+        anyhow::ensure!(rank == shape.len(), "rank mismatch");
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(u64::from_le_bytes(take(&body, &mut pos, 8)?.try_into().unwrap()) as usize);
+        }
+        anyhow::ensure!(&dims == shape, "shape mismatch: {dims:?} vs {shape:?}");
+        let n: usize = dims.iter().product();
+        let bytes = take(&body, &mut pos, n * 4)?;
+        out.push(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        );
+    }
+    anyhow::ensure!(pos == body.len(), "trailing bytes in checkpoint");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::meta::{ModelMeta, ModelSpec};
+    use crate::train::params::ParamStore;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            dir: std::path::PathBuf::new(),
+            spec: ModelSpec { batch: 2, f1: 2, f2: 2, dim: 4, hidden: 6, classes: 3 },
+            param_names: ["ws1", "wn1", "b1", "ws2", "wn2", "b2"].map(String::from).to_vec(),
+            param_shapes: vec![vec![4, 6], vec![4, 6], vec![6], vec![6, 3], vec![6, 3], vec![3]],
+            grad_file: "g".into(),
+            apply_file: "a".into(),
+            forward_file: "f".into(),
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ggckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = meta();
+        let params = ParamStore::init(&m, 9).params;
+        let p = tmp("ok.ckpt");
+        save(&p, &m, &params).unwrap();
+        let loaded = load(&p, &m).unwrap();
+        assert_eq!(loaded, params);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let m = meta();
+        let params = ParamStore::init(&m, 9).params;
+        let p = tmp("corrupt.ckpt");
+        save(&p, &m, &params).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, bytes).unwrap();
+        let err = load(&p, &m).unwrap_err();
+        assert!(format!("{err}").contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_shape() {
+        let m = meta();
+        let p = tmp("magic.ckpt");
+        std::fs::write(&p, b"NOTACKPT00000000").unwrap();
+        assert!(load(&p, &m).is_err());
+
+        // Save with modified shape → load with original meta must fail.
+        let mut m2 = meta();
+        m2.param_shapes[0] = vec![2, 12];
+        let mut params = ParamStore::init(&m, 9).params;
+        params[0] = vec![0.0; 24];
+        let p2 = tmp("shape.ckpt");
+        save(&p2, &m2, &params).unwrap();
+        assert!(load(&p2, &m).is_err());
+    }
+
+    #[test]
+    fn save_rejects_mismatched_tensors() {
+        let m = meta();
+        let mut params = ParamStore::init(&m, 9).params;
+        params[0].pop();
+        assert!(save(&tmp("bad.ckpt"), &m, &params).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Artifact metadata: the shape and argument-order contract emitted by
+//! `python/compile/aot.py` into `artifacts/meta.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Static model dimensions (mirror of python `model.Spec`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub batch: usize,
+    pub f1: usize,
+    pub f2: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl ModelSpec {
+    /// Total floats in one batch's feature tensors (excl. labels).
+    pub fn feature_floats(&self) -> usize {
+        let (b, f1, f2, d) = (self.batch, self.f1, self.f2, self.dim);
+        b * d + b * f1 * d + b * f1 * f2 * d + b * f1 + b * f1 * f2
+    }
+
+    /// Sampled node slots per batch (the nodes/iteration unit).
+    pub fn nodes_per_batch(&self) -> u64 {
+        (self.batch * (1 + self.f1 + self.f1 * self.f2)) as u64
+    }
+}
+
+/// Parsed `meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub dir: PathBuf,
+    pub spec: ModelSpec,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub grad_file: PathBuf,
+    pub apply_file: PathBuf,
+    pub forward_file: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", meta_path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", meta_path.display()))?;
+        let spec_j = j.get("spec").context("meta.json: missing spec")?;
+        let dim = |k: &str| -> Result<usize> {
+            spec_j
+                .get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta.json: spec.{k}"))
+        };
+        let spec = ModelSpec {
+            batch: dim("batch")?,
+            f1: dim("f1")?,
+            f2: dim("f2")?,
+            dim: dim("dim")?,
+            hidden: dim("hidden")?,
+            classes: dim("classes")?,
+        };
+        let param_names: Vec<String> = j
+            .get("param_names")
+            .and_then(Json::as_arr)
+            .context("meta.json: param_names")?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        let param_shapes: Vec<Vec<usize>> = j
+            .get("param_shapes")
+            .and_then(Json::as_arr)
+            .context("meta.json: param_shapes")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        anyhow::ensure!(
+            param_names.len() == param_shapes.len() && param_names.len() == 6,
+            "meta.json: expected 6 params, got {}",
+            param_names.len()
+        );
+        let file = |key: &str| -> Result<PathBuf> {
+            Ok(dir.join(
+                j.get_path(&format!("artifacts.{key}.file"))
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("meta.json: artifacts.{key}.file"))?,
+            ))
+        };
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            spec,
+            param_names,
+            param_shapes,
+            grad_file: file("grad")?,
+            apply_file: file("apply")?,
+            forward_file: file("forward")?,
+        })
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let meta = r#"{
+          "spec": {"batch": 4, "f1": 3, "f2": 2, "dim": 6, "hidden": 8, "classes": 3},
+          "param_names": ["ws1", "wn1", "b1", "ws2", "wn2", "b2"],
+          "param_shapes": [[6,8],[6,8],[8],[8,3],[8,3],[3]],
+          "batch_names": ["x_seed","x_h1","x_h2","m_h1","m_h2","y"],
+          "batch_shapes": [[4,6],[4,3,6],[4,3,2,6],[4,3],[4,3,2],[4]],
+          "artifacts": {
+            "grad": {"file": "gcn_grad.hlo.txt", "inputs": [], "outputs": []},
+            "apply": {"file": "gcn_apply.hlo.txt", "inputs": [], "outputs": []},
+            "forward": {"file": "gcn_forward.hlo.txt", "inputs": [], "outputs": []}
+          }
+        }"#;
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+    }
+
+    #[test]
+    fn loads_and_computes_sizes() {
+        let dir = std::env::temp_dir().join(format!("ggmeta-{}", std::process::id()));
+        write_meta(&dir);
+        let m = ModelMeta::load(&dir).unwrap();
+        assert_eq!(m.spec.batch, 4);
+        assert_eq!(m.num_params(), 48 + 48 + 8 + 24 + 24 + 3);
+        assert_eq!(m.spec.nodes_per_batch(), 4 * (1 + 3 + 6));
+        assert_eq!(
+            m.spec.feature_floats(),
+            4 * 6 + 4 * 3 * 6 + 4 * 3 * 2 * 6 + 4 * 3 + 4 * 3 * 2
+        );
+        assert!(m.grad_file.ends_with("gcn_grad.hlo.txt"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = ModelMeta::load(Path::new("/nonexistent-gg")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

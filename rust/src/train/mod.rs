@@ -1,0 +1,26 @@
+//! L3 training runtime: loads the AOT-compiled GCN artifacts and drives
+//! data-parallel in-memory training (Alg. 1 step 4).
+//!
+//! Python never runs here — the HLO text artifacts produced by
+//! `python/compile/aot.py` are loaded through the PJRT C API (`xla`
+//! crate) at startup and executed from the request path.
+//!
+//! * [`meta`] — artifact metadata (shape/argument-order contract).
+//! * [`runtime`] — PJRT executor threads (`PjRtClient` is `Rc`-based and
+//!   not `Send`, so each executor owns its client on a dedicated thread).
+//! * [`params`] — deterministic parameter store + flatten/unflatten for
+//!   AllReduce.
+//! * [`batch`] — pads sampled subgraphs into the fixed tensor layout.
+//! * [`trainer`] — multi-replica synchronous training loop with ring
+//!   AllReduce gradient sync.
+
+pub mod batch;
+pub mod checkpoint;
+pub mod eval;
+pub mod meta;
+pub mod params;
+pub mod runtime;
+pub mod trainer;
+
+pub use meta::ModelMeta;
+pub use runtime::ModelRuntime;

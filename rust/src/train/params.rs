@@ -1,0 +1,119 @@
+//! Parameter store: deterministic initialization (all replicas start
+//! identical without any broadcast) and flatten/unflatten for AllReduce.
+
+use crate::util::rng::{mix2, Xoshiro256};
+
+use super::meta::ModelMeta;
+
+/// One model replica's parameters, in `meta.param_names` order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamStore {
+    pub params: Vec<Vec<f32>>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ParamStore {
+    /// Glorot-uniform weights / zero biases, matching python
+    /// `model.init_params` in spirit (exact values differ; determinism and
+    /// scale are what matter — every worker calls this with the same seed
+    /// and gets bit-identical replicas).
+    pub fn init(meta: &ModelMeta, seed: u64) -> Self {
+        let mut params = Vec::with_capacity(meta.param_shapes.len());
+        for (i, shape) in meta.param_shapes.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            if shape.len() == 1 {
+                params.push(vec![0.0; n]); // biases
+            } else {
+                let mut rng = Xoshiro256::seed_from_u64(mix2(seed, i as u64));
+                let limit = (6.0 / (shape[0] + shape[1]) as f32).sqrt();
+                params.push((0..n).map(|_| (rng.gen_f32() * 2.0 - 1.0) * limit).collect());
+            }
+        }
+        Self { params, shapes: meta.param_shapes.clone() }
+    }
+
+    /// Concatenate all gradients/params into one AllReduce buffer.
+    pub fn flatten(tensors: &[Vec<f32>]) -> Vec<f32> {
+        let total: usize = tensors.iter().map(Vec::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for t in tensors {
+            out.extend_from_slice(t);
+        }
+        out
+    }
+
+    /// Split a flat buffer back into this store's tensor shapes.
+    pub fn unflatten(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.shapes.len());
+        let mut off = 0usize;
+        for shape in &self.shapes {
+            let n: usize = shape.iter().product();
+            out.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        assert_eq!(off, flat.len(), "flat buffer size mismatch");
+        out
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::meta::{ModelMeta, ModelSpec};
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            dir: std::path::PathBuf::new(),
+            spec: ModelSpec { batch: 2, f1: 2, f2: 2, dim: 4, hidden: 6, classes: 3 },
+            param_names: ["ws1", "wn1", "b1", "ws2", "wn2", "b2"].map(String::from).to_vec(),
+            param_shapes: vec![
+                vec![4, 6],
+                vec![4, 6],
+                vec![6],
+                vec![6, 3],
+                vec![6, 3],
+                vec![3],
+            ],
+            grad_file: "g".into(),
+            apply_file: "a".into(),
+            forward_file: "f".into(),
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let m = meta();
+        let a = ParamStore::init(&m, 7);
+        let b = ParamStore::init(&m, 7);
+        assert_eq!(a, b);
+        let c = ParamStore::init(&m, 8);
+        assert_ne!(a, c);
+        // biases zero, weights within glorot bound
+        assert!(a.params[2].iter().all(|&v| v == 0.0));
+        let limit = (6.0f32 / 10.0).sqrt();
+        assert!(a.params[0].iter().all(|&v| v.abs() <= limit));
+        assert!(a.params[0].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let m = meta();
+        let store = ParamStore::init(&m, 3);
+        let flat = ParamStore::flatten(&store.params);
+        assert_eq!(flat.len(), store.num_params());
+        let back = store.unflatten(&flat);
+        assert_eq!(back, store.params);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unflatten_rejects_wrong_size() {
+        let m = meta();
+        let store = ParamStore::init(&m, 3);
+        store.unflatten(&[0.0; 3]);
+    }
+}

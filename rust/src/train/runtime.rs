@@ -1,0 +1,386 @@
+//! PJRT executor: loads the HLO-text artifacts and serves grad / apply /
+//! forward executions from dedicated threads.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
+//! executor thread owns its own client + compiled executables and serves
+//! requests over a channel; requests and responses carry plain `Vec<f32>`
+//! host buffers. [`ModelRuntime`] is cheaply cloneable and shared by all
+//! logical training workers; `pool_size` > 1 spreads executions over
+//! several PJRT clients for parallelism (see EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::meta::ModelMeta;
+
+/// A batch in host memory, laid out per the meta.json contract.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HostBatch {
+    pub x_seed: Vec<f32>,
+    pub x_h1: Vec<f32>,
+    pub x_h2: Vec<f32>,
+    pub m_h1: Vec<f32>,
+    pub m_h2: Vec<f32>,
+    pub y: Vec<i32>,
+    /// Sampled node slots this batch represents (for throughput metrics).
+    pub nodes: u64,
+}
+
+/// Gradient-step output.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    pub loss: f32,
+    pub correct: f32,
+    pub grads: Vec<Vec<f32>>,
+}
+
+enum Request {
+    Grad { params: Vec<Vec<f32>>, batch: HostBatch, reply: Sender<Result<GradOut>> },
+    Apply { params: Vec<Vec<f32>>, grads: Vec<Vec<f32>>, lr: f32, reply: Sender<Result<Vec<Vec<f32>>>> },
+    Forward { params: Vec<Vec<f32>>, batch: HostBatch, reply: Sender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Shared handle to the executor pool.
+#[derive(Clone)]
+pub struct ModelRuntime {
+    meta: Arc<ModelMeta>,
+    txs: Arc<Vec<Sender<Request>>>,
+    next: Arc<AtomicUsize>,
+    executions: Arc<AtomicU64>,
+}
+
+impl ModelRuntime {
+    /// Load artifacts from `dir` and start `pool_size` executor threads.
+    pub fn load(dir: &Path, pool_size: usize) -> Result<Self> {
+        let meta = Arc::new(ModelMeta::load(dir)?);
+        let pool_size = pool_size.max(1);
+        let mut txs = Vec::with_capacity(pool_size);
+        for i in 0..pool_size {
+            let (tx, rx) = channel::<Request>();
+            let m = meta.clone();
+            // Propagate executor startup errors through a handshake.
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            std::thread::Builder::new()
+                .name(format!("pjrt-exec-{i}"))
+                .spawn(move || executor_thread(m, rx, ready_tx))
+                .context("spawn executor")?;
+            ready_rx
+                .recv()
+                .context("executor thread died during startup")??;
+            txs.push(tx);
+        }
+        Ok(Self {
+            meta,
+            txs: Arc::new(txs),
+            next: Arc::new(AtomicUsize::new(0)),
+            executions: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Total executions served (all kinds).
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    fn tx(&self) -> &Sender<Request> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        &self.txs[i % self.txs.len()]
+    }
+
+    /// Compute loss/accuracy/gradients for one batch.
+    pub fn grad(&self, params: &[Vec<f32>], batch: &HostBatch) -> Result<GradOut> {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        self.tx()
+            .send(Request::Grad { params: params.to_vec(), batch: batch.clone(), reply })
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        rx.recv().context("executor dropped grad reply")?
+    }
+
+    /// SGD update via the compiled apply artifact.
+    pub fn apply(&self, params: &[Vec<f32>], grads: &[Vec<f32>], lr: f32) -> Result<Vec<Vec<f32>>> {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        self.tx()
+            .send(Request::Apply { params: params.to_vec(), grads: grads.to_vec(), lr, reply })
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        rx.recv().context("executor dropped apply reply")?
+    }
+
+    /// Inference logits `[batch * classes]`.
+    pub fn forward(&self, params: &[Vec<f32>], batch: &HostBatch) -> Result<Vec<f32>> {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        self.tx()
+            .send(Request::Forward { params: params.to_vec(), batch: batch.clone(), reply })
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        rx.recv().context("executor dropped forward reply")?
+    }
+
+    /// Stop all executor threads (drops are also fine; this is explicit).
+    pub fn shutdown(&self) {
+        for tx in self.txs.iter() {
+            let _ = tx.send(Request::Shutdown);
+        }
+    }
+}
+
+struct Executables {
+    grad: xla::PjRtLoadedExecutable,
+    apply: xla::PjRtLoadedExecutable,
+    forward: xla::PjRtLoadedExecutable,
+}
+
+fn compile_all(meta: &ModelMeta) -> Result<Executables> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+    let load = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))
+    };
+    Ok(Executables {
+        grad: load(&meta.grad_file)?,
+        apply: load(&meta.apply_file)?,
+        forward: load(&meta.forward_file)?,
+    })
+}
+
+fn executor_thread(
+    meta: Arc<ModelMeta>,
+    rx: std::sync::mpsc::Receiver<Request>,
+    ready: Sender<Result<()>>,
+) {
+    let exes = match compile_all(&meta) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Grad { params, batch, reply } => {
+                let _ = reply.send(run_grad(&exes, &meta, &params, &batch));
+            }
+            Request::Apply { params, grads, lr, reply } => {
+                let _ = reply.send(run_apply(&exes, &meta, &params, &grads, lr));
+            }
+            Request::Forward { params, batch, reply } => {
+                let _ = reply.send(run_forward(&exes, &meta, &params, &batch));
+            }
+        }
+    }
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expected as usize == data.len(),
+        "tensor size mismatch: {} vs {:?}",
+        data.len(),
+        dims
+    );
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+}
+
+fn param_literals(meta: &ModelMeta, params: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+    anyhow::ensure!(params.len() == 6, "expected 6 params, got {}", params.len());
+    params
+        .iter()
+        .zip(&meta.param_shapes)
+        .map(|(p, s)| lit_f32(p, &s.iter().map(|&d| d as i64).collect::<Vec<_>>()))
+        .collect()
+}
+
+fn feature_literals(meta: &ModelMeta, b: &HostBatch) -> Result<Vec<xla::Literal>> {
+    let s = &meta.spec;
+    let (bb, f1, f2, d) = (s.batch as i64, s.f1 as i64, s.f2 as i64, s.dim as i64);
+    Ok(vec![
+        lit_f32(&b.x_seed, &[bb, d])?,
+        lit_f32(&b.x_h1, &[bb, f1, d])?,
+        lit_f32(&b.x_h2, &[bb, f1, f2, d])?,
+        lit_f32(&b.m_h1, &[bb, f1])?,
+        lit_f32(&b.m_h2, &[bb, f1, f2])?,
+    ])
+}
+
+fn execute_tuple(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+    result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))
+}
+
+fn run_grad(exes: &Executables, meta: &ModelMeta, params: &[Vec<f32>], batch: &HostBatch) -> Result<GradOut> {
+    let mut args = param_literals(meta, params)?;
+    args.extend(feature_literals(meta, batch)?);
+    anyhow::ensure!(batch.y.len() == meta.spec.batch, "label count mismatch");
+    args.push(xla::Literal::vec1(&batch.y));
+    let out = execute_tuple(&exes.grad, &args)?;
+    anyhow::ensure!(out.len() == 8, "grad artifact returned {} outputs", out.len());
+    let mut it = out.into_iter();
+    let loss = it.next().unwrap().to_vec::<f32>().map_err(anyhow::Error::msg)?[0];
+    let correct = it.next().unwrap().to_vec::<f32>().map_err(anyhow::Error::msg)?[0];
+    let grads: Result<Vec<Vec<f32>>> = it
+        .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("grad out: {e}")))
+        .collect();
+    Ok(GradOut { loss, correct, grads: grads? })
+}
+
+fn run_apply(
+    exes: &Executables,
+    meta: &ModelMeta,
+    params: &[Vec<f32>],
+    grads: &[Vec<f32>],
+    lr: f32,
+) -> Result<Vec<Vec<f32>>> {
+    let mut args = param_literals(meta, params)?;
+    args.extend(param_literals(meta, grads)?);
+    args.push(xla::Literal::scalar(lr));
+    let out = execute_tuple(&exes.apply, &args)?;
+    anyhow::ensure!(out.len() == 6, "apply artifact returned {} outputs", out.len());
+    out.into_iter()
+        .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("apply out: {e}")))
+        .collect()
+}
+
+fn run_forward(exes: &Executables, meta: &ModelMeta, params: &[Vec<f32>], batch: &HostBatch) -> Result<Vec<f32>> {
+    let mut args = param_literals(meta, params)?;
+    args.extend(feature_literals(meta, batch)?);
+    let out = execute_tuple(&exes.forward, &args)?;
+    anyhow::ensure!(out.len() == 1, "forward artifact returned {} outputs", out.len());
+    out.into_iter()
+        .next()
+        .unwrap()
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("logits: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `artifacts/` (run `make artifacts`); they skip
+    //! gracefully when absent so `cargo test` works standalone.
+    use super::*;
+    use crate::train::params::ParamStore;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("meta.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            None
+        }
+    }
+
+    fn dummy_batch(meta: &ModelMeta, seed: u64) -> HostBatch {
+        let s = &meta.spec;
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed);
+        let mut randv = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.gen_f32() - 0.5).collect() };
+        HostBatch {
+            x_seed: randv(s.batch * s.dim),
+            x_h1: randv(s.batch * s.f1 * s.dim),
+            x_h2: randv(s.batch * s.f1 * s.f2 * s.dim),
+            m_h1: vec![1.0; s.batch * s.f1],
+            m_h2: vec![1.0; s.batch * s.f1 * s.f2],
+            y: (0..s.batch).map(|i| (i % s.classes) as i32).collect(),
+            nodes: s.nodes_per_batch(),
+        }
+    }
+
+    #[test]
+    fn grad_apply_forward_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = ModelRuntime::load(&dir, 1).unwrap();
+        let store = ParamStore::init(rt.meta(), 42);
+        let batch = dummy_batch(rt.meta(), 7);
+        let out = rt.grad(&store.params, &batch).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        assert!(out.correct >= 0.0 && out.correct <= rt.meta().spec.batch as f32);
+        assert_eq!(out.grads.len(), 6);
+        for (g, s) in out.grads.iter().zip(&rt.meta().param_shapes) {
+            assert_eq!(g.len(), s.iter().product::<usize>());
+        }
+        // apply: params - lr*grads, verify one coordinate by hand.
+        let new = rt.apply(&store.params, &out.grads, 0.1).unwrap();
+        let want = store.params[0][0] - 0.1 * out.grads[0][0];
+        assert!((new[0][0] - want).abs() < 1e-6);
+        // forward: logits shape.
+        let logits = rt.forward(&store.params, &batch).unwrap();
+        assert_eq!(logits.len(), rt.meta().spec.batch * rt.meta().spec.classes);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn training_reduces_loss_on_separable_batch() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = ModelRuntime::load(&dir, 1).unwrap();
+        let meta = rt.meta().clone();
+        let s = meta.spec;
+        // Class-dependent features: y decides the sign of every feature.
+        let mut batch = dummy_batch(&meta, 3);
+        for b in 0..s.batch {
+            let sign = if batch.y[b] % 2 == 0 { 1.0 } else { -1.0 };
+            for v in &mut batch.x_seed[b * s.dim..(b + 1) * s.dim] {
+                *v = sign * (0.5 + v.abs());
+            }
+            let h1 = s.f1 * s.dim;
+            for v in &mut batch.x_h1[b * h1..(b + 1) * h1] {
+                *v = sign * (0.5 + v.abs());
+            }
+            let h2 = s.f1 * s.f2 * s.dim;
+            for v in &mut batch.x_h2[b * h2..(b + 1) * h2] {
+                *v = sign * (0.5 + v.abs());
+            }
+            batch.y[b] %= 2;
+        }
+        let mut params = ParamStore::init(&meta, 1).params;
+        let first = rt.grad(&params, &batch).unwrap().loss;
+        let mut last = first;
+        for _ in 0..30 {
+            let out = rt.grad(&params, &batch).unwrap();
+            last = out.loss;
+            params = rt.apply(&params, &out.grads, 0.1).unwrap();
+        }
+        assert!(
+            last < 0.5 * first,
+            "loss should drop on separable data: {first} → {last}"
+        );
+        rt.shutdown();
+    }
+
+    #[test]
+    fn pool_round_robins() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = ModelRuntime::load(&dir, 2).unwrap();
+        let store = ParamStore::init(rt.meta(), 5);
+        let batch = dummy_batch(rt.meta(), 11);
+        let a = rt.grad(&store.params, &batch).unwrap();
+        let b = rt.grad(&store.params, &batch).unwrap();
+        assert_eq!(a.loss, b.loss, "both executors must be deterministic");
+        assert_eq!(rt.executions(), 2);
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,77 @@
+//! Human-readable byte / count / rate formatting for reports.
+
+/// `1536` → `"1.50 KiB"`.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// `5_900_000.0` → `"5.90 M"`.
+pub fn fmt_count(n: f64) -> String {
+    let a = n.abs();
+    if a >= 1e9 {
+        format!("{:.2} G", n / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2} M", n / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2} k", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+/// Rate with unit, e.g. `fmt_rate(5.9e6, "nodes")` → `"5.90 M nodes/s"`.
+pub fn fmt_rate(per_sec: f64, unit: &str) -> String {
+    format!("{} {unit}/s", fmt_count(per_sec))
+}
+
+/// Seconds with adaptive precision: `0.000012` → `"12.0 µs"`.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(1023), "1023 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn counts_and_rates() {
+        assert_eq!(fmt_count(999.0), "999");
+        assert_eq!(fmt_count(5_900_000.0), "5.90 M");
+        assert_eq!(fmt_rate(1500.0, "edges"), "1.50 k edges/s");
+    }
+
+    #[test]
+    fn secs() {
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_secs(0.0125), "12.50 ms");
+        assert_eq!(fmt_secs(12e-6), "12.0 µs");
+        assert_eq!(fmt_secs(5e-9), "5 ns");
+    }
+}

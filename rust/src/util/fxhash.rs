@@ -1,0 +1,74 @@
+//! FxHash-style fast hashing for hot-path maps (the `fxhash`/`rustc-hash`
+//! crates are unavailable offline; std's SipHash is also randomly seeded
+//! per process, which would make engine output ordering nondeterministic).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher (FNV-style stream, strong final mix).
+#[derive(Default)]
+pub struct FxHasher(u64);
+
+const K: u64 = 0x100_0000_01b3;
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        crate::util::rng::mix64(self.0)
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(K);
+        }
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.0 = (self.0 ^ v as u64).wrapping_mul(K);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = (self.0 ^ v).wrapping_mul(K);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+/// Hash any `Hash` value with the Fx hasher (deterministic across runs).
+pub fn fxhash<T: std::hash::Hash>(v: &T) -> u64 {
+    let mut h = FxHasher(0xcbf2_9ce4_8422_2325);
+    v.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_and_is_deterministic() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..100 {
+            m.insert(i, (i * 2) as u32);
+        }
+        assert_eq!(m.get(&50), Some(&100));
+        assert_eq!(fxhash(&42u64), fxhash(&42u64));
+        assert_ne!(fxhash(&42u64), fxhash(&43u64));
+    }
+
+    #[test]
+    fn distribution_is_reasonable() {
+        // Sequential keys should spread across buckets.
+        let mut buckets = [0u32; 16];
+        for i in 0..16_000u64 {
+            buckets[(fxhash(&i) % 16) as usize] += 1;
+        }
+        assert!(buckets.iter().all(|&c| c > 700), "{buckets:?}");
+    }
+}

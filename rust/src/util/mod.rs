@@ -1,0 +1,16 @@
+//! Dependency-free utility substrates.
+//!
+//! The offline build environment only ships the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (`rand`, `serde`, `rayon`,
+//! `clap`, `criterion`, `proptest`) are re-implemented here at the scale
+//! this project needs. Each submodule documents which crate it stands in
+//! for.
+
+pub mod bytes;
+pub mod fxhash;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,129 @@
+//! Lightweight data-parallel helpers (rayon is unavailable offline).
+//!
+//! Built on `std::thread::scope` with an atomic work index, so closures can
+//! borrow from the caller's stack and no persistent pool management is
+//! needed. Used by the MapReduce engine's map phase and the graph
+//! generators.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: `GG_THREADS` env override,
+/// else available parallelism, else 4.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("GG_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every index in `0..n` using `threads` OS threads, dynamic
+/// chunked scheduling. `f` must be `Sync` (called concurrently).
+pub fn parallel_for(n: usize, threads: usize, chunk: usize, f: impl Fn(usize) + Sync) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= chunk {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over a slice, preserving order. Results are written to
+/// pre-sized slots so no post-hoc sort is needed.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    // Single-thread fast path: no spawn, no mutex (§Perf — this testbed
+    // exposes one core, so this is the common case).
+    if threads <= 1 || n <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    // Each thread computes into a local Vec<(idx, R)>, then results are
+    // placed by index. Keeps everything safe-rust at negligible cost.
+    let next = AtomicUsize::new(0);
+    let chunk = (n / (threads.max(1) * 8)).max(1);
+    let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1).min(n.max(1)) {
+            s.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + chunk).min(n) {
+                        local.push((i, f(&items[i])));
+                    }
+                }
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+    for (i, r) in collected.into_inner().unwrap() {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 10_000;
+        let counters: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, 8, 64, |i| {
+            counters[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counters.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread_and_empty() {
+        let hits = AtomicU64::new(0);
+        parallel_for(5, 1, 2, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        parallel_for(0, 4, 2, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..5000).collect();
+        let doubled = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(doubled.len(), items.len());
+        for (i, v) in doubled.iter().enumerate() {
+            assert_eq!(*v, 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,316 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The `rand` crate is not available in this offline environment, so we
+//! implement the two small generators the system needs:
+//!
+//! * [`SplitMix64`] — used for seeding and for stateless hash-style
+//!   "random" values (e.g. the per-edge sampling priorities that make the
+//!   distributed reservoir deterministic and mergeable).
+//! * [`Xoshiro256`] — xoshiro256** 1.0, the general-purpose generator used
+//!   by graph generators, seed shuffling and feature synthesis.
+//!
+//! Everything in this module is fully deterministic given a seed, which is
+//! a hard requirement: the same experiment config must generate the same
+//! graph, the same seed assignment and the same sampled subgraphs on every
+//! run (and on every *worker*, regardless of execution order).
+
+/// SplitMix64 step: advances `state` and returns the next output.
+///
+/// Reference: Sebastiano Vigna, <https://prng.di.unimi.it/splitmix64.c>.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless 64-bit mix of a single value (one SplitMix64 output step).
+///
+/// Used as a cheap, high-quality hash for sampling priorities and feature
+/// synthesis. `mix64(x) == mix64(y)` iff `x == y` for our purposes.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut s = x;
+    splitmix64(&mut s)
+}
+
+/// Combine two values into one 64-bit hash (order-sensitive).
+#[inline]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    mix64(mix64(a) ^ b.rotate_left(32))
+}
+
+/// Combine three values into one 64-bit hash (order-sensitive).
+#[inline]
+pub fn mix3(a: u64, b: u64, c: u64) -> u64 {
+    mix64(mix2(a, b) ^ c.rotate_left(16))
+}
+
+/// A `SplitMix64` generator, mainly used to seed [`Xoshiro256`].
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        splitmix64(&mut self.state)
+    }
+}
+
+/// xoshiro256** 1.0 — fast, high-quality 64-bit PRNG.
+///
+/// Reference: David Blackman & Sebastiano Vigna,
+/// <https://prng.di.unimi.it/xoshiro256starstar.c>.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64, as
+    /// recommended by the xoshiro authors).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift rejection method.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        // Widening multiply; rejection loop terminates quickly in practice.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// `true` with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// deterministic, speed is irrelevant at our call sites).
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        for i in (1..n).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k <= n), order unspecified.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Floyd's algorithm: O(k) expected.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_range((j + 1) as u64) as usize;
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        out
+    }
+
+    /// Zipf-distributed value in `[0, n)` with exponent `s`, via rejection
+    /// sampling (Devroye). Used to synthesize heavy-tailed degree targets.
+    pub fn gen_zipf(&mut self, n: u64, s: f64) -> u64 {
+        assert!(n > 0);
+        if s <= 0.0 {
+            return self.gen_range(n);
+        }
+        let nf = n as f64;
+        let t = if (s - 1.0).abs() < 1e-9 {
+            1.0 + nf.ln()
+        } else {
+            (nf.powf(1.0 - s) - s) / (1.0 - s)
+        };
+        loop {
+            let u = self.gen_f64();
+            let inv = if (s - 1.0).abs() < 1e-9 {
+                (u * t).exp()
+            } else {
+                let y = u * t * (1.0 - s) + s;
+                if y <= 0.0 {
+                    continue;
+                }
+                y.powf(1.0 / (1.0 - s))
+            };
+            let x = inv.floor().max(1.0).min(nf);
+            let k = x as u64;
+            let ratio = (x / inv).powf(s) * if k == 1 { 1.0 } else { inv / x };
+            if self.gen_f64() * ratio.max(1.0) <= ratio {
+                return k - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // First outputs for seed 0 (from the reference implementation).
+        let mut s = 0u64;
+        assert_eq!(splitmix64(&mut s), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(&mut s), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(splitmix64(&mut s), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn xoshiro_is_deterministic() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Xoshiro256::seed_from_u64(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn gen_f64_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seed_from_u64(1);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        // With overwhelming probability the shuffle moved something.
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Xoshiro256::seed_from_u64(5);
+        for &(n, k) in &[(10usize, 10usize), (100, 7), (1, 1), (50, 0)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "indices must be distinct");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn zipf_is_heavy_tailed() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        let n = 1000u64;
+        let mut count0 = 0;
+        let trials = 20_000;
+        for _ in 0..trials {
+            let v = r.gen_zipf(n, 1.1);
+            assert!(v < n);
+            if v == 0 {
+                count0 += 1;
+            }
+        }
+        // Rank 1 should dominate heavily under zipf(1.1); uniform would
+        // give trials/1000 = 20.
+        assert!(count0 > trials / 100, "rank0 count {count0} not heavy-tailed");
+    }
+
+    #[test]
+    fn gen_normal_moments() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let n = 20_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.gen_normal();
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn mix_functions_differ_on_inputs() {
+        assert_ne!(mix64(1), mix64(2));
+        assert_ne!(mix2(1, 2), mix2(2, 1));
+        assert_ne!(mix3(1, 2, 3), mix3(3, 2, 1));
+    }
+}

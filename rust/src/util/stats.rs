@@ -1,0 +1,275 @@
+//! Summary statistics and histograms for benchmark and metrics reporting.
+
+/// Online accumulator plus exact percentiles over recorded samples.
+///
+/// Stores all samples (f64); intended for benchmark iteration counts,
+/// per-worker load distributions and latency series — thousands to a few
+/// million points, not unbounded telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    data: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_iter(values: impl IntoIterator<Item = f64>) -> Self {
+        let mut s = Self::new();
+        for v in values {
+            s.push(v);
+        }
+        s
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.data.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return f64::NAN;
+        }
+        self.sum() / self.data.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.data.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.data.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.data.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.data.iter().map(|v| (v - m) * (v - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.data.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation; `q` in `[0, 100]`.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.data.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.data.len();
+        let rank = (q / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.data[lo]
+        } else {
+            let w = rank - lo as f64;
+            self.data[lo] * (1.0 - w) + self.data[hi] * w
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// max/mean — the load-imbalance factor used in the E3 balance tables
+    /// (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            return 1.0;
+        }
+        self.max() / m
+    }
+
+    /// Coefficient of variation (stddev / mean).
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            return 0.0;
+        }
+        self.stddev() / m
+    }
+
+    /// Compact one-line summary, e.g. for log output.
+    pub fn summary(&mut self) -> String {
+        if self.is_empty() {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:.4} p50={:.4} p95={:.4} min={:.4} max={:.4} sd={:.4}",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.min(),
+            self.max(),
+            self.stddev()
+        )
+    }
+}
+
+/// Fixed-bucket log-scale histogram for latencies (nanosecond input).
+///
+/// Buckets are powers of two from 1ns (<2ns) up to ~1.15s (2^60 capped),
+/// which is plenty for in-process event latencies.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64], count: 0, sum: 0 }
+    }
+
+    pub fn record(&mut self, value_ns: u64) {
+        let idx = 64 - value_ns.max(1).leading_zeros() as usize - 1;
+        self.buckets[idx.min(63)] += 1;
+        self.count += 1;
+        self.sum += value_ns as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Approximate quantile: returns the upper bound of the bucket that
+    /// contains the q-quantile observation.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Samples::from_iter([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.len(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.stddev() - 1.2909944487358056).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = Samples::from_iter([10.0, 20.0, 30.0, 40.0]);
+        assert!((s.percentile(0.0) - 10.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 40.0).abs() < 1e-12);
+        assert!((s.median() - 25.0).abs() < 1e-12);
+        assert!((s.percentile(25.0) - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let mut s = Samples::from_iter([5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.median(), 3.0);
+        s.push(6.0);
+        assert!((s.median() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_factor() {
+        let balanced = Samples::from_iter([10.0, 10.0, 10.0, 10.0]);
+        assert!((balanced.imbalance() - 1.0).abs() < 1e-12);
+        let skewed = Samples::from_iter([40.0, 0.0, 0.0, 0.0]);
+        assert!((skewed.imbalance() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_samples() {
+        let mut s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+        assert_eq!(s.summary(), "n=0");
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket() {
+        let mut h = LogHistogram::new();
+        for _ in 0..900 {
+            h.record(1_000); // ~1us
+        }
+        for _ in 0..100 {
+            h.record(1_000_000); // ~1ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ns(0.5);
+        assert!(p50 >= 1_000 && p50 < 4_096, "p50={p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!(p99 >= 1_000_000, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(100);
+        b.record(100_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean_ns() - 50_050.0).abs() < 1.0);
+    }
+}

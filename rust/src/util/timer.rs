@@ -1,0 +1,129 @@
+//! Timing helpers: scoped stopwatch and a named phase recorder used by the
+//! engines to attribute time to pipeline stages (map / shuffle / reduce /
+//! train) in their reports.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates durations under string labels; deterministic iteration order
+/// for report rendering.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    phases: BTreeMap<String, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and attribute it to `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        *self.phases.entry(phase.to_string()).or_default() += d;
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.phases.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.phases {
+            self.add(k, *v);
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.phases.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Render as `phase=1.234s phase2=0.002s`.
+    pub fn render(&self) -> String {
+        let mut parts = Vec::new();
+        for (k, v) in &self.phases {
+            parts.push(format!("{k}={:.3}s", v.as_secs_f64()));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed() >= Duration::from_millis(2));
+        let first = sw.restart();
+        assert!(first >= Duration::from_millis(2));
+        assert!(sw.elapsed() < first);
+    }
+
+    #[test]
+    fn phase_timer_accumulates_and_merges() {
+        let mut t = PhaseTimer::new();
+        t.add("map", Duration::from_millis(10));
+        t.add("map", Duration::from_millis(5));
+        t.add("reduce", Duration::from_millis(1));
+        assert_eq!(t.get("map"), Duration::from_millis(15));
+        assert_eq!(t.total(), Duration::from_millis(16));
+
+        let mut u = PhaseTimer::new();
+        u.add("map", Duration::from_millis(1));
+        t.merge(&u);
+        assert_eq!(t.get("map"), Duration::from_millis(16));
+        assert!(t.render().contains("map="));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") > Duration::ZERO);
+    }
+}

@@ -1,0 +1,162 @@
+//! Property-based integration tests over the coordinator invariants:
+//! routing (balance table), sampling (subgraph structure vs. the graph),
+//! batching (padding masks), and state (cost-model conservation).
+
+use graphgen_plus::balance::{BalanceTable, MappingStrategy};
+use graphgen_plus::cluster::{CostModel, Fabric};
+use graphgen_plus::engines::{by_name, CollectSink, EngineConfig, NullSink};
+use graphgen_plus::graph::generator;
+use graphgen_plus::graph::NodeId;
+use graphgen_plus::sampler::FanoutSpec;
+use graphgen_plus::testkit::Cases;
+
+/// Random engine config + workload; checks every subgraph against the
+/// graph adjacency and the fanout bounds.
+#[test]
+fn property_subgraphs_always_valid() {
+    Cases::new("subgraphs valid", 12).run(|rng| {
+        let n = 128 + rng.gen_range(512) as u32;
+        let e = n as u64 * (2 + rng.gen_range(8));
+        let spec = format!("rmat:n={n},e={e}");
+        let gen = generator::from_spec(&spec, rng.next_u64()).unwrap();
+        let g = gen.csr();
+        let f1 = 1 + rng.gen_range(6) as u32;
+        let f2 = 1 + rng.gen_range(4) as u32;
+        let fanout = FanoutSpec::new(vec![f1, f2]);
+        let workers = 1 + rng.gen_range(8) as usize;
+        let num_seeds = 1 + rng.gen_range(64) as usize;
+        let seeds: Vec<NodeId> =
+            (0..num_seeds).map(|_| rng.gen_range(n as u64) as NodeId).collect();
+        let cfg = EngineConfig {
+            workers,
+            wave_size: 1 + rng.gen_range(64) as usize,
+            fanout: fanout.clone(),
+            sample_seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let sink = CollectSink::default();
+        let report = by_name("graphgen+")
+            .unwrap()
+            .generate(&g, &seeds, &cfg, &sink)
+            .unwrap();
+        let subs = sink.take_sorted();
+        // Count: paper discard semantics.
+        let expected = (seeds.len() / workers) * workers;
+        assert_eq!(subs.len(), expected);
+        assert_eq!(report.discarded_seeds as usize, seeds.len() - expected);
+        for sg in &subs {
+            sg.validate(&fanout).unwrap();
+            for (i, &v) in sg.hop1.iter().enumerate() {
+                assert!(g.neighbors(sg.seed).contains(&v));
+                for &w in &sg.hop2[i] {
+                    assert!(g.neighbors(v).contains(&w));
+                }
+                // No duplicate neighbors within a reservoir.
+                let set: std::collections::HashSet<_> = sg.hop2[i].iter().collect();
+                assert_eq!(set.len(), sg.hop2[i].len());
+            }
+            let set: std::collections::HashSet<_> = sg.hop1.iter().collect();
+            assert_eq!(set.len(), sg.hop1.len());
+        }
+    });
+}
+
+/// Balance-table routing invariants under random inputs (beyond the unit
+/// tests: interplay with engine waves).
+#[test]
+fn property_routing_conserves_seeds() {
+    Cases::new("routing conserves seeds", 50).run(|rng| {
+        let n = rng.gen_range(300) as usize;
+        let w = 1 + rng.gen_range(12) as usize;
+        let seeds: Vec<NodeId> = (0..n).map(|_| rng.gen_range(10_000) as NodeId).collect();
+        let strat = match rng.gen_range(3) {
+            0 => MappingStrategy::ShuffledRoundRobin,
+            1 => MappingStrategy::Contiguous,
+            _ => MappingStrategy::HashMod,
+        };
+        let t = BalanceTable::build(&seeds, w, strat, rng.next_u64());
+        // Every input seed is either assigned or discarded, exactly once
+        // (as a multiset).
+        let mut all: Vec<NodeId> = t.seeds.iter().chain(&t.discarded).copied().collect();
+        let mut input = seeds.clone();
+        all.sort_unstable();
+        input.sort_unstable();
+        assert_eq!(all, input);
+        // Per-worker seed lists partition the assigned set.
+        let total: usize = (0..w).map(|i| t.seeds_for(i).len()).sum();
+        assert_eq!(total, t.seeds.len());
+    });
+}
+
+/// The cost model must conserve work: total ledger work is independent of
+/// the simulated cluster width (only its distribution changes).
+#[test]
+fn property_ledger_scan_work_is_width_invariant() {
+    Cases::new("ledger conservation", 6).run(|rng| {
+        let gen = generator::from_spec("rmat:n=512,e=8192", rng.next_u64()).unwrap();
+        let g = gen.csr();
+        let seeds: Vec<NodeId> = (0..32).collect();
+        let mut totals = Vec::new();
+        for workers in [1usize, 4, 16] {
+            let cfg = EngineConfig {
+                workers,
+                fanout: FanoutSpec::new(vec![4, 3]),
+                sample_seed: 5,
+                ..Default::default()
+            };
+            let sink = NullSink::default();
+            let r = by_name("graphgen+").unwrap().generate(&g, &seeds, &cfg, &sink).unwrap();
+            totals.push(r.ledger.total().scan_edge_entries);
+        }
+        assert!(
+            totals.iter().all(|&t| t == totals[0]),
+            "scan work must not depend on width: {totals:?}"
+        );
+    });
+}
+
+/// Modeled time must be monotonically helped by workers (up to the knee)
+/// and the fabric byte totals must match between tree and flat *content*
+/// (they carry the same subgraphs).
+#[test]
+fn modeled_time_decreases_with_workers() {
+    let gen = generator::from_spec("rmat:n=2048,e=32768", 3).unwrap();
+    let g = gen.csr();
+    let seeds: Vec<NodeId> = (0..256).collect();
+    let model = CostModel::fixed();
+    let mut last = f64::INFINITY;
+    for workers in [1usize, 4, 16] {
+        let cfg = EngineConfig {
+            workers,
+            fanout: FanoutSpec::new(vec![8, 4]),
+            ..Default::default()
+        };
+        let sink = NullSink::default();
+        let r = by_name("graphgen+").unwrap().generate(&g, &seeds, &cfg, &sink).unwrap();
+        let t = r.sim(&model).total_secs;
+        assert!(t < last * 1.05, "modeled time should not grow: {t} vs {last}");
+        last = t;
+    }
+}
+
+/// Fabric accounting sanity across engines: bytes are non-zero whenever
+/// more than one worker exists and traffic totals equal per-worker sums.
+#[test]
+fn property_fabric_totals_consistent() {
+    Cases::new("fabric totals", 10).run(|rng| {
+        let w = 2 + rng.gen_range(6) as usize;
+        let fabric = Fabric::new(w);
+        let mut expect = 0u64;
+        for _ in 0..rng.gen_range(200) {
+            let src = rng.gen_range(w as u64) as usize;
+            let dst = rng.gen_range(w as u64) as usize;
+            let b = rng.gen_range(1000);
+            fabric.charge(src, dst, b);
+            expect += b;
+        }
+        let st = fabric.stats();
+        assert_eq!(st.total_bytes, expect);
+        assert_eq!(st.per_worker_sent.iter().sum::<u64>(), expect);
+        assert_eq!(st.per_worker_recv.iter().sum::<u64>(), expect);
+    });
+}
