@@ -13,6 +13,7 @@
 
 use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
 use graphgen_plus::engines::EngineConfig;
+use graphgen_plus::featurestore::FeatureService;
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::generator;
 use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
@@ -42,8 +43,12 @@ fn main() -> anyhow::Result<()> {
         fmt_count(g.num_edges() as f64),
         g.max_degree().1
     );
-    let features =
-        FeatureStore::with_labels(spec.dim, spec.classes as u32, gen.labels.clone().unwrap(), 3);
+    let features = FeatureService::procedural(FeatureStore::with_labels(
+        spec.dim,
+        spec.classes as u32,
+        gen.labels.clone().unwrap(),
+        3,
+    ));
 
     // ~300 iterations × 4 replicas × batch seeds.
     let replicas = 4;

@@ -8,6 +8,7 @@
 
 use graphgen_plus::engines::{CollectSink, EngineConfig, SubgraphEngine};
 use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
+use graphgen_plus::featurestore::FeatureService;
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::generator;
 use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
@@ -52,12 +53,12 @@ fn main() -> anyhow::Result<()> {
     let runtime = ModelRuntime::load(artifacts, 1)?;
     let spec = runtime.meta().spec;
     // Features derived from the historical club split (labels 0/1).
-    let features = FeatureStore::with_labels(
+    let features = FeatureService::procedural(FeatureStore::with_labels(
         spec.dim,
         spec.classes as u32,
         karate.labels.clone().unwrap(),
         7,
-    );
+    ));
     // Repeat the 34 seeds to fill a few training iterations.
     let many_seeds: Vec<u32> = (0..(spec.batch as u32 * 2 * 8)).map(|i| i % 34).collect();
     let mut ecfg = cfg.clone();

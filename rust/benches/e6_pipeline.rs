@@ -19,6 +19,7 @@ use graphgen_plus::bench_harness::render_markdown;
 use graphgen_plus::engines::graphgen::GraphGenOffline;
 use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
 use graphgen_plus::engines::{EngineConfig, SubgraphEngine};
+use graphgen_plus::featurestore::FeatureService;
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::generator;
 use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
@@ -37,8 +38,12 @@ fn main() {
     let spec = runtime.meta().spec;
     let gen = generator::from_spec("planted:n=65536,e=524288,c=8", 6).unwrap();
     let g = gen.csr();
-    let features =
-        FeatureStore::with_labels(spec.dim, spec.classes as u32, gen.labels.clone().unwrap(), 2);
+    let features = FeatureService::procedural(FeatureStore::with_labels(
+        spec.dim,
+        spec.classes as u32,
+        gen.labels.clone().unwrap(),
+        2,
+    ));
 
     let replicas = 2usize;
     let iters = 60usize;

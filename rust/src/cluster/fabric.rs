@@ -36,6 +36,24 @@ pub struct FabricStats {
 }
 
 impl FabricStats {
+    /// Counter-wise difference vs an earlier snapshot of the same fabric
+    /// (per-run reporting off a long-lived fabric).
+    pub fn delta(&self, earlier: &FabricStats) -> FabricStats {
+        let sub = |a: &[u64], b: &[u64]| -> Vec<u64> {
+            a.iter()
+                .zip(b.iter().chain(std::iter::repeat(&0)))
+                .map(|(x, y)| x.saturating_sub(*y))
+                .collect()
+        };
+        FabricStats {
+            workers: self.workers,
+            total_bytes: self.total_bytes.saturating_sub(earlier.total_bytes),
+            total_messages: self.total_messages.saturating_sub(earlier.total_messages),
+            per_worker_sent: sub(&self.per_worker_sent, &earlier.per_worker_sent),
+            per_worker_recv: sub(&self.per_worker_recv, &earlier.per_worker_recv),
+        }
+    }
+
     /// Max-over-mean of per-worker received bytes — the fan-in hot spot
     /// metric that the tree reduction is designed to flatten (E4).
     pub fn recv_imbalance(&self) -> f64 {
@@ -144,6 +162,20 @@ mod tests {
         f.charge(0, 1, 9_000_000);
         let t2 = f.stats().estimate_time(1e-5, 10e9);
         assert!(t2 > t1);
+    }
+
+    #[test]
+    fn delta_subtracts_counterwise() {
+        let f = Fabric::new(2);
+        f.charge(0, 1, 100);
+        let before = f.stats();
+        f.charge(0, 1, 50);
+        f.charge(1, 0, 10);
+        let d = f.stats().delta(&before);
+        assert_eq!(d.total_bytes, 60);
+        assert_eq!(d.total_messages, 2);
+        assert_eq!(d.per_worker_sent, vec![50, 10]);
+        assert_eq!(d.per_worker_recv, vec![10, 50]);
     }
 
     #[test]

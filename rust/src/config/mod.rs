@@ -43,6 +43,12 @@ pub struct RunConfig {
     pub mode: String,
     pub pjrt_pool: usize,
     pub feature_seed: u64,
+    /// Feature storage backend: `procedural` or `sharded`.
+    pub feature_backend: String,
+    /// Hot-node feature cache budget in MiB (0 disables the cache).
+    pub feature_cache_mb: usize,
+    /// Overlap feature gather for batch t+1 with training on batch t.
+    pub feature_prefetch: bool,
 }
 
 impl Default for RunConfig {
@@ -67,6 +73,9 @@ impl Default for RunConfig {
             mode: "concurrent".into(),
             pjrt_pool: 1,
             feature_seed: 5,
+            feature_backend: "procedural".into(),
+            feature_cache_mb: 0,
+            feature_prefetch: false,
         }
     }
 }
@@ -119,6 +128,9 @@ impl RunConfig {
             "mode" => self.mode = value.into(),
             "pjrt_pool" => self.pjrt_pool = p(value, key)?,
             "feature_seed" => self.feature_seed = p(value, key)?,
+            "feature_backend" => self.feature_backend = value.into(),
+            "feature_cache_mb" => self.feature_cache_mb = p(value, key)?,
+            "feature_prefetch" => self.feature_prefetch = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -156,6 +168,7 @@ impl RunConfig {
             allreduce,
             init_seed: 0x11,
             curve_every: 10,
+            prefetch: self.feature_prefetch,
         })
     }
 
@@ -180,7 +193,10 @@ impl RunConfig {
             .set("allreduce", self.allreduce.clone())
             .set("mode", self.mode.clone())
             .set("pjrt_pool", self.pjrt_pool)
-            .set("feature_seed", self.feature_seed);
+            .set("feature_seed", self.feature_seed)
+            .set("feature_backend", self.feature_backend.clone())
+            .set("feature_cache_mb", self.feature_cache_mb)
+            .set("feature_prefetch", self.feature_prefetch);
         o
     }
 }
@@ -220,6 +236,21 @@ mod tests {
         let loaded = RunConfig::from_json_file(&path).unwrap();
         assert_eq!(loaded.to_json(), c.to_json());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn feature_store_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.feature_backend, "procedural");
+        assert!(!c.train_config().unwrap().prefetch);
+        c.apply_override("feature_backend", "sharded").unwrap();
+        c.apply_override("feature_cache_mb", "64").unwrap();
+        c.apply_override("feature_prefetch", "true").unwrap();
+        assert_eq!(c.feature_backend, "sharded");
+        assert_eq!(c.feature_cache_mb, 64);
+        assert!(c.train_config().unwrap().prefetch);
+        assert!(c.apply_override("feature_prefetch", "maybe").is_err());
+        assert!(c.to_json().to_pretty().contains("feature_backend"));
     }
 
     #[test]

@@ -68,6 +68,25 @@ impl WaveSlots {
         }
     }
 
+    /// All distinct node ids this wave touches (seeds plus sampled hops):
+    /// the generation-side hook for warming a feature cache or kicking
+    /// off a wave-ahead gather before batches reach the trainer. This is
+    /// a superset of what batch assembly reads — the batch layout
+    /// additionally truncates each hop to the model's fanout
+    /// ([`crate::featurestore::fetch::batch_ids`] applies that exactly).
+    pub fn unique_nodes(&self) -> Vec<NodeId> {
+        let mut ids: Vec<NodeId> = self
+            .seeds
+            .iter()
+            .copied()
+            .chain(self.hop1.iter().flatten().copied())
+            .chain(self.hop2.iter().flatten().flatten().copied())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
     /// Finalize into subgraphs, consuming the wave.
     pub fn into_subgraphs(self) -> impl Iterator<Item = (u32, Subgraph)> {
         self.seeds
@@ -543,6 +562,34 @@ mod tests {
         for (slot, h1) in slots.hop1.iter().enumerate() {
             let deg = g.degree(slots.seeds[slot]) as usize;
             assert_eq!(h1.len(), deg.min(4), "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn unique_nodes_covers_all_hops_once() {
+        let g = generator::from_spec("rmat:n=1024,e=8192", 3).unwrap().csr();
+        let cfg = cfg();
+        let fabric = Fabric::new(cfg.workers);
+        let seeds: Vec<NodeId> = (0..32).collect();
+        let mut slots = WaveSlots::new(seeds.clone(), vec![0; 32]);
+        let mut ledger = WorkLedger::new(cfg.workers);
+        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger);
+        edge_centric_hop(&g, &mut slots, 2, &cfg, &fabric, &mut ledger);
+        let ids = slots.unique_nodes();
+        // Sorted, deduplicated, and covering every referenced node.
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        for &s in &slots.seeds {
+            assert!(ids.binary_search(&s).is_ok());
+        }
+        for (slot, h1) in slots.hop1.iter().enumerate() {
+            for &v in h1 {
+                assert!(ids.binary_search(&v).is_ok());
+            }
+            for h2 in &slots.hop2[slot] {
+                for &w in h2 {
+                    assert!(ids.binary_search(&w).is_ok());
+                }
+            }
         }
     }
 

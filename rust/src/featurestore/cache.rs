@@ -1,0 +1,232 @@
+//! Hot-node feature cache (CLOCK replacement).
+//!
+//! Industrial graphs are heavy-tailed: a small set of hub nodes appears in
+//! a large fraction of sampled subgraphs, so caching their rows converts
+//! most remote feature traffic into local copies. CLOCK approximates LRU
+//! with one reference bit per slot and no per-access reordering, which
+//! keeps the (mutex-guarded) hot path a hash probe plus a bit set.
+//!
+//! The cache is typically seeded with the graph's highest-degree nodes
+//! (see [`crate::featurestore::FeatureService::warm_cache`]) — the same
+//! hub set the balance table and tree reduction exist to tame.
+
+use crate::graph::NodeId;
+use crate::util::fxhash::FxHashMap;
+
+/// Hit/miss/eviction counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Fixed-capacity feature-row cache with CLOCK replacement.
+pub struct HotCache {
+    dim: usize,
+    cap: usize,
+    map: FxHashMap<NodeId, u32>,
+    /// Slot → node, parallel to `refbit`, `labels` and `feats` rows.
+    node_of: Vec<NodeId>,
+    refbit: Vec<bool>,
+    feats: Vec<f32>,
+    labels: Vec<u32>,
+    hand: usize,
+    stats: CacheStats,
+}
+
+impl HotCache {
+    pub fn new(cap_rows: usize, dim: usize) -> Self {
+        assert!(cap_rows >= 1, "cache needs at least one row");
+        assert!(dim >= 1);
+        Self {
+            dim,
+            cap: cap_rows,
+            map: FxHashMap::default(),
+            node_of: Vec::new(),
+            refbit: Vec::new(),
+            feats: Vec::new(),
+            labels: Vec::new(),
+            hand: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Size the cache by a memory budget (the `--feature-cache-mb` knob).
+    pub fn from_mb(mb: usize, dim: usize) -> Self {
+        // Per row: dim f32s + node id + label + slot bookkeeping.
+        let row_bytes = dim * 4 + 16;
+        let cap = (mb.max(1) * (1 << 20)) / row_bytes;
+        Self::new(cap.max(1), dim)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_of.is_empty()
+    }
+
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.map.contains_key(&v)
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Look up `v`, counting a hit or miss and marking the slot recently
+    /// used. Returns the cached row and label.
+    pub fn get(&mut self, v: NodeId) -> Option<(&[f32], u32)> {
+        match self.map.get(&v) {
+            Some(&slot) => {
+                let s = slot as usize;
+                self.refbit[s] = true;
+                self.stats.hits += 1;
+                Some((&self.feats[s * self.dim..(s + 1) * self.dim], self.labels[s]))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a row, evicting via CLOCK when full. Re-inserting a present
+    /// node is a no-op (rows are immutable — backends are deterministic).
+    pub fn insert(&mut self, v: NodeId, row: &[f32], label: u32) {
+        assert_eq!(row.len(), self.dim, "row width mismatch");
+        if self.map.contains_key(&v) {
+            return;
+        }
+        self.stats.insertions += 1;
+        if self.node_of.len() < self.cap {
+            let s = self.node_of.len();
+            self.node_of.push(v);
+            self.refbit.push(true);
+            self.feats.extend_from_slice(row);
+            self.labels.push(label);
+            self.map.insert(v, s as u32);
+            return;
+        }
+        let s = self.evict();
+        self.node_of[s] = v;
+        self.refbit[s] = true;
+        self.feats[s * self.dim..(s + 1) * self.dim].copy_from_slice(row);
+        self.labels[s] = label;
+        self.map.insert(v, s as u32);
+    }
+
+    /// CLOCK sweep: advance the hand, clearing reference bits, until an
+    /// unreferenced victim is found (terminates within two sweeps).
+    fn evict(&mut self) -> usize {
+        loop {
+            let s = self.hand;
+            self.hand = (self.hand + 1) % self.cap;
+            if self.refbit[s] {
+                self.refbit[s] = false;
+            } else {
+                let old = self.node_of[s];
+                self.map.remove(&old);
+                self.stats.evictions += 1;
+                return s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: NodeId, dim: usize) -> Vec<f32> {
+        (0..dim).map(|i| (v * 100 + i as u32) as f32).collect()
+    }
+
+    #[test]
+    fn hit_returns_inserted_bytes() {
+        let mut c = HotCache::new(4, 3);
+        c.insert(7, &row(7, 3), 2);
+        let (r, l) = c.get(7).unwrap();
+        assert_eq!(r, &row(7, 3)[..]);
+        assert_eq!(l, 2);
+        assert!(c.get(8).is_none());
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+        assert!((c.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_is_respected_and_evictions_counted() {
+        let mut c = HotCache::new(3, 2);
+        for v in 0..10u32 {
+            c.insert(v, &row(v, 2), v);
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats().evictions, 7);
+        assert_eq!(c.stats().insertions, 10);
+        // Exactly 3 of the inserted nodes are resident.
+        let resident = (0..10u32).filter(|&v| c.contains(v)).count();
+        assert_eq!(resident, 3);
+    }
+
+    #[test]
+    fn clock_prefers_evicting_unreferenced_slots() {
+        let mut c = HotCache::new(2, 1);
+        c.insert(1, &[1.0], 0); // slot 0, ref
+        c.insert(2, &[2.0], 0); // slot 1, ref
+        // Both bits set: the sweep clears them and evicts slot 0 (node 1).
+        c.insert(3, &[3.0], 0);
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3));
+        // Now node 3 is referenced (fresh insert) but node 2 is not: the
+        // hand sits on node 2's slot and evicts it, sparing node 3.
+        c.insert(4, &[4.0], 0);
+        assert!(c.contains(3), "referenced row evicted before unreferenced one");
+        assert!(!c.contains(2));
+        assert!(c.contains(4));
+    }
+
+    #[test]
+    fn reinsert_is_noop() {
+        let mut c = HotCache::new(2, 1);
+        c.insert(5, &[5.0], 1);
+        c.insert(5, &[99.0], 9);
+        let (r, l) = c.get(5).unwrap();
+        assert_eq!(r, &[5.0][..]);
+        assert_eq!(l, 1);
+        assert_eq!(c.stats().insertions, 1);
+    }
+
+    #[test]
+    fn from_mb_sizes_by_budget() {
+        let c = HotCache::from_mb(1, 64);
+        // 1 MiB / (64*4 + 16) bytes ≈ 3855 rows.
+        assert!(c.capacity() > 3000 && c.capacity() < 4100, "{}", c.capacity());
+        assert!(HotCache::from_mb(0, 8).capacity() >= 1, "degenerate budget still caches");
+    }
+}

@@ -1,0 +1,481 @@
+//! Sharded feature-store subsystem.
+//!
+//! Industrial GNN training fetches features from a feature store, and that
+//! feature movement — not subgraph topology — dominates cross-worker
+//! traffic at production scale. The seed modeled the store with a purely
+//! procedural stand-in ([`crate::graph::features::FeatureStore`]), which
+//! means feature bytes never crossed the simulated fabric at all. This
+//! module makes feature placement and movement first-class:
+//!
+//! * [`FeatureBackend`] — the storage abstraction. Two implementations:
+//!   the procedural store (replicated everywhere, zero traffic) and
+//!   [`ShardedStore`] ([`sharded`]) — dense partition-aligned shards
+//!   materialized from the procedural source, byte-identical rows, but
+//!   with per-row ownership so remote reads are chargeable.
+//! * [`fetch`] — the batched fetch planner: deduplicate a batch's node
+//!   ids, split local vs remote, group remote ids by owner partition and
+//!   issue **one bulk gather per (requester, owner) pair**, charging every
+//!   remote byte to a [`crate::cluster::Fabric`].
+//! * [`cache`] — a CLOCK hot-node cache seeded from high-degree nodes,
+//!   with hit/miss/eviction counters.
+//! * [`prefetch`] — overlaps the feature gather for batch *t+1* with
+//!   training on batch *t* inside the concurrent pipeline.
+//!
+//! [`FeatureService`] composes backend + cache + fabric accounting and is
+//! what the trainer, evaluator and pipeline driver consume. Backend choice
+//! is invisible to training: all backends return byte-identical rows
+//! (property-tested in `tests/featurestore.rs`), so the loss curve is
+//! independent of feature placement — only the traffic accounting and
+//! gather latency change. The E7 benchmark (`benches/e7_featurestore.rs`)
+//! measures exactly that.
+
+pub mod cache;
+pub mod fetch;
+pub mod prefetch;
+pub mod sharded;
+
+pub use cache::{CacheStats, HotCache};
+pub use fetch::{FetchPlan, FetchStats, Gathered};
+pub use prefetch::{spawn_prefetcher, BatchFeed};
+pub use sharded::ShardedStore;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::cluster::{Fabric, FabricStats};
+use crate::graph::features::FeatureStore;
+use crate::graph::NodeId;
+use crate::sampler::Subgraph;
+use crate::train::meta::ModelSpec;
+use crate::train::runtime::HostBatch;
+use crate::util::fxhash::FxHashMap;
+
+/// A feature/label storage backend.
+///
+/// Rows are `dim` f32s per node; labels are class ids. Implementations
+/// must be deterministic: the same node always yields the same bytes, so
+/// backends are interchangeable under training (the equivalence the
+/// integration tests assert).
+pub trait FeatureBackend: Send + Sync {
+    fn dim(&self) -> usize;
+
+    fn num_classes(&self) -> u32;
+
+    fn label(&self, v: NodeId) -> u32;
+
+    /// Write the feature row of `v` into `out` (len == dim).
+    fn write_feature(&self, v: NodeId, out: &mut [f32]);
+
+    /// Bulk row gather: writes the rows of `ids`, in order, contiguously
+    /// into `out` (`ids.len() * dim` floats). Hot paths use this instead
+    /// of per-node calls; backends override it when rows can be copied
+    /// without per-row recomputation.
+    fn gather_into(&self, ids: &[NodeId], out: &mut [f32]) {
+        let d = self.dim();
+        assert_eq!(out.len(), ids.len() * d, "gather buffer size mismatch");
+        for (i, &v) in ids.iter().enumerate() {
+            self.write_feature(v, &mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Partition owning `v`'s row, or `None` when the row is computable
+    /// locally on every worker (the procedural store) — such reads are
+    /// never charged as traffic.
+    fn owner_of(&self, _v: NodeId) -> Option<u32> {
+        None
+    }
+
+    /// Number of partitions rows are sharded over (1 = unsharded).
+    fn partitions(&self) -> usize {
+        1
+    }
+}
+
+/// The procedural store is a degenerate backend: every worker computes
+/// identical rows locally, so nothing is ever remote.
+impl FeatureBackend for FeatureStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_classes(&self) -> u32 {
+        self.num_classes
+    }
+
+    fn label(&self, v: NodeId) -> u32 {
+        // Method-call syntax resolves to the inherent method.
+        FeatureStore::label(self, v)
+    }
+
+    fn write_feature(&self, v: NodeId, out: &mut [f32]) {
+        FeatureStore::write_feature(self, v, out)
+    }
+
+    fn gather_into(&self, ids: &[NodeId], out: &mut [f32]) {
+        FeatureStore::gather_into(self, ids, out)
+    }
+}
+
+/// Backend selector for config / CLI (`--feature-backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Replicated procedural computation (the seed behaviour; no traffic).
+    Procedural,
+    /// Partition-aligned dense shards with remote-byte accounting.
+    Sharded,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "procedural" => Ok(Self::Procedural),
+            "sharded" => Ok(Self::Sharded),
+            other => Err(format!("unknown feature backend '{other}'")),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    requested: AtomicU64,
+    unique: AtomicU64,
+    cache_hits: AtomicU64,
+    local_rows: AtomicU64,
+    remote_rows: AtomicU64,
+    remote_bytes: AtomicU64,
+    remote_msgs: AtomicU64,
+    gathers: AtomicU64,
+}
+
+impl Counters {
+    fn add(&self, s: &FetchStats) {
+        self.requested.fetch_add(s.requested, Ordering::Relaxed);
+        self.unique.fetch_add(s.unique, Ordering::Relaxed);
+        self.cache_hits.fetch_add(s.cache_hits, Ordering::Relaxed);
+        self.local_rows.fetch_add(s.local_rows, Ordering::Relaxed);
+        self.remote_rows.fetch_add(s.remote_rows, Ordering::Relaxed);
+        self.remote_bytes.fetch_add(s.remote_bytes, Ordering::Relaxed);
+        self.remote_msgs.fetch_add(s.remote_msgs, Ordering::Relaxed);
+        self.gathers.fetch_add(s.gathers, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> FetchStats {
+        FetchStats {
+            requested: self.requested.load(Ordering::Relaxed),
+            unique: self.unique.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            local_rows: self.local_rows.load(Ordering::Relaxed),
+            remote_rows: self.remote_rows.load(Ordering::Relaxed),
+            remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
+            remote_msgs: self.remote_msgs.load(Ordering::Relaxed),
+            gathers: self.gathers.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shared feature-access front end: backend + optional hot-node cache +
+/// fabric accounting. One service is shared by all training replicas
+/// (it is `Sync`); per-gather work is lock-free except the cache.
+pub struct FeatureService {
+    backend: Arc<dyn FeatureBackend>,
+    cache: Option<Mutex<HotCache>>,
+    fabric: Fabric,
+    counters: Counters,
+}
+
+impl FeatureService {
+    pub fn new(backend: Arc<dyn FeatureBackend>) -> Self {
+        let parts = backend.partitions().max(1);
+        Self {
+            backend,
+            cache: None,
+            fabric: Fabric::new(parts),
+            counters: Counters::default(),
+        }
+    }
+
+    /// Convenience constructor for the replicated procedural backend.
+    pub fn procedural(store: FeatureStore) -> Self {
+        Self::new(Arc::new(store))
+    }
+
+    /// Attach a hot-node cache (builder style).
+    pub fn with_cache(mut self, cache: HotCache) -> Self {
+        assert_eq!(cache.dim(), self.backend.dim(), "cache dim mismatch");
+        self.cache = Some(Mutex::new(cache));
+        self
+    }
+
+    pub fn backend(&self) -> &dyn FeatureBackend {
+        &*self.backend
+    }
+
+    pub fn dim(&self) -> usize {
+        self.backend.dim()
+    }
+
+    pub fn num_classes(&self) -> u32 {
+        self.backend.num_classes()
+    }
+
+    pub fn label(&self, v: NodeId) -> u32 {
+        self.backend.label(v)
+    }
+
+    /// The fabric feature traffic is charged on (`partitions()` workers).
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    pub fn fabric_stats(&self) -> FabricStats {
+        self.fabric.stats()
+    }
+
+    /// Cumulative fetch counters since construction (or the last
+    /// [`Fabric::reset`]-style comparison via [`FetchStats::delta`]).
+    pub fn stats(&self) -> FetchStats {
+        self.counters.snapshot()
+    }
+
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.lock().unwrap().stats().clone())
+    }
+
+    /// Pre-populate the cache with `ids` (typically the graph's highest-
+    /// degree nodes — the rows most subgraphs will touch). No-op without
+    /// a cache; warming counts as insertions, not hits or misses.
+    pub fn warm_cache(&self, ids: &[NodeId]) {
+        let Some(cache) = &self.cache else { return };
+        let d = self.backend.dim();
+        let mut row = vec![0.0f32; d];
+        let mut c = cache.lock().unwrap();
+        for &v in ids {
+            if c.contains(v) {
+                continue;
+            }
+            self.backend.write_feature(v, &mut row);
+            c.insert(v, &row, self.backend.label(v));
+        }
+    }
+
+    /// Gather the rows of `ids` (duplicates welcome — they are fetched
+    /// once) on behalf of partition-slot `requester`. Remote rows are
+    /// charged to the fabric as one bulk message per owner partition.
+    pub fn gather(&self, ids: &[NodeId], requester: u32) -> Gathered {
+        let d = self.backend.dim();
+        let unique = fetch::dedup_ids(ids);
+        let n = unique.len();
+        let mut feats = vec![0.0f32; n * d];
+        let mut labels = vec![0u32; n];
+        let mut index = FxHashMap::default();
+        index.reserve(n);
+        for (i, &v) in unique.iter().enumerate() {
+            index.insert(v, i as u32);
+        }
+        let mut stats = FetchStats {
+            requested: ids.len() as u64,
+            unique: n as u64,
+            gathers: 1,
+            ..Default::default()
+        };
+        // 1. Serve what we can from the hot cache.
+        let mut missing: Vec<NodeId> = Vec::new();
+        if let Some(cache) = &self.cache {
+            let mut c = cache.lock().unwrap();
+            for (i, &v) in unique.iter().enumerate() {
+                if let Some((row, label)) = c.get(v) {
+                    feats[i * d..(i + 1) * d].copy_from_slice(row);
+                    labels[i] = label;
+                    stats.cache_hits += 1;
+                } else {
+                    missing.push(v);
+                }
+            }
+        } else {
+            missing = unique.clone();
+        }
+        // 2. Plan the misses: local vs one bulk group per remote owner.
+        let plan = fetch::plan(&missing, requester, &*self.backend);
+        let row_bytes = (d * 4 + 4) as u64; // feature row + label
+        let mut scratch: Vec<f32> = Vec::new();
+        fill_rows(&*self.backend, &plan.local, &index, &mut feats, &mut labels, &mut scratch);
+        stats.local_rows += plan.local.len() as u64;
+        for (owner, group) in &plan.remote {
+            fill_rows(&*self.backend, group, &index, &mut feats, &mut labels, &mut scratch);
+            let bytes = group.len() as u64 * row_bytes;
+            stats.remote_rows += group.len() as u64;
+            stats.remote_bytes += bytes;
+            stats.remote_msgs += 1;
+            self.fabric.charge(
+                *owner as usize % self.fabric.workers(),
+                requester as usize % self.fabric.workers(),
+                bytes,
+            );
+        }
+        // 3. Freshly fetched rows become cache candidates.
+        if let Some(cache) = &self.cache {
+            let mut c = cache.lock().unwrap();
+            let fetched = plan.local.iter().chain(plan.remote.iter().flat_map(|(_, g)| g.iter()));
+            for &v in fetched {
+                let i = index[&v] as usize;
+                c.insert(v, &feats[i * d..(i + 1) * d], labels[i]);
+            }
+        }
+        self.counters.add(&stats);
+        Gathered { dim: d, index, feats, labels, stats }
+    }
+
+    /// Assemble a training batch: collect the batch's node ids, gather
+    /// them once (dedup + cache + bulk remote fetch), and fill the fixed
+    /// tensor layout from the gathered frame. Byte-identical to
+    /// [`crate::train::batch::BatchBuilder::build`] against the backend
+    /// directly — only the access pattern (and its accounting) differs.
+    pub fn materialize(
+        &self,
+        spec: ModelSpec,
+        subgraphs: &[Subgraph],
+        requester: u32,
+    ) -> Result<HostBatch> {
+        let ids = fetch::batch_ids(spec, subgraphs);
+        let frame = self.gather(&ids, requester);
+        let fb = FrameBackend { frame: &frame, classes: self.num_classes() };
+        crate::train::batch::BatchBuilder::new(spec, &fb).build(subgraphs)
+    }
+}
+
+/// Bulk-gather `ids` through the backend and scatter rows/labels into the
+/// frame positions given by `index`.
+fn fill_rows(
+    backend: &dyn FeatureBackend,
+    ids: &[NodeId],
+    index: &FxHashMap<NodeId, u32>,
+    feats: &mut [f32],
+    labels: &mut [u32],
+    scratch: &mut Vec<f32>,
+) {
+    if ids.is_empty() {
+        return;
+    }
+    let d = backend.dim();
+    scratch.clear();
+    scratch.resize(ids.len() * d, 0.0);
+    backend.gather_into(ids, scratch);
+    for (j, &v) in ids.iter().enumerate() {
+        let i = index[&v] as usize;
+        feats[i * d..(i + 1) * d].copy_from_slice(&scratch[j * d..(j + 1) * d]);
+        labels[i] = backend.label(v);
+    }
+}
+
+/// Read-only backend view over an already-gathered frame: batch assembly
+/// copies rows out of it without touching the real backend again.
+struct FrameBackend<'a> {
+    frame: &'a Gathered,
+    classes: u32,
+}
+
+impl FeatureBackend for FrameBackend<'_> {
+    fn dim(&self) -> usize {
+        self.frame.dim
+    }
+
+    fn num_classes(&self) -> u32 {
+        self.classes
+    }
+
+    fn label(&self, v: NodeId) -> u32 {
+        self.frame.label_of(v)
+    }
+
+    fn write_feature(&self, v: NodeId, out: &mut [f32]) {
+        out.copy_from_slice(self.frame.row(v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> FeatureStore {
+        FeatureStore::with_labels(8, 3, (0..100).map(|i| i % 3).collect(), 11)
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("procedural".parse::<BackendKind>().unwrap(), BackendKind::Procedural);
+        assert_eq!("sharded".parse::<BackendKind>().unwrap(), BackendKind::Sharded);
+        assert!("csv".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn procedural_backend_matches_inherent_api() {
+        let fs = store();
+        let b: &dyn FeatureBackend = &fs;
+        assert_eq!(b.dim(), 8);
+        assert_eq!(b.num_classes(), 3);
+        for v in [0u32, 7, 42, 99] {
+            assert_eq!(b.label(v), fs.label(v));
+            let mut via_trait = vec![0.0; 8];
+            b.write_feature(v, &mut via_trait);
+            assert_eq!(via_trait, fs.feature(v));
+            assert_eq!(b.owner_of(v), None);
+        }
+        assert_eq!(b.partitions(), 1);
+    }
+
+    #[test]
+    fn gather_dedups_and_indexes_every_id() {
+        let svc = FeatureService::procedural(store());
+        let ids = [5u32, 3, 5, 5, 7, 3];
+        let g = svc.gather(&ids, 0);
+        assert_eq!(g.stats.requested, 6);
+        assert_eq!(g.stats.unique, 3);
+        assert_eq!(g.stats.remote_rows, 0, "procedural is never remote");
+        assert_eq!(g.stats.local_rows, 3);
+        let fs = store();
+        for v in [3u32, 5, 7] {
+            assert_eq!(g.row(v), &fs.feature(v)[..]);
+            assert_eq!(g.label_of(v), fs.label(v));
+        }
+        assert_eq!(svc.fabric_stats().total_bytes, 0);
+    }
+
+    #[test]
+    fn service_counters_accumulate_across_gathers() {
+        let svc = FeatureService::procedural(store());
+        svc.gather(&[1, 2, 3], 0);
+        svc.gather(&[4, 5], 0);
+        let s = svc.stats();
+        assert_eq!(s.gathers, 2);
+        assert_eq!(s.requested, 5);
+        assert_eq!(s.unique, 5);
+    }
+
+    #[test]
+    fn cached_gather_serves_repeats_from_cache() {
+        let svc = FeatureService::procedural(store()).with_cache(HotCache::new(16, 8));
+        let a = svc.gather(&[1, 2, 3], 0);
+        assert_eq!(a.stats.cache_hits, 0);
+        let b = svc.gather(&[1, 2, 3, 4], 0);
+        assert_eq!(b.stats.cache_hits, 3);
+        // Cached rows are byte-identical to fresh ones.
+        let fs = store();
+        for v in 1..=4u32 {
+            assert_eq!(b.row(v), &fs.feature(v)[..]);
+        }
+        let cs = svc.cache_stats().unwrap();
+        assert_eq!(cs.hits, 3);
+        assert_eq!(cs.insertions, 4);
+    }
+
+    #[test]
+    fn warm_cache_preloads_rows() {
+        let svc = FeatureService::procedural(store()).with_cache(HotCache::new(8, 8));
+        svc.warm_cache(&[10, 11]);
+        let g = svc.gather(&[10, 11], 0);
+        assert_eq!(g.stats.cache_hits, 2);
+    }
+}

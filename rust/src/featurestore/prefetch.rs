@@ -1,0 +1,147 @@
+//! Feature prefetching: gather batch *t+1* while batch *t* trains.
+//!
+//! In the concurrent pipeline the trainer's critical path per iteration is
+//! `materialize(batch) → grad → allreduce → apply`. Materialization is
+//! pure feature work (dedup, cache probes, bulk remote gathers) with no
+//! dependence on model state, so it can run one batch ahead on a side
+//! thread: a bounded rendezvous channel of depth 1 holds the prepared
+//! [`HostBatch`] while the worker trains on the previous one. Batches are
+//! delivered in submission order, so training trajectories are unchanged —
+//! prefetching only moves gather latency off the critical path.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::Scope;
+
+use anyhow::Result;
+
+use crate::sampler::Subgraph;
+use crate::train::meta::ModelSpec;
+use crate::train::runtime::HostBatch;
+
+use super::FeatureService;
+
+/// Where a training worker's batches come from: materialized inline on
+/// the worker thread, or prepared ahead by a prefetch thread.
+pub enum BatchFeed {
+    Inline {
+        rx: Receiver<Vec<Subgraph>>,
+        spec: ModelSpec,
+        worker: u32,
+    },
+    Prefetched(Receiver<Result<HostBatch>>),
+}
+
+impl BatchFeed {
+    /// Next materialized batch; `None` once the upstream closed.
+    pub fn next(&self, service: &FeatureService) -> Option<Result<HostBatch>> {
+        match self {
+            BatchFeed::Inline { rx, spec, worker } => rx
+                .recv()
+                .ok()
+                .map(|subs| service.materialize(*spec, &subs, *worker)),
+            BatchFeed::Prefetched(rx) => rx.recv().ok(),
+        }
+    }
+}
+
+/// Spawn a prefetch thread in `scope` that drains subgraph groups from
+/// `rx`, materializes them through `service` on behalf of `worker`, and
+/// hands batches over a bounded channel of `depth` (≥ 1). With depth 1
+/// the gather for iteration t+1 overlaps training on iteration t.
+pub fn spawn_prefetcher<'scope, 'env>(
+    scope: &'scope Scope<'scope, 'env>,
+    service: &'env FeatureService,
+    spec: ModelSpec,
+    worker: u32,
+    rx: Receiver<Vec<Subgraph>>,
+    depth: usize,
+) -> Receiver<Result<HostBatch>> {
+    let (tx, out) = sync_channel(depth.max(1));
+    scope.spawn(move || {
+        while let Ok(subs) = rx.recv() {
+            let batch = service.materialize(spec, &subs, worker);
+            let failed = batch.is_err();
+            // A closed receiver (worker gone) or a materialization error
+            // both end the feed; the error is delivered first if possible.
+            if tx.send(batch).is_err() || failed {
+                break;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurestore::FeatureService;
+    use crate::graph::features::FeatureStore;
+    use std::sync::mpsc::channel;
+
+    fn spec() -> ModelSpec {
+        ModelSpec { batch: 2, f1: 2, f2: 2, dim: 4, hidden: 8, classes: 3 }
+    }
+
+    fn groups() -> Vec<Vec<Subgraph>> {
+        (0..5u32)
+            .map(|g| {
+                (0..2)
+                    .map(|b| Subgraph {
+                        seed: g * 2 + b,
+                        hop1: vec![(g + b) % 10, (g + b + 1) % 10],
+                        hop2: vec![vec![b % 10], vec![]],
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefetched_batches_equal_inline_in_order() {
+        let svc = FeatureService::procedural(FeatureStore::hashed(4, 3, 2));
+        let expected: Vec<HostBatch> = groups()
+            .iter()
+            .map(|g| svc.materialize(spec(), g, 0).unwrap())
+            .collect();
+        let (tx, rx) = channel::<Vec<Subgraph>>();
+        let got: Vec<HostBatch> = std::thread::scope(|scope| {
+            let hb_rx = spawn_prefetcher(scope, &svc, spec(), 0, rx, 1);
+            for g in groups() {
+                tx.send(g).unwrap();
+            }
+            drop(tx); // close the feed → prefetcher exits
+            std::iter::from_fn(|| hb_rx.recv().ok())
+                .map(|r| r.unwrap())
+                .collect()
+        });
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn error_is_delivered_then_feed_stops() {
+        // Wrong group size → materialize errors on the first group.
+        let svc = FeatureService::procedural(FeatureStore::hashed(4, 3, 2));
+        let (tx, rx) = channel::<Vec<Subgraph>>();
+        std::thread::scope(|scope| {
+            let hb_rx = spawn_prefetcher(scope, &svc, spec(), 0, rx, 1);
+            tx.send(vec![Subgraph::new(1)]).unwrap(); // 1 != batch(2)
+            let first = hb_rx.recv().unwrap();
+            assert!(first.is_err());
+            drop(tx);
+            assert!(hb_rx.recv().is_err(), "feed must close after an error");
+        });
+    }
+
+    #[test]
+    fn inline_feed_matches_direct_materialization() {
+        let svc = FeatureService::procedural(FeatureStore::hashed(4, 3, 2));
+        let (tx, rx) = channel::<Vec<Subgraph>>();
+        let feed = BatchFeed::Inline { rx, spec: spec(), worker: 0 };
+        let g = &groups()[0];
+        tx.send(g.clone()).unwrap();
+        let got = feed.next(&svc).unwrap().unwrap();
+        assert_eq!(got, svc.materialize(spec(), g, 0).unwrap());
+        drop(tx);
+        assert!(feed.next(&svc).is_none());
+    }
+}

@@ -1,0 +1,217 @@
+//! Dense partition-aligned feature shards.
+//!
+//! The production systems this models (GraphScale, DistDGL) keep node
+//! features in a KV/tensor store sharded across workers, separate from
+//! graph topology. [`ShardedStore`] reproduces that layout in-process:
+//! each partition owns a dense `rows × dim` block plus its label column,
+//! materialized once from the procedural source so rows stay
+//! **byte-identical** to what the procedural backend computes — backend
+//! choice must be invisible to training.
+//!
+//! Ownership is a stateless hash of the node id (the same scheme as
+//! [`crate::graph::partition::Strategy::Hash`]), so every worker can
+//! compute any row's owner without a directory lookup.
+
+use crate::graph::features::FeatureStore;
+use crate::graph::NodeId;
+use crate::util::rng::mix2;
+
+use super::FeatureBackend;
+
+/// One partition's dense block.
+#[derive(Debug, Clone)]
+struct Shard {
+    feats: Vec<f32>,
+    labels: Vec<u32>,
+}
+
+/// Partition-sharded dense feature store.
+#[derive(Debug, Clone)]
+pub struct ShardedStore {
+    dim: usize,
+    num_classes: u32,
+    partitions: usize,
+    part_seed: u64,
+    /// Owner partition per node.
+    owner: Vec<u32>,
+    /// Row index within the owner's shard, per node.
+    row: Vec<u32>,
+    shards: Vec<Shard>,
+}
+
+impl ShardedStore {
+    /// Materialize shards for nodes `0..num_nodes` from the procedural
+    /// `source`, hashed over `partitions` owners with `part_seed`.
+    pub fn build(
+        source: &FeatureStore,
+        num_nodes: NodeId,
+        partitions: usize,
+        part_seed: u64,
+    ) -> Self {
+        let partitions = partitions.max(1);
+        let n = num_nodes as usize;
+        let d = source.dim;
+        let mut owner = vec![0u32; n];
+        let mut row = vec![0u32; n];
+        let mut counts = vec![0u32; partitions];
+        for v in 0..n {
+            let o = (mix2(part_seed ^ 0xfea7_5702e, v as u64) % partitions as u64) as u32;
+            owner[v] = o;
+            row[v] = counts[o as usize];
+            counts[o as usize] += 1;
+        }
+        let mut shards: Vec<Shard> = counts
+            .iter()
+            .map(|&c| Shard {
+                feats: vec![0.0; c as usize * d],
+                labels: vec![0; c as usize],
+            })
+            .collect();
+        for v in 0..n {
+            let (o, r) = (owner[v] as usize, row[v] as usize);
+            source.write_feature(v as NodeId, &mut shards[o].feats[r * d..(r + 1) * d]);
+            shards[o].labels[r] = source.label(v as NodeId);
+        }
+        Self {
+            dim: d,
+            num_classes: source.num_classes,
+            partitions,
+            part_seed,
+            owner,
+            row,
+            shards,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn part_seed(&self) -> u64 {
+        self.part_seed
+    }
+
+    /// Rows materialized in partition `p`.
+    pub fn shard_rows(&self, p: usize) -> usize {
+        self.shards[p].labels.len()
+    }
+
+    /// Resident bytes across all shards (the memory the procedural store
+    /// avoids and a per-worker deployment would split `partitions` ways).
+    pub fn memory_bytes(&self) -> u64 {
+        let rows: u64 = self.shards.iter().map(|s| s.labels.len() as u64).sum();
+        rows * (self.dim as u64 * 4 + 4) + self.owner.len() as u64 * 8
+    }
+
+    #[inline]
+    fn loc(&self, v: NodeId) -> (usize, usize) {
+        let vi = v as usize;
+        assert!(vi < self.owner.len(), "node {v} outside sharded store");
+        (self.owner[vi] as usize, self.row[vi] as usize)
+    }
+}
+
+impl FeatureBackend for ShardedStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_classes(&self) -> u32 {
+        self.num_classes
+    }
+
+    fn label(&self, v: NodeId) -> u32 {
+        let (o, r) = self.loc(v);
+        self.shards[o].labels[r]
+    }
+
+    fn write_feature(&self, v: NodeId, out: &mut [f32]) {
+        let (o, r) = self.loc(v);
+        out.copy_from_slice(&self.shards[o].feats[r * self.dim..(r + 1) * self.dim]);
+    }
+
+    fn gather_into(&self, ids: &[NodeId], out: &mut [f32]) {
+        let d = self.dim;
+        assert_eq!(out.len(), ids.len() * d, "gather buffer size mismatch");
+        for (i, &v) in ids.iter().enumerate() {
+            let (o, r) = self.loc(v);
+            out[i * d..(i + 1) * d].copy_from_slice(&self.shards[o].feats[r * d..(r + 1) * d]);
+        }
+    }
+
+    fn owner_of(&self, v: NodeId) -> Option<u32> {
+        Some(self.owner[v as usize])
+    }
+
+    fn partitions(&self) -> usize {
+        self.partitions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn source() -> FeatureStore {
+        FeatureStore::with_labels(6, 4, (0..200).map(|i| i % 4).collect(), 3)
+    }
+
+    #[test]
+    fn rows_are_byte_identical_to_source() {
+        let src = source();
+        let st = ShardedStore::build(&src, 200, 5, 42);
+        let mut a = vec![0.0f32; 6];
+        for v in 0..200u32 {
+            st.write_feature(v, &mut a);
+            assert_eq!(a, src.feature(v), "row {v} differs");
+            assert_eq!(FeatureBackend::label(&st, v), src.label(v));
+        }
+    }
+
+    #[test]
+    fn every_node_owned_once_and_rows_dense() {
+        let st = ShardedStore::build(&source(), 200, 7, 1);
+        let total: usize = (0..7).map(|p| st.shard_rows(p)).sum();
+        assert_eq!(total, 200);
+        // Row indices within each shard are a permutation of 0..rows.
+        let mut seen: Vec<Vec<bool>> = (0..7).map(|p| vec![false; st.shard_rows(p)]).collect();
+        for v in 0..200u32 {
+            let o = st.owner_of(v).unwrap() as usize;
+            let r = st.row[v as usize] as usize;
+            assert!(!seen[o][r], "duplicate row ({o},{r})");
+            seen[o][r] = true;
+        }
+        assert!(seen.iter().flatten().all(|&x| x));
+    }
+
+    #[test]
+    fn ownership_is_deterministic_and_seeded() {
+        let a = ShardedStore::build(&source(), 200, 4, 9);
+        let b = ShardedStore::build(&source(), 200, 4, 9);
+        let c = ShardedStore::build(&source(), 200, 4, 10);
+        assert_eq!(a.owner, b.owner);
+        assert_ne!(a.owner, c.owner, "seed must move ownership");
+    }
+
+    #[test]
+    fn bulk_gather_matches_per_row() {
+        let st = ShardedStore::build(&source(), 200, 3, 5);
+        let ids = [7u32, 3, 199, 0, 7];
+        let mut bulk = vec![0.0f32; ids.len() * 6];
+        st.gather_into(&ids, &mut bulk);
+        let mut one = vec![0.0f32; 6];
+        for (i, &v) in ids.iter().enumerate() {
+            st.write_feature(v, &mut one);
+            assert_eq!(&bulk[i * 6..(i + 1) * 6], &one[..]);
+        }
+    }
+
+    #[test]
+    fn single_partition_is_all_local_to_slot_zero() {
+        let st = ShardedStore::build(&source(), 50, 1, 0);
+        for v in 0..50u32 {
+            assert_eq!(st.owner_of(v), Some(0));
+        }
+        assert!(st.memory_bytes() > 0);
+    }
+}

@@ -92,6 +92,26 @@ impl Csr {
     pub fn memory_bytes(&self) -> u64 {
         (self.offsets.len() * 8 + self.adj.len() * 4) as u64
     }
+
+    /// The `k` highest-degree nodes, descending (ties by id) — the hot
+    /// set used to warm the feature cache. Partial selection: O(n) to
+    /// isolate the top k, then only those are sorted.
+    pub fn top_degree_nodes(&self, k: usize) -> Vec<(NodeId, u32)> {
+        let mut all: Vec<(NodeId, u32)> =
+            (0..self.num_nodes()).map(|v| (v, self.degree(v))).collect();
+        let k = k.min(all.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        let by_degree_then_id =
+            |a: &(NodeId, u32), b: &(NodeId, u32)| b.1.cmp(&a.1).then(a.0.cmp(&b.0));
+        if k < all.len() {
+            all.select_nth_unstable_by(k - 1, by_degree_then_id);
+            all.truncate(k);
+        }
+        all.sort_unstable_by(by_degree_then_id);
+        all
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +165,16 @@ mod tests {
         el.push(0, 1);
         let g = Csr::from_edge_list(&el);
         assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn top_degree_nodes_orders_and_truncates() {
+        let g = small();
+        let top = g.top_degree_nodes(2);
+        // Degrees: 0→2, 3→2, 1→1, 2→1, 4→0; ties break by id.
+        assert_eq!(top, vec![(0, 2), (3, 2)]);
+        assert_eq!(g.top_degree_nodes(100).len(), 5);
+        assert!(g.top_degree_nodes(0).is_empty());
     }
 
     #[test]

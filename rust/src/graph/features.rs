@@ -82,6 +82,16 @@ impl FeatureStore {
         self.write_feature(v, &mut out);
         out
     }
+
+    /// Pooled batch gather: write the rows of `ids`, in order, contiguously
+    /// into `out` (`ids.len() * dim` floats). Hot paths use this instead of
+    /// allocating per-node [`feature`](Self::feature) calls.
+    pub fn gather_into(&self, ids: &[NodeId], out: &mut [f32]) {
+        assert_eq!(out.len(), ids.len() * self.dim, "gather buffer size mismatch");
+        for (i, &v) in ids.iter().enumerate() {
+            self.write_feature(v, &mut out[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +127,19 @@ mod tests {
         let (a0, a2) = (fs.feature(0), fs.feature(2)); // both class 0
         let a1 = fs.feature(1); // class 1
         assert!(cos(&a0, &a2) > cos(&a0, &a1) + 0.2);
+    }
+
+    #[test]
+    fn gather_into_matches_per_node_rows() {
+        let fs = FeatureStore::hashed(8, 4, 13);
+        let ids = [4u32, 0, 4, 17];
+        let mut bulk = vec![0.0f32; ids.len() * 8];
+        fs.gather_into(&ids, &mut bulk);
+        for (i, &v) in ids.iter().enumerate() {
+            assert_eq!(&bulk[i * 8..(i + 1) * 8], &fs.feature(v)[..]);
+        }
+        // Empty gather is a no-op.
+        fs.gather_into(&[], &mut []);
     }
 
     #[test]

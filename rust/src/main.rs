@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 use graphgen_plus::cli::{flag, opt, App, CliError, CommandSpec, Parsed};
 use graphgen_plus::config::RunConfig;
 use graphgen_plus::engines::{self, NullSink};
+use graphgen_plus::featurestore::{BackendKind, FeatureService, HotCache, ShardedStore};
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::{generator, io, partition};
 use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
@@ -71,6 +72,9 @@ fn build_app() -> App {
                     o.push(opt("lr", "learning rate", None));
                     o.push(opt("allreduce", "ring|tree", None));
                     o.push(opt("mode", "concurrent|sequential", None));
+                    o.push(opt("feature-backend", "feature store: procedural|sharded", None));
+                    o.push(opt("feature-cache-mb", "hot-node feature cache (MiB, 0=off)", None));
+                    o.push(opt("feature-prefetch", "overlap feature gather with training (true|false)", None));
                     o.push(opt("pjrt-pool", "PJRT executor threads", None));
                     o.push(opt("save-ckpt", "write trained params to this path", None));
                     o.push(opt("eval-seeds", "evaluate on N held-out seeds after training", None));
@@ -211,10 +215,35 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
     // Fanout must match the compiled batch layout.
     ecfg.fanout = graphgen_plus::sampler::FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]);
     let classes = spec.classes as u32;
-    let features = match &gen.labels {
+    let store = match &gen.labels {
         Some(l) => FeatureStore::with_labels(spec.dim, classes.max(gen.num_classes), l.clone(), cfg.feature_seed),
         None => FeatureStore::hashed(spec.dim, classes, cfg.feature_seed),
     };
+    let backend: BackendKind = cfg
+        .feature_backend
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let mut features = match backend {
+        BackendKind::Procedural => FeatureService::procedural(store),
+        BackendKind::Sharded => FeatureService::new(std::sync::Arc::new(ShardedStore::build(
+            &store,
+            g.num_nodes(),
+            cfg.workers.max(1),
+            cfg.sample_seed,
+        ))),
+    };
+    if cfg.feature_cache_mb > 0 {
+        let cache = HotCache::from_mb(cfg.feature_cache_mb, spec.dim);
+        // Seed the cache with the hottest rows: high-degree nodes appear
+        // in the most sampled neighborhoods.
+        let warm: Vec<u32> = g
+            .top_degree_nodes(cache.capacity() / 2)
+            .into_iter()
+            .map(|(v, _)| v)
+            .collect();
+        features = features.with_cache(cache);
+        features.warm_cache(&warm);
+    }
     let engine = engines::by_name(p.get("engine").unwrap_or(&cfg.engine))?;
     let mode: PipelineMode = cfg.mode.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     let report = run_pipeline(
@@ -222,6 +251,20 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
     )?;
     println!("{}", report.render());
     println!("{}", report.gen.render());
+    println!(
+        "feature store [{}]: {}",
+        cfg.feature_backend,
+        report.train.feature_fetch.render()
+    );
+    if let Some(cs) = features.cache_stats() {
+        println!(
+            "feature cache: {} hits / {} lookups ({:.0}%), {} evictions",
+            cs.hits,
+            cs.lookups(),
+            cs.hit_rate() * 100.0,
+            cs.evictions
+        );
+    }
     println!("loss curve (iter, loss):");
     for (i, l) in &report.train.loss_curve {
         println!("  {i:>6} {l:.4}");

@@ -8,9 +8,10 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::cluster::FabricStats;
 use crate::engines::{EngineConfig, GenReport, SubgraphEngine};
+use crate::featurestore::FeatureService;
 use crate::graph::csr::Csr;
-use crate::graph::features::FeatureStore;
 use crate::graph::NodeId;
 use crate::sampler::Subgraph;
 use crate::train::trainer::{train, TrainConfig, TrainReport};
@@ -49,6 +50,10 @@ pub struct PipelineReport {
     pub gen: GenReport,
     pub train: TrainReport,
     pub queue: QueueStats,
+    /// Feature-store traffic charged during this run (delta of the
+    /// service's fabric over the run, so re-using one service across
+    /// runs does not double-count).
+    pub feature_fabric: FabricStats,
     /// End-to-end wall time (≤ gen.wall + train.wall when concurrent).
     pub wall: Duration,
 }
@@ -62,9 +67,9 @@ impl PipelineReport {
     }
 
     pub fn render(&self) -> String {
-        use crate::util::bytes::fmt_secs;
+        use crate::util::bytes::{fmt_bytes, fmt_secs};
         format!(
-            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% queue_max={}",
+            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% queue_max={} feat_remote={} feat_cache={:.0}%",
             self.mode,
             fmt_secs(self.wall.as_secs_f64()),
             fmt_secs(self.gen.wall.as_secs_f64()),
@@ -74,6 +79,8 @@ impl PipelineReport {
             self.train.accuracy,
             self.overlap_ratio() * 100.0,
             self.queue.max_depth,
+            fmt_bytes(self.train.feature_fetch.remote_bytes),
+            self.train.feature_fetch.cache_hit_rate() * 100.0,
         )
     }
 }
@@ -92,12 +99,13 @@ pub fn run_pipeline(
     seeds: &[NodeId],
     engine: &dyn SubgraphEngine,
     ecfg: &EngineConfig,
-    features: &FeatureStore,
+    features: &FeatureService,
     runtime: &ModelRuntime,
     tcfg: &TrainConfig,
     mode: PipelineMode,
 ) -> Result<PipelineReport> {
     let wall = Stopwatch::new();
+    let feature_fabric_before = features.fabric_stats();
     let cap = default_queue_cap(tcfg, runtime.meta().spec.batch);
     let queue = BoundedQueue::<Subgraph>::new(cap);
     let (gen_report, train_report) = match mode {
@@ -142,6 +150,7 @@ pub fn run_pipeline(
         queue: queue.stats(),
         gen: gen_report,
         train: train_report,
+        feature_fabric: features.fabric_stats().delta(&feature_fabric_before),
         wall: wall.elapsed(),
     })
 }
@@ -170,8 +179,14 @@ mod tests {
         let spec = runtime.meta().spec;
         let gen = generator::from_spec("planted:n=1024,e=8192,c=8", 7).unwrap();
         let g = gen.csr();
-        let features =
-            FeatureStore::with_labels(spec.dim, spec.classes as u32, gen.labels.clone().unwrap(), 2);
+        let features = FeatureService::procedural(
+            crate::graph::features::FeatureStore::with_labels(
+                spec.dim,
+                spec.classes as u32,
+                gen.labels.clone().unwrap(),
+                2,
+            ),
+        );
         let seeds: Vec<NodeId> = (0..(spec.batch as u32 * 2 * 4)).collect();
         let ecfg = EngineConfig {
             workers: 4,

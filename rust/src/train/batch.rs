@@ -1,24 +1,32 @@
 //! Batch assembly: pad sampled subgraphs into the fixed tensor layout the
 //! compiled artifacts expect (in-memory, straight from the generation
 //! pipeline — never from disk).
+//!
+//! Rows come from any [`FeatureBackend`]; contiguous tensor runs (the
+//! seed column, each hop-1 slice, each hop-2 group) are filled with one
+//! bulk [`FeatureBackend::gather_into`] call instead of per-node fetches.
+//! [`crate::featurestore::FeatureService::materialize`] layers batch-wide
+//! dedup, caching and remote-traffic accounting on top by gathering a
+//! frame first and pointing this builder at it.
 
 use anyhow::Result;
 
-use crate::graph::features::FeatureStore;
+use crate::featurestore::FeatureBackend;
+use crate::graph::NodeId;
 use crate::sampler::Subgraph;
 
 use super::meta::ModelSpec;
 use super::runtime::HostBatch;
 
-/// Stateless batch builder bound to a spec + feature store.
+/// Stateless batch builder bound to a spec + feature backend.
 pub struct BatchBuilder<'a> {
     pub spec: ModelSpec,
-    pub features: &'a FeatureStore,
+    pub features: &'a dyn FeatureBackend,
 }
 
 impl<'a> BatchBuilder<'a> {
-    pub fn new(spec: ModelSpec, features: &'a FeatureStore) -> Self {
-        assert_eq!(features.dim, spec.dim, "feature dim must match artifact spec");
+    pub fn new(spec: ModelSpec, features: &'a dyn FeatureBackend) -> Self {
+        assert_eq!(features.dim(), spec.dim, "feature dim must match artifact spec");
         Self { spec, features }
     }
 
@@ -46,20 +54,25 @@ impl<'a> BatchBuilder<'a> {
             y: vec![0; b],
             nodes: 0,
         };
+        // Seed rows are one contiguous run across the whole batch.
+        let seeds: Vec<NodeId> = subgraphs.iter().map(|sg| sg.seed).collect();
+        self.features.gather_into(&seeds, &mut out.x_seed);
         for (bi, sg) in subgraphs.iter().enumerate() {
             out.nodes += sg.num_nodes().min((1 + f1 + f1 * f2) as u64);
             out.y[bi] = self.features.label(sg.seed) as i32;
+            let t1 = sg.hop1.len().min(f1);
+            let h1_off = bi * f1 * d;
             self.features
-                .write_feature(sg.seed, &mut out.x_seed[bi * d..(bi + 1) * d]);
-            for (i, &v) in sg.hop1.iter().take(f1).enumerate() {
-                let h1_off = (bi * f1 + i) * d;
-                self.features.write_feature(v, &mut out.x_h1[h1_off..h1_off + d]);
+                .gather_into(&sg.hop1[..t1], &mut out.x_h1[h1_off..h1_off + t1 * d]);
+            for i in 0..t1 {
                 out.m_h1[bi * f1 + i] = 1.0;
                 if let Some(group) = sg.hop2.get(i) {
-                    for (j, &w) in group.iter().take(f2).enumerate() {
-                        let h2_off = ((bi * f1 + i) * f2 + j) * d;
-                        self.features.write_feature(w, &mut out.x_h2[h2_off..h2_off + d]);
-                        out.m_h2[(bi * f1 + i) * f2 + j] = 1.0;
+                    let t2 = group.len().min(f2);
+                    let base = (bi * f1 + i) * f2;
+                    self.features
+                        .gather_into(&group[..t2], &mut out.x_h2[base * d..(base + t2) * d]);
+                    for j in 0..t2 {
+                        out.m_h2[base + j] = 1.0;
                     }
                 }
             }
@@ -71,6 +84,7 @@ impl<'a> BatchBuilder<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::features::FeatureStore;
     use crate::graph::NodeId;
     use crate::train::meta::ModelSpec;
 
@@ -143,5 +157,27 @@ mod tests {
         let b = BatchBuilder::new(spec(), &fs);
         let subs = [sg(3, vec![1], vec![vec![2]]), sg(4, vec![], vec![])];
         assert_eq!(b.build(&subs).unwrap(), b.build(&subs).unwrap());
+    }
+
+    #[test]
+    fn bulk_gather_fills_exact_per_node_rows() {
+        // Every valid slot must hold exactly the node's procedural row —
+        // the bulk-gather layout math and the per-node path must agree.
+        let fs = store();
+        let b = BatchBuilder::new(spec(), &fs);
+        let subs = [sg(0, vec![1, 2], vec![vec![3], vec![4, 5]]), sg(7, vec![6], vec![vec![0]])];
+        let batch = b.build(&subs).unwrap();
+        let d = 4;
+        assert_eq!(&batch.x_seed[0..d], &fs.feature(0)[..]);
+        assert_eq!(&batch.x_seed[d..2 * d], &fs.feature(7)[..]);
+        // bi=0: hop1 slots 0,1 = nodes 1,2
+        assert_eq!(&batch.x_h1[0..d], &fs.feature(1)[..]);
+        assert_eq!(&batch.x_h1[d..2 * d], &fs.feature(2)[..]);
+        // bi=1: hop1 slot 0 = node 6 at offset (1*3+0)*d
+        let off = (1 * 3 + 0) * d;
+        assert_eq!(&batch.x_h1[off..off + d], &fs.feature(6)[..]);
+        // bi=0, i=1, j=1 → node 5 at ((0*3+1)*2+1)*d
+        let off2 = ((0 * 3 + 1) * 2 + 1) * d;
+        assert_eq!(&batch.x_h2[off2..off2 + d], &fs.feature(5)[..]);
     }
 }

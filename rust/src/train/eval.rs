@@ -5,11 +5,10 @@
 use anyhow::Result;
 
 use crate::engines::{CollectSink, EngineConfig, SubgraphEngine};
+use crate::featurestore::FeatureService;
 use crate::graph::csr::Csr;
-use crate::graph::features::FeatureStore;
 use crate::graph::NodeId;
 
-use super::batch::BatchBuilder;
 use super::runtime::ModelRuntime;
 
 /// Evaluation outcome.
@@ -29,7 +28,7 @@ pub fn evaluate(
     runtime: &ModelRuntime,
     engine: &dyn SubgraphEngine,
     graph: &Csr,
-    features: &FeatureStore,
+    features: &FeatureService,
     seeds: &[NodeId],
     ecfg: &EngineConfig,
     params: &[Vec<f32>],
@@ -40,14 +39,13 @@ pub fn evaluate(
     let mut subgraphs = sink.take_sorted();
     // Deterministic batch packing by seed order.
     subgraphs.sort_by_key(|s| s.seed);
-    let builder = BatchBuilder::new(spec, features);
     let mut examples = 0u64;
     let mut correct = 0u64;
     for chunk in subgraphs.chunks(spec.batch) {
         if chunk.len() < spec.batch {
             break; // fixed-shape artifact: drop the remainder
         }
-        let batch = builder.build(chunk)?;
+        let batch = features.materialize(spec, chunk, 0)?;
         let logits = runtime.forward(params, &batch)?;
         for (b, sg) in chunk.iter().enumerate() {
             let row = &logits[b * spec.classes..(b + 1) * spec.classes];
@@ -98,8 +96,12 @@ mod tests {
         let spec = runtime.meta().spec;
         let gen = generator::from_spec("planted:n=4096,e=32768,c=8", 21).unwrap();
         let g = gen.csr();
-        let features =
-            FeatureStore::with_labels(spec.dim, spec.classes as u32, gen.labels.clone().unwrap(), 6);
+        let features = FeatureService::procedural(crate::graph::features::FeatureStore::with_labels(
+            spec.dim,
+            spec.classes as u32,
+            gen.labels.clone().unwrap(),
+            6,
+        ));
         let ecfg = EngineConfig {
             workers: 4,
             fanout: FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]),

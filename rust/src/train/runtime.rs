@@ -15,6 +15,11 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+// This tree builds against the PJRT shim (libxla is absent in the
+// offline environment); swap back to the real `xla` crate to execute —
+// the shim mirrors the exact API subset used below.
+use crate::xla_shim as xla;
+
 use super::meta::ModelMeta;
 
 /// A batch in host memory, laid out per the meta.json contract.

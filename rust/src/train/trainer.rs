@@ -8,6 +8,11 @@
 //! mean-AllReduces `[grads… , loss, correct]` over the simulated fabric,
 //! and applies the same averaged update — replicas stay bit-identical
 //! (asserted in tests) without any parameter broadcast.
+//!
+//! Feature rows come from a [`FeatureService`] (procedural or sharded —
+//! byte-identical either way, so the trajectory is backend-independent).
+//! With [`TrainConfig::prefetch`] the gather for iteration t+1 overlaps
+//! training on iteration t ([`crate::featurestore::prefetch`]).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
@@ -16,10 +21,9 @@ use anyhow::{Context, Result};
 
 use crate::cluster::collective::{group, AllReduceAlgo};
 use crate::cluster::{Fabric, FabricStats};
-use crate::graph::features::FeatureStore;
+use crate::featurestore::{spawn_prefetcher, BatchFeed, FeatureService, FetchStats};
 use crate::pipeline::BoundedQueue;
 use crate::sampler::Subgraph;
-use crate::train::batch::BatchBuilder;
 use crate::train::params::ParamStore;
 use crate::train::runtime::ModelRuntime;
 use crate::util::timer::Stopwatch;
@@ -35,6 +39,8 @@ pub struct TrainConfig {
     pub init_seed: u64,
     /// Record the loss every N iterations into the curve.
     pub curve_every: u64,
+    /// Materialize batch t+1's features while batch t trains.
+    pub prefetch: bool,
 }
 
 impl Default for TrainConfig {
@@ -45,6 +51,7 @@ impl Default for TrainConfig {
             allreduce: AllReduceAlgo::Ring,
             init_seed: 0x11,
             curve_every: 10,
+            prefetch: false,
         }
     }
 }
@@ -68,6 +75,9 @@ pub struct TrainReport {
     pub wall: Duration,
     /// AllReduce traffic.
     pub fabric: FabricStats,
+    /// Feature-store fetch counters for this run (dedup, cache hits,
+    /// remote rows/bytes — see the E7 benchmark).
+    pub feature_fetch: FetchStats,
     /// The trained parameters (replica 0 — all replicas are identical).
     pub params: Vec<Vec<f32>>,
 }
@@ -79,7 +89,7 @@ pub struct TrainReport {
 /// participation.
 pub fn train(
     runtime: &ModelRuntime,
-    features: &FeatureStore,
+    features: &FeatureService,
     queue: &BoundedQueue<Subgraph>,
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
@@ -88,6 +98,7 @@ pub fn train(
     let r = cfg.replicas.max(1);
     let fabric = Fabric::new(r);
     let collectives = group(r, &fabric);
+    let fetch_before = features.stats();
 
     // Per-worker batch channels (bounded by rendezvous: dispatcher sends
     // one batch per worker per iteration).
@@ -109,6 +120,7 @@ pub fn train(
         loss_curve: Vec::new(),
         wall: Duration::ZERO,
         fabric: fabric.stats(),
+        feature_fetch: FetchStats::default(),
         params: Vec::new(),
     };
 
@@ -118,16 +130,29 @@ pub fn train(
         for (worker, (coll, rx)) in collectives.into_iter().zip(batch_rxs).enumerate() {
             let runtime = runtime.clone();
             let cfg = cfg.clone();
+            // Batch materialization: overlapped on a prefetch thread, or
+            // inline on the worker thread.
+            let feed = if cfg.prefetch {
+                BatchFeed::Prefetched(spawn_prefetcher(
+                    scope,
+                    features,
+                    spec,
+                    worker as u32,
+                    rx,
+                    1,
+                ))
+            } else {
+                BatchFeed::Inline { rx, spec, worker: worker as u32 }
+            };
             joins.push(scope.spawn(move || -> Result<WorkerOut> {
-                let builder = BatchBuilder::new(spec, features);
                 let store = ParamStore::init(runtime.meta(), cfg.init_seed);
                 let mut params = store.params.clone();
                 let mut out = WorkerOut::default();
                 let mut iter = 0u64;
-                while let Ok(subs) = rx.recv() {
-                    let batch = builder.build(&subs)?;
+                while let Some(next) = feed.next(features) {
+                    let batch = next?;
                     out.nodes += batch.nodes;
-                    out.subgraphs += subs.len() as u64;
+                    out.subgraphs += spec.batch as u64;
                     let g = runtime.grad(&params, &batch)?;
                     // AllReduce [grads…, loss, correct] in one buffer.
                     let mut buf = ParamStore::flatten(&g.grads);
@@ -203,6 +228,7 @@ pub fn train(
 
     report.wall = wall.elapsed();
     report.fabric = fabric.stats();
+    report.feature_fetch = features.stats().delta(&fetch_before);
     Ok(report)
 }
 
@@ -218,6 +244,7 @@ struct WorkerOut {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::features::FeatureStore;
     use crate::graph::generator;
 
     fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -238,12 +265,12 @@ mod tests {
         let spec = runtime.meta().spec;
         let gen = generator::from_spec("planted:n=2048,e=32768,c=8", 3).unwrap();
         let g = gen.csr();
-        let features = FeatureStore::with_labels(
+        let features = FeatureService::procedural(FeatureStore::with_labels(
             spec.dim,
             spec.classes as u32,
             gen.labels.clone().unwrap(),
             5,
-        );
+        ));
         // Generate enough subgraphs for ~12 iterations × 2 replicas.
         let seeds: Vec<u32> = (0..(spec.batch as u32 * 2 * 12)).collect();
         let queue = BoundedQueue::new(1 << 14);
@@ -273,6 +300,9 @@ mod tests {
             report.final_loss
         );
         assert!(report.fabric.total_bytes > 0, "allreduce traffic expected");
+        // Procedural backend: features were fetched but never remote.
+        assert!(report.feature_fetch.requested > 0);
+        assert_eq!(report.feature_fetch.remote_bytes, 0);
         runtime.shutdown();
     }
 
@@ -284,7 +314,8 @@ mod tests {
         let Some(dir) = artifacts_dir() else { return };
         let runtime = ModelRuntime::load(&dir, 1).unwrap();
         let spec = runtime.meta().spec;
-        let features = FeatureStore::hashed(spec.dim, spec.classes as u32, 1);
+        let features =
+            FeatureService::procedural(FeatureStore::hashed(spec.dim, spec.classes as u32, 1));
         let queue = BoundedQueue::new(1024);
         // 1.5 iteration-groups worth of subgraphs → 1 iteration + drops.
         let group = spec.batch * 2;
@@ -303,6 +334,39 @@ mod tests {
         .unwrap();
         assert_eq!(report.iterations, 1);
         assert_eq!(report.subgraphs_dropped as usize, group / 2);
+        runtime.shutdown();
+    }
+
+    /// Prefetching only moves gather latency off the critical path — the
+    /// training trajectory must be bit-identical.
+    #[test]
+    fn prefetch_does_not_change_trajectory() {
+        let Some(dir) = artifacts_dir() else { return };
+        let runtime = ModelRuntime::load(&dir, 1).unwrap();
+        let spec = runtime.meta().spec;
+        let run = |prefetch: bool| {
+            let features =
+                FeatureService::procedural(FeatureStore::hashed(spec.dim, spec.classes as u32, 7));
+            let queue = BoundedQueue::new(1024);
+            for i in 0..(spec.batch * 2 * 4) as u32 {
+                queue
+                    .push(Subgraph { seed: i % 53, hop1: vec![i % 11], hop2: vec![vec![]] })
+                    .unwrap();
+            }
+            queue.close();
+            train(
+                &runtime,
+                &features,
+                &queue,
+                &TrainConfig { replicas: 2, curve_every: 1, prefetch, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.loss_curve, b.loss_curve);
+        assert_eq!(a.params, b.params);
         runtime.shutdown();
     }
 }

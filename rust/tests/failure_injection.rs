@@ -139,7 +139,9 @@ fn trainer_with_empty_queue_returns_cleanly() {
     }
     let runtime = graphgen_plus::train::ModelRuntime::load(&dir, 1).unwrap();
     let spec = runtime.meta().spec;
-    let features = graphgen_plus::graph::features::FeatureStore::hashed(spec.dim, spec.classes as u32, 1);
+    let features = graphgen_plus::featurestore::FeatureService::procedural(
+        graphgen_plus::graph::features::FeatureStore::hashed(spec.dim, spec.classes as u32, 1),
+    );
     let queue = BoundedQueue::<Subgraph>::new(4);
     queue.close();
     let report = graphgen_plus::train::trainer::train(

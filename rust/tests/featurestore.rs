@@ -1,0 +1,273 @@
+//! Feature-store subsystem integration tests: backend equivalence
+//! (sharded vs procedural must be byte-identical, with and without the
+//! cache), fetch-planner traffic accounting, and prefetch transparency.
+//! The loss-curve equivalence test needs `artifacts/` and skips
+//! gracefully without it, like every other training test.
+
+use std::sync::Arc;
+
+use graphgen_plus::engines::{by_name, CollectSink, EngineConfig};
+use graphgen_plus::featurestore::{
+    fetch, FeatureBackend, FeatureService, HotCache, ShardedStore,
+};
+use graphgen_plus::graph::features::FeatureStore;
+use graphgen_plus::graph::generator;
+use graphgen_plus::sampler::{FanoutSpec, Subgraph};
+use graphgen_plus::testkit::Cases;
+use graphgen_plus::train::meta::ModelSpec;
+
+fn spec() -> ModelSpec {
+    ModelSpec { batch: 8, f1: 4, f2: 3, dim: 16, hidden: 8, classes: 6 }
+}
+
+/// Feature store for a generated graph: ground-truth labels when the
+/// generator has them, hash pseudo-labels otherwise.
+fn store_for(gen: &generator::Generated, dim: usize, seed: u64) -> FeatureStore {
+    match &gen.labels {
+        Some(l) => FeatureStore::with_labels(dim, gen.num_classes.max(2), l.clone(), seed),
+        None => FeatureStore::hashed(dim, 6, seed),
+    }
+}
+
+/// Sample subgraphs for the first `n` seeds of `g` with the spec fanout.
+fn subgraphs_for(g: &graphgen_plus::graph::csr::Csr, n: u32, s: ModelSpec) -> Vec<Subgraph> {
+    let seeds: Vec<u32> = (0..n.min(g.num_nodes())).collect();
+    let ecfg = EngineConfig {
+        workers: 4,
+        wave_size: 256,
+        fanout: FanoutSpec::new(vec![s.f1 as u32, s.f2 as u32]),
+        ..Default::default()
+    };
+    let sink = CollectSink::default();
+    by_name("graphgen+").unwrap().generate(g, &seeds, &ecfg, &sink).unwrap();
+    sink.take_sorted()
+}
+
+/// Satellite property: `ShardedStore` (with and without a cache) returns
+/// byte-identical feature vectors and labels to the procedural backend,
+/// for the same seed, across all graph generators.
+#[test]
+fn property_sharded_is_byte_identical_across_generators() {
+    let specs = [
+        "rmat:n=512,e=4096",
+        "planted:n=512,e=4096,c=4",
+        "ba:n=512,m=4",
+        "er:n=512,e=4096",
+        "star:n=256,hubs=2",
+        "karate",
+    ];
+    Cases::new("sharded backend equivalence", 30).run(|rng| {
+        let gspec = specs[rng.gen_range(specs.len() as u64) as usize];
+        let gen = generator::from_spec(gspec, 1 + rng.gen_range(1000)).unwrap();
+        let n = gen.edges.num_nodes;
+        let dim = 1 + rng.gen_range(24) as usize;
+        let store = store_for(&gen, dim, rng.next_u64());
+        let partitions = 1 + rng.gen_range(8) as usize;
+        let sharded = ShardedStore::build(&store, n, partitions, rng.next_u64());
+        let cached = FeatureService::new(Arc::new(sharded.clone()))
+            .with_cache(HotCache::new(1 + rng.gen_range(64) as usize, dim));
+        let mut a = vec![0.0f32; dim];
+        let mut b = vec![0.0f32; dim];
+        for _ in 0..64 {
+            let v = rng.gen_range(n as u64) as u32;
+            store.write_feature(v, &mut a);
+            sharded.write_feature(v, &mut b);
+            assert_eq!(a, b, "{gspec}: row {v} differs");
+            assert_eq!(store.label(v), FeatureBackend::label(&sharded, v), "{gspec}: label {v}");
+            // Through the cached service (possibly a hit, possibly not).
+            let g = cached.gather(&[v], rng.gen_range(16) as u32);
+            assert_eq!(g.row(v), &a[..], "{gspec}: cached row {v} differs");
+            assert_eq!(g.label_of(v), store.label(v));
+        }
+    });
+}
+
+/// Backend swap is invisible to batch materialization: procedural,
+/// sharded, and sharded+cache services produce bit-identical batches.
+#[test]
+fn materialized_batches_identical_across_backends() {
+    let s = spec();
+    let gen = generator::from_spec("planted:n=2048,e=16384,c=6", 9).unwrap();
+    let g = gen.csr();
+    let store = store_for(&gen, s.dim, 3);
+    let subgraphs = subgraphs_for(&g, (s.batch * 6) as u32, s);
+    assert!(subgraphs.len() >= s.batch * 4);
+
+    let procedural = FeatureService::procedural(store.clone());
+    let sharded = FeatureService::new(Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 7)));
+    let cached = FeatureService::new(Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 7)))
+        .with_cache(HotCache::new(256, s.dim));
+    for (i, chunk) in subgraphs.chunks(s.batch).take(4).enumerate() {
+        let a = procedural.materialize(s, chunk, 0).unwrap();
+        // Both sharded services see every chunk twice so their traffic
+        // counters are comparable; the cached one's second pass is
+        // hit-heavy and must still be byte-identical.
+        let b = sharded.materialize(s, chunk, 1).unwrap();
+        let b2 = sharded.materialize(s, chunk, 1).unwrap();
+        let c = cached.materialize(s, chunk, 2).unwrap();
+        let c2 = cached.materialize(s, chunk, 2).unwrap();
+        assert_eq!(a, b, "batch {i}: sharded differs from procedural");
+        assert_eq!(b, b2, "batch {i}: sharded not deterministic");
+        assert_eq!(a, c, "batch {i}: cached differs from procedural");
+        assert_eq!(a, c2, "batch {i}: warm cache changed bytes");
+    }
+    // Procedural: zero remote traffic. Sharded: real traffic, bulk msgs.
+    assert_eq!(procedural.fabric_stats().total_bytes, 0);
+    assert_eq!(procedural.stats().remote_rows, 0);
+    let st = sharded.stats();
+    assert!(st.remote_rows > 0, "4-way sharding must fetch remotely");
+    assert!(st.remote_msgs <= st.gathers * 3, "one bulk msg per remote owner, max 3 owners");
+    assert_eq!(sharded.fabric_stats().total_bytes, st.remote_bytes);
+    assert!(st.unique < st.requested, "2-hop batches must contain duplicates");
+    // Cache cut remote rows vs the uncached sharded service.
+    let ct = cached.stats();
+    assert!(ct.cache_hits > 0);
+    assert!(ct.remote_rows < st.remote_rows);
+}
+
+/// The planner groups remote ids by owner and the service charges one
+/// message per (requester, owner) pair per gather.
+#[test]
+fn bulk_fetch_charges_one_message_per_owner() {
+    let store = FeatureStore::hashed(8, 4, 2);
+    let svc = FeatureService::new(Arc::new(ShardedStore::build(&store, 1024, 8, 1)));
+    let ids: Vec<u32> = (0..512).collect();
+    let g = svc.gather(&ids, 3);
+    assert_eq!(g.stats.unique, 512);
+    assert_eq!(g.stats.remote_msgs, 7, "512 hashed ids must touch all 7 remote owners");
+    assert_eq!(g.stats.local_rows + g.stats.remote_rows, 512);
+    assert_eq!(g.stats.remote_bytes, g.stats.remote_rows * (8 * 4 + 4));
+    let fs = svc.fabric_stats();
+    assert_eq!(fs.total_messages, 7);
+    assert_eq!(fs.total_bytes, g.stats.remote_bytes);
+    // Requester 3's fabric slot received everything.
+    assert_eq!(fs.per_worker_recv[3], fs.total_bytes);
+    assert_eq!(fs.per_worker_recv.iter().sum::<u64>(), fs.total_bytes);
+}
+
+/// CLOCK cache: repeats hit, capacity bounds residency, evictions count.
+#[test]
+fn cache_effectiveness_and_bounds() {
+    let store = FeatureStore::hashed(8, 4, 5);
+    let svc = FeatureService::new(Arc::new(ShardedStore::build(&store, 256, 4, 3)))
+        .with_cache(HotCache::new(32, 8));
+    let hot: Vec<u32> = (0..32).collect();
+    svc.gather(&hot, 0);
+    let warm = svc.gather(&hot, 0);
+    assert_eq!(warm.stats.cache_hits, 32, "warm pass must be all hits");
+    assert_eq!(warm.stats.remote_rows, 0);
+    // Stream far past capacity: cache stays bounded and evicts.
+    let wide: Vec<u32> = (0..256).collect();
+    svc.gather(&wide, 0);
+    let cs = svc.cache_stats().unwrap();
+    assert!(cs.evictions > 0);
+    assert!(cs.hits >= 32);
+    assert!(cs.hit_rate() > 0.0 && cs.hit_rate() < 1.0);
+}
+
+/// Prefetched materialization is transparent: same batches, same order.
+#[test]
+fn prefetcher_preserves_batches_and_order() {
+    let s = spec();
+    let gen = generator::from_spec("planted:n=1024,e=8192,c=6", 4).unwrap();
+    let g = gen.csr();
+    let store = store_for(&gen, s.dim, 8);
+    let subgraphs = subgraphs_for(&g, (s.batch * 5) as u32, s);
+    let groups: Vec<Vec<Subgraph>> = subgraphs.chunks(s.batch).take(4).map(|c| c.to_vec()).collect();
+    let svc = FeatureService::new(Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 2)))
+        .with_cache(HotCache::new(512, s.dim));
+    let expected: Vec<_> = groups.iter().map(|c| svc.materialize(s, c, 0).unwrap()).collect();
+    let (tx, rx) = std::sync::mpsc::channel::<Vec<Subgraph>>();
+    let got: Vec<_> = std::thread::scope(|scope| {
+        let hb_rx = graphgen_plus::featurestore::spawn_prefetcher(scope, &svc, s, 0, rx, 1);
+        for c in &groups {
+            tx.send(c.clone()).unwrap();
+        }
+        drop(tx);
+        std::iter::from_fn(|| hb_rx.recv().ok()).map(|r| r.unwrap()).collect()
+    });
+    assert_eq!(got, expected);
+}
+
+/// `batch_ids` + gather covers exactly what batch assembly touches: a
+/// frame gathered from the planner can rebuild the batch with no misses.
+#[test]
+fn planner_ids_cover_batch_assembly() {
+    let s = spec();
+    let gen = generator::from_spec("rmat:n=1024,e=8192", 6).unwrap();
+    let g = gen.csr();
+    let store = store_for(&gen, s.dim, 1);
+    let subgraphs = subgraphs_for(&g, s.batch as u32, s);
+    let chunk = &subgraphs[..s.batch];
+    let ids = fetch::batch_ids(s, chunk);
+    let svc = FeatureService::procedural(store);
+    let frame = svc.gather(&ids, 0);
+    for sg in chunk {
+        assert!(frame.contains(sg.seed));
+        for (i, &v) in sg.hop1.iter().take(s.f1).enumerate() {
+            assert!(frame.contains(v));
+            if let Some(group) = sg.hop2.get(i) {
+                for &w in group.iter().take(s.f2) {
+                    assert!(frame.contains(w));
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: identical loss curve for Procedural vs ShardedStore on the
+/// planted-partition graph — the backend swap is invisible to training.
+/// Needs `artifacts/` (run `make artifacts`); skips without it.
+#[test]
+fn training_loss_curve_identical_across_backends() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
+    use graphgen_plus::train::trainer::TrainConfig;
+    use graphgen_plus::train::ModelRuntime;
+    let runtime = ModelRuntime::load(&dir, 1).unwrap();
+    let mspec = runtime.meta().spec;
+    let gen = generator::from_spec("planted:n=2048,e=16384,c=8", 13).unwrap();
+    let g = gen.csr();
+    let store = FeatureStore::with_labels(
+        mspec.dim,
+        mspec.classes as u32,
+        gen.labels.clone().unwrap(),
+        4,
+    );
+    let seeds: Vec<u32> = (0..(mspec.batch * 2 * 6) as u32).map(|i| i % g.num_nodes()).collect();
+    let ecfg = EngineConfig {
+        workers: 4,
+        wave_size: 256,
+        fanout: FanoutSpec::new(vec![mspec.f1 as u32, mspec.f2 as u32]),
+        ..Default::default()
+    };
+    let tcfg = TrainConfig { replicas: 2, curve_every: 1, ..Default::default() };
+    let engine = by_name("graphgen+").unwrap();
+    let mut curves = Vec::new();
+    for service in [
+        FeatureService::procedural(store.clone()),
+        FeatureService::new(Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 21)))
+            .with_cache(HotCache::new(1024, mspec.dim)),
+    ] {
+        let r = run_pipeline(
+            &g,
+            &seeds,
+            engine.as_ref(),
+            &ecfg,
+            &service,
+            &runtime,
+            &tcfg,
+            PipelineMode::Sequential,
+        )
+        .unwrap();
+        assert_eq!(r.train.iterations, 6);
+        curves.push((r.train.loss_curve.clone(), r.train.params.clone()));
+    }
+    assert_eq!(curves[0].0, curves[1].0, "loss curves must be identical");
+    assert_eq!(curves[0].1, curves[1].1, "trained params must be identical");
+    runtime.shutdown();
+}

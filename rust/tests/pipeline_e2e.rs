@@ -4,6 +4,7 @@
 
 use graphgen_plus::cluster::collective::AllReduceAlgo;
 use graphgen_plus::engines::{by_name, EngineConfig};
+use graphgen_plus::featurestore::FeatureService;
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::generator;
 use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
@@ -25,12 +26,16 @@ fn setup(
     runtime: &ModelRuntime,
     iters: usize,
     replicas: usize,
-) -> (graphgen_plus::graph::csr::Csr, FeatureStore, Vec<u32>, EngineConfig) {
+) -> (graphgen_plus::graph::csr::Csr, FeatureService, Vec<u32>, EngineConfig) {
     let spec = runtime.meta().spec;
     let gen = generator::from_spec("planted:n=4096,e=32768,c=8", 13).unwrap();
     let g = gen.csr();
-    let features =
-        FeatureStore::with_labels(spec.dim, spec.classes as u32, gen.labels.clone().unwrap(), 4);
+    let features = FeatureService::procedural(FeatureStore::with_labels(
+        spec.dim,
+        spec.classes as u32,
+        gen.labels.clone().unwrap(),
+        4,
+    ));
     let seeds: Vec<u32> = (0..(spec.batch * replicas * iters) as u32)
         .map(|i| i % g.num_nodes())
         .collect();
