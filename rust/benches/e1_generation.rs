@@ -9,7 +9,13 @@
 //! are testbed-local; the expected *shape* is graphgen+ ≫ sql-like
 //! (order 10-30×) and graphgen+ > graphgen.
 //!
-//! Environment knobs: GG_BENCH_FAST=1 (quick), GG_E1_SCALE=large.
+//! Besides the human-readable table, the run emits a machine-readable
+//! `BENCH_e1.json` (override the path with `GG_BENCH_E1_JSON`) with
+//! engine → nodes/sec, wall time and modeled cluster time, so the perf
+//! trajectory is tracked across PRs (CI runs the `smoke` scale).
+//!
+//! Environment knobs: GG_BENCH_FAST=1 (quick), GG_E1_SCALE=large|smoke,
+//! GG_BENCH_E1_JSON=path.
 
 use graphgen_plus::bench_harness::{render_markdown, Bench};
 use graphgen_plus::cluster::CostModel;
@@ -17,13 +23,26 @@ use graphgen_plus::engines::{self, EngineConfig, NullSink};
 use graphgen_plus::graph::generator;
 use graphgen_plus::sampler::FanoutSpec;
 use graphgen_plus::util::bytes::{fmt_bytes, fmt_rate, fmt_secs};
+use graphgen_plus::util::json::Json;
+
+struct EngineRow {
+    name: String,
+    wall_mean_s: f64,
+    nodes: u64,
+    shuffle_bytes: u64,
+    cluster_s: f64,
+    pool_threads_spawned: u64,
+    steady_frame_allocs: u64,
+}
 
 fn main() {
-    let large = std::env::var("GG_E1_SCALE").as_deref() == Ok("large");
-    let (spec, n_seeds) = if large {
-        ("rmat:n=262144,e=4194304", 16384usize)
-    } else {
-        ("rmat:n=65536,e=1048576", 8192usize)
+    let scale = std::env::var("GG_E1_SCALE").unwrap_or_default();
+    let (spec, n_seeds) = match scale.as_str() {
+        "large" => ("rmat:n=262144,e=4194304", 16384usize),
+        // CI smoke workload: small enough for a debug-ish runner, big
+        // enough that a hop round spans several waves of tasks.
+        "smoke" => ("rmat:n=4096,e=32768", 512usize),
+        _ => ("rmat:n=65536,e=1048576", 8192usize),
     };
     let gen = generator::from_spec(spec, 1).unwrap();
     let g = gen.csr();
@@ -52,33 +71,45 @@ fn main() {
     );
 
     let mut bench = Bench::new("e1_generation");
-    let mut sims: Vec<(String, f64, u64, u64)> = Vec::new();
+    let mut rows_out: Vec<EngineRow> = Vec::new();
     for name in ["sql-like", "agl", "graphgen", "graphgen+"] {
         let engine = engines::by_name(name).unwrap();
         let mut nodes = 0u64;
         let mut shuffle = 0u64;
         let mut sim = 0.0f64;
-        bench.measure(name, None, || {
+        let mut spawned = 0u64;
+        let mut steady_allocs = 0u64;
+        let m = bench.measure(name, None, || {
             let sink = NullSink::default();
             let r = engine.generate(&g, &seeds, &cfg, &sink).unwrap();
             nodes = r.sampled_nodes;
             shuffle = r.fabric.total_bytes;
             sim = r.sim(&model).total_secs;
+            spawned = r.scratch.pool_threads_spawned;
+            steady_allocs = r.scratch.steady_frame_allocs;
             r.subgraphs
         });
-        sims.push((name.to_string(), sim, nodes, shuffle));
+        rows_out.push(EngineRow {
+            name: name.to_string(),
+            wall_mean_s: m.mean_secs(),
+            nodes,
+            shuffle_bytes: shuffle,
+            cluster_s: sim,
+            pool_threads_spawned: spawned,
+            steady_frame_allocs: steady_allocs,
+        });
     }
     bench.report(Some("sql-like"));
 
-    let sim_of = |n: &str| sims.iter().find(|(name, ..)| name == n).unwrap().1;
+    let sim_of = |n: &str| rows_out.iter().find(|r| r.name == n).unwrap().cluster_s;
     let mut rows = Vec::new();
-    for (name, sim, nodes, shuffle) in &sims {
+    for r in &rows_out {
         rows.push(vec![
-            name.clone(),
-            fmt_secs(*sim),
-            fmt_rate(*nodes as f64 / sim, "nodes"),
-            fmt_bytes(*shuffle),
-            format!("{:.2}x", sim_of("sql-like") / sim),
+            r.name.clone(),
+            fmt_secs(r.cluster_s),
+            fmt_rate(r.nodes as f64 / r.cluster_s, "nodes"),
+            fmt_bytes(r.shuffle_bytes),
+            format!("{:.2}x", sim_of("sql-like") / r.cluster_s),
         ]);
     }
     println!(
@@ -105,4 +136,41 @@ fn main() {
         sql / plus,
         gg / plus
     );
+
+    // --- machine-readable trajectory file (BENCH_e1.json) ---------------
+    let mut engines_json = Json::obj();
+    for r in &rows_out {
+        let mut o = Json::obj();
+        o.set("wall_s", r.wall_mean_s)
+            .set("nodes", r.nodes as f64)
+            .set("nodes_per_sec_wall", r.nodes as f64 / r.wall_mean_s)
+            .set("cluster_s", r.cluster_s)
+            .set("nodes_per_sec_cluster", r.nodes as f64 / r.cluster_s)
+            .set("shuffle_bytes", r.shuffle_bytes as f64)
+            .set("pool_threads_spawned", r.pool_threads_spawned as f64)
+            .set("steady_frame_allocs", r.steady_frame_allocs as f64);
+        engines_json.set(&r.name, o);
+    }
+    let mut out = Json::obj();
+    out.set("bench", "e1_generation")
+        .set("workload", spec)
+        .set("seeds", seeds.len() as f64)
+        .set("workers", cfg.workers as f64)
+        .set("scale", if scale.is_empty() { "default" } else { scale.as_str() })
+        .set("engines", engines_json)
+        .set(
+            "speedup_vs_sql_like_modeled",
+            sim_of("sql-like") / sim_of("graphgen+"),
+        )
+        .set(
+            "speedup_vs_graphgen_modeled",
+            sim_of("graphgen") / sim_of("graphgen+"),
+        )
+        .set("speedup_vs_sql_like_wall", sql / plus)
+        .set("speedup_vs_graphgen_wall", gg / plus);
+    let path = std::env::var("GG_BENCH_E1_JSON").unwrap_or_else(|_| "BENCH_e1.json".into());
+    match std::fs::write(&path, out.to_pretty()) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  failed to write {path}: {e}"),
+    }
 }

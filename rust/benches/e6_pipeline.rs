@@ -51,7 +51,7 @@ fn main() {
         .map(|i| i % g.num_nodes())
         .collect();
     // Leave half the cores to training (see module docs).
-    let gen_threads = (graphgen_plus::util::pool::default_threads() / 2).max(2);
+    let gen_threads = (graphgen_plus::util::workpool::default_threads() / 2).max(2);
     let ecfg = EngineConfig {
         workers: 8,
         threads: gen_threads,

@@ -59,7 +59,7 @@ impl Default for RunConfig {
             num_seeds: 4096,
             engine: "graphgen+".into(),
             workers: 8,
-            threads: crate::util::pool::default_threads(),
+            threads: crate::util::workpool::default_threads(),
             wave_size: 4096,
             fanout: "10,5".into(),
             sample_seed: 0x5eed,

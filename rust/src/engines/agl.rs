@@ -14,11 +14,10 @@ use crate::cluster::Fabric;
 use crate::graph::csr::Csr;
 use crate::graph::NodeId;
 
-use crate::sampler::reservoir::TopK;
-use crate::util::pool::parallel_map;
 use crate::util::timer::{PhaseTimer, Stopwatch};
+use crate::util::workpool::WorkPool;
 
-use super::common::{assign_hop, build_index, plan_waves, ReservoirMap, WaveSlots};
+use super::common::{assign_hop, plan_waves, Frame, ScratchArena, WaveSlots};
 use super::{EngineConfig, GenReport, SubgraphEngine, SubgraphSink};
 
 pub struct AglNodeCentric;
@@ -39,16 +38,20 @@ impl SubgraphEngine for AglNodeCentric {
         let mut phases = PhaseTimer::new();
         let fabric = Fabric::new(cfg.workers);
         let mut ledger = crate::cluster::WorkLedger::new(cfg.workers);
+        let pool = WorkPool::global();
+        let spawned0 = pool.total_spawned();
+        let mut scratch = ScratchArena::default();
         let (table, waves) = phases.time("map.balance", || plan_waves(seeds, cfg));
         let mut subgraphs = 0u64;
         let mut sampled_nodes = 0u64;
-        for wave in waves {
-            let wave_seeds = table.seeds[wave.clone()].to_vec();
-            let wave_workers = table.worker_of[wave].to_vec();
-            let mut slots = WaveSlots::new(wave_seeds, wave_workers);
+        for (wi, wave) in waves.into_iter().enumerate() {
+            let mut slots =
+                WaveSlots::new(&table.seeds[wave.clone()], &table.worker_of[wave]);
             for hop in 1..=cfg.fanout.hops() as u32 {
                 phases.time(&format!("hop{hop}"), || {
-                    node_centric_hop(graph, &mut slots, hop, cfg, &fabric, &mut ledger)
+                    node_centric_hop(
+                        graph, &mut slots, hop, cfg, &fabric, &mut ledger, &mut scratch,
+                    )
                 });
             }
             phases.time("emit", || -> anyhow::Result<()> {
@@ -59,6 +62,9 @@ impl SubgraphEngine for AglNodeCentric {
                 }
                 Ok(())
             })?;
+            if wi == 0 {
+                scratch.mark_warm();
+            }
         }
         Ok(GenReport {
             engine: self.name(),
@@ -70,6 +76,7 @@ impl SubgraphEngine for AglNodeCentric {
             spill: None,
             discarded_seeds: table.discarded.len() as u64,
             ledger,
+            scratch: scratch.stats(pool.total_spawned() - spawned0),
         })
     }
 }
@@ -77,30 +84,29 @@ impl SubgraphEngine for AglNodeCentric {
 /// One node-centric hop round: one task per frontier *node*, never split.
 fn node_centric_hop(
     g: &Csr,
-    slots: &mut WaveSlots,
+    slots: &mut WaveSlots<'_>,
     hop: u32,
     cfg: &EngineConfig,
     fabric: &Fabric,
     ledger: &mut crate::cluster::WorkLedger,
+    scratch: &mut ScratchArena,
 ) {
     let k = cfg.fanout.fanouts[(hop - 1) as usize] as usize;
-    let frontier = slots.frontier(hop);
-    if frontier.is_empty() {
+    slots.fill_frontier(hop, &mut scratch.frontier, &mut scratch.offsets);
+    if scratch.frontier.is_empty() {
         return;
     }
-    let index = build_index(&frontier);
-    let nodes: Vec<NodeId> = {
-        let mut v: Vec<NodeId> = index.iter().map(|(n, _)| n).collect();
-        v.sort_unstable(); // deterministic task order
-        v
-    };
+    scratch.index.rebuild(&scratch.frontier);
+    scratch.nodes.clear();
+    scratch.nodes.extend_from_slice(scratch.index.nodes());
+    scratch.nodes.sort_unstable(); // deterministic task order
     // Node-centric shuffle + processing: each frontier node's FULL
     // adjacency travels to — and is scanned serially by — the single
     // worker responsible for that node. A hub's whole neighbor list ×
     // every interested subgraph lands on ONE worker's ledger: the
     // paper's "serially processes neighbor collection" bottleneck.
     let scan_phase = format!("hop{hop}.scan");
-    for &v in &nodes {
+    for &v in &scratch.nodes {
         let src = (v as usize) % cfg.workers;
         let dst = (crate::util::rng::mix64(v as u64) as usize) % cfg.workers;
         let bytes = 4u64 * g.degree(v) as u64;
@@ -111,7 +117,7 @@ fn node_centric_hop(
             &scan_phase,
             dst,
             crate::cluster::WorkUnits {
-                scan_edge_entries: g.degree(v) as u64 * index.get(v).len() as u64,
+                scan_edge_entries: g.degree(v) as u64 * scratch.index.get(v).len() as u64,
                 net_bytes: bytes,
                 msgs: 1,
                 ..Default::default()
@@ -120,16 +126,22 @@ fn node_centric_hop(
     }
     // One sequential task per node: the hub's whole neighbor list × all
     // interested subgraphs runs on one thread (the AGL bottleneck).
-    let seeds = &slots.seeds;
-    let partials: Vec<ReservoirMap> = parallel_map(&nodes, cfg.threads, |&v| {
-        let mut map = ReservoirMap::default();
+    let seeds = slots.seeds;
+    let (index, nodes, frames) = (&scratch.index, &scratch.nodes, &scratch.frames);
+    let n = nodes.len();
+    let chunk = (n / (cfg.threads.max(1) * 8)).max(1);
+    let partials: Vec<Frame> = WorkPool::global().map_collect(n, cfg.threads, chunk, |i| {
+        let v = nodes[i];
+        let mut frame = frames.acquire();
+        let entries = index.get(v);
+        // A node's index entries carry ascending ordinals, so the frame
+        // fills positionally — no sort, no hashing.
+        frame.prepare(k, entries.iter().map(|&(_, ord)| ord));
         let neigh = g.neighbors(v);
-        for &(slot, pos) in index.get(v) {
+        for &(slot, ord) in entries {
             let seed = seeds[slot as usize];
             let base = crate::sampler::priority_base(cfg.sample_seed, hop, seed, v);
-            let res = map
-                .entry(super::common::slot_key(slot, pos))
-                .or_insert_with(|| TopK::new(k));
+            let res = frame.tok_for(ord);
             let mut threshold = res.threshold();
             for &nbr in neigh {
                 let p = crate::sampler::priority_from_base(base, nbr);
@@ -139,17 +151,30 @@ fn node_centric_hop(
                 }
             }
         }
-        map
+        frame
     });
-    // Merge (cheap: keys are disjoint across nodes except shared (slot,pos)
-    // pairs, which only collide for hop-1 seeds wanted by one node).
-    let merged = partials
-        .into_iter()
-        .fold(ReservoirMap::default(), super::common::merge_maps);
+    // Merge: each ordinal lives in exactly one node's partial (an ordinal
+    // is one frontier entry, owned by one node), and every frontier node
+    // has a partial — so the union is dense and disjoint. Build the
+    // merged frame as the identity ordinal list and copy each partial's
+    // reservoirs into place: linear in frontier size, no pairwise folds.
+    let mut acc = frames.acquire();
+    for ord in 0..scratch.frontier.len() as u32 {
+        acc.push_new(ord, k);
+    }
+    for p in &partials {
+        for (ord, tok) in p.entries() {
+            // acc's ordinal list is the identity, so position == ordinal.
+            acc.tok_at(ord as usize).copy_from(tok);
+        }
+    }
+    for p in partials {
+        frames.release(p);
+    }
     // Same assignment accounting as the edge-centric engines.
     let assign_phase = format!("hop{hop}.assign");
-    for (key, res) in merged.iter() {
-        let slot = (key >> 32) as usize;
+    for (ord, res) in acc.entries() {
+        let slot = scratch.frontier[ord as usize].1 as usize;
         let dst = slots.worker_of[slot] as usize % cfg.workers;
         ledger.charge(
             &assign_phase,
@@ -162,7 +187,8 @@ fn node_centric_hop(
             },
         );
     }
-    assign_hop(slots, hop, merged, fabric, cfg.workers);
+    assign_hop(slots, hop, Some(&acc), &scratch.frontier, fabric, cfg.workers);
+    frames.release(acc);
 }
 
 #[cfg(test)]

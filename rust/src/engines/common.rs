@@ -8,10 +8,26 @@
 //!
 //! ```text
 //! map    : scan edge chunks, probe the frontier inverted index,
-//!          insert admitted neighbors into per-task TopK reservoirs
-//! reduce : merge per-task partial maps (tree or flat topology)
+//!          insert admitted neighbors into per-task top-k reservoirs
+//! reduce : merge per-task partial frames (tree or flat topology)
 //! assign : write merged reservoirs into each subgraph slot
 //! ```
+//!
+//! ## Dense reservoir frames & the scratch arena (PR 2)
+//!
+//! `slot_key(slot, pos)` enumerates a *known* frontier, so partial results
+//! no longer live in per-task `FxHashMap<u64, TopK>` maps: a [`Frame`] is
+//! a pair of parallel vecs — frontier-entry **ordinals** (sorted,
+//! duplicate-free) and their [`TopK`] reservoirs — built from a reusable
+//! [`FrameArena`]. Scan tasks fill frames, and the reduce phase merges two
+//! frames with one linear zip over their ordinal lists instead of a
+//! hashmap traversal; `TopK` buffers are `reset` and reused, never
+//! reallocated. All per-hop working state (frontier vec, slot offsets,
+//! inverted index, scan chunks, ledger stats, frames) lives in a per-run
+//! [`ScratchArena`], so steady-state hop rounds perform **zero reservoir
+//! heap allocations and zero thread spawns** (scan tasks run on the
+//! persistent [`WorkPool`]) — the counters in
+//! [`ScratchStats`](crate::engines::GenReport) prove it per run.
 
 use crate::balance::BalanceTable;
 use crate::cluster::costmodel::{WorkLedger, WorkUnits};
@@ -22,47 +38,61 @@ use crate::mapreduce::{flat_reduce, tree_reduce_with_fabric};
 use crate::sampler::inverted::InvertedIndex;
 use crate::sampler::reservoir::TopK;
 use crate::sampler::Subgraph;
-use crate::util::fxhash::FxHashMap;
-use crate::util::pool::parallel_map;
+use crate::util::workpool::WorkPool;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use super::{EngineConfig, ReduceTopology};
 
-/// In-progress subgraphs of one wave.
-pub struct WaveSlots {
+/// In-progress subgraphs of one wave. Seeds and worker assignments are
+/// borrowed straight from the balance table — no per-wave copies.
+pub struct WaveSlots<'a> {
     /// Seed of each slot.
-    pub seeds: Vec<NodeId>,
+    pub seeds: &'a [NodeId],
     /// Owning worker of each slot (from the balance table).
-    pub worker_of: Vec<u32>,
+    pub worker_of: &'a [u32],
     /// Sampled hop-1 neighbors per slot (filled by hop 1).
     pub hop1: Vec<Vec<NodeId>>,
     /// `hop2[slot][i]` = sampled neighbors of `hop1[slot][i]`.
     pub hop2: Vec<Vec<Vec<NodeId>>>,
 }
 
-impl WaveSlots {
-    pub fn new(seeds: Vec<NodeId>, worker_of: Vec<u32>) -> Self {
+impl<'a> WaveSlots<'a> {
+    pub fn new(seeds: &'a [NodeId], worker_of: &'a [u32]) -> Self {
         let n = seeds.len();
         assert_eq!(n, worker_of.len());
         Self { seeds, worker_of, hop1: vec![Vec::new(); n], hop2: vec![Vec::new(); n] }
     }
 
-    /// Frontier entries for `hop` (1-based): (node, slot, position).
-    pub fn frontier(&self, hop: u32) -> Vec<(NodeId, u32, u32)> {
+    /// Fill `out` with the frontier entries for `hop` (1-based):
+    /// `(node, slot, position)`, ordinal = index in `out`. Also fills
+    /// `offsets` with each slot's first ordinal, so
+    /// `ordinal = offsets[slot] + position`. Both buffers are reused.
+    pub fn fill_frontier(
+        &self,
+        hop: u32,
+        out: &mut Vec<(NodeId, u32, u32)>,
+        offsets: &mut Vec<u32>,
+    ) {
+        out.clear();
+        offsets.clear();
         match hop {
-            1 => self
-                .seeds
-                .iter()
-                .enumerate()
-                .map(|(slot, &s)| (s, slot as u32, 0))
-                .collect(),
+            1 => {
+                for (slot, &s) in self.seeds.iter().enumerate() {
+                    offsets.push(slot as u32);
+                    out.push((s, slot as u32, 0));
+                }
+            }
             2 => {
-                let mut out = Vec::new();
+                let mut off = 0u32;
                 for (slot, h1) in self.hop1.iter().enumerate() {
+                    offsets.push(off);
                     for (i, &v) in h1.iter().enumerate() {
                         out.push((v, slot as u32, i as u32));
                     }
+                    off += h1.len() as u32;
                 }
-                out
             }
             _ => panic!("2-hop engines only"),
         }
@@ -88,10 +118,11 @@ impl WaveSlots {
     }
 
     /// Finalize into subgraphs, consuming the wave.
-    pub fn into_subgraphs(self) -> impl Iterator<Item = (u32, Subgraph)> {
+    pub fn into_subgraphs(self) -> impl Iterator<Item = (u32, Subgraph)> + 'a {
         self.seeds
-            .into_iter()
-            .zip(self.worker_of)
+            .iter()
+            .copied()
+            .zip(self.worker_of.iter().copied())
             .zip(self.hop1.into_iter().zip(self.hop2))
             .map(|((seed, worker), (hop1, hop2))| {
                 (worker, Subgraph { seed, hop1, hop2 })
@@ -99,23 +130,245 @@ impl WaveSlots {
     }
 }
 
-/// Reservoir map key: slot in the high half, frontier position low.
+/// Reservoir wire key: slot in the high half, frontier position low.
+/// (Frames key on frontier ordinals; this key survives as the simulated
+/// wire/routing identity so fabric charges match the previous layout.)
 #[inline]
 pub fn slot_key(slot: u32, pos: u32) -> u64 {
     ((slot as u64) << 32) | pos as u64
 }
 
-/// Partial (and final) reduction state of one hop round.
-pub type ReservoirMap = FxHashMap<u64, TopK>;
+// ---------------------------------------------------------------------------
+// Dense reservoir frames
+// ---------------------------------------------------------------------------
 
-/// Build the inverted index over a frontier.
-pub fn build_index(frontier: &[(NodeId, u32, u32)]) -> InvertedIndex {
-    let mut ix = InvertedIndex::with_capacity(frontier.len());
-    for &(node, slot, pos) in frontier {
-        ix.insert(node, slot, pos);
-    }
-    ix
+/// Partial (and final) reduction state of one hop round: reservoirs for a
+/// sorted, duplicate-free set of frontier-entry ordinals. The `toks` vec
+/// may be longer than `ords` — the excess are pooled [`TopK`] buffers kept
+/// warm for reuse; only the first `ords.len()` entries are live.
+#[derive(Debug, Default)]
+pub struct Frame {
+    ords: Vec<u32>,
+    toks: Vec<TopK>,
 }
+
+impl Frame {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.ords.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.ords.is_empty()
+    }
+
+    /// Drop the live entries (buffers are retained for reuse).
+    pub fn clear(&mut self) {
+        self.ords.clear();
+    }
+
+    /// Live `(ordinal, reservoir)` pairs in ascending ordinal order.
+    #[inline]
+    pub fn entries(&self) -> impl Iterator<Item = (u32, &TopK)> {
+        self.ords.iter().copied().zip(self.toks.iter())
+    }
+
+    /// Serialized size — drives reduce-phase fabric charges (same formula
+    /// as the old hashmap layout: 8 key bytes + 12 per entry).
+    pub fn wire_bytes(&self) -> u64 {
+        self.entries().map(|(_, t)| 8 + 12 * t.len() as u64).sum()
+    }
+
+    /// Prepare for a scan: collect the (unsorted, possibly duplicated)
+    /// ordinals this task can touch, sort + dedup them, and arm one
+    /// reservoir of capacity `k` per ordinal — reusing pooled buffers.
+    pub fn prepare(&mut self, k: usize, ords: impl Iterator<Item = u32>) {
+        self.ords.clear();
+        self.ords.extend(ords);
+        self.ords.sort_unstable();
+        self.ords.dedup();
+        for i in 0..self.ords.len() {
+            if i < self.toks.len() {
+                self.toks[i].reset(k);
+            } else {
+                self.toks.push(TopK::new(k));
+            }
+        }
+    }
+
+    /// The reservoir for a prepared ordinal (panics if not prepared).
+    #[inline]
+    pub fn tok_for(&mut self, ord: u32) -> &mut TopK {
+        let pos = self.ords.binary_search(&ord).expect("ordinal not prepared");
+        &mut self.toks[pos]
+    }
+
+    /// Direct positional access (for dense/identity frames where the
+    /// position is known — skips the binary search of [`tok_for`]).
+    #[inline]
+    pub fn tok_at(&mut self, pos: usize) -> &mut TopK {
+        debug_assert!(pos < self.ords.len());
+        &mut self.toks[pos]
+    }
+
+    /// Append a fresh empty reservoir for `ord` (must ascend) and return
+    /// it; reuses a pooled buffer when available.
+    pub fn push_new(&mut self, ord: u32, k: usize) -> &mut TopK {
+        debug_assert!(self.ords.last().map_or(true, |&l| l < ord), "ordinals must ascend");
+        let idx = self.ords.len();
+        self.ords.push(ord);
+        if idx < self.toks.len() {
+            self.toks[idx].reset(k);
+        } else {
+            self.toks.push(TopK::new(k));
+        }
+        &mut self.toks[idx]
+    }
+
+    /// Merge two frames into `out` with one linear zip over their ordinal
+    /// lists — the dense replacement for hashmap-entry merging.
+    pub fn merge_from(a: &Frame, b: &Frame, out: &mut Frame) {
+        out.clear();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.ords.len() && j < b.ords.len() {
+            let (oa, ob) = (a.ords[i], b.ords[j]);
+            if oa < ob {
+                out.push_new(oa, a.toks[i].k()).copy_from(&a.toks[i]);
+                i += 1;
+            } else if ob < oa {
+                out.push_new(ob, b.toks[j].k()).copy_from(&b.toks[j]);
+                j += 1;
+            } else {
+                out.push_new(oa, a.toks[i].k()).assign_merged(&a.toks[i], &b.toks[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+        while i < a.ords.len() {
+            out.push_new(a.ords[i], a.toks[i].k()).copy_from(&a.toks[i]);
+            i += 1;
+        }
+        while j < b.ords.len() {
+            out.push_new(b.ords[j], b.toks[j].k()).copy_from(&b.toks[j]);
+            j += 1;
+        }
+    }
+}
+
+/// Pool of reusable [`Frame`]s shared by the scan tasks and the reduce
+/// tree of one engine run. `Sync`: acquisition is a mutex pop (cold path
+/// only allocates), so parallel scan tasks draw from it directly.
+#[derive(Debug, Default)]
+pub struct FrameArena {
+    pool: Mutex<Vec<Frame>>,
+    allocated: AtomicU64,
+    reused: AtomicU64,
+    steady_allocs: AtomicU64,
+    warm: AtomicBool,
+}
+
+impl FrameArena {
+    /// Take a cleared frame (pooled if available, fresh otherwise).
+    pub fn acquire(&self) -> Frame {
+        if let Some(mut f) = self.pool.lock().unwrap().pop() {
+            f.clear();
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            f
+        } else {
+            self.allocated.fetch_add(1, Ordering::Relaxed);
+            if self.warm.load(Ordering::Relaxed) {
+                self.steady_allocs.fetch_add(1, Ordering::Relaxed);
+            }
+            Frame::new()
+        }
+    }
+
+    /// Return a frame (and its reservoir buffers) to the pool.
+    pub fn release(&self, f: Frame) {
+        self.pool.lock().unwrap().push(f);
+    }
+
+    /// Declare warm-up over: later `acquire` misses count as steady-state
+    /// allocations. `slack` extra frames are stocked to absorb ±1 jitter
+    /// in the per-wave task count.
+    pub fn mark_warm(&self, slack: usize) {
+        if !self.warm.swap(true, Ordering::Relaxed) {
+            let mut pool = self.pool.lock().unwrap();
+            for _ in 0..slack {
+                pool.push(Frame::new());
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Allocation/reuse counters of one engine run (exposed in
+/// [`GenReport`](super::GenReport) — the acceptance hook proving that
+/// steady-state hop rounds reuse the pool and arena instead of
+/// re-spawning/re-allocating).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScratchStats {
+    /// Frames allocated fresh (warm-up plus jitter slack).
+    pub frames_allocated: u64,
+    /// Frame acquisitions served from the pool.
+    pub frames_reused: u64,
+    /// Fresh allocations after the first wave — 0 in steady state.
+    pub steady_frame_allocs: u64,
+    /// OS threads the persistent work pool spawned during this run — 0
+    /// once the process-wide pool is warm.
+    pub pool_threads_spawned: u64,
+}
+
+/// Per-run scratch state threaded through every hop round: all buffers
+/// are reused across hops and waves.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Current hop's frontier entries `(node, slot, position)`.
+    pub frontier: Vec<(NodeId, u32, u32)>,
+    /// `ordinal = offsets[slot] + position` for the current frontier.
+    pub offsets: Vec<u32>,
+    /// Inverted index over the current frontier (rebuilt in place).
+    pub index: InvertedIndex,
+    /// Flat scan-chunk storage; tasks are ranges into it.
+    pub chunks: Vec<ScanChunk>,
+    /// Scan tasks as `(lo, hi)` ranges into `chunks`.
+    pub tasks: Vec<(u32, u32)>,
+    /// Per-ordinal `(contributing tasks, total entries)` ledger stats.
+    pub ord_stats: Vec<(u32, u32)>,
+    /// Sorted frontier-node scratch (node-centric + SQL engines).
+    pub nodes: Vec<NodeId>,
+    /// Reservoir frame pool.
+    pub frames: FrameArena,
+}
+
+impl ScratchArena {
+    /// Called by engines once the first wave completes: warm-up is over.
+    /// The slack absorbs bounded wave-to-wave jitter — ±1-2 scan tasks
+    /// from edge-count rounding, plus one transient output frame per
+    /// in-flight parallel merge — so steady-state waves never miss.
+    pub fn mark_warm(&self) {
+        self.frames.mark_warm(16);
+    }
+
+    /// Snapshot the run's reuse counters.
+    pub fn stats(&self, pool_threads_spawned: u64) -> ScratchStats {
+        ScratchStats {
+            frames_allocated: self.frames.allocated.load(Ordering::Relaxed),
+            frames_reused: self.frames.reused.load(Ordering::Relaxed),
+            steady_frame_allocs: self.frames.steady_allocs.load(Ordering::Relaxed),
+            pool_threads_spawned,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scan tasks
+// ---------------------------------------------------------------------------
 
 /// One contiguous slice of a frontier node's adjacency list.
 #[derive(Debug, Clone, Copy)]
@@ -126,65 +379,67 @@ pub struct ScanChunk {
 }
 
 /// Split the frontier's adjacency into ~`num_tasks` edge-balanced scan
-/// tasks. Hot nodes are split across tasks (`chunk_cap` edges per chunk) —
-/// the essence of *edge-centric* parallelism: no single task is stuck with
-/// a hub's entire neighbor list (contrast [`super::agl`]).
-pub fn make_scan_tasks(
+/// tasks, written into the reusable `chunks`/`tasks` buffers (tasks are
+/// `(lo, hi)` ranges over `chunks`). Hot nodes are split across tasks —
+/// the essence of *edge-centric* parallelism: no single task is stuck
+/// with a hub's entire neighbor list (contrast [`super::agl`]).
+pub fn fill_scan_tasks(
     g: &Csr,
-    frontier_nodes: impl Iterator<Item = NodeId>,
+    nodes: &[NodeId],
     num_tasks: usize,
-) -> Vec<Vec<ScanChunk>> {
-    let mut chunks: Vec<ScanChunk> = Vec::new();
+    chunks: &mut Vec<ScanChunk>,
+    tasks: &mut Vec<(u32, u32)>,
+) {
+    chunks.clear();
+    tasks.clear();
     let mut total_edges = 0u64;
-    for v in frontier_nodes {
-        let deg = g.degree(v);
-        total_edges += deg as u64;
-        if deg == 0 {
-            continue;
-        }
-        chunks.push(ScanChunk { node: v, lo: 0, hi: deg });
+    for &v in nodes {
+        total_edges += g.degree(v) as u64;
     }
-    if chunks.is_empty() {
-        return Vec::new();
+    if total_edges == 0 {
+        return;
     }
     let num_tasks = num_tasks.max(1);
     let target = total_edges.div_ceil(num_tasks as u64).max(64);
-    // Split chunks larger than the target so hubs spread across tasks.
-    let mut split: Vec<ScanChunk> = Vec::with_capacity(chunks.len());
-    for c in chunks {
-        let deg = (c.hi - c.lo) as u64;
-        if deg <= target {
-            split.push(c);
+    let mut task_start = 0u32;
+    let mut cur_edges = 0u64;
+    let mut close_if_full =
+        |chunks: &mut Vec<ScanChunk>, tasks: &mut Vec<(u32, u32)>, cur_edges: &mut u64| {
+            if *cur_edges >= target {
+                tasks.push((task_start, chunks.len() as u32));
+                task_start = chunks.len() as u32;
+                *cur_edges = 0;
+            }
+        };
+    for &v in nodes {
+        let deg = g.degree(v);
+        if deg == 0 {
+            continue;
+        }
+        if deg as u64 <= target {
+            chunks.push(ScanChunk { node: v, lo: 0, hi: deg });
+            cur_edges += deg as u64;
+            close_if_full(chunks, tasks, &mut cur_edges);
         } else {
-            let pieces = deg.div_ceil(target);
-            let step = deg.div_ceil(pieces) as u32;
-            let mut lo = c.lo;
-            while lo < c.hi {
-                let hi = (lo + step).min(c.hi);
-                split.push(ScanChunk { node: c.node, lo, hi });
+            // Split hubs into ≤target pieces so they spread across tasks.
+            let pieces = (deg as u64).div_ceil(target);
+            let step = (deg as u64).div_ceil(pieces) as u32;
+            let mut lo = 0u32;
+            while lo < deg {
+                let hi = (lo + step).min(deg);
+                chunks.push(ScanChunk { node: v, lo, hi });
+                cur_edges += (hi - lo) as u64;
+                close_if_full(chunks, tasks, &mut cur_edges);
                 lo = hi;
             }
         }
     }
-    // First-fit pack into tasks of ~target edges.
-    let mut tasks: Vec<Vec<ScanChunk>> = Vec::with_capacity(num_tasks);
-    let mut cur: Vec<ScanChunk> = Vec::new();
-    let mut cur_edges = 0u64;
-    for c in split {
-        cur_edges += (c.hi - c.lo) as u64;
-        cur.push(c);
-        if cur_edges >= target {
-            tasks.push(std::mem::take(&mut cur));
-            cur_edges = 0;
-        }
+    if task_start < chunks.len() as u32 {
+        tasks.push((task_start, chunks.len() as u32));
     }
-    if !cur.is_empty() {
-        tasks.push(cur);
-    }
-    tasks
 }
 
-/// Scan one task's chunks, producing its partial reservoir map and the
+/// Scan one task's chunks into its reservoir `frame`, returning the
 /// number of edge-entries scanned (for the work ledger).
 pub fn scan_task(
     g: &Csr,
@@ -194,21 +449,23 @@ pub fn scan_task(
     hop: u32,
     k: usize,
     seeds: &[NodeId],
-) -> (ReservoirMap, u64) {
-    let mut map = ReservoirMap::default();
+    frame: &mut Frame,
+) -> u64 {
+    frame.prepare(
+        k,
+        task.iter().flat_map(|c| index.get(c.node).iter().map(|&(_, ord)| ord)),
+    );
     let mut scanned = 0u64;
     for chunk in task {
         let neigh = &g.neighbors(chunk.node)[chunk.lo as usize..chunk.hi as usize];
         let entries = index.get(chunk.node);
         scanned += (neigh.len() * entries.len()) as u64;
-        for &(slot, pos) in entries {
+        for &(slot, ord) in entries {
             let seed = seeds[slot as usize];
             // Hoist the loop-invariant half of the hash (§Perf): one
             // mix64 per edge instead of three.
             let base = crate::sampler::priority_base(sample_seed, hop, seed, chunk.node);
-            let res = map
-                .entry(slot_key(slot, pos))
-                .or_insert_with(|| TopK::new(k));
+            let res = frame.tok_for(ord);
             let mut threshold = res.threshold();
             for &nbr in neigh {
                 let p = crate::sampler::priority_from_base(base, nbr);
@@ -222,7 +479,7 @@ pub fn scan_task(
             }
         }
     }
-    (map, scanned)
+    scanned
 }
 
 /// Record the reduce-phase work of merging `partials` under a topology.
@@ -245,21 +502,27 @@ pub fn scan_task(
 ///   tree's nodes. Consequently *both* of the paper's mechanisms show up
 ///   here: the mapping strategy determines the owner-work makespan, and
 ///   the tree flattens hot-key fan-in.
+///
+/// Per-key contribution stats accumulate into the dense `ord_stats`
+/// scratch vec (`ordinal → (#tasks, total entries)`) — no hashmap.
+#[allow(clippy::too_many_arguments)]
 pub fn ledger_merge(
     ledger: &mut WorkLedger,
     phase: &str,
-    partials: &[ReservoirMap],
+    partials: &[Frame],
+    frontier: &[(NodeId, u32, u32)],
+    ord_stats: &mut Vec<(u32, u32)>,
     k: usize,
     reduce: super::ReduceTopology,
     worker_of: &[u32],
     workers: usize,
 ) {
     const BYTES_PER_ENTRY: u64 = 12;
-    // Per-key contribution stats: (#partials containing it, total entries).
-    let mut stats: FxHashMap<u64, (u32, u32)> = FxHashMap::default();
-    for m in partials {
-        for (&key, t) in m.iter() {
-            let e = stats.entry(key).or_insert((0, 0));
+    ord_stats.clear();
+    ord_stats.resize(frontier.len(), (0, 0));
+    for f in partials {
+        for (ord, t) in f.entries() {
+            let e = &mut ord_stats[ord as usize];
             e.0 += 1;
             e.1 += t.len() as u32;
         }
@@ -270,8 +533,11 @@ pub fn ledger_merge(
             // full fan-in of each of its keys.
             let mut owner_work = vec![0u64; workers];
             let mut owner_msgs = vec![0u64; workers];
-            for (&key, &(c, e)) in stats.iter() {
-                let slot = (key >> 32) as usize;
+            for (ord, &(c, e)) in ord_stats.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let slot = frontier[ord].1 as usize;
                 let owner = worker_of[slot] as usize % workers;
                 owner_work[owner] += e as u64;
                 owner_msgs[owner] += c as u64;
@@ -292,8 +558,11 @@ pub fn ledger_merge(
         super::ReduceTopology::Tree { arity } => {
             let mut owner_work = vec![0u64; workers];
             let mut interior = 0u64;
-            for (&key, &(c, e)) in stats.iter() {
-                let slot = (key >> 32) as usize;
+            for (ord, &(c, e)) in ord_stats.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let slot = frontier[ord].1 as usize;
                 let owner = worker_of[slot] as usize % workers;
                 // Owner receives at most `arity` pre-aggregated
                 // contributions of ≤ k entries each.
@@ -320,119 +589,152 @@ pub fn ledger_merge(
     }
 }
 
-/// Serialized size of a partial map — drives reduce-phase fabric charges.
-pub fn map_wire_bytes(m: &ReservoirMap) -> u64 {
-    m.values().map(|t| 8 + 12 * t.len() as u64).sum()
-}
-
-/// Merge two reservoir maps (associative + commutative).
-pub fn merge_maps(mut a: ReservoirMap, b: ReservoirMap) -> ReservoirMap {
-    for (key, res) in b {
-        match a.entry(key) {
-            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().merge(&res),
-            std::collections::hash_map::Entry::Vacant(e) => {
-                e.insert(res);
-            }
-        }
-    }
-    a
-}
-
 /// Run one edge-centric hop round for `slots`, filling `hop1` or `hop2`.
 ///
 /// Work is recorded on `ledger` per simulated worker / tree round so the
 /// cost model can project cluster time (this testbed has a single core —
-/// see [`crate::cluster::costmodel`]).
+/// see [`crate::cluster::costmodel`]). Scan tasks run on the persistent
+/// [`WorkPool`]; all transient state draws from `scratch`.
 pub fn edge_centric_hop(
     g: &Csr,
-    slots: &mut WaveSlots,
+    slots: &mut WaveSlots<'_>,
     hop: u32,
     cfg: &EngineConfig,
     fabric: &Fabric,
     ledger: &mut WorkLedger,
+    scratch: &mut ScratchArena,
 ) {
     let k = cfg.fanout.fanouts[(hop - 1) as usize] as usize;
-    let frontier = slots.frontier(hop);
-    if frontier.is_empty() {
+    slots.fill_frontier(hop, &mut scratch.frontier, &mut scratch.offsets);
+    if scratch.frontier.is_empty() {
         return;
     }
-    let index = build_index(&frontier);
+    scratch.index.rebuild(&scratch.frontier);
     // Scan tasks play the role of the simulated workers' map tasks: use
     // a multiple of the cluster width so each worker gets several, and at
     // least a few per OS thread for stragglerless packing.
     let num_tasks = (cfg.workers * 4).max(cfg.threads * 4);
-    let tasks = make_scan_tasks(g, index.iter().map(|(n, _)| n), num_tasks);
-    // --- map phase (parallel) ---
+    fill_scan_tasks(g, scratch.index.nodes(), num_tasks, &mut scratch.chunks, &mut scratch.tasks);
+    // --- map phase (persistent pool, results into pre-sized slots) ------
     let scan_phase = format!("hop{hop}.scan");
-    let results: Vec<(ReservoirMap, u64)> = parallel_map(&tasks, cfg.threads, |task| {
-        scan_task(g, &index, task, cfg.sample_seed, hop, k, &slots.seeds)
-    });
+    let (index, chunks, tasks, frames) =
+        (&scratch.index, &scratch.chunks, &scratch.tasks, &scratch.frames);
+    let seeds = slots.seeds;
+    let results: Vec<(Frame, u64)> =
+        WorkPool::global().map_collect(tasks.len(), cfg.threads, 1, |t| {
+            let (lo, hi) = tasks[t];
+            let mut frame = frames.acquire();
+            let scanned = scan_task(
+                g,
+                index,
+                &chunks[lo as usize..hi as usize],
+                cfg.sample_seed,
+                hop,
+                k,
+                seeds,
+                &mut frame,
+            );
+            (frame, scanned)
+        });
     let mut partials = Vec::with_capacity(results.len());
-    for (t, (map, scanned)) in results.into_iter().enumerate() {
+    for (t, (frame, scanned)) in results.into_iter().enumerate() {
         ledger.charge(
             &scan_phase,
             t % cfg.workers,
             WorkUnits { scan_edge_entries: scanned, ..Default::default() },
         );
-        partials.push(map);
+        partials.push(frame);
     }
     // --- reduce phase (tree or flat) ---
     let merge_phase = format!("hop{hop}.merge");
-    ledger_merge(ledger, &merge_phase, &partials, k, cfg.reduce, &slots.worker_of, cfg.workers);
-    let size_of: &(dyn Fn(&ReservoirMap) -> u64 + Sync) = &map_wire_bytes;
+    ledger_merge(
+        ledger,
+        &merge_phase,
+        &partials,
+        &scratch.frontier,
+        &mut scratch.ord_stats,
+        k,
+        cfg.reduce,
+        slots.worker_of,
+        cfg.workers,
+    );
+    let frames = &scratch.frames;
+    let merge = |a: Frame, b: Frame| {
+        let mut out = frames.acquire();
+        Frame::merge_from(&a, &b, &mut out);
+        frames.release(a);
+        frames.release(b);
+        out
+    };
+    let size_of: &(dyn Fn(&Frame) -> u64 + Sync) = &|f: &Frame| f.wire_bytes();
+    let size_of_flat: &dyn Fn(&Frame) -> u64 = &|f: &Frame| f.wire_bytes();
     let merged = match cfg.reduce {
         ReduceTopology::Tree { arity } => {
-            tree_reduce_with_fabric(partials, arity, merge_maps, Some((fabric, size_of)))
+            tree_reduce_with_fabric(partials, arity, merge, Some((fabric, size_of)))
         }
-        ReduceTopology::Flat => flat_reduce(partials, merge_maps, Some((fabric, &map_wire_bytes))),
-    }
-    .unwrap_or_default();
+        ReduceTopology::Flat => flat_reduce(partials, merge, Some((fabric, size_of_flat))),
+    };
     // --- assignment phase: write reservoirs into slots; charge the edge
     // replication transfer reducer→owning worker ("append E to Graph(S)
     // on worker M[S]"). Per-worker net bytes expose mapping imbalance.
-    let assign_phase = format!("hop{hop}.assign");
-    for (key, res) in merged.iter() {
-        let slot = (key >> 32) as usize;
-        let dst = slots.worker_of[slot] as usize % cfg.workers;
-        ledger.charge(
-            &assign_phase,
-            dst,
-            WorkUnits {
-                merge_entries: res.len() as u64,
-                net_bytes: 8 + 12 * res.len() as u64,
-                msgs: 1,
-                ..Default::default()
-            },
-        );
+    if let Some(m) = &merged {
+        let assign_phase = format!("hop{hop}.assign");
+        for (ord, res) in m.entries() {
+            let slot = scratch.frontier[ord as usize].1 as usize;
+            let dst = slots.worker_of[slot] as usize % cfg.workers;
+            ledger.charge(
+                &assign_phase,
+                dst,
+                WorkUnits {
+                    merge_entries: res.len() as u64,
+                    net_bytes: 8 + 12 * res.len() as u64,
+                    msgs: 1,
+                    ..Default::default()
+                },
+            );
+        }
     }
-    assign_hop(slots, hop, merged, fabric, cfg.workers);
+    assign_hop(slots, hop, merged.as_ref(), &scratch.frontier, fabric, cfg.workers);
+    if let Some(m) = merged {
+        frames.release(m);
+    }
 }
 
-/// Write merged reservoirs into the wave's hop vectors.
-pub fn assign_hop(slots: &mut WaveSlots, hop: u32, merged: ReservoirMap, fabric: &Fabric, workers: usize) {
-    for (key, res) in merged {
-        let slot = (key >> 32) as usize;
-        let pos = (key & 0xffff_ffff) as usize;
-        let dst = slots.worker_of[slot] as usize % workers;
-        // The reducer that produced this reservoir hands it to the slot's
-        // owning worker ("append E to Graph(S) on worker M[S]").
-        let src = (key as usize) % workers;
-        if src != dst {
-            fabric.charge(src, dst, 8 + 12 * res.len() as u64);
-        }
-        match hop {
-            1 => {
-                debug_assert_eq!(pos, 0);
-                slots.hop1[slot] = res.nodes().collect();
+/// Write a merged reservoir frame into the wave's hop vectors.
+pub fn assign_hop(
+    slots: &mut WaveSlots<'_>,
+    hop: u32,
+    merged: Option<&Frame>,
+    frontier: &[(NodeId, u32, u32)],
+    fabric: &Fabric,
+    workers: usize,
+) {
+    if let Some(frame) = merged {
+        for (ord, res) in frame.entries() {
+            let (_, slot32, pos32) = frontier[ord as usize];
+            let (slot, pos) = (slot32 as usize, pos32 as usize);
+            let dst = slots.worker_of[slot] as usize % workers;
+            // The reducer that produced this reservoir hands it to the
+            // slot's owning worker ("append E to Graph(S) on worker
+            // M[S]"); routing identity is the wire key, as before.
+            let src = (slot_key(slot32, pos32) as usize) % workers;
+            if src != dst {
+                fabric.charge(src, dst, 8 + 12 * res.len() as u64);
             }
-            2 => {
-                let h2 = &mut slots.hop2[slot];
-                if h2.len() < slots.hop1[slot].len() {
-                    h2.resize(slots.hop1[slot].len(), Vec::new());
+            match hop {
+                1 => {
+                    debug_assert_eq!(pos, 0);
+                    slots.hop1[slot] = res.nodes().collect();
                 }
-                h2[pos] = res.nodes().collect();
+                2 => {
+                    let h2 = &mut slots.hop2[slot];
+                    if h2.len() < slots.hop1[slot].len() {
+                        h2.resize(slots.hop1[slot].len(), Vec::new());
+                    }
+                    h2[pos] = res.nodes().collect();
+                }
+                _ => unreachable!(),
             }
-            _ => unreachable!(),
         }
     }
     // Slots whose hop-1 nodes had no admitted hop-2 neighbors still need
@@ -482,13 +784,21 @@ mod tests {
     fn scan_tasks_cover_all_edges_once() {
         let g = generator::from_spec("star:n=512,hubs=1", 2).unwrap().csr();
         let frontier: Vec<NodeId> = (0..20).collect();
-        let tasks = make_scan_tasks(&g, frontier.iter().copied(), 8);
+        let mut chunks = Vec::new();
+        let mut tasks = Vec::new();
+        fill_scan_tasks(&g, &frontier, 8, &mut chunks, &mut tasks);
+        // Every chunk belongs to exactly one task, in order.
+        let mut covered_chunks = 0u32;
+        for &(lo, hi) in &tasks {
+            assert_eq!(lo, covered_chunks, "tasks must tile the chunk vec");
+            assert!(hi > lo);
+            covered_chunks = hi;
+        }
+        assert_eq!(covered_chunks as usize, chunks.len());
         // Sum of chunk widths == sum of degrees; no overlap per node.
         let mut per_node: std::collections::HashMap<NodeId, Vec<(u32, u32)>> = Default::default();
-        for t in &tasks {
-            for c in t {
-                per_node.entry(c.node).or_default().push((c.lo, c.hi));
-            }
+        for c in &chunks {
+            per_node.entry(c.node).or_default().push((c.lo, c.hi));
         }
         for v in frontier {
             let mut ranges = per_node.remove(&v).unwrap_or_default();
@@ -501,8 +811,45 @@ mod tests {
             assert_eq!(covered, g.degree(v), "node {v} not fully covered");
         }
         // The hub (node 0, degree ~511) must be split across chunks.
-        let hub_chunks = tasks.iter().flatten().filter(|c| c.node == 0).count();
+        let hub_chunks = chunks.iter().filter(|c| c.node == 0).count();
         assert!(hub_chunks > 1, "hub not split: {hub_chunks} chunk(s)");
+    }
+
+    #[test]
+    fn frame_merge_matches_hashmap_semantics() {
+        // Two frames with overlapping ordinals merge like the old
+        // hashmap-entry merge: union of keys, TopK-merged values.
+        let mut a = Frame::new();
+        a.push_new(1, 2).insert(10, 100);
+        a.push_new(3, 2).insert(30, 300);
+        let mut b = Frame::new();
+        let t = b.push_new(3, 2);
+        t.insert(5, 50);
+        t.insert(40, 400);
+        b.push_new(7, 2).insert(70, 700);
+        let mut out = Frame::new();
+        Frame::merge_from(&a, &b, &mut out);
+        let got: Vec<(u32, Vec<NodeId>)> =
+            out.entries().map(|(o, t)| (o, t.nodes().collect())).collect();
+        assert_eq!(got, vec![(1, vec![100]), (3, vec![50, 300]), (7, vec![700])]);
+    }
+
+    #[test]
+    fn frame_arena_reuses_buffers() {
+        let arena = FrameArena::default();
+        let f1 = arena.acquire();
+        arena.release(f1);
+        let mut f2 = arena.acquire();
+        // Stale state must not leak through a release/acquire cycle.
+        assert!(f2.is_empty());
+        f2.push_new(0, 1).insert(1, 1);
+        arena.release(f2);
+        arena.mark_warm(0);
+        let f3 = arena.acquire();
+        assert!(f3.is_empty());
+        let stats_reused = arena.reused.load(Ordering::Relaxed);
+        assert_eq!(stats_reused, 2);
+        assert_eq!(arena.steady_allocs.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -512,10 +859,11 @@ mod tests {
         let fabric = Fabric::new(cfg.workers);
         let seeds: Vec<NodeId> = (0..64).collect();
         let worker_of: Vec<u32> = seeds.iter().map(|&s| s % 4).collect();
-        let mut slots = WaveSlots::new(seeds, worker_of);
+        let mut slots = WaveSlots::new(&seeds, &worker_of);
         let mut ledger = WorkLedger::new(cfg.workers);
-        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger);
-        edge_centric_hop(&g, &mut slots, 2, &cfg, &fabric, &mut ledger);
+        let mut scratch = ScratchArena::default();
+        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger, &mut scratch);
+        edge_centric_hop(&g, &mut slots, 2, &cfg, &fabric, &mut ledger, &mut scratch);
         for (slot, h1) in slots.hop1.iter().enumerate() {
             assert!(h1.len() <= 4);
             // hop1 ⊆ neighbors(seed)
@@ -540,10 +888,12 @@ mod tests {
             c.threads = threads;
             let fabric = Fabric::new(c.workers);
             let seeds: Vec<NodeId> = (0..32).collect();
-            let mut slots = WaveSlots::new(seeds.clone(), vec![0; 32]);
+            let worker_of = vec![0u32; 32];
+            let mut slots = WaveSlots::new(&seeds, &worker_of);
             let mut ledger = WorkLedger::new(c.workers);
-            edge_centric_hop(&g, &mut slots, 1, &c, &fabric, &mut ledger);
-            edge_centric_hop(&g, &mut slots, 2, &c, &fabric, &mut ledger);
+            let mut scratch = ScratchArena::default();
+            edge_centric_hop(&g, &mut slots, 1, &c, &fabric, &mut ledger, &mut scratch);
+            edge_centric_hop(&g, &mut slots, 2, &c, &fabric, &mut ledger, &mut scratch);
             (slots.hop1, slots.hop2)
         };
         assert_eq!(run(1), run(8));
@@ -556,9 +906,11 @@ mod tests {
         let cfg = cfg();
         let fabric = Fabric::new(cfg.workers);
         let seeds: Vec<NodeId> = (0..16).collect();
-        let mut slots = WaveSlots::new(seeds, vec![0; 16]);
+        let worker_of = vec![0u32; 16];
+        let mut slots = WaveSlots::new(&seeds, &worker_of);
         let mut ledger = WorkLedger::new(cfg.workers);
-        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger);
+        let mut scratch = ScratchArena::default();
+        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger, &mut scratch);
         for (slot, h1) in slots.hop1.iter().enumerate() {
             let deg = g.degree(slots.seeds[slot]) as usize;
             assert_eq!(h1.len(), deg.min(4), "slot {slot}");
@@ -571,14 +923,16 @@ mod tests {
         let cfg = cfg();
         let fabric = Fabric::new(cfg.workers);
         let seeds: Vec<NodeId> = (0..32).collect();
-        let mut slots = WaveSlots::new(seeds.clone(), vec![0; 32]);
+        let worker_of = vec![0u32; 32];
+        let mut slots = WaveSlots::new(&seeds, &worker_of);
         let mut ledger = WorkLedger::new(cfg.workers);
-        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger);
-        edge_centric_hop(&g, &mut slots, 2, &cfg, &fabric, &mut ledger);
+        let mut scratch = ScratchArena::default();
+        edge_centric_hop(&g, &mut slots, 1, &cfg, &fabric, &mut ledger, &mut scratch);
+        edge_centric_hop(&g, &mut slots, 2, &cfg, &fabric, &mut ledger, &mut scratch);
         let ids = slots.unique_nodes();
         // Sorted, deduplicated, and covering every referenced node.
         assert!(ids.windows(2).all(|w| w[0] < w[1]));
-        for &s in &slots.seeds {
+        for &s in slots.seeds {
             assert!(ids.binary_search(&s).is_ok());
         }
         for (slot, h1) in slots.hop1.iter().enumerate() {
@@ -590,6 +944,22 @@ mod tests {
                     assert!(ids.binary_search(&w).is_ok());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn frontier_offsets_locate_every_entry() {
+        let seeds: Vec<NodeId> = (0..8).collect();
+        let worker_of = vec![0u32; 8];
+        let mut slots = WaveSlots::new(&seeds, &worker_of);
+        // Uneven hop1 shapes exercise the offset math.
+        for (slot, h1) in slots.hop1.iter_mut().enumerate() {
+            *h1 = (0..(slot % 3) as NodeId).collect();
+        }
+        let (mut frontier, mut offsets) = (Vec::new(), Vec::new());
+        slots.fill_frontier(2, &mut frontier, &mut offsets);
+        for (ord, &(_, slot, pos)) in frontier.iter().enumerate() {
+            assert_eq!(offsets[slot as usize] + pos, ord as u32);
         }
     }
 

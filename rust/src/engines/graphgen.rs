@@ -18,8 +18,9 @@ use crate::graph::NodeId;
 use crate::storage::SpillStore;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
-use super::common::{edge_centric_hop, plan_waves, WaveSlots};
+use super::common::{edge_centric_hop, plan_waves, ScratchArena, WaveSlots};
 use super::{EngineConfig, GenReport, ReduceTopology, SubgraphEngine, SubgraphSink};
+use crate::util::workpool::WorkPool;
 
 pub struct GraphGenOffline;
 
@@ -49,16 +50,21 @@ impl SubgraphEngine for GraphGenOffline {
         });
         let mut store = SpillStore::create(spill_dir, cfg.spill_compress)?;
 
+        let pool = WorkPool::global();
+        let spawned0 = pool.total_spawned();
+        let mut scratch = ScratchArena::default();
         let (table, waves) = phases.time("map.balance", || plan_waves(seeds, &cfg));
         let mut subgraphs = 0u64;
         let mut sampled_nodes = 0u64;
-        for wave in waves {
-            let wave_seeds = table.seeds[wave.clone()].to_vec();
-            let wave_workers = table.worker_of[wave].to_vec();
-            let mut slots = WaveSlots::new(wave_seeds, wave_workers);
+        for (wi, wave) in waves.into_iter().enumerate() {
+            // Borrow the wave's slice of the balance table — no copies.
+            let mut slots =
+                WaveSlots::new(&table.seeds[wave.clone()], &table.worker_of[wave]);
             for hop in 1..=cfg.fanout.hops() as u32 {
                 phases.time(&format!("hop{hop}"), || {
-                    edge_centric_hop(graph, &mut slots, hop, &cfg, &fabric, &mut ledger)
+                    edge_centric_hop(
+                        graph, &mut slots, hop, &cfg, &fabric, &mut ledger, &mut scratch,
+                    )
                 });
             }
             // Offline: subgraphs go to DISK, not to the consumer.
@@ -80,6 +86,9 @@ impl SubgraphEngine for GraphGenOffline {
                 }
                 Ok(())
             })?;
+            if wi == 0 {
+                scratch.mark_warm();
+            }
         }
         phases.time("spill.write", || store.finish_writes())?;
         // Training-time read-back: decode every subgraph from disk and
@@ -106,6 +115,7 @@ impl SubgraphEngine for GraphGenOffline {
             spill: Some(spill_report),
             discarded_seeds: table.discarded.len() as u64,
             ledger,
+            scratch: scratch.stats(pool.total_spawned() - spawned0),
         })
     }
 }

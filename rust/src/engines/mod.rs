@@ -112,7 +112,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         Self {
             workers: 8,
-            threads: crate::util::pool::default_threads(),
+            threads: crate::util::workpool::default_threads(),
             wave_size: 4096,
             fanout: FanoutSpec::paper(),
             sample_seed: 0x5eed,
@@ -139,6 +139,9 @@ pub struct GenReport {
     pub discarded_seeds: u64,
     /// Work counters for the simulated-cluster cost model.
     pub ledger: WorkLedger,
+    /// Scratch-arena / work-pool reuse counters: steady-state hop rounds
+    /// must show zero thread spawns and zero fresh frame allocations.
+    pub scratch: common::ScratchStats,
 }
 
 impl GenReport {

@@ -28,10 +28,10 @@ use crate::cluster::Fabric;
 use crate::graph::csr::Csr;
 use crate::graph::NodeId;
 
-use crate::util::pool::parallel_map;
 use crate::util::timer::{PhaseTimer, Stopwatch};
+use crate::util::workpool::WorkPool;
 
-use super::common::{build_index, plan_waves, ScanChunk, WaveSlots};
+use super::common::{plan_waves, ScanChunk, ScratchArena, WaveSlots};
 use super::{EngineConfig, GenReport, SubgraphEngine, SubgraphSink};
 
 /// One materialized join-output row (what a SQL engine would shuffle).
@@ -64,16 +64,18 @@ impl SubgraphEngine for SqlLike {
         let mut phases = PhaseTimer::new();
         let fabric = Fabric::new(cfg.workers);
         let mut ledger = crate::cluster::WorkLedger::new(cfg.workers);
+        let pool = WorkPool::global();
+        let spawned0 = pool.total_spawned();
+        let mut scratch = ScratchArena::default();
         let (table, waves) = phases.time("map.balance", || plan_waves(seeds, cfg));
         let mut subgraphs = 0u64;
         let mut sampled_nodes = 0u64;
-        for wave in waves {
-            let wave_seeds = table.seeds[wave.clone()].to_vec();
-            let wave_workers = table.worker_of[wave].to_vec();
-            let mut slots = WaveSlots::new(wave_seeds, wave_workers);
+        for (wi, wave) in waves.into_iter().enumerate() {
+            let mut slots =
+                WaveSlots::new(&table.seeds[wave.clone()], &table.worker_of[wave]);
             for hop in 1..=cfg.fanout.hops() as u32 {
                 phases.time(&format!("hop{hop}"), || {
-                    sql_hop(graph, &mut slots, hop, cfg, &fabric, &mut ledger)
+                    sql_hop(graph, &mut slots, hop, cfg, &fabric, &mut ledger, &mut scratch)
                 });
             }
             phases.time("emit", || -> anyhow::Result<()> {
@@ -84,6 +86,9 @@ impl SubgraphEngine for SqlLike {
                 }
                 Ok(())
             })?;
+            if wi == 0 {
+                scratch.mark_warm();
+            }
         }
         Ok(GenReport {
             engine: self.name(),
@@ -95,6 +100,7 @@ impl SubgraphEngine for SqlLike {
             spill: None,
             discarded_seeds: table.discarded.len() as u64,
             ledger,
+            scratch: scratch.stats(pool.total_spawned() - spawned0),
         })
     }
 }
@@ -102,38 +108,43 @@ impl SubgraphEngine for SqlLike {
 /// One hop as JOIN → materialize → shuffle/sort → windowed top-k.
 fn sql_hop(
     g: &Csr,
-    slots: &mut WaveSlots,
+    slots: &mut WaveSlots<'_>,
     hop: u32,
     cfg: &EngineConfig,
     fabric: &Fabric,
     ledger: &mut crate::cluster::WorkLedger,
+    scratch: &mut ScratchArena,
 ) {
     let k = cfg.fanout.fanouts[(hop - 1) as usize] as usize;
-    let frontier = slots.frontier(hop);
-    if frontier.is_empty() {
+    slots.fill_frontier(hop, &mut scratch.frontier, &mut scratch.offsets);
+    if scratch.frontier.is_empty() {
         return;
     }
-    let index = build_index(&frontier);
+    scratch.index.rebuild(&scratch.frontier);
     // --- JOIN: seeds ⋈ edges, fully materialized ------------------------
     // Parallel scan is allowed (SQL engines scan in parallel too); the
     // difference vs. GraphGen+ is that every row is allocated, none are
     // rejected early.
-    let scan_nodes: Vec<NodeId> = {
-        let mut v: Vec<NodeId> = index.iter().map(|(n, _)| n).collect();
-        v.sort_unstable();
-        v
-    };
-    let chunks: Vec<ScanChunk> = scan_nodes
-        .iter()
-        .map(|&v| ScanChunk { node: v, lo: 0, hi: g.degree(v) })
-        .collect();
-    let seeds = &slots.seeds;
-    let row_chunks: Vec<Vec<Row>> = parallel_map(&chunks, cfg.threads, |c| {
+    scratch.nodes.clear();
+    scratch.nodes.extend_from_slice(scratch.index.nodes());
+    scratch.nodes.sort_unstable();
+    scratch.chunks.clear();
+    for &v in &scratch.nodes {
+        scratch.chunks.push(ScanChunk { node: v, lo: 0, hi: g.degree(v) });
+    }
+    let seeds = slots.seeds;
+    let (index, chunks, offsets) = (&scratch.index, &scratch.chunks, &scratch.offsets);
+    let n = chunks.len();
+    let auto_chunk = (n / (cfg.threads.max(1) * 8)).max(1);
+    let pool = WorkPool::global();
+    let row_chunks: Vec<Vec<Row>> = pool.map_collect(n, cfg.threads, auto_chunk, |ci| {
+        let c = &chunks[ci];
         let neigh = g.neighbors(c.node);
         let entries = index.get(c.node);
         let mut rows = Vec::with_capacity(neigh.len() * entries.len());
-        for &(slot, pos) in entries {
+        for &(slot, ord) in entries {
             let seed = seeds[slot as usize];
+            let pos = ord - offsets[slot as usize];
             let base = crate::sampler::priority_base(cfg.sample_seed, hop, seed, c.node);
             for &nbr in neigh {
                 rows.push(Row {
@@ -175,7 +186,8 @@ fn sql_hop(
         0,
         crate::cluster::WorkUnits::default(), // ensure phase exists
     );
-    for (wk, chunk_rows) in chunk_row_counts(&chunks, &index, g, w).into_iter().enumerate() {
+    let row_counts = chunk_row_counts(&scratch.chunks, &scratch.index, g, w);
+    for (wk, chunk_rows) in row_counts.into_iter().enumerate() {
         ledger.charge(
             &join_phase,
             wk,
@@ -197,11 +209,15 @@ fn sql_hop(
     // --- SORT: global (PARTITION BY key ORDER BY order) -----------------
     rows.sort_unstable_by(|a, b| (a.key, a.order).cmp(&(b.key, b.order)));
     // --- WINDOW: keep ROW_NUMBER() <= k per group ------------------------
-    let mut merged = super::common::ReservoirMap::default();
+    // Group keys ascend, and `ordinal = offsets[slot] + pos` is monotone
+    // in (slot, pos) — so groups stream straight into a dense frame.
+    let mut merged = scratch.frames.acquire();
     let mut i = 0usize;
     while i < rows.len() {
         let key = rows[i].key;
-        let mut res = crate::sampler::reservoir::TopK::new(k);
+        let (slot, pos) = ((key >> 32) as u32, (key & 0xffff_ffff) as u32);
+        let ord = scratch.offsets[slot as usize] + pos;
+        let res = merged.push_new(ord, k);
         let mut j = i;
         while j < rows.len() && rows[j].key == key {
             if j < i + k {
@@ -209,10 +225,10 @@ fn sql_hop(
             }
             j += 1;
         }
-        merged.insert(key, res);
         i = j;
     }
-    super::common::assign_hop(slots, hop, merged, fabric, cfg.workers);
+    super::common::assign_hop(slots, hop, Some(&merged), &scratch.frontier, fabric, cfg.workers);
+    scratch.frames.release(merged);
 }
 
 /// Materialized row counts per simulated worker (scan chunk c runs on

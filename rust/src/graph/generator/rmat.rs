@@ -6,8 +6,8 @@
 
 use crate::graph::edgelist::EdgeList;
 use crate::graph::NodeId;
-use crate::util::pool::{default_threads, parallel_map};
 use crate::util::rng::{mix2, Xoshiro256};
+use crate::util::workpool::{default_threads, WorkPool};
 
 use super::Generated;
 
@@ -20,11 +20,13 @@ const C: f64 = 0.19;
 /// edges before dedup/symmetrization.
 pub fn generate(n: NodeId, num_edges: u64, seed: u64) -> Generated {
     let scale = (n.max(2) as f64).log2().ceil() as u32;
-    // Sample edges in parallel chunks; each chunk's RNG is derived from
-    // (seed, chunk) so the result is independent of thread count.
+    // Sample edges in parallel chunks on the persistent pool; each
+    // chunk's RNG is derived from (seed, chunk) so the result is
+    // independent of thread count.
     let chunk_size = 64 * 1024;
-    let chunks: Vec<u64> = (0..num_edges.div_ceil(chunk_size)).collect();
-    let per_chunk = parallel_map(&chunks, default_threads(), |&ci| {
+    let num_chunks = num_edges.div_ceil(chunk_size) as usize;
+    let per_chunk = WorkPool::global().map_collect(num_chunks, default_threads(), 1, |ci| {
+        let ci = ci as u64;
         let mut rng = Xoshiro256::seed_from_u64(mix2(seed, ci));
         let count = chunk_size.min(num_edges - ci * chunk_size);
         let mut edges = Vec::with_capacity(count as usize);
@@ -87,7 +89,7 @@ mod tests {
 
     #[test]
     fn independent_of_thread_count() {
-        // parallel_map chunking is keyed by chunk index, not thread; verify
+        // Pool chunking is keyed by chunk index, not thread; verify
         // via the GG_THREADS env being irrelevant to the hash of output.
         let a = generate(512, 4096, 3);
         let b = generate(512, 4096, 3);

@@ -1,10 +1,13 @@
-//! Generic map → shuffle → reduce over in-memory partitions.
+//! Generic map → shuffle → reduce over in-memory partitions. Map and
+//! reduce tasks run on the persistent [`WorkPool`] — no per-round thread
+//! spawns.
 
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Mutex;
 
 use crate::cluster::Fabric;
+use crate::util::workpool::WorkPool;
 
 /// Execution statistics for one MapReduce round.
 #[derive(Debug, Clone, Default)]
@@ -51,10 +54,10 @@ fn key_hash<K: Hash>(k: &K) -> u64 {
 /// * `init()` / `fold(acc, key, value)` — reducer state per reduce task.
 ///
 /// Keys are routed to reducer `hash(key) % reduce_tasks`. Map tasks run on
-/// `threads` OS threads; each keeps per-reducer local buffers (combiner
-/// style) that are handed to reducers after the map barrier, then reducers
-/// fold in parallel. Shuffle traffic is charged on `fabric` with map task
-/// `t` acting as worker `t % fabric.workers()`.
+/// the persistent work pool (up to `threads` wide); each keeps per-reducer
+/// local buffers (combiner style) that are handed to reducers after the
+/// map barrier, then reducers fold in parallel. Shuffle traffic is charged
+/// on `fabric` with map task `t` acting as worker `t % fabric.workers()`.
 #[allow(clippy::too_many_arguments)]
 pub fn map_shuffle_reduce<I, K, V, A>(
     inputs: &[I],
@@ -79,67 +82,44 @@ where
     let shuffled = std::sync::atomic::AtomicU64::new(0);
     // buckets[r] collects (K, V) destined for reducer r, from all tasks.
     let buckets: Vec<Mutex<Vec<(K, V)>>> = (0..reduce_tasks).map(|_| Mutex::new(Vec::new())).collect();
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1).min(inputs.len().max(1)) {
-            s.spawn(|| loop {
-                let t = next.fetch_add(1, Ordering::Relaxed);
-                if t >= inputs.len() {
-                    break;
-                }
-                let mut local: Vec<Vec<(K, V)>> = (0..reduce_tasks).map(|_| Vec::new()).collect();
-                let mut count = 0u64;
-                let mut bytes = 0u64;
-                {
-                    let mut emit = |k: K, v: V| {
-                        let r = (key_hash(&k) % reduce_tasks as u64) as usize;
-                        bytes += wire_bytes(&k, &v);
-                        count += 1;
-                        local[r].push((k, v));
-                    };
-                    map_fn(t, &inputs[t], &mut emit);
-                }
-                emitted.fetch_add(count, Ordering::Relaxed);
-                shuffled.fetch_add(bytes, Ordering::Relaxed);
-                // Charge shuffle: mapper worker → reducer worker.
-                let src = t % w;
-                for (r, chunk) in local.into_iter().enumerate() {
-                    if chunk.is_empty() {
-                        continue;
-                    }
-                    let dst = r % w;
-                    if src != dst {
-                        let b: u64 = chunk.iter().map(|(k, v)| wire_bytes(k, v)).sum();
-                        fabric.charge(src, dst, b);
-                    }
-                    buckets[r].lock().unwrap().extend(chunk);
-                }
-            });
+    WorkPool::global().run(inputs.len(), threads.max(1), 1, |t| {
+        let mut local: Vec<Vec<(K, V)>> = (0..reduce_tasks).map(|_| Vec::new()).collect();
+        let mut count = 0u64;
+        let mut bytes = 0u64;
+        {
+            let mut emit = |k: K, v: V| {
+                let r = (key_hash(&k) % reduce_tasks as u64) as usize;
+                bytes += wire_bytes(&k, &v);
+                count += 1;
+                local[r].push((k, v));
+            };
+            map_fn(t, &inputs[t], &mut emit);
+        }
+        emitted.fetch_add(count, Ordering::Relaxed);
+        shuffled.fetch_add(bytes, Ordering::Relaxed);
+        // Charge shuffle: mapper worker → reducer worker.
+        let src = t % w;
+        for (r, chunk) in local.into_iter().enumerate() {
+            if chunk.is_empty() {
+                continue;
+            }
+            let dst = r % w;
+            if src != dst {
+                let b: u64 = chunk.iter().map(|(k, v)| wire_bytes(k, v)).sum();
+                fabric.charge(src, dst, b);
+            }
+            buckets[r].lock().unwrap().extend(chunk);
         }
     });
     // --- reduce phase ----------------------------------------------------
-    let accs: Vec<Mutex<Option<A>>> = (0..reduce_tasks).map(|_| Mutex::new(None)).collect();
-    let next_r = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1).min(reduce_tasks) {
-            s.spawn(|| loop {
-                let r = next_r.fetch_add(1, Ordering::Relaxed);
-                if r >= reduce_tasks {
-                    break;
-                }
-                let pairs = std::mem::take(&mut *buckets[r].lock().unwrap());
-                let mut acc = init();
-                for (k, v) in pairs {
-                    fold(&mut acc, k, v);
-                }
-                *accs[r].lock().unwrap() = Some(acc);
-            });
+    let accs: Vec<A> = WorkPool::global().map_collect(reduce_tasks, threads.max(1), 1, |r| {
+        let pairs = std::mem::take(&mut *buckets[r].lock().unwrap());
+        let mut acc = init();
+        for (k, v) in pairs {
+            fold(&mut acc, k, v);
         }
+        acc
     });
-    let accs: Vec<A> = accs
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("reducer ran"))
-        .collect();
     let stats = MapReduceStats {
         map_tasks: inputs.len(),
         reduce_tasks,

@@ -10,7 +10,7 @@
 //! accumulators) are associative + commutative, so `tree_reduce` is exact.
 
 use crate::cluster::Fabric;
-use crate::util::pool::parallel_map;
+use crate::util::workpool::WorkPool;
 
 /// Flat aggregation: a single aggregator consumes every partial result
 /// sequentially — the serial hot-spot the paper replaces. If `fabric` is
@@ -61,7 +61,7 @@ pub fn tree_reduce_with_fabric<T: Send>(
     if items.is_empty() {
         return None;
     }
-    let threads = crate::util::pool::default_threads();
+    let threads = crate::util::workpool::default_threads();
     let mut level: Vec<T> = items;
     while level.len() > 1 {
         if let Some((f, size_of)) = fabric {
@@ -88,8 +88,6 @@ pub fn tree_reduce_with_fabric<T: Send>(
         if !cur.is_empty() {
             groups.push(cur);
         }
-        // parallel_map needs &[T] → wrap each group in a Mutex<Option> to
-        // move out. Simpler: consume via into_iter + scoped threads.
         level = parallel_merge(groups, threads, &merge);
     }
     level.pop()
@@ -100,16 +98,16 @@ fn parallel_merge<T: Send>(
     threads: usize,
     merge: &(impl Fn(T, T) -> T + Sync),
 ) -> Vec<T> {
-    // Move groups into Options so worker threads can take them by index.
+    // Move groups into Options so pool workers can take them by index
+    // (each index is claimed exactly once by the work loop).
     let slots: Vec<std::sync::Mutex<Option<Vec<T>>>> =
         groups.into_iter().map(|g| std::sync::Mutex::new(Some(g))).collect();
-    let merged = parallel_map(&slots, threads, |slot| {
-        let group = slot.lock().unwrap().take().expect("group taken once");
+    WorkPool::global().map_collect(slots.len(), threads, 1, |i| {
+        let group = slots[i].lock().unwrap().take().expect("group taken once");
         let mut it = group.into_iter();
         let first = it.next().expect("non-empty group");
         it.fold(first, merge)
-    });
-    merged
+    })
 }
 
 #[cfg(test)]

@@ -2,23 +2,33 @@
 //!
 //! The edge-centric pass (Alg. 1 step 15-21) scans *edges* and must answer
 //! "which seeds' current frontiers contain this edge's source?" in O(1).
-//! This index is rebuilt per hop from the previous hop's sampled frontier.
-//! Values are compact subgraph slot indices (`u32`), not node ids.
-
-use std::collections::HashMap;
+//! The index is rebuilt per hop from the previous hop's sampled frontier —
+//! so it is **rebuildable in place**: a CSR-style layout (one flat entry
+//! vec grouped by node, plus a node → range map) whose buffers are reused
+//! across hops and waves instead of reallocated. Values are compact
+//! subgraph slot indices plus the frontier-entry *ordinal* (the entry's
+//! index in the frontier vec), which is what the dense reservoir frames
+//! key on.
 
 use crate::graph::NodeId;
+use crate::util::fxhash::FxHashMap;
 
-/// node → list of (subgraph slot, frontier position) pairs.
+/// node → list of (subgraph slot, frontier ordinal) pairs.
 ///
-/// The frontier position disambiguates *which* hop-1 node of the subgraph
-/// this frontier entry corresponds to, so hop-2 samples can be attached to
-/// the right parent (a node can appear in several subgraphs and even at
-/// several positions of one subgraph's frontier).
+/// The ordinal identifies *which* frontier entry of the wave this is (a
+/// node can appear in several subgraphs and even at several positions of
+/// one subgraph's frontier); `frontier[ordinal]` recovers the `(node,
+/// slot, position)` triple, so hop-2 samples can be attached to the right
+/// parent.
 #[derive(Debug, Default, Clone)]
 pub struct InvertedIndex {
-    map: HashMap<NodeId, Vec<(u32, u32)>>,
-    entries: usize,
+    /// node → (start, len) into `flat`.
+    map: FxHashMap<NodeId, (u32, u32)>,
+    /// (slot, ordinal) entries, grouped by node.
+    flat: Vec<(u32, u32)>,
+    /// Distinct frontier nodes in first-appearance order — the
+    /// deterministic iteration order for task construction.
+    order: Vec<NodeId>,
 }
 
 impl InvertedIndex {
@@ -26,19 +36,56 @@ impl InvertedIndex {
         Self::default()
     }
 
-    pub fn with_capacity(cap: usize) -> Self {
-        Self { map: HashMap::with_capacity(cap), entries: 0 }
+    /// Rebuild from a frontier, reusing all internal buffers. Entry `i` of
+    /// `frontier` is `(node, slot, position)`; its ordinal is `i`.
+    pub fn rebuild(&mut self, frontier: &[(NodeId, u32, u32)]) {
+        self.map.clear();
+        self.order.clear();
+        self.flat.clear();
+        self.flat.resize(frontier.len(), (0, 0));
+        // Pass 1: count entries per distinct node.
+        for &(node, _, _) in frontier {
+            match self.map.entry(node) {
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert((0, 1));
+                    self.order.push(node);
+                }
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    e.get_mut().1 += 1;
+                }
+            }
+        }
+        // Assign group starts (first-appearance order) and reset the
+        // lengths to act as fill cursors.
+        let mut off = 0u32;
+        for &node in &self.order {
+            let e = self.map.get_mut(&node).expect("counted");
+            let count = e.1;
+            *e = (off, 0);
+            off += count;
+        }
+        // Pass 2: fill the flat entries.
+        for (ord, &(node, slot, _pos)) in frontier.iter().enumerate() {
+            let e = self.map.get_mut(&node).expect("counted");
+            self.flat[(e.0 + e.1) as usize] = (slot, ord as u32);
+            e.1 += 1;
+        }
     }
 
-    pub fn insert(&mut self, node: NodeId, slot: u32, position: u32) {
-        self.map.entry(node).or_default().push((slot, position));
-        self.entries += 1;
+    /// Convenience constructor (tests, one-shot callers).
+    pub fn from_frontier(frontier: &[(NodeId, u32, u32)]) -> Self {
+        let mut ix = Self::new();
+        ix.rebuild(frontier);
+        ix
     }
 
-    /// All (slot, position) pairs interested in `node`.
+    /// All (slot, ordinal) pairs interested in `node`.
     #[inline]
     pub fn get(&self, node: NodeId) -> &[(u32, u32)] {
-        self.map.get(&node).map(Vec::as_slice).unwrap_or(&[])
+        match self.map.get(&node) {
+            Some(&(start, len)) => &self.flat[start as usize..(start + len) as usize],
+            None => &[],
+        }
     }
 
     #[inline]
@@ -48,16 +95,23 @@ impl InvertedIndex {
 
     /// Number of distinct frontier nodes.
     pub fn num_nodes(&self) -> usize {
-        self.map.len()
+        self.order.len()
     }
 
     /// Total (node, slot) entries — the replication factor numerator.
     pub fn num_entries(&self) -> usize {
-        self.entries
+        self.flat.len()
+    }
+
+    /// Distinct frontier nodes in first-appearance order (deterministic —
+    /// unlike hashmap iteration, which would make scan-task composition,
+    /// and with it the simulated ledger, vary run to run).
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.order
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (NodeId, &[(u32, u32)])> {
-        self.map.iter().map(|(&k, v)| (k, v.as_slice()))
+        self.order.iter().map(move |&n| (n, self.get(n)))
     }
 }
 
@@ -66,28 +120,42 @@ mod tests {
     use super::*;
 
     #[test]
-    fn insert_and_lookup() {
+    fn rebuild_and_lookup() {
         let mut ix = InvertedIndex::new();
-        ix.insert(5, 0, 0);
-        ix.insert(5, 3, 1);
-        ix.insert(9, 1, 0);
-        assert_eq!(ix.get(5), &[(0, 0), (3, 1)]);
-        assert_eq!(ix.get(9), &[(1, 0)]);
+        // frontier: ordinals 0..3
+        ix.rebuild(&[(5, 0, 0), (9, 1, 0), (5, 3, 1)]);
+        assert_eq!(ix.get(5), &[(0, 0), (3, 2)]);
+        assert_eq!(ix.get(9), &[(1, 1)]);
         assert_eq!(ix.get(42), &[] as &[(u32, u32)]);
         assert!(ix.contains(5));
         assert!(!ix.contains(42));
         assert_eq!(ix.num_nodes(), 2);
         assert_eq!(ix.num_entries(), 3);
+        assert_eq!(ix.nodes(), &[5, 9]);
+    }
+
+    #[test]
+    fn rebuild_reuses_without_leaking_state() {
+        let mut ix = InvertedIndex::new();
+        ix.rebuild(&[(1, 0, 0), (2, 1, 0), (1, 2, 0)]);
+        assert_eq!(ix.num_entries(), 3);
+        // Rebuild with a disjoint, smaller frontier: nothing may survive.
+        ix.rebuild(&[(7, 0, 0)]);
+        assert_eq!(ix.get(1), &[] as &[(u32, u32)]);
+        assert_eq!(ix.get(7), &[(0, 0)]);
+        assert_eq!(ix.num_nodes(), 1);
+        assert_eq!(ix.num_entries(), 1);
+        assert_eq!(ix.nodes(), &[7]);
     }
 
     #[test]
     fn replication_counts_duplicates() {
-        let mut ix = InvertedIndex::new();
         // Same node wanted by 3 subgraphs = replication factor 3 for its edges.
-        for slot in 0..3 {
-            ix.insert(1, slot, 0);
-        }
+        let frontier: Vec<(NodeId, u32, u32)> = (0..3).map(|slot| (1, slot, 0)).collect();
+        let ix = InvertedIndex::from_frontier(&frontier);
         assert_eq!(ix.num_nodes(), 1);
         assert_eq!(ix.num_entries(), 3);
+        // Ordinals ascend within one node's group (the frames rely on it).
+        assert_eq!(ix.get(1), &[(0, 0), (1, 1), (2, 2)]);
     }
 }

@@ -80,6 +80,66 @@ impl TopK {
         }
     }
 
+    /// Re-arm for a new use with capacity retained — the arena-reuse hook:
+    /// a pooled `TopK` is `reset` instead of reallocated, so steady-state
+    /// hop rounds perform no reservoir heap allocations.
+    #[inline]
+    pub fn reset(&mut self, k: usize) {
+        debug_assert!(k > 0);
+        self.k = k;
+        self.entries.clear();
+    }
+
+    /// Become a copy of `other`, reusing this reservoir's buffer.
+    #[inline]
+    pub fn copy_from(&mut self, other: &TopK) {
+        self.k = other.k;
+        self.entries.clear();
+        self.entries.extend_from_slice(&other.entries);
+    }
+
+    /// Become the merge of `a` and `b`, reusing this reservoir's buffer.
+    /// Both inputs are sorted and duplicate-free (the `TopK` invariant),
+    /// so a two-pointer merge beats repeated binary-search inserts.
+    /// Produces the identical set to the insert-based
+    /// [`merge`](Self::merge) (property-tested) whenever priorities at
+    /// the k-boundary are untied across distinct nodes — always, in
+    /// practice, with 64-bit hash priorities. On such a tie this keeps
+    /// the smaller `(priority, node)` tuple (order-independent, hence
+    /// exactly associative), whereas the insert path's threshold check
+    /// keeps the incumbent — a ~2⁻⁶⁴ divergence the seed code never
+    /// defined consistently either (its SQL window breaks priority ties
+    /// by unstable sort order).
+    pub fn assign_merged(&mut self, a: &TopK, b: &TopK) {
+        debug_assert_eq!(a.k, b.k);
+        self.k = a.k;
+        self.entries.clear();
+        let (ea, eb) = (&a.entries, &b.entries);
+        let (mut i, mut j) = (0usize, 0usize);
+        while self.entries.len() < self.k && (i < ea.len() || j < eb.len()) {
+            let from_a = match (ea.get(i), eb.get(j)) {
+                (Some(x), Some(y)) => {
+                    if x == y {
+                        j += 1; // identical (priority, node): keep one
+                        true
+                    } else {
+                        x < y
+                    }
+                }
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => unreachable!(),
+            };
+            if from_a {
+                self.entries.push(ea[i]);
+                i += 1;
+            } else {
+                self.entries.push(eb[j]);
+                j += 1;
+            }
+        }
+    }
+
     /// The kept nodes, in priority order.
     pub fn nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.entries.iter().map(|&(_, n)| n)
@@ -164,6 +224,46 @@ mod tests {
             all.truncate(k);
             assert_eq!(r.entries_sorted(), all);
         });
+    }
+
+    /// Two-pointer merge-into-buffer equals the insert-based merge — the
+    /// dense-frame reduce path depends on this equivalence.
+    #[test]
+    fn assign_merged_matches_insert_merge() {
+        Cases::new("assign_merged == merge", 200).run(|rng| {
+            let k = 1 + rng.gen_range(8) as usize;
+            let mk = |rng: &mut crate::util::rng::Xoshiro256| {
+                let mut r = TopK::new(k);
+                for _ in 0..rng.gen_range(30) {
+                    r.insert(mix64(rng.next_u64()), rng.gen_range(50) as NodeId);
+                }
+                r
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let mut reference = a.clone();
+            reference.merge(&b);
+            let mut out = TopK::new(1); // stale state: must be overwritten
+            out.insert(7, 7);
+            out.assign_merged(&a, &b);
+            assert_eq!(out, reference);
+        });
+    }
+
+    /// Reset re-arms a used reservoir with no stale entries.
+    #[test]
+    fn reset_clears_state() {
+        let mut r = TopK::new(2);
+        r.insert(10, 1);
+        r.insert(20, 2);
+        r.reset(3);
+        assert!(r.is_empty());
+        assert_eq!(r.k(), 3);
+        assert_eq!(r.threshold(), u64::MAX);
+        let mut c = TopK::new(1);
+        c.copy_from(&r);
+        assert!(c.is_empty());
+        assert_eq!(c.k(), 3);
     }
 
     /// The property the tree reduction depends on: merging in any grouping

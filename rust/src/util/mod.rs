@@ -10,7 +10,7 @@ pub mod bytes;
 pub mod fxhash;
 pub mod json;
 pub mod logging;
-pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod workpool;

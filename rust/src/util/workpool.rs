@@ -1,0 +1,419 @@
+//! Persistent work-assisting worker pool (rayon is unavailable offline).
+//!
+//! Replaces the old `util::pool` scoped-thread helpers. The old design
+//! re-spawned OS threads via `std::thread::scope` for every parallel
+//! region — every hop of every generation wave paid thread start-up and
+//! tear-down, and `parallel_map` funneled results through a
+//! `Mutex<Vec<(idx, R)>>`. Here worker threads are **long-lived**: spawned
+//! once (lazily, on first demand), they park on a condvar and are handed
+//! jobs described by a raw closure pointer plus an atomic work index.
+//! Chunk claiming follows the work-assisting scheduler of
+//! Koenvisser/workassisting (see SNIPPETS.md): the submitting thread
+//! *assists* — it claims chunks from the same atomic index as the helpers,
+//! so a job with `threads == 1` never touches the pool at all, and a
+//! straggling helper can never leave the submitter idle. Results of
+//! [`WorkPool::map_collect`] are written in place to pre-sized output
+//! slots (each index is claimed exactly once), so there is no mutex on the
+//! result path and no post-hoc reordering.
+//!
+//! Safety model: `run` publishes a lifetime-erased `*const dyn Fn(usize)`
+//! job and does not return (or unwind past its internal guard) until every
+//! participating worker has bowed out of the job, so the closure and
+//! everything it borrows outlive all concurrent uses. A panicking worker
+//! marks the job poisoned and the submitter re-raises; a panicking
+//! submitter still quiesces the helpers before unwinding.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread: a job closure that
+    /// (transitively) submits another job runs it inline instead of
+    /// deadlocking on the single job slot.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Number of worker threads to use by default: `GG_THREADS` env override,
+/// else available parallelism, else 4. Cached in a `OnceLock` — the
+/// environment is read once per process, not once per call site.
+pub fn default_threads() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("GG_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// One published job: a lifetime-erased data-parallel closure over
+/// `0..n`, claimed in `chunk`-sized strides by workers `0..helpers` plus
+/// the submitting thread.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    chunk: usize,
+    helpers: usize,
+}
+
+// The raw closure pointer crosses threads inside the pool mutex; the
+// submit protocol guarantees it is only dereferenced while the submitting
+// stack frame is alive.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Currently published job, if any (at most one in flight).
+    job: Option<Job>,
+    /// Bumped per job so parked workers can tell old from new.
+    epoch: u64,
+    /// Participating helpers that have not yet finished the current job.
+    remaining: usize,
+    /// Worker threads spawned so far.
+    workers: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for a job (or shutdown).
+    start: Condvar,
+    /// Submitters park here waiting for helpers / for the slot to free.
+    done: Condvar,
+    /// The work-assisting claim index of the current job.
+    next: AtomicUsize,
+    /// True if a helper panicked inside the current job.
+    poisoned: AtomicBool,
+    /// Total worker threads ever spawned (monotonic; perf counter).
+    spawned_total: AtomicU64,
+}
+
+/// A persistent pool of worker threads. Most callers want the process
+/// [`WorkPool::global`] instance so that steady-state parallel regions
+/// perform zero thread spawns.
+pub struct WorkPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkPool {
+    /// Create an empty pool; workers are spawned lazily on demand.
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                state: Mutex::new(PoolState {
+                    job: None,
+                    epoch: 0,
+                    remaining: 0,
+                    workers: 0,
+                    shutdown: false,
+                }),
+                start: Condvar::new(),
+                done: Condvar::new(),
+                next: AtomicUsize::new(0),
+                poisoned: AtomicBool::new(false),
+                spawned_total: AtomicU64::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The process-wide pool. Never dropped; threads persist across engine
+    /// runs, waves and benchmark iterations.
+    pub fn global() -> &'static WorkPool {
+        static POOL: OnceLock<WorkPool> = OnceLock::new();
+        POOL.get_or_init(WorkPool::new)
+    }
+
+    /// Total worker threads ever spawned by this pool (monotonic). Engine
+    /// reports snapshot this around a run to prove steady-state rounds
+    /// spawn nothing.
+    pub fn total_spawned(&self) -> u64 {
+        self.shared.spawned_total.load(Ordering::Relaxed)
+    }
+
+    /// Grow the pool to at least `want` workers; returns how many threads
+    /// this call actually spawned.
+    pub fn ensure_workers(&self, want: usize) -> usize {
+        let mut st = self.shared.state.lock().unwrap();
+        let mut spawned = 0;
+        while st.workers < want {
+            let id = st.workers;
+            let sh = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("gg-workpool-{id}"))
+                .spawn(move || worker_loop(sh, id))
+                .expect("spawn pool worker");
+            self.handles.lock().unwrap().push(handle);
+            st.workers += 1;
+            spawned += 1;
+            self.shared.spawned_total.fetch_add(1, Ordering::Relaxed);
+        }
+        spawned
+    }
+
+    /// Apply `f` to every index in `0..n` with dynamic `chunk`-strided
+    /// claiming across up to `threads` threads (the submitter plus pooled
+    /// helpers). `threads <= 1` (or a single chunk of work) runs inline
+    /// without touching the pool.
+    pub fn run(&self, n: usize, threads: usize, chunk: usize, f: impl Fn(usize) + Sync) {
+        let chunk = chunk.max(1);
+        if threads <= 1 || n <= chunk || IN_POOL_WORKER.with(|w| w.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let total_chunks = n.div_ceil(chunk);
+        let helpers = (threads - 1).min(total_chunks - 1).max(1);
+        // Grow first (worker count is monotonic, so the pool is still big
+        // enough when the job slot frees up below).
+        self.ensure_workers(helpers);
+        let sh = &*self.shared;
+        // Erase the closure's lifetime: the guard below keeps the job
+        // published (and this frame alive) until all helpers are done.
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        let f_erased: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(obj) };
+        {
+            let mut st = sh.state.lock().unwrap();
+            // One job in flight at a time; later submitters queue here.
+            while st.job.is_some() {
+                st = sh.done.wait(st).unwrap();
+            }
+            sh.next.store(0, Ordering::Relaxed);
+            st.epoch += 1;
+            st.remaining = helpers;
+            st.job = Some(Job { f: f_erased, n, chunk, helpers });
+            sh.start.notify_all();
+        }
+        let saw_poison = Cell::new(false);
+        {
+            // On both the normal and the unwinding path: stop further
+            // claims, wait for helpers, resolve this job's poison flag
+            // (under the state lock, before the slot frees for the next
+            // submitter — a later job's panic must not be misattributed),
+            // and clear the job slot.
+            let _guard = JobGuard { sh, n, saw_poison: &saw_poison };
+            // While assisting, this thread executes job closures exactly
+            // like a pool worker — mark it so a closure that transitively
+            // submits another job runs that job inline instead of
+            // deadlocking on the single job slot (the guard resets the
+            // flag on both the normal and the unwinding path).
+            IN_POOL_WORKER.with(|w| w.set(true));
+            // Work-assist: the submitter claims chunks like any helper.
+            loop {
+                let start = sh.next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    f(i);
+                }
+            }
+        }
+        if saw_poison.get() {
+            panic!("WorkPool: a worker panicked while executing a job");
+        }
+    }
+
+    /// Parallel map `0..n -> R`, results written in place to pre-sized
+    /// slots (no mutex, no reordering). Order of `out[i]` matches `i`.
+    pub fn map_collect<R: Send>(
+        &self,
+        n: usize,
+        threads: usize,
+        chunk: usize,
+        f: impl Fn(usize) -> R + Sync,
+    ) -> Vec<R> {
+        if threads <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out: Vec<std::mem::MaybeUninit<R>> = Vec::with_capacity(n);
+        // SAFETY: MaybeUninit needs no initialization; every slot is
+        // written exactly once below before being read.
+        unsafe { out.set_len(n) };
+        struct Slots<R>(*mut std::mem::MaybeUninit<R>);
+        unsafe impl<R: Send> Sync for Slots<R> {}
+        let slots = Slots(out.as_mut_ptr());
+        let slots_ref = &slots;
+        self.run(n, threads, chunk, |i| {
+            let v = f(i);
+            // SAFETY: index claimed exactly once by the work loop.
+            unsafe { (*slots_ref.0.add(i)).write(v) };
+        });
+        // SAFETY: run() returned normally, so all n slots are initialized.
+        // (If it panicked, `out` is dropped as MaybeUninit and the written
+        // elements leak — acceptable on the panic path.)
+        unsafe {
+            let mut out = std::mem::ManuallyDrop::new(out);
+            Vec::from_raw_parts(out.as_mut_ptr() as *mut R, out.len(), out.capacity())
+        }
+    }
+}
+
+impl Default for WorkPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Clears the published job once all helpers have bowed out; runs on the
+/// submitter's normal path and its unwinding path alike.
+struct JobGuard<'a> {
+    sh: &'a Shared,
+    n: usize,
+    saw_poison: &'a Cell<bool>,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        // The submitter is done assisting (run() is only entered with the
+        // flag clear, so clearing unconditionally is correct).
+        IN_POOL_WORKER.with(|w| w.set(false));
+        // Stop further claims (e.g. if the submitter is unwinding).
+        self.sh.next.store(self.n, Ordering::Relaxed);
+        let mut st = self.sh.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.sh.done.wait(st).unwrap();
+        }
+        // Consume this job's poison while the slot is still ours: the
+        // mutex orders the panicking helper's store before our read, and
+        // no other job can have published (and panicked) in between.
+        self.saw_poison.set(self.sh.poisoned.swap(false, Ordering::Relaxed));
+        st.job = None;
+        // Wake any queued submitters waiting for the job slot.
+        self.sh.done.notify_all();
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, id: usize) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    let mut seen = 0u64;
+    let mut st = sh.state.lock().unwrap();
+    loop {
+        while !st.shutdown && !(st.job.is_some() && st.epoch != seen) {
+            st = sh.start.wait(st).unwrap();
+        }
+        if st.shutdown {
+            return;
+        }
+        let job = st.job.expect("job present");
+        seen = st.epoch;
+        if id >= job.helpers {
+            // Not participating in this job; park again.
+            continue;
+        }
+        drop(st);
+        // SAFETY: the submitter keeps the closure alive until `remaining`
+        // reaches zero, which requires this worker's decrement below.
+        let f = unsafe { &*job.f };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let start = sh.next.fetch_add(job.chunk, Ordering::Relaxed);
+            if start >= job.n {
+                break;
+            }
+            for i in start..(start + job.chunk).min(job.n) {
+                f(i);
+            }
+        }));
+        if res.is_err() {
+            sh.poisoned.store(true, Ordering::Relaxed);
+            // Stop the job early; other claimants bail out at once.
+            sh.next.store(job.n, Ordering::Relaxed);
+        }
+        st = sh.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_index_once() {
+        let n = 10_000;
+        let counters: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        WorkPool::global().run(n, 8, 64, |i| {
+            counters[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counters.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_single_thread_and_empty() {
+        let hits = AtomicU64::new(0);
+        WorkPool::global().run(5, 1, 2, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        WorkPool::global().run(0, 4, 2, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn map_collect_preserves_order() {
+        let items: Vec<u64> = (0..5000).collect();
+        let doubled = WorkPool::global().map_collect(items.len(), 8, 64, |i| items[i] * 2);
+        assert_eq!(doubled.len(), items.len());
+        for (i, v) in doubled.iter().enumerate() {
+            assert_eq!(*v, 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn steady_state_spawns_no_threads() {
+        let pool = WorkPool::new();
+        pool.run(1000, 4, 8, |_| {});
+        let after_first = pool.total_spawned();
+        assert!(after_first >= 1, "first job should have grown the pool");
+        for _ in 0..10 {
+            pool.run(1000, 4, 8, |_| {});
+        }
+        assert_eq!(pool.total_spawned(), after_first, "steady-state jobs must not spawn");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkPool::new();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(1000, 4, 1, |i| {
+                if i == 500 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        // The pool must still be usable after a poisoned job.
+        let hits = AtomicU64::new(0);
+        pool.run(100, 4, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn default_threads_positive_and_cached() {
+        assert!(default_threads() >= 1);
+        assert_eq!(default_threads(), default_threads());
+    }
+}

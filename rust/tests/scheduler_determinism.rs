@@ -1,0 +1,106 @@
+//! PR-2 scheduler & arena properties: the persistent work pool and the
+//! dense reservoir-frame arena must be invisible in the output — byte-
+//! identical subgraphs for any thread count, across repeated `generate()`
+//! calls on the reused process pool (arena reuse must not leak state
+//! between waves or runs) — while provably reusing their buffers in
+//! steady state.
+
+use graphgen_plus::engines::{by_name, CollectSink, EngineConfig};
+use graphgen_plus::graph::generator;
+use graphgen_plus::graph::NodeId;
+use graphgen_plus::sampler::FanoutSpec;
+use graphgen_plus::util::workpool::WorkPool;
+
+fn cfg(threads: usize) -> EngineConfig {
+    EngineConfig {
+        workers: 4,
+        threads,
+        wave_size: 32,
+        fanout: FanoutSpec::new(vec![4, 3]),
+        sample_seed: 1234,
+        spill_dir: Some(std::env::temp_dir().join(format!(
+            "gg-sched-{}-{threads}",
+            std::process::id()
+        ))),
+        ..Default::default()
+    }
+}
+
+/// All four engines, threads ∈ {1, 2, 8}, two repetitions each on the
+/// reused global pool: every run must produce byte-identical subgraphs.
+#[test]
+fn engines_are_thread_count_invariant_and_pool_reuse_is_stateless() {
+    let g = generator::from_spec("rmat:n=1024,e=8192", 17).unwrap().csr();
+    let seeds: Vec<NodeId> = (0..96).collect();
+    for engine in ["graphgen+", "graphgen", "agl", "sql-like"] {
+        let mut reference = None;
+        for threads in [1usize, 2, 8] {
+            for rep in 0..2 {
+                let sink = CollectSink::default();
+                by_name(engine)
+                    .unwrap()
+                    .generate(&g, &seeds, &cfg(threads), &sink)
+                    .unwrap();
+                let got = sink.take_sorted();
+                assert_eq!(got.len(), 96, "{engine} t={threads} rep={rep}");
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => assert_eq!(
+                        &got, want,
+                        "{engine} diverged at threads={threads} rep={rep}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Steady-state acceptance: after the first wave, hop rounds reuse the
+/// frame arena (zero fresh reservoir-frame allocations) and the warm
+/// process pool (zero thread spawns on the second run).
+#[test]
+fn steady_state_hop_rounds_reuse_pool_and_arena() {
+    // Dense graph, 4 equal waves — wave 1 establishes the arena
+    // high-water mark, waves 2-4 must run allocation-free.
+    let g = generator::from_spec("rmat:n=2048,e=65536", 3).unwrap().csr();
+    let seeds: Vec<NodeId> = (0..128).collect();
+    let c = cfg(8);
+    let engine = by_name("graphgen+").unwrap();
+    // Run 1 warms the process-wide pool (and proves multi-wave arena
+    // reuse inside a single run).
+    let r1 = engine.generate(&g, &seeds, &c, &CollectSink::default()).unwrap();
+    assert_eq!(
+        r1.scratch.steady_frame_allocs, 0,
+        "post-warm-up waves must not allocate frames: {:?}",
+        r1.scratch
+    );
+    assert!(
+        r1.scratch.frames_reused > r1.scratch.frames_allocated,
+        "most frame acquisitions must hit the pool: {:?}",
+        r1.scratch
+    );
+    // Run 2 on the now-warm pool: zero thread spawns end to end.
+    let r2 = engine.generate(&g, &seeds, &c, &CollectSink::default()).unwrap();
+    assert_eq!(
+        r2.scratch.pool_threads_spawned, 0,
+        "steady-state runs must not spawn threads: {:?}",
+        r2.scratch
+    );
+    assert_eq!(r2.scratch.steady_frame_allocs, 0, "{:?}", r2.scratch);
+}
+
+/// The pool itself: repeated jobs after warm-up never spawn, and results
+/// land in submission order.
+#[test]
+fn pool_reuses_threads_across_jobs() {
+    let pool = WorkPool::new();
+    let first: Vec<u64> = pool.map_collect(4096, 4, 16, |i| i as u64 * 3);
+    let spawned_after_first = pool.total_spawned();
+    assert!(spawned_after_first >= 1);
+    for _ in 0..5 {
+        let again: Vec<u64> = pool.map_collect(4096, 4, 16, |i| i as u64 * 3);
+        assert_eq!(again, first);
+    }
+    assert_eq!(pool.total_spawned(), spawned_after_first);
+    assert!((0..4096).all(|i| first[i] == i as u64 * 3));
+}
