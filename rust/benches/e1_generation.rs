@@ -33,6 +33,9 @@ struct EngineRow {
     cluster_s: f64,
     pool_threads_spawned: u64,
     steady_frame_allocs: u64,
+    overlapped_waves: u64,
+    bubble_s: f64,
+    scan_tasks: [u64; 2],
 }
 
 fn main() {
@@ -79,6 +82,9 @@ fn main() {
         let mut sim = 0.0f64;
         let mut spawned = 0u64;
         let mut steady_allocs = 0u64;
+        let mut overlapped = 0u64;
+        let mut bubble_s = 0.0f64;
+        let mut scan_tasks = [0u64; 2];
         let m = bench.measure(name, None, || {
             let sink = NullSink::default();
             let r = engine.generate(&g, &seeds, &cfg, &sink).unwrap();
@@ -87,6 +93,9 @@ fn main() {
             sim = r.sim(&model).total_secs;
             spawned = r.scratch.pool_threads_spawned;
             steady_allocs = r.scratch.steady_frame_allocs;
+            overlapped = r.wave_pipeline.overlapped_waves;
+            bubble_s = r.wave_pipeline.bubble.as_secs_f64();
+            scan_tasks = r.scratch.scan_tasks;
             r.subgraphs
         });
         rows_out.push(EngineRow {
@@ -97,6 +106,9 @@ fn main() {
             cluster_s: sim,
             pool_threads_spawned: spawned,
             steady_frame_allocs: steady_allocs,
+            overlapped_waves: overlapped,
+            bubble_s,
+            scan_tasks,
         });
     }
     bench.report(Some("sql-like"));
@@ -148,7 +160,11 @@ fn main() {
             .set("nodes_per_sec_cluster", r.nodes as f64 / r.cluster_s)
             .set("shuffle_bytes", r.shuffle_bytes as f64)
             .set("pool_threads_spawned", r.pool_threads_spawned as f64)
-            .set("steady_frame_allocs", r.steady_frame_allocs as f64);
+            .set("steady_frame_allocs", r.steady_frame_allocs as f64)
+            .set("overlapped_waves", r.overlapped_waves as f64)
+            .set("pipeline_bubble_s", r.bubble_s)
+            .set("scan_tasks_h1", r.scan_tasks[0] as f64)
+            .set("scan_tasks_h2", r.scan_tasks[1] as f64);
         engines_json.set(&r.name, o);
     }
     let mut out = Json::obj();

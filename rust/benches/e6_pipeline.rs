@@ -28,10 +28,60 @@ use graphgen_plus::train::trainer::TrainConfig;
 use graphgen_plus::train::ModelRuntime;
 use graphgen_plus::util::bytes::{fmt_count, fmt_secs};
 
+/// Artifact-free fallback: concurrent-vs-sequential *generation* schedule
+/// (wave pipelining on/off) on the same workload — wall, bubble and
+/// overlapped-wave counts into BENCH_e6.json with `"gen_only": true`.
+fn gen_only_trajectory() {
+    use graphgen_plus::engines::NullSink;
+    use graphgen_plus::util::json::Json;
+
+    let fast = std::env::var("GG_BENCH_FAST").is_ok();
+    let (gspec, n_seeds) = if fast {
+        ("planted:n=16384,e=131072,c=8", 4096usize)
+    } else {
+        ("planted:n=65536,e=524288,c=8", 16384usize)
+    };
+    let gen = generator::from_spec(gspec, 6).unwrap();
+    let g = gen.csr();
+    let seeds: Vec<u32> = (0..n_seeds as u32).map(|i| i % g.num_nodes()).collect();
+    let mut modes_json = Json::obj();
+    for (key, pipelined) in [("pipelined", true), ("sequential_schedule", false)] {
+        let ecfg = EngineConfig {
+            workers: 8,
+            wave_size: 1024,
+            fanout: FanoutSpec::new(vec![10, 5]),
+            wave_pipeline: pipelined,
+            ..Default::default()
+        };
+        let sink = NullSink::default();
+        let r = GraphGenPlus.generate(&g, &seeds, &ecfg, &sink).unwrap();
+        println!("{key}: {}", r.render());
+        let mut o = Json::obj();
+        o.set("wall_s", r.wall.as_secs_f64())
+            .set("nodes_per_sec_wall", r.nodes_per_sec())
+            .set("pipeline_bubble_s", r.wave_pipeline.bubble.as_secs_f64())
+            .set("overlapped_waves", r.wave_pipeline.overlapped_waves as f64)
+            .set("waves", r.wave_pipeline.waves as f64);
+        modes_json.set(key, o);
+    }
+    let mut out = Json::obj();
+    out.set("bench", "e6_pipeline").set("gen_only", true).set("modes", modes_json);
+    let path = std::env::var("GG_BENCH_E6_JSON").unwrap_or_else(|_| "BENCH_e6.json".into());
+    match std::fs::write(&path, out.to_pretty()) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("meta.json").exists() {
-        println!("e6_pipeline: skipped (run `make artifacts`)");
+        // No compiled model (CI runs against the xla_shim stub): the full
+        // generation+training comparison is impossible, but the wave
+        // pipeline's overlap win is a pure generation-side quantity —
+        // record that trajectory so BENCH_e6.json exists on every run.
+        println!("e6_pipeline: artifacts missing — recording generation-only overlap trajectory");
+        gen_only_trajectory();
         return;
     }
     let runtime = ModelRuntime::load(artifacts, 2).unwrap();
@@ -69,10 +119,16 @@ fn main() {
     // container serializes everything, so we report both views.
     let model = graphgen_plus::cluster::CostModel::calibrated();
     let mut rows = Vec::new();
-    for (label, engine, mode) in [
-        ("graphgen+ concurrent", &GraphGenPlus as &dyn SubgraphEngine, PipelineMode::Concurrent),
-        ("graphgen+ sequential", &GraphGenPlus, PipelineMode::Sequential),
-        ("graphgen offline (disk)", &GraphGenOffline, PipelineMode::Sequential),
+    let mut modes_json = graphgen_plus::util::json::Json::obj();
+    for (key, label, engine, mode) in [
+        (
+            "concurrent",
+            "graphgen+ concurrent",
+            &GraphGenPlus as &dyn SubgraphEngine,
+            PipelineMode::Concurrent,
+        ),
+        ("sequential", "graphgen+ sequential", &GraphGenPlus, PipelineMode::Sequential),
+        ("offline", "graphgen offline (disk)", &GraphGenOffline, PipelineMode::Sequential),
     ] {
         let r = run_pipeline(&g, &seeds, engine, &ecfg, &features, &runtime, &tcfg, mode).unwrap();
         let gen_sim = r.gen.sim(&model).total_secs;
@@ -95,6 +151,29 @@ fn main() {
                 .unwrap_or_else(|| "0 B".into()),
         ]);
         println!("{label}: {}", r.render());
+        let mut o = graphgen_plus::util::json::Json::obj();
+        o.set("wall_s", r.wall.as_secs_f64())
+            .set("gen_wall_s", r.gen.wall.as_secs_f64())
+            .set("gen_modeled_s", gen_sim)
+            .set("train_s", train_secs)
+            .set("modeled_e2e_s", modeled)
+            .set("final_loss", r.train.final_loss as f64)
+            .set("overlap_ratio", r.overlap_ratio())
+            .set("pipeline_bubble_s", r.bubble.as_secs_f64())
+            .set("overlapped_waves", r.gen.wave_pipeline.overlapped_waves as f64)
+            .set("warmed_waves", r.warmed_waves as f64);
+        modes_json.set(key, o);
+    }
+    // Machine-readable trajectory (BENCH_e6.json): lets CI watch the
+    // concurrent-vs-sequential gap and the pipeline bubble across PRs.
+    let mut out = graphgen_plus::util::json::Json::obj();
+    out.set("bench", "e6_pipeline")
+        .set("replicas", replicas as f64)
+        .set("modes", modes_json);
+    let path = std::env::var("GG_BENCH_E6_JSON").unwrap_or_else(|_| "BENCH_e6.json".into());
+    match std::fs::write(&path, out.to_pretty()) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  failed to write {path}: {e}"),
     }
     println!(
         "\n{}",

@@ -366,4 +366,36 @@ fn main() {
         fmt_secs(naive_total / num_batches as f64),
         format!("{:.1}", naive_total / cached_prefetch_total.max(1e-12)),
     );
+
+    // --- machine-readable trajectory (BENCH_e7.json) ---------------------
+    use graphgen_plus::util::json::Json;
+    let mut variants = Json::obj();
+    for (name, wall, modeled, fetch, bytes, msgs) in &rows {
+        let (w, m) = per_batch(*wall, *modeled);
+        let mut o = Json::obj();
+        o.set("wall_per_batch_s", w)
+            .set("net_per_batch_s", m)
+            .set("total_per_batch_s", w + m)
+            .set("remote_bytes_epoch", *bytes as f64)
+            .set("remote_msgs_epoch", *msgs as f64)
+            .set("cache_hit_rate", fetch.cache_hit_rate())
+            .set("dedup_factor", fetch.dedup_factor());
+        variants.set(name, o);
+    }
+    let mut out = Json::obj();
+    out.set("bench", "e7_featurestore")
+        .set("batches", num_batches as f64)
+        .set("batch_size", spec.batch as f64)
+        .set("dim", spec.dim as f64)
+        .set("partitions", partitions as f64)
+        .set(
+            "naive_vs_cached_prefetch_speedup",
+            naive_total / cached_prefetch_total.max(1e-12),
+        )
+        .set("variants", variants);
+    let path = std::env::var("GG_BENCH_E7_JSON").unwrap_or_else(|_| "BENCH_e7.json".into());
+    match std::fs::write(&path, out.to_pretty()) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  failed to write {path}: {e}"),
+    }
 }

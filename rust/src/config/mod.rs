@@ -49,6 +49,9 @@ pub struct RunConfig {
     pub feature_cache_mb: usize,
     /// Overlap feature gather for batch t+1 with training on batch t.
     pub feature_prefetch: bool,
+    /// Overlap hop-1 of wave w+1 with reduce/emit of wave w (byte-identical
+    /// output; scheduling only).
+    pub wave_pipeline: bool,
 }
 
 impl Default for RunConfig {
@@ -76,6 +79,7 @@ impl Default for RunConfig {
             feature_backend: "procedural".into(),
             feature_cache_mb: 0,
             feature_prefetch: false,
+            wave_pipeline: true,
         }
     }
 }
@@ -131,6 +135,7 @@ impl RunConfig {
             "feature_backend" => self.feature_backend = value.into(),
             "feature_cache_mb" => self.feature_cache_mb = p(value, key)?,
             "feature_prefetch" => self.feature_prefetch = p(value, key)?,
+            "wave_pipeline" => self.wave_pipeline = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -155,6 +160,7 @@ impl RunConfig {
             reduce,
             spill_dir: None,
             spill_compress: false,
+            wave_pipeline: self.wave_pipeline,
         })
     }
 
@@ -196,7 +202,8 @@ impl RunConfig {
             .set("feature_seed", self.feature_seed)
             .set("feature_backend", self.feature_backend.clone())
             .set("feature_cache_mb", self.feature_cache_mb)
-            .set("feature_prefetch", self.feature_prefetch);
+            .set("feature_prefetch", self.feature_prefetch)
+            .set("wave_pipeline", self.wave_pipeline);
         o
     }
 }

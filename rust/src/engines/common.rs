@@ -38,10 +38,12 @@ use crate::mapreduce::{flat_reduce, tree_reduce_with_fabric};
 use crate::sampler::inverted::InvertedIndex;
 use crate::sampler::reservoir::TopK;
 use crate::sampler::Subgraph;
+use crate::util::timer::PhaseTimer;
 use crate::util::workpool::WorkPool;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::{EngineConfig, ReduceTopology};
 
@@ -260,50 +262,105 @@ impl Frame {
     }
 }
 
+/// Freelist shard count: a small power of two comfortably above the
+/// thread counts this testbed runs, so each claimant usually owns a shard.
+const FRAME_SHARDS: usize = 16;
+
 /// Pool of reusable [`Frame`]s shared by the scan tasks and the reduce
-/// tree of one engine run. `Sync`: acquisition is a mutex pop (cold path
-/// only allocates), so parallel scan tasks draw from it directly.
-#[derive(Debug, Default)]
+/// tree of one engine run. The freelist is sharded by
+/// [`worker_slot`](crate::util::workpool::worker_slot): each thread pushes
+/// and pops its own shard, so the steady-state acquire path is an
+/// uncontended lock — the cross-thread mutex pop is gone. A thread whose
+/// shard is empty steals from the others before allocating, which keeps
+/// the `steady_frame_allocs` zero-allocation invariant intact.
+#[derive(Debug)]
 pub struct FrameArena {
-    pool: Mutex<Vec<Frame>>,
+    shards: Vec<Mutex<Vec<Frame>>>,
+    /// Shard of the most recent release — where a stealing acquirer looks
+    /// first, so releases that concentrate on one thread (e.g. the
+    /// submitter folding a flat reduce) don't force full shard walks.
+    last_release: AtomicUsize,
     allocated: AtomicU64,
     reused: AtomicU64,
     steady_allocs: AtomicU64,
     warm: AtomicBool,
 }
 
-impl FrameArena {
-    /// Take a cleared frame (pooled if available, fresh otherwise).
-    pub fn acquire(&self) -> Frame {
-        if let Some(mut f) = self.pool.lock().unwrap().pop() {
-            f.clear();
-            self.reused.fetch_add(1, Ordering::Relaxed);
-            f
-        } else {
-            self.allocated.fetch_add(1, Ordering::Relaxed);
-            if self.warm.load(Ordering::Relaxed) {
-                self.steady_allocs.fetch_add(1, Ordering::Relaxed);
-            }
-            Frame::new()
+impl Default for FrameArena {
+    fn default() -> Self {
+        Self {
+            shards: (0..FRAME_SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+            last_release: AtomicUsize::new(0),
+            allocated: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+            steady_allocs: AtomicU64::new(0),
+            warm: AtomicBool::new(false),
         }
     }
+}
 
-    /// Return a frame (and its reservoir buffers) to the pool.
+impl FrameArena {
+    #[inline]
+    fn home(&self) -> usize {
+        crate::util::workpool::worker_slot() % self.shards.len()
+    }
+
+    /// Take a cleared frame: own shard first, then the last-release shard,
+    /// then the remaining shards; allocate last.
+    pub fn acquire(&self) -> Frame {
+        let n = self.shards.len();
+        let home = self.home();
+        let hint = self.last_release.load(Ordering::Relaxed) % n;
+        let probe = |s: usize| -> Option<Frame> { self.shards[s].lock().unwrap().pop() };
+        let mut found = probe(home);
+        if found.is_none() && hint != home {
+            found = probe(hint);
+        }
+        if found.is_none() {
+            for i in 1..n {
+                let s = (home + i) % n;
+                if s == hint {
+                    continue;
+                }
+                found = probe(s);
+                if found.is_some() {
+                    break;
+                }
+            }
+        }
+        if let Some(mut f) = found {
+            f.clear();
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return f;
+        }
+        self.allocated.fetch_add(1, Ordering::Relaxed);
+        if self.warm.load(Ordering::Relaxed) {
+            self.steady_allocs.fetch_add(1, Ordering::Relaxed);
+        }
+        Frame::new()
+    }
+
+    /// Return a frame (and its reservoir buffers) to the caller's shard.
     pub fn release(&self, f: Frame) {
-        self.pool.lock().unwrap().push(f);
+        let s = self.home();
+        self.shards[s].lock().unwrap().push(f);
+        self.last_release.store(s, Ordering::Relaxed);
     }
 
     /// Declare warm-up over: later `acquire` misses count as steady-state
-    /// allocations. `slack` extra frames are stocked to absorb ±1 jitter
-    /// in the per-wave task count.
+    /// allocations. `slack` extra frames are stocked (spread across the
+    /// shards) to absorb ±1 jitter in the per-wave task count. Stocking
+    /// happens before the flag flips so a racing `acquire` can never see
+    /// warm-but-unstocked.
     pub fn mark_warm(&self, slack: usize) {
-        if !self.warm.swap(true, Ordering::Relaxed) {
-            let mut pool = self.pool.lock().unwrap();
-            for _ in 0..slack {
-                pool.push(Frame::new());
-                self.allocated.fetch_add(1, Ordering::Relaxed);
-            }
+        if self.warm.load(Ordering::Relaxed) {
+            return;
         }
+        for i in 0..slack {
+            self.shards[i % self.shards.len()].lock().unwrap().push(Frame::new());
+            self.allocated.fetch_add(1, Ordering::Relaxed);
+        }
+        self.warm.store(true, Ordering::Relaxed);
     }
 }
 
@@ -322,6 +379,75 @@ pub struct ScratchStats {
     /// OS threads the persistent work pool spawned during this run — 0
     /// once the process-wide pool is warm.
     pub pool_threads_spawned: u64,
+    /// Scan-task count the adaptive sizer chose for the last hop-1/hop-2
+    /// round (0 = that hop never ran a sized round).
+    pub scan_tasks: [u64; 2],
+    /// EWMA per-task cost estimate per hop, nanoseconds.
+    pub task_ewma_ns: [u64; 2],
+}
+
+/// Adaptive scan-task sizing: derives the number of edge-balanced scan
+/// tasks for the next round of a hop from the measured per-task wall time
+/// of that hop's earlier rounds (EWMA), instead of the fixed
+/// `4×(workers|threads)` multiple. Small waves stop over-splitting (task
+/// dispatch overhead dominates sub-~100 µs tasks) while the fixed multiple
+/// remains the **ceiling**, so a warm [`FrameArena`]'s high-water mark is
+/// never exceeded and the steady-state zero-allocation invariant holds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TaskSizer {
+    /// EWMA of one task's estimated CPU time, ns.
+    ewma_task_ns: f64,
+    /// Tasks used by the last recorded round.
+    last_tasks: u64,
+    rounds: u64,
+}
+
+impl TaskSizer {
+    /// Target per-task CPU time: long enough to amortize claim/dispatch
+    /// overhead, short enough to pack threads without straggler tails.
+    const TARGET_TASK_NS: f64 = 120_000.0;
+    const ALPHA: f64 = 0.4;
+
+    /// Tasks to use for the next round of this hop.
+    pub fn num_tasks(&self, cfg: &EngineConfig) -> usize {
+        let base = (cfg.workers * 4).max(cfg.threads * 4);
+        if self.rounds == 0 || self.ewma_task_ns <= 0.0 {
+            return base;
+        }
+        // Re-split the last round's estimated total cost into target-sized
+        // tasks; never drop below one task per worker/thread and never
+        // rise above the warm-up multiple (frame-arena high-water mark).
+        // The count is rounded up to a power of two so the choice is
+        // insensitive to sub-2× timing noise — runs on the same workload
+        // settle on the same task count, keeping the task-count-dependent
+        // parts of the simulated accounting (merge fan-in, reduce-tree
+        // fabric bytes) stable in practice.
+        let total_ns = self.ewma_task_ns * self.last_tasks as f64;
+        let want = (total_ns / Self::TARGET_TASK_NS).ceil() as usize;
+        want.next_power_of_two().clamp(cfg.workers.max(cfg.threads), base)
+    }
+
+    /// Record a finished round: `tasks` ran for `cpu` in total (the sum of
+    /// per-task times measured *inside* the job, so pool queueing and
+    /// other jobs' runtime never pollute the estimate).
+    pub fn record(&mut self, tasks: usize, cpu: std::time::Duration) {
+        if tasks == 0 {
+            return;
+        }
+        let per = cpu.as_nanos() as f64 / tasks as f64;
+        self.ewma_task_ns = if self.rounds == 0 {
+            per
+        } else {
+            Self::ALPHA * per + (1.0 - Self::ALPHA) * self.ewma_task_ns
+        };
+        self.last_tasks = tasks as u64;
+        self.rounds += 1;
+    }
+
+    /// `(last task count, EWMA per-task ns)` for reports.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.last_tasks, self.ewma_task_ns as u64)
+    }
 }
 
 /// Per-run scratch state threaded through every hop round: all buffers
@@ -344,6 +470,8 @@ pub struct ScratchArena {
     pub nodes: Vec<NodeId>,
     /// Reservoir frame pool.
     pub frames: FrameArena,
+    /// Adaptive scan-task sizers, one per hop (edge-centric engines).
+    pub sizers: [TaskSizer; 2],
 }
 
 impl ScratchArena {
@@ -357,11 +485,15 @@ impl ScratchArena {
 
     /// Snapshot the run's reuse counters.
     pub fn stats(&self, pool_threads_spawned: u64) -> ScratchStats {
+        let (t1, e1) = self.sizers[0].snapshot();
+        let (t2, e2) = self.sizers[1].snapshot();
         ScratchStats {
             frames_allocated: self.frames.allocated.load(Ordering::Relaxed),
             frames_reused: self.frames.reused.load(Ordering::Relaxed),
             steady_frame_allocs: self.frames.steady_allocs.load(Ordering::Relaxed),
             pool_threads_spawned,
+            scan_tasks: [t1, t2],
+            task_ewma_ns: [e1, e2],
         }
     }
 }
@@ -610,18 +742,26 @@ pub fn edge_centric_hop(
         return;
     }
     scratch.index.rebuild(&scratch.frontier);
-    // Scan tasks play the role of the simulated workers' map tasks: use
-    // a multiple of the cluster width so each worker gets several, and at
-    // least a few per OS thread for stragglerless packing.
-    let num_tasks = (cfg.workers * 4).max(cfg.threads * 4);
+    // Scan tasks play the role of the simulated workers' map tasks. Their
+    // count is chosen by the per-hop adaptive sizer: warm-up rounds use a
+    // multiple of the cluster width / thread count, later rounds re-split
+    // the measured cost into target-sized tasks (never above the warm-up
+    // multiple — the frame arena's high-water mark).
+    let hop_idx = (hop - 1) as usize;
+    let num_tasks = scratch.sizers[hop_idx].num_tasks(cfg);
     fill_scan_tasks(g, scratch.index.nodes(), num_tasks, &mut scratch.chunks, &mut scratch.tasks);
     // --- map phase (persistent pool, results into pre-sized slots) ------
     let scan_phase = format!("hop{hop}.scan");
     let (index, chunks, tasks, frames) =
         (&scratch.index, &scratch.chunks, &scratch.tasks, &scratch.frames);
     let seeds = slots.seeds;
-    let results: Vec<(Frame, u64)> =
-        WorkPool::global().map_collect(tasks.len(), cfg.threads, 1, |t| {
+    let ntasks = tasks.len();
+    let results: Vec<(Frame, u64, Duration)> =
+        WorkPool::global().map_collect(ntasks, cfg.threads, 1, |t| {
+            // Per-task clock, started inside the job: the sizer must see
+            // task cost, not time spent queued behind another job on the
+            // single-slot pool (the pipelined schedule queues routinely).
+            let t0 = Instant::now();
             let (lo, hi) = tasks[t];
             let mut frame = frames.acquire();
             let scanned = scan_task(
@@ -634,17 +774,32 @@ pub fn edge_centric_hop(
                 seeds,
                 &mut frame,
             );
-            (frame, scanned)
+            (frame, scanned, t0.elapsed())
         });
+    // Ledger: the map work is edge-balanced across the simulated cluster
+    // regardless of how many OS-level tasks carried it — charge it evenly
+    // so the scan phase's modeled time is a pure function of config +
+    // input. (Downstream, the merge fan-in and reduce-tree fabric charges
+    // still see the partial-frame count; the sizer's power-of-two
+    // quantization keeps that count stable across runs in practice.)
     let mut partials = Vec::with_capacity(results.len());
-    for (t, (frame, scanned)) in results.into_iter().enumerate() {
-        ledger.charge(
-            &scan_phase,
-            t % cfg.workers,
-            WorkUnits { scan_edge_entries: scanned, ..Default::default() },
-        );
+    let mut total_scanned = 0u64;
+    let mut scan_cpu = Duration::ZERO;
+    for (frame, scanned, took) in results {
+        total_scanned += scanned;
+        scan_cpu += took;
         partials.push(frame);
     }
+    let w = cfg.workers as u64;
+    for worker in 0..cfg.workers {
+        let share = total_scanned / w + u64::from((worker as u64) < total_scanned % w);
+        ledger.charge(
+            &scan_phase,
+            worker,
+            WorkUnits { scan_edge_entries: share, ..Default::default() },
+        );
+    }
+    scratch.sizers[hop_idx].record(ntasks, scan_cpu);
     // --- reduce phase (tree or flat) ---
     let merge_phase = format!("hop{hop}.merge");
     ledger_merge(
@@ -743,6 +898,207 @@ pub fn assign_hop(
         for (slot, h1) in slots.hop1.iter().enumerate() {
             slots.hop2[slot].resize(h1.len(), Vec::new());
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Double-buffered wave pipeline
+// ---------------------------------------------------------------------------
+
+/// Counters of the wave pipeline (exposed in
+/// [`GenReport`](super::GenReport) and surfaced as the pipeline bubble in
+/// [`PipelineReport`](crate::pipeline::PipelineReport)).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WavePipelineStats {
+    /// Waves processed by the run.
+    pub waves: u64,
+    /// Waves whose hop-1 scan was prefetched while the previous wave was
+    /// still reducing/emitting.
+    pub overlapped_waves: u64,
+    /// Wall time the wave loop spent waiting for a prefetched hop-1 that
+    /// was not ready yet — the pipeline bubble. 0 = fully hidden.
+    pub bubble: std::time::Duration,
+}
+
+/// One engine hop round: fills `hop` of `slots`, drawing all transient
+/// state from `scratch`. Every engine's hop implementation has this exact
+/// shape, which is what lets one wave driver pipeline all four.
+pub type HopFn = for<'a> fn(
+    &Csr,
+    &mut WaveSlots<'a>,
+    u32,
+    &EngineConfig,
+    &Fabric,
+    &mut WorkLedger,
+    &mut ScratchArena,
+);
+
+/// Two [`ScratchArena`] lanes plus the shared per-wave loop of all four
+/// engines. With [`EngineConfig::wave_pipeline`] enabled, the hop-1 scan
+/// of wave *w+1* runs on a helper thread (lane B) while the current wave's
+/// hop-2/reduce/emit drain on the caller's thread (lane A); the lanes swap
+/// every wave. The schedule is a pure reordering: every hop consumes
+/// exactly the inputs it would see sequentially (hop 1 depends only on the
+/// balance table), reservoirs are a pure function of the candidate
+/// multiset, and waves emit in order from the caller's thread — so the
+/// produced subgraph bytes are **identical** to the sequential schedule
+/// (the determinism barrier asserted by `tests/pipeline_overlap.rs`).
+#[derive(Debug, Default)]
+pub struct WaveLanes {
+    lanes: [ScratchArena; 2],
+    /// Pipeline counters accumulated across `run` calls.
+    pub stats: WavePipelineStats,
+}
+
+impl WaveLanes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Aggregate scratch counters over both lanes (sizer snapshot comes
+    /// from lane 0, which runs the most rounds).
+    pub fn scratch_stats(&self, pool_threads_spawned: u64) -> ScratchStats {
+        let a = self.lanes[0].stats(pool_threads_spawned);
+        let b = self.lanes[1].stats(0);
+        ScratchStats {
+            frames_allocated: a.frames_allocated + b.frames_allocated,
+            frames_reused: a.frames_reused + b.frames_reused,
+            steady_frame_allocs: a.steady_frame_allocs + b.steady_frame_allocs,
+            pool_threads_spawned,
+            scan_tasks: a.scan_tasks,
+            task_ewma_ns: a.task_ewma_ns,
+        }
+    }
+
+    /// Run every wave of `table`: all hops via `hop`, then `emit` with the
+    /// finished [`WaveSlots`] (called in wave order on this thread).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run<'t>(
+        &mut self,
+        g: &Csr,
+        table: &'t BalanceTable,
+        waves: &[std::ops::Range<usize>],
+        cfg: &EngineConfig,
+        fabric: &Fabric,
+        ledger: &mut WorkLedger,
+        phases: &mut PhaseTimer,
+        hop: HopFn,
+        mut emit: impl FnMut(&mut PhaseTimer, &mut WorkLedger, WaveSlots<'t>) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        let hops = cfg.fanout.hops() as u32;
+        self.stats.waves += waves.len() as u64;
+        if !cfg.wave_pipeline || waves.len() < 2 {
+            // Sequential schedule: one lane, hops back to back.
+            let lane = &mut self.lanes[0];
+            for (wi, wave) in waves.iter().enumerate() {
+                let mut slots = WaveSlots::new(
+                    &table.seeds[wave.clone()],
+                    &table.worker_of[wave.clone()],
+                );
+                for h in 1..=hops {
+                    phases.time(&format!("hop{h}"), || {
+                        hop(g, &mut slots, h, cfg, fabric, ledger, lane)
+                    });
+                }
+                emit(&mut *phases, &mut *ledger, slots)?;
+                if wi == 0 {
+                    lane.mark_warm();
+                }
+            }
+            return Ok(());
+        }
+        // --- pipelined schedule -------------------------------------------
+        let [mut lane_a, lane_b] = std::mem::take(&mut self.lanes);
+        let mut bubble = Duration::ZERO;
+        let mut overlapped = 0u64;
+        let outcome = std::thread::scope(
+            |s| -> anyhow::Result<(WorkLedger, PhaseTimer, Vec<ScratchArena>)> {
+                let (req_tx, req_rx) =
+                    mpsc::channel::<(std::ops::Range<usize>, ScratchArena)>();
+                let (res_tx, res_rx) = mpsc::channel::<(WaveSlots<'t>, ScratchArena)>();
+                // Long-lived look-ahead worker: one spawn per run, not per
+                // wave. It owns its own ledger/timer; both merge back after
+                // the loop (ledger charges are commutative sums, so the
+                // merged totals equal the sequential schedule's).
+                let helper = s.spawn(move || {
+                    let mut hledger = WorkLedger::new(cfg.workers);
+                    let mut hphases = PhaseTimer::new();
+                    while let Ok((range, mut lane)) = req_rx.recv() {
+                        let mut slots = WaveSlots::new(
+                            &table.seeds[range.clone()],
+                            &table.worker_of[range],
+                        );
+                        hphases.time("hop1", || {
+                            hop(g, &mut slots, 1, cfg, fabric, &mut hledger, &mut lane)
+                        });
+                        if res_tx.send((slots, lane)).is_err() {
+                            break;
+                        }
+                    }
+                    (hledger, hphases)
+                });
+                // Wave 0's hop-1 runs inline; wave 1 prefetches at once.
+                let mut slots0 = WaveSlots::new(
+                    &table.seeds[waves[0].clone()],
+                    &table.worker_of[waves[0].clone()],
+                );
+                phases.time("hop1", || {
+                    hop(g, &mut slots0, 1, cfg, fabric, ledger, &mut lane_a)
+                });
+                req_tx
+                    .send((waves[1].clone(), lane_b))
+                    .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
+                let mut cur = Some((slots0, lane_a));
+                let mut parked: Vec<ScratchArena> = Vec::with_capacity(2);
+                for wi in 0..waves.len() {
+                    let (mut slots, mut lane) = cur.take().expect("current wave in hand");
+                    for h in 2..=hops {
+                        phases.time(&format!("hop{h}"), || {
+                            hop(g, &mut slots, h, cfg, fabric, ledger, &mut lane)
+                        });
+                    }
+                    // Each lane warms after its own first full wave
+                    // (wave 0 = lane A, wave 1 = lane B).
+                    if wi < 2 {
+                        lane.mark_warm();
+                    }
+                    // The lane is free as soon as its hops are done: hand
+                    // it to the prefetcher *before* emitting, so
+                    // hop-1(w+2) also overlaps the emit.
+                    if wi + 2 < waves.len() {
+                        req_tx
+                            .send((waves[wi + 2].clone(), lane))
+                            .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
+                    } else {
+                        parked.push(lane);
+                    }
+                    emit(&mut *phases, &mut *ledger, slots)?;
+                    if wi + 1 < waves.len() {
+                        let wait = Instant::now();
+                        let next = res_rx
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
+                        bubble += wait.elapsed();
+                        overlapped += 1;
+                        cur = Some(next);
+                    }
+                }
+                drop(req_tx);
+                let (hledger, hphases) = helper
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("wave prefetcher panicked"))?;
+                Ok((hledger, hphases, parked))
+            },
+        );
+        let (hledger, hphases, mut parked) = outcome?;
+        ledger.merge(&hledger);
+        phases.merge(&hphases);
+        let l1 = parked.pop().unwrap_or_default();
+        let l0 = parked.pop().unwrap_or_default();
+        self.lanes = [l0, l1];
+        self.stats.bubble += bubble;
+        self.stats.overlapped_waves += overlapped;
+        Ok(())
     }
 }
 

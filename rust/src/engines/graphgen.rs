@@ -18,7 +18,7 @@ use crate::graph::NodeId;
 use crate::storage::SpillStore;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
-use super::common::{edge_centric_hop, plan_waves, ScratchArena, WaveSlots};
+use super::common::{edge_centric_hop, plan_waves, WaveLanes};
 use super::{EngineConfig, GenReport, ReduceTopology, SubgraphEngine, SubgraphSink};
 use crate::util::workpool::WorkPool;
 
@@ -52,44 +52,41 @@ impl SubgraphEngine for GraphGenOffline {
 
         let pool = WorkPool::global();
         let spawned0 = pool.total_spawned();
-        let mut scratch = ScratchArena::default();
+        let mut lanes = WaveLanes::new();
         let (table, waves) = phases.time("map.balance", || plan_waves(seeds, &cfg));
         let mut subgraphs = 0u64;
         let mut sampled_nodes = 0u64;
-        for (wi, wave) in waves.into_iter().enumerate() {
-            // Borrow the wave's slice of the balance table — no copies.
-            let mut slots =
-                WaveSlots::new(&table.seeds[wave.clone()], &table.worker_of[wave]);
-            for hop in 1..=cfg.fanout.hops() as u32 {
-                phases.time(&format!("hop{hop}"), || {
-                    edge_centric_hop(
-                        graph, &mut slots, hop, &cfg, &fabric, &mut ledger, &mut scratch,
-                    )
-                });
-            }
-            // Offline: subgraphs go to DISK, not to the consumer.
-            phases.time("spill.write", || -> anyhow::Result<()> {
-                for (worker, sg) in slots.into_subgraphs() {
-                    subgraphs += 1;
-                    sampled_nodes += sg.num_nodes();
-                    // Each worker writes (and training later reads) its
-                    // own subgraphs: disk bytes ×2 for the round trip.
-                    ledger.charge(
-                        "spill",
-                        worker as usize,
-                        crate::cluster::WorkUnits {
-                            disk_bytes: 2 * sg.encoded_len() as u64,
-                            ..Default::default()
-                        },
-                    );
-                    store.write(&sg)?;
-                }
-                Ok(())
-            })?;
-            if wi == 0 {
-                scratch.mark_warm();
-            }
-        }
+        lanes.run(
+            graph,
+            &table,
+            &waves,
+            &cfg,
+            &fabric,
+            &mut ledger,
+            &mut phases,
+            edge_centric_hop,
+            |phases, ledger, slots| {
+                // Offline: subgraphs go to DISK, not to the consumer.
+                phases.time("spill.write", || -> anyhow::Result<()> {
+                    for (worker, sg) in slots.into_subgraphs() {
+                        subgraphs += 1;
+                        sampled_nodes += sg.num_nodes();
+                        // Each worker writes (and training later reads) its
+                        // own subgraphs: disk bytes ×2 for the round trip.
+                        ledger.charge(
+                            "spill",
+                            worker as usize,
+                            crate::cluster::WorkUnits {
+                                disk_bytes: 2 * sg.encoded_len() as u64,
+                                ..Default::default()
+                            },
+                        );
+                        store.write(&sg)?;
+                    }
+                    Ok(())
+                })
+            },
+        )?;
         phases.time("spill.write", || store.finish_writes())?;
         // Training-time read-back: decode every subgraph from disk and
         // deliver it (worker = contiguous block position, as generated).
@@ -115,7 +112,8 @@ impl SubgraphEngine for GraphGenOffline {
             spill: Some(spill_report),
             discarded_seeds: table.discarded.len() as u64,
             ledger,
-            scratch: scratch.stats(pool.total_spawned() - spawned0),
+            scratch: lanes.scratch_stats(pool.total_spawned() - spawned0),
+            wave_pipeline: lanes.stats,
         })
     }
 }

@@ -38,6 +38,19 @@ use crate::util::timer::PhaseTimer;
 pub trait SubgraphSink: Sync {
     /// Accept a completed subgraph generated on `worker`.
     fn accept(&self, worker: usize, sg: Subgraph) -> anyhow::Result<()>;
+
+    /// Whether this sink wants [`wave_complete`](Self::wave_complete)
+    /// notifications (computing a wave's unique-node set costs a sort, so
+    /// engines skip it for sinks that don't care).
+    fn wants_waves(&self) -> bool {
+        false
+    }
+
+    /// Called once per completed wave, before its subgraphs are accepted,
+    /// with the wave's sorted unique node ids
+    /// ([`common::WaveSlots::unique_nodes`]) — the hook the pipeline uses
+    /// to warm the feature cache a whole wave ahead of training.
+    fn wave_complete(&self, _nodes: &[NodeId]) {}
 }
 
 /// Collects into a mutex-guarded vector (tests, small runs).
@@ -106,6 +119,10 @@ pub struct EngineConfig {
     pub spill_dir: Option<std::path::PathBuf>,
     /// Compress spill shards.
     pub spill_compress: bool,
+    /// Overlap hop-1 of wave *w+1* with hop-2/reduce/emit of wave *w*
+    /// (double-buffered scratch lanes). Output bytes are identical either
+    /// way — this only reorders the schedule; see [`common::WaveLanes`].
+    pub wave_pipeline: bool,
 }
 
 impl Default for EngineConfig {
@@ -120,6 +137,7 @@ impl Default for EngineConfig {
             reduce: ReduceTopology::Tree { arity: 4 },
             spill_dir: None,
             spill_compress: false,
+            wave_pipeline: true,
         }
     }
 }
@@ -142,6 +160,9 @@ pub struct GenReport {
     /// Scratch-arena / work-pool reuse counters: steady-state hop rounds
     /// must show zero thread spawns and zero fresh frame allocations.
     pub scratch: common::ScratchStats,
+    /// Wave-pipeline counters: overlapped waves and the bubble (time the
+    /// wave loop stalled waiting for a prefetched hop-1).
+    pub wave_pipeline: common::WavePipelineStats,
 }
 
 impl GenReport {
@@ -179,6 +200,14 @@ impl GenReport {
                 fmt_bytes(sp.disk_bytes),
                 fmt_secs(sp.write_time.as_secs_f64()),
                 fmt_secs(sp.read_time.as_secs_f64()),
+            ));
+        }
+        if self.wave_pipeline.overlapped_waves > 0 {
+            s.push_str(&format!(
+                " overlap={}/{} bubble={}",
+                self.wave_pipeline.overlapped_waves,
+                self.wave_pipeline.waves,
+                fmt_secs(self.wave_pipeline.bubble.as_secs_f64()),
             ));
         }
         s

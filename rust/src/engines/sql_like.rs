@@ -31,7 +31,7 @@ use crate::graph::NodeId;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 use crate::util::workpool::WorkPool;
 
-use super::common::{plan_waves, ScanChunk, ScratchArena, WaveSlots};
+use super::common::{plan_waves, ScanChunk, ScratchArena, WaveLanes, WaveSlots};
 use super::{EngineConfig, GenReport, SubgraphEngine, SubgraphSink};
 
 /// One materialized join-output row (what a SQL engine would shuffle).
@@ -66,30 +66,34 @@ impl SubgraphEngine for SqlLike {
         let mut ledger = crate::cluster::WorkLedger::new(cfg.workers);
         let pool = WorkPool::global();
         let spawned0 = pool.total_spawned();
-        let mut scratch = ScratchArena::default();
+        let mut lanes = WaveLanes::new();
         let (table, waves) = phases.time("map.balance", || plan_waves(seeds, cfg));
         let mut subgraphs = 0u64;
         let mut sampled_nodes = 0u64;
-        for (wi, wave) in waves.into_iter().enumerate() {
-            let mut slots =
-                WaveSlots::new(&table.seeds[wave.clone()], &table.worker_of[wave]);
-            for hop in 1..=cfg.fanout.hops() as u32 {
-                phases.time(&format!("hop{hop}"), || {
-                    sql_hop(graph, &mut slots, hop, cfg, &fabric, &mut ledger, &mut scratch)
-                });
-            }
-            phases.time("emit", || -> anyhow::Result<()> {
-                for (worker, sg) in slots.into_subgraphs() {
-                    subgraphs += 1;
-                    sampled_nodes += sg.num_nodes();
-                    sink.accept(worker as usize, sg)?;
+        let want_waves = sink.wants_waves();
+        lanes.run(
+            graph,
+            &table,
+            &waves,
+            cfg,
+            &fabric,
+            &mut ledger,
+            &mut phases,
+            sql_hop,
+            |phases, _ledger, slots| {
+                if want_waves {
+                    sink.wave_complete(&slots.unique_nodes());
                 }
-                Ok(())
-            })?;
-            if wi == 0 {
-                scratch.mark_warm();
-            }
-        }
+                phases.time("emit", || -> anyhow::Result<()> {
+                    for (worker, sg) in slots.into_subgraphs() {
+                        subgraphs += 1;
+                        sampled_nodes += sg.num_nodes();
+                        sink.accept(worker as usize, sg)?;
+                    }
+                    Ok(())
+                })
+            },
+        )?;
         Ok(GenReport {
             engine: self.name(),
             subgraphs,
@@ -100,7 +104,8 @@ impl SubgraphEngine for SqlLike {
             spill: None,
             discarded_seeds: table.discarded.len() as u64,
             ledger,
-            scratch: scratch.stats(pool.total_spawned() - spawned0),
+            scratch: lanes.scratch_stats(pool.total_spawned() - spawned0),
+            wave_pipeline: lanes.stats,
         })
     }
 }

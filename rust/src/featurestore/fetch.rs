@@ -135,7 +135,17 @@ pub fn plan(ids: &[NodeId], requester: u32, backend: &dyn FeatureBackend) -> Fet
 /// Every node id a batch's tensor layout will touch, duplicates included,
 /// truncated exactly as batch assembly truncates (`f1`/`f2` per hop).
 pub fn batch_ids(spec: ModelSpec, subgraphs: &[Subgraph]) -> Vec<NodeId> {
-    let mut ids = Vec::with_capacity(subgraphs.len() * (1 + spec.f1 + spec.f1 * spec.f2));
+    let mut ids = Vec::new();
+    batch_ids_into(spec, subgraphs, &mut ids);
+    ids
+}
+
+/// [`batch_ids`] into a reusable buffer (cleared first) — the
+/// zero-allocation path used with pooled id scratch
+/// ([`crate::train::batch::BatchArena::acquire_ids`]).
+pub fn batch_ids_into(spec: ModelSpec, subgraphs: &[Subgraph], ids: &mut Vec<NodeId>) {
+    ids.clear();
+    ids.reserve(subgraphs.len() * (1 + spec.f1 + spec.f1 * spec.f2));
     for sg in subgraphs {
         ids.push(sg.seed);
         for (i, &v) in sg.hop1.iter().take(spec.f1).enumerate() {
@@ -145,7 +155,6 @@ pub fn batch_ids(spec: ModelSpec, subgraphs: &[Subgraph]) -> Vec<NodeId> {
             }
         }
     }
-    ids
 }
 
 /// Gathered feature frame: each unique node's row and label, with an

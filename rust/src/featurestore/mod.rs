@@ -36,7 +36,7 @@ pub mod sharded;
 
 pub use cache::{CacheStats, HotCache};
 pub use fetch::{FetchPlan, FetchStats, Gathered};
-pub use prefetch::{spawn_prefetcher, BatchFeed};
+pub use prefetch::{spawn_prefetcher, BatchFeed, WaveWarmer};
 pub use sharded::ShardedStore;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -184,6 +184,8 @@ pub struct FeatureService {
     cache: Option<Mutex<HotCache>>,
     fabric: Fabric,
     counters: Counters,
+    /// Reset-don't-free pool for assembled batches and id scratch.
+    batches: crate::train::batch::BatchArena,
 }
 
 impl FeatureService {
@@ -194,6 +196,7 @@ impl FeatureService {
             cache: None,
             fabric: Fabric::new(parts),
             counters: Counters::default(),
+            batches: crate::train::batch::BatchArena::default(),
         }
     }
 
@@ -244,20 +247,60 @@ impl FeatureService {
         self.cache.as_ref().map(|c| c.lock().unwrap().stats().clone())
     }
 
-    /// Pre-populate the cache with `ids` (typically the graph's highest-
-    /// degree nodes — the rows most subgraphs will touch). No-op without
-    /// a cache; warming counts as insertions, not hits or misses.
+    /// Whether a hot-node cache is attached (cheap; no lock).
+    pub fn has_cache(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Return a consumed batch's buffers for reuse by later
+    /// [`materialize`](Self::materialize) calls (the trainer calls this
+    /// after each gradient step).
+    pub fn release_batch(&self, b: HostBatch) {
+        self.batches.release(b);
+    }
+
+    /// Declare batch warm-up over, stocking `slack` spare shaped batches
+    /// (see [`crate::train::batch::BatchArena::mark_warm`]).
+    pub fn mark_batches_warm(&self, spec: ModelSpec, slack: usize) {
+        self.batches.mark_warm(spec, slack);
+    }
+
+    /// Batch-buffer reuse counters since construction.
+    pub fn batch_reuse(&self) -> crate::train::batch::BatchReuse {
+        self.batches.stats()
+    }
+
+    /// Pre-populate the cache with `ids` (the graph's highest-degree
+    /// nodes, or a whole generation wave's unique nodes — see
+    /// [`prefetch::WaveWarmer`]). No-op without a cache; warming counts as
+    /// insertions, not hits or misses. Missing rows are gathered in one
+    /// bulk call — which fans out over the work pool for wave-sized id
+    /// sets — and inserted under a single cache lock.
     pub fn warm_cache(&self, ids: &[NodeId]) {
         let Some(cache) = &self.cache else { return };
         let d = self.backend.dim();
-        let mut row = vec![0.0f32; d];
+        let mut missing: Vec<NodeId> = {
+            let c = cache.lock().unwrap();
+            // Never warm more than half the cache per call: an id set
+            // larger than the cache would cycle the whole CLOCK ring,
+            // evicting rows earlier warms inserted for batches that
+            // haven't trained yet — worse than not warming at all. The
+            // clamp keeps (at least) half the resident hot set intact;
+            // the kept prefix is deterministic (ids arrive sorted).
+            let budget = (c.capacity() / 2).max(1);
+            ids.iter().copied().filter(|&v| !c.contains(v)).take(budget).collect()
+        };
+        missing.dedup();
+        if missing.is_empty() {
+            return;
+        }
+        let mut rows = vec![0.0f32; missing.len() * d];
+        self.backend.gather_into(&missing, &mut rows);
         let mut c = cache.lock().unwrap();
-        for &v in ids {
-            if c.contains(v) {
-                continue;
+        for (j, &v) in missing.iter().enumerate() {
+            if !c.contains(v) {
+                c.insert(v, &rows[j * d..(j + 1) * d], self.backend.label(v));
             }
-            self.backend.write_feature(v, &mut row);
-            c.insert(v, &row, self.backend.label(v));
         }
     }
 
@@ -300,11 +343,8 @@ impl FeatureService {
         // 2. Plan the misses: local vs one bulk group per remote owner.
         let plan = fetch::plan(&missing, requester, &*self.backend);
         let row_bytes = (d * 4 + 4) as u64; // feature row + label
-        let mut scratch: Vec<f32> = Vec::new();
-        fill_rows(&*self.backend, &plan.local, &index, &mut feats, &mut labels, &mut scratch);
         stats.local_rows += plan.local.len() as u64;
         for (owner, group) in &plan.remote {
-            fill_rows(&*self.backend, group, &index, &mut feats, &mut labels, &mut scratch);
             let bytes = group.len() as u64 * row_bytes;
             stats.remote_rows += group.len() as u64;
             stats.remote_bytes += bytes;
@@ -315,6 +355,9 @@ impl FeatureService {
                 bytes,
             );
         }
+        // One pool-parallel scatter over every missing row, chunked so no
+        // job crosses an owner group (the bulk-per-owner fetch shape).
+        scatter_rows(&*self.backend, &plan, &index, &mut feats, &mut labels);
         // 3. Freshly fetched rows become cache candidates.
         if let Some(cache) = &self.cache {
             let mut c = cache.lock().unwrap();
@@ -339,35 +382,76 @@ impl FeatureService {
         subgraphs: &[Subgraph],
         requester: u32,
     ) -> Result<HostBatch> {
-        let ids = fetch::batch_ids(spec, subgraphs);
+        let mut ids = self.batches.acquire_ids();
+        fetch::batch_ids_into(spec, subgraphs, &mut ids);
         let frame = self.gather(&ids, requester);
+        self.batches.release_ids(ids);
         let fb = FrameBackend { frame: &frame, classes: self.num_classes() };
-        crate::train::batch::BatchBuilder::new(spec, &fb).build(subgraphs)
+        let mut out = self.batches.acquire(spec);
+        crate::train::batch::BatchBuilder::new(spec, &fb).build_into(subgraphs, &mut out)?;
+        Ok(out)
     }
 }
 
-/// Bulk-gather `ids` through the backend and scatter rows/labels into the
-/// frame positions given by `index`.
-fn fill_rows(
+/// Scatter every planned row (local + per-owner remote groups) into the
+/// frame positions given by `index`, fanned out over the persistent work
+/// pool. Jobs are owner-aligned id chunks; since planned ids are unique,
+/// every frame row is written by exactly one job, so the parallel scatter
+/// is write-disjoint and byte-identical to the serial one.
+fn scatter_rows(
     backend: &dyn FeatureBackend,
-    ids: &[NodeId],
+    plan: &FetchPlan,
     index: &FxHashMap<NodeId, u32>,
     feats: &mut [f32],
     labels: &mut [u32],
-    scratch: &mut Vec<f32>,
 ) {
-    if ids.is_empty() {
+    let d = backend.dim().max(1);
+    let groups: Vec<&[NodeId]> = std::iter::once(plan.local.as_slice())
+        .chain(plan.remote.iter().map(|(_, g)| g.as_slice()))
+        .filter(|g| !g.is_empty())
+        .collect();
+    let rows: usize = groups.iter().map(|g| g.len()).sum();
+    if rows == 0 {
         return;
     }
-    let d = backend.dim();
-    scratch.clear();
-    scratch.resize(ids.len() * d, 0.0);
-    backend.gather_into(ids, scratch);
-    for (j, &v) in ids.iter().enumerate() {
-        let i = index[&v] as usize;
-        feats[i * d..(i + 1) * d].copy_from_slice(&scratch[j * d..(j + 1) * d]);
-        labels[i] = backend.label(v);
+    let threads = crate::util::workpool::default_threads();
+    const PAR_MIN_ROWS: usize = 512;
+    if threads <= 1 || rows < PAR_MIN_ROWS {
+        for g in groups {
+            for &v in g {
+                let i = index[&v] as usize;
+                backend.write_feature(v, &mut feats[i * d..(i + 1) * d]);
+                labels[i] = backend.label(v);
+            }
+        }
+        return;
     }
+    let chunk = rows.div_ceil(threads * 4).max(64);
+    let mut jobs: Vec<&[NodeId]> = Vec::new();
+    for g in groups {
+        let mut lo = 0;
+        while lo < g.len() {
+            let hi = (lo + chunk).min(g.len());
+            jobs.push(&g[lo..hi]);
+            lo = hi;
+        }
+    }
+    struct Ptr<T>(*mut T);
+    unsafe impl<T: Send> Sync for Ptr<T> {}
+    let fp = Ptr(feats.as_mut_ptr());
+    let lp = Ptr(labels.as_mut_ptr());
+    let (fp, lp) = (&fp, &lp);
+    crate::util::workpool::WorkPool::global().run(jobs.len(), threads, 1, |j| {
+        for &v in jobs[j] {
+            let i = index[&v] as usize;
+            // SAFETY: ids are unique across the plan, so frame row `i` is
+            // touched by exactly one job; both buffers outlive the
+            // (blocking) pool call.
+            let row = unsafe { std::slice::from_raw_parts_mut(fp.0.add(i * d), d) };
+            backend.write_feature(v, row);
+            unsafe { *lp.0.add(i) = backend.label(v) };
+        }
+    });
 }
 
 /// Read-only backend view over an already-gathered frame: batch assembly

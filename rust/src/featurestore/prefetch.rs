@@ -1,4 +1,5 @@
-//! Feature prefetching: gather batch *t+1* while batch *t* trains.
+//! Feature prefetching: gather batch *t+1* while batch *t* trains, and
+//! warm the hot-node cache a whole generation **wave** ahead.
 //!
 //! In the concurrent pipeline the trainer's critical path per iteration is
 //! `materialize(batch) → grad → allreduce → apply`. Materialization is
@@ -8,17 +9,55 @@
 //! [`HostBatch`] while the worker trains on the previous one. Batches are
 //! delivered in submission order, so training trajectories are unchanged —
 //! prefetching only moves gather latency off the critical path.
+//!
+//! [`WaveWarmer`] extends the same idea from one batch to one wave: the
+//! generation side announces each completed wave's unique node ids
+//! (via [`crate::engines::SubgraphSink::wave_complete`] /
+//! [`crate::engines::common::WaveSlots::unique_nodes`]) and the warmer
+//! bulk-gathers them into the cache **on the generator thread** — so by
+//! the time the wave's subgraphs drain through the queue into batch
+//! assembly, their rows are already resident. Cache rows are
+//! byte-identical to backend rows, so training trajectories are unchanged
+//! here too; only where the gather latency lands changes.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::Scope;
 
 use anyhow::Result;
 
+use crate::graph::NodeId;
 use crate::sampler::Subgraph;
 use crate::train::meta::ModelSpec;
 use crate::train::runtime::HostBatch;
 
 use super::FeatureService;
+
+/// Wave-ahead cache warming (see module docs). Counters are atomic so the
+/// generation thread can warm while the driver later reads totals.
+pub struct WaveWarmer<'a> {
+    service: &'a FeatureService,
+    waves: AtomicU64,
+    nodes: AtomicU64,
+}
+
+impl<'a> WaveWarmer<'a> {
+    pub fn new(service: &'a FeatureService) -> Self {
+        Self { service, waves: AtomicU64::new(0), nodes: AtomicU64::new(0) }
+    }
+
+    /// Push one wave's unique node ids into the service's cache.
+    pub fn warm(&self, ids: &[NodeId]) {
+        self.waves.fetch_add(1, Ordering::Relaxed);
+        self.nodes.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        self.service.warm_cache(ids);
+    }
+
+    /// `(waves, node ids)` pushed through the warmer so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.waves.load(Ordering::Relaxed), self.nodes.load(Ordering::Relaxed))
+    }
+}
 
 /// Where a training worker's batches come from: materialized inline on
 /// the worker thread, or prepared ahead by a prefetch thread.

@@ -133,6 +133,30 @@ impl FeatureBackend for ShardedStore {
     fn gather_into(&self, ids: &[NodeId], out: &mut [f32]) {
         let d = self.dim;
         assert_eq!(out.len(), ids.len() * d, "gather buffer size mismatch");
+        let threads = crate::util::workpool::default_threads();
+        // Big bulk gathers (whole-wave warms, batch frames) fan out over
+        // the persistent work pool: contiguous id ranges write disjoint
+        // row ranges of `out`. Small gathers stay serial — dispatch would
+        // cost more than the copies.
+        const PAR_MIN_FLOATS: usize = 1 << 15;
+        if threads > 1 && out.len() >= PAR_MIN_FLOATS {
+            let chunk_rows = ids.len().div_ceil(threads * 4).max(64);
+            crate::util::workpool::WorkPool::global().run_row_chunks(
+                out,
+                d,
+                threads,
+                chunk_rows,
+                |row0, sub| {
+                    let rows = sub.len() / d;
+                    for (j, &v) in ids[row0..row0 + rows].iter().enumerate() {
+                        let (o, r) = self.loc(v);
+                        sub[j * d..(j + 1) * d]
+                            .copy_from_slice(&self.shards[o].feats[r * d..(r + 1) * d]);
+                    }
+                },
+            );
+            return;
+        }
         for (i, &v) in ids.iter().enumerate() {
             let (o, r) = self.loc(v);
             out[i * d..(i + 1) * d].copy_from_slice(&self.shards[o].feats[r * d..(r + 1) * d]);
@@ -203,6 +227,20 @@ mod tests {
         for (i, &v) in ids.iter().enumerate() {
             st.write_feature(v, &mut one);
             assert_eq!(&bulk[i * 6..(i + 1) * 6], &one[..]);
+        }
+    }
+
+    #[test]
+    fn parallel_bulk_gather_matches_serial_per_row() {
+        // Large enough to cross the pool-parallel threshold (ids×dim ≥ 2^15).
+        let st = ShardedStore::build(&source(), 200, 4, 3);
+        let ids: Vec<u32> = (0..6000u32).map(|i| (i * 7) % 200).collect();
+        let mut bulk = vec![0.0f32; ids.len() * 6];
+        st.gather_into(&ids, &mut bulk);
+        let mut one = vec![0.0f32; 6];
+        for (i, &v) in ids.iter().enumerate() {
+            st.write_feature(v, &mut one);
+            assert_eq!(&bulk[i * 6..(i + 1) * 6], &one[..], "row {i} (node {v})");
         }
     }
 

@@ -38,6 +38,7 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
         opt("mapping", "seed mapping: paper|contiguous|hash", None),
         opt("reduce", "aggregation: tree|flat", None),
         opt("reduce-arity", "tree reduction arity", None),
+        opt("wave-pipeline", "overlap next wave's hop-1 with reduce/emit (true|false)", None),
         flag("dump-config", "print the effective config and exit"),
     ]
 }

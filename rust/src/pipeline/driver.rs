@@ -56,6 +56,13 @@ pub struct PipelineReport {
     pub feature_fabric: FabricStats,
     /// End-to-end wall time (≤ gen.wall + train.wall when concurrent).
     pub wall: Duration,
+    /// Generation-side pipeline bubble: wall time the wave loop stalled
+    /// waiting for a prefetched hop-1 that was not ready (the overlap
+    /// gap; 0 when wave pipelining is off or fully hidden).
+    pub bubble: Duration,
+    /// Waves whose unique nodes were warmed into the feature cache ahead
+    /// of training (0 without a cache).
+    pub warmed_waves: u64,
 }
 
 impl PipelineReport {
@@ -69,7 +76,7 @@ impl PipelineReport {
     pub fn render(&self) -> String {
         use crate::util::bytes::{fmt_bytes, fmt_secs};
         format!(
-            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% queue_max={} feat_remote={} feat_cache={:.0}%",
+            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% bubble={} warmed_waves={} queue_max={} feat_remote={} feat_cache={:.0}%",
             self.mode,
             fmt_secs(self.wall.as_secs_f64()),
             fmt_secs(self.gen.wall.as_secs_f64()),
@@ -78,6 +85,8 @@ impl PipelineReport {
             self.train.final_loss,
             self.train.accuracy,
             self.overlap_ratio() * 100.0,
+            fmt_secs(self.bubble.as_secs_f64()),
+            self.warmed_waves,
             self.queue.max_depth,
             fmt_bytes(self.train.feature_fetch.remote_bytes),
             self.train.feature_fetch.cache_hit_rate() * 100.0,
@@ -108,10 +117,20 @@ pub fn run_pipeline(
     let feature_fabric_before = features.fabric_stats();
     let cap = default_queue_cap(tcfg, runtime.meta().spec.batch);
     let queue = BoundedQueue::<Subgraph>::new(cap);
+    // Wave-ahead cache warming: only meaningful when the service has a
+    // hot-node cache AND generation overlaps training — in sequential
+    // mode all waves finish before training starts, so per-wave warming
+    // would only churn the cache's preloaded hot set for nothing.
+    let warmer = if features.has_cache() && mode == PipelineMode::Concurrent {
+        Some(crate::featurestore::WaveWarmer::new(features))
+    } else {
+        None
+    };
     let (gen_report, train_report) = match mode {
         PipelineMode::Concurrent => std::thread::scope(|scope| -> Result<_> {
             let gen_handle = scope.spawn(|| {
-                let r = engine.generate(graph, seeds, ecfg, &QueueSink { queue: &queue });
+                let sink = QueueSink { queue: &queue, warm: warmer.as_ref() };
+                let r = engine.generate(graph, seeds, ecfg, &sink);
                 queue.close(); // close even on error so the trainer exits
                 r
             });
@@ -124,8 +143,12 @@ pub fn run_pipeline(
         PipelineMode::Sequential => {
             // Unbounded staging (the memory cost sequential pays).
             let staging = BoundedQueue::<Subgraph>::new(usize::MAX >> 1);
-            let gen_report =
-                engine.generate(graph, seeds, ecfg, &QueueSink { queue: &staging })?;
+            let gen_report = engine.generate(
+                graph,
+                seeds,
+                ecfg,
+                &QueueSink { queue: &staging, warm: warmer.as_ref() },
+            )?;
             staging.close();
             // Only after generation fully completed: forward into the
             // training queue while the trainer consumes.
@@ -148,6 +171,8 @@ pub fn run_pipeline(
     Ok(PipelineReport {
         mode,
         queue: queue.stats(),
+        bubble: gen_report.wave_pipeline.bubble,
+        warmed_waves: warmer.as_ref().map_or(0, |w| w.stats().0),
         gen: gen_report,
         train: train_report,
         feature_fabric: features.fabric_stats().delta(&feature_fabric_before),

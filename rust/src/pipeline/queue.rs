@@ -123,9 +123,15 @@ impl<T> BoundedQueue<T> {
     }
 }
 
-/// Adapter: lets a generation engine stream into a queue.
+/// Adapter: lets a generation engine stream into a queue. With a
+/// [`WaveWarmer`](crate::featurestore::WaveWarmer) attached, each
+/// completed wave's unique nodes are pushed into the feature cache from
+/// the generator thread — a whole wave ahead of the batches that need
+/// them (see [`crate::featurestore::prefetch`]).
 pub struct QueueSink<'a> {
     pub queue: &'a BoundedQueue<Subgraph>,
+    /// Optional wave-ahead feature warmer.
+    pub warm: Option<&'a crate::featurestore::WaveWarmer<'a>>,
 }
 
 impl SubgraphSink for QueueSink<'_> {
@@ -133,6 +139,16 @@ impl SubgraphSink for QueueSink<'_> {
         self.queue
             .push(sg)
             .map_err(|_| anyhow::anyhow!("pipeline queue closed while generating"))
+    }
+
+    fn wants_waves(&self) -> bool {
+        self.warm.is_some()
+    }
+
+    fn wave_complete(&self, nodes: &[crate::graph::NodeId]) {
+        if let Some(w) = self.warm {
+            w.warm(nodes);
+        }
     }
 }
 

@@ -4,12 +4,23 @@
 //!
 //! Rows come from any [`FeatureBackend`]; contiguous tensor runs (the
 //! seed column, each hop-1 slice, each hop-2 group) are filled with one
-//! bulk [`FeatureBackend::gather_into`] call instead of per-node fetches.
-//! [`crate::featurestore::FeatureService::materialize`] layers batch-wide
-//! dedup, caching and remote-traffic accounting on top by gathering a
-//! frame first and pointing this builder at it.
+//! bulk [`FeatureBackend::gather_into`] call instead of per-node fetches,
+//! and the per-subgraph fill fans out over the persistent
+//! [`WorkPool`](crate::util::workpool::WorkPool) (each subgraph writes
+//! disjoint tensor slices). [`crate::featurestore::FeatureService::materialize`]
+//! layers batch-wide dedup, caching and remote-traffic accounting on top
+//! by gathering a frame first and pointing this builder at it.
+//!
+//! [`BatchArena`] applies the generation side's reset-don't-free pattern
+//! to batch buffers: a consumed [`HostBatch`]'s tensors return to a pool
+//! and are re-zeroed in place on the next acquire, so steady-state batch
+//! assembly performs **zero heap allocations** (counted in
+//! [`TrainReport`](crate::train::trainer::TrainReport)).
 
 use anyhow::Result;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::featurestore::FeatureBackend;
 use crate::graph::NodeId;
@@ -30,13 +41,25 @@ impl<'a> BatchBuilder<'a> {
         Self { spec, features }
     }
 
-    /// Assemble exactly `spec.batch` subgraphs into a batch.
+    /// Assemble exactly `spec.batch` subgraphs into a fresh batch.
     ///
     /// Hops longer than the spec's fanout are truncated (priority order —
     /// the kept prefix is the top-priority sample); shorter hops are
     /// zero-padded with mask 0. An invalid hop-1 slot forces its whole
     /// hop-2 group invalid.
     pub fn build(&self, subgraphs: &[Subgraph]) -> Result<HostBatch> {
+        let mut out = shaped_batch(self.spec);
+        self.build_into(subgraphs, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`build`](Self::build) into a caller-provided batch whose buffers
+    /// are already shaped for the spec and zeroed (what
+    /// [`BatchArena::acquire`] hands out) — the zero-allocation path. The
+    /// per-subgraph fill runs on the work pool: subgraph `bi` writes only
+    /// its own `bi`-indexed tensor slices, so the fan-out is
+    /// write-disjoint and the bytes match the serial order exactly.
+    pub fn build_into(&self, subgraphs: &[Subgraph], out: &mut HostBatch) -> Result<()> {
         let s = self.spec;
         anyhow::ensure!(
             subgraphs.len() == s.batch,
@@ -45,40 +68,203 @@ impl<'a> BatchBuilder<'a> {
             subgraphs.len()
         );
         let (b, f1, f2, d) = (s.batch, s.f1, s.f2, s.dim);
-        let mut out = HostBatch {
-            x_seed: vec![0.0; b * d],
-            x_h1: vec![0.0; b * f1 * d],
-            x_h2: vec![0.0; b * f1 * f2 * d],
-            m_h1: vec![0.0; b * f1],
-            m_h2: vec![0.0; b * f1 * f2],
-            y: vec![0; b],
-            nodes: 0,
-        };
+        // The per-subgraph fill below writes through raw pointers sized by
+        // the spec, so every buffer's shape is load-bearing for safety —
+        // reject wrong-shaped batches outright, release builds included.
+        anyhow::ensure!(
+            out.x_seed.len() == b * d
+                && out.x_h1.len() == b * f1 * d
+                && out.x_h2.len() == b * f1 * f2 * d
+                && out.m_h1.len() == b * f1
+                && out.m_h2.len() == b * f1 * f2
+                && out.y.len() == b,
+            "batch buffers not shaped for spec {s:?}"
+        );
         // Seed rows are one contiguous run across the whole batch.
         let seeds: Vec<NodeId> = subgraphs.iter().map(|sg| sg.seed).collect();
         self.features.gather_into(&seeds, &mut out.x_seed);
-        for (bi, sg) in subgraphs.iter().enumerate() {
-            out.nodes += sg.num_nodes().min((1 + f1 + f1 * f2) as u64);
-            out.y[bi] = self.features.label(sg.seed) as i32;
-            let t1 = sg.hop1.len().min(f1);
-            let h1_off = bi * f1 * d;
-            self.features
-                .gather_into(&sg.hop1[..t1], &mut out.x_h1[h1_off..h1_off + t1 * d]);
-            for i in 0..t1 {
-                out.m_h1[bi * f1 + i] = 1.0;
-                if let Some(group) = sg.hop2.get(i) {
-                    let t2 = group.len().min(f2);
-                    let base = (bi * f1 + i) * f2;
-                    self.features
-                        .gather_into(&group[..t2], &mut out.x_h2[base * d..(base + t2) * d]);
-                    for j in 0..t2 {
-                        out.m_h2[base + j] = 1.0;
+        let features = self.features;
+        struct Tensors {
+            x_h1: *mut f32,
+            x_h2: *mut f32,
+            m_h1: *mut f32,
+            m_h2: *mut f32,
+            y: *mut i32,
+        }
+        unsafe impl Sync for Tensors {}
+        let t = Tensors {
+            x_h1: out.x_h1.as_mut_ptr(),
+            x_h2: out.x_h2.as_mut_ptr(),
+            m_h1: out.m_h1.as_mut_ptr(),
+            m_h2: out.m_h2.as_mut_ptr(),
+            y: out.y.as_mut_ptr(),
+        };
+        let t = &t;
+        let threads = crate::util::workpool::default_threads().min(b);
+        let per_sg: Vec<u64> =
+            crate::util::workpool::WorkPool::global().map_collect(b, threads, 1, |bi| {
+                let sg = &subgraphs[bi];
+                // SAFETY: every slice is the exclusive `bi`-indexed range
+                // of its tensor, and `out` outlives this blocking call.
+                let x_h1 =
+                    unsafe { std::slice::from_raw_parts_mut(t.x_h1.add(bi * f1 * d), f1 * d) };
+                let x_h2 = unsafe {
+                    std::slice::from_raw_parts_mut(t.x_h2.add(bi * f1 * f2 * d), f1 * f2 * d)
+                };
+                let m_h1 = unsafe { std::slice::from_raw_parts_mut(t.m_h1.add(bi * f1), f1) };
+                let m_h2 =
+                    unsafe { std::slice::from_raw_parts_mut(t.m_h2.add(bi * f1 * f2), f1 * f2) };
+                unsafe { *t.y.add(bi) = features.label(sg.seed) as i32 };
+                let t1 = sg.hop1.len().min(f1);
+                features.gather_into(&sg.hop1[..t1], &mut x_h1[..t1 * d]);
+                for i in 0..t1 {
+                    m_h1[i] = 1.0;
+                    if let Some(group) = sg.hop2.get(i) {
+                        let t2 = group.len().min(f2);
+                        let base = i * f2;
+                        features.gather_into(&group[..t2], &mut x_h2[base * d..(base + t2) * d]);
+                        for j in 0..t2 {
+                            m_h2[base + j] = 1.0;
+                        }
                     }
                 }
+                sg.num_nodes().min((1 + f1 + f1 * f2) as u64)
+            });
+        out.nodes = per_sg.iter().sum();
+        Ok(())
+    }
+}
+
+/// A fresh zeroed batch with `spec`'s tensor shapes.
+fn shaped_batch(spec: ModelSpec) -> HostBatch {
+    let (b, f1, f2, d) = (spec.batch, spec.f1, spec.f2, spec.dim);
+    HostBatch {
+        x_seed: vec![0.0; b * d],
+        x_h1: vec![0.0; b * f1 * d],
+        x_h2: vec![0.0; b * f1 * f2 * d],
+        m_h1: vec![0.0; b * f1],
+        m_h2: vec![0.0; b * f1 * f2],
+        y: vec![0; b],
+        nodes: 0,
+    }
+}
+
+/// Batch-buffer reuse counters (snapshot; deltas via [`BatchReuse::delta`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchReuse {
+    /// Batches allocated fresh (warm-up plus warm slack).
+    pub allocated: u64,
+    /// Acquisitions served from the pool.
+    pub reused: u64,
+    /// Fresh allocations after warm-up — 0 in steady state.
+    pub steady_allocs: u64,
+}
+
+impl BatchReuse {
+    /// Counter-wise difference vs an earlier snapshot.
+    pub fn delta(&self, earlier: &BatchReuse) -> BatchReuse {
+        BatchReuse {
+            allocated: self.allocated.saturating_sub(earlier.allocated),
+            reused: self.reused.saturating_sub(earlier.reused),
+            steady_allocs: self.steady_allocs.saturating_sub(earlier.steady_allocs),
+        }
+    }
+}
+
+/// Reset-don't-free pool of [`HostBatch`] buffers plus id-scratch vecs —
+/// the training-side sibling of the generation engines' `FrameArena`.
+/// Released batches keep their tensor capacity; `acquire` re-zeros them in
+/// place (a memset, not an allocation), so once warm, batch assembly
+/// allocates nothing per iteration.
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    batches: Mutex<Vec<HostBatch>>,
+    ids: Mutex<Vec<Vec<NodeId>>>,
+    allocated: AtomicU64,
+    reused: AtomicU64,
+    steady_allocs: AtomicU64,
+    warm: AtomicBool,
+}
+
+impl BatchArena {
+    /// Take a zeroed batch shaped for `spec` (pooled buffers when
+    /// available — re-zeroing stays within their capacity).
+    pub fn acquire(&self, spec: ModelSpec) -> HostBatch {
+        let pooled = self.batches.lock().unwrap().pop();
+        match pooled {
+            Some(mut b) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                reset_buf(&mut b.x_seed, spec.batch * spec.dim);
+                reset_buf(&mut b.x_h1, spec.batch * spec.f1 * spec.dim);
+                reset_buf(&mut b.x_h2, spec.batch * spec.f1 * spec.f2 * spec.dim);
+                reset_buf(&mut b.m_h1, spec.batch * spec.f1);
+                reset_buf(&mut b.m_h2, spec.batch * spec.f1 * spec.f2);
+                reset_buf(&mut b.y, spec.batch);
+                b.nodes = 0;
+                b
+            }
+            None => {
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+                if self.warm.load(Ordering::Relaxed) {
+                    self.steady_allocs.fetch_add(1, Ordering::Relaxed);
+                }
+                shaped_batch(spec)
             }
         }
-        Ok(out)
     }
+
+    /// Return a consumed batch's buffers to the pool.
+    pub fn release(&self, b: HostBatch) {
+        self.batches.lock().unwrap().push(b);
+    }
+
+    /// Pooled id-collection scratch (comes back cleared).
+    pub fn acquire_ids(&self) -> Vec<NodeId> {
+        match self.ids.lock().unwrap().pop() {
+            Some(mut v) => {
+                v.clear();
+                v
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return an id-scratch vec (its capacity is what's being pooled).
+    pub fn release_ids(&self, v: Vec<NodeId>) {
+        self.ids.lock().unwrap().push(v);
+    }
+
+    /// Declare warm-up over, stocking `slack` spare shaped batches first
+    /// (so a racing `acquire` can never observe warm-but-unstocked) —
+    /// later misses count as steady-state allocations.
+    pub fn mark_warm(&self, spec: ModelSpec, slack: usize) {
+        if self.warm.load(Ordering::Relaxed) {
+            return;
+        }
+        {
+            let mut pool = self.batches.lock().unwrap();
+            for _ in 0..slack {
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+                pool.push(shaped_batch(spec));
+            }
+        }
+        self.warm.store(true, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> BatchReuse {
+        BatchReuse {
+            allocated: self.allocated.load(Ordering::Relaxed),
+            reused: self.reused.load(Ordering::Relaxed),
+            steady_allocs: self.steady_allocs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Clear + re-zero a reusable buffer: a memset while `len` stays within
+/// the buffer's high-water capacity (the steady-state case).
+fn reset_buf<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
+    v.clear();
+    v.resize(len, T::default());
 }
 
 #[cfg(test)]
@@ -157,6 +343,47 @@ mod tests {
         let b = BatchBuilder::new(spec(), &fs);
         let subs = [sg(3, vec![1], vec![vec![2]]), sg(4, vec![], vec![])];
         assert_eq!(b.build(&subs).unwrap(), b.build(&subs).unwrap());
+    }
+
+    #[test]
+    fn build_into_reused_buffers_matches_fresh_build() {
+        let fs = store();
+        let b = BatchBuilder::new(spec(), &fs);
+        let arena = BatchArena::default();
+        let subs_a = [sg(0, vec![1, 2], vec![vec![3], vec![4, 5]]), sg(7, vec![6], vec![vec![0]])];
+        let subs_b = [sg(3, vec![1], vec![vec![2]]), sg(4, vec![], vec![])];
+        let mut batch = arena.acquire(spec());
+        b.build_into(&subs_a, &mut batch).unwrap();
+        assert_eq!(batch, b.build(&subs_a).unwrap());
+        // Recycle: stale tensor content must be fully overwritten/zeroed.
+        arena.release(batch);
+        let mut batch = arena.acquire(spec());
+        b.build_into(&subs_b, &mut batch).unwrap();
+        assert_eq!(batch, b.build(&subs_b).unwrap());
+        let s = arena.stats();
+        assert_eq!(s.allocated, 1);
+        assert_eq!(s.reused, 1);
+        assert_eq!(s.steady_allocs, 0);
+    }
+
+    #[test]
+    fn arena_counts_steady_allocs_after_warm() {
+        let arena = BatchArena::default();
+        arena.mark_warm(spec(), 1);
+        let b1 = arena.acquire(spec()); // served by the warm slack
+        let _b2 = arena.acquire(spec()); // pool empty → steady alloc
+        assert_eq!(arena.stats().steady_allocs, 1);
+        arena.release(b1);
+        let _b3 = arena.acquire(spec());
+        assert_eq!(arena.stats().steady_allocs, 1, "reuse must not count");
+        // Id scratch pooling keeps capacity and comes back cleared.
+        let mut ids = arena.acquire_ids();
+        ids.extend_from_slice(&[1, 2, 3]);
+        let cap = ids.capacity();
+        arena.release_ids(ids);
+        let again = arena.acquire_ids();
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), cap);
     }
 
     #[test]

@@ -78,6 +78,10 @@ pub struct TrainReport {
     /// Feature-store fetch counters for this run (dedup, cache hits,
     /// remote rows/bytes — see the E7 benchmark).
     pub feature_fetch: FetchStats,
+    /// Batch-buffer arena counters for this run: after warm-up (the first
+    /// two iterations), batch assembly must allocate nothing
+    /// (`steady_allocs == 0`).
+    pub batch_reuse: crate::train::batch::BatchReuse,
     /// The trained parameters (replica 0 — all replicas are identical).
     pub params: Vec<Vec<f32>>,
 }
@@ -99,6 +103,7 @@ pub fn train(
     let fabric = Fabric::new(r);
     let collectives = group(r, &fabric);
     let fetch_before = features.stats();
+    let batch_before = features.batch_reuse();
 
     // Per-worker batch channels (bounded by rendezvous: dispatcher sends
     // one batch per worker per iteration).
@@ -121,6 +126,7 @@ pub fn train(
         wall: Duration::ZERO,
         fabric: fabric.stats(),
         feature_fetch: FetchStats::default(),
+        batch_reuse: crate::train::batch::BatchReuse::default(),
         params: Vec::new(),
     };
 
@@ -154,6 +160,9 @@ pub fn train(
                     out.nodes += batch.nodes;
                     out.subgraphs += spec.batch as u64;
                     let g = runtime.grad(&params, &batch)?;
+                    // The gradient is computed; hand the batch's tensor
+                    // buffers back for reuse by later materializations.
+                    features.release_batch(batch);
                     // AllReduce [grads…, loss, correct] in one buffer.
                     let mut buf = ParamStore::flatten(&g.grads);
                     buf.push(g.loss);
@@ -191,6 +200,14 @@ pub fn train(
                             tx.send(batch).map_err(|_| anyhow::anyhow!("worker died"))?;
                         }
                         report.iterations += 1;
+                        if report.iterations == 2 {
+                            // Batch-buffer warm-up is over: with prefetch,
+                            // each worker keeps ≤ 3 batches in flight
+                            // (training / handed over / materializing), so
+                            // 3r+2 pooled spares guarantee steady-state
+                            // assembly never allocates.
+                            features.mark_batches_warm(spec, r * 3 + 2);
+                        }
                     }
                 }
                 None => break,
@@ -229,6 +246,7 @@ pub fn train(
     report.wall = wall.elapsed();
     report.fabric = fabric.stats();
     report.feature_fetch = features.stats().delta(&fetch_before);
+    report.batch_reuse = features.batch_reuse().delta(&batch_before);
     Ok(report)
 }
 
@@ -281,7 +299,7 @@ mod tests {
         };
         use crate::engines::SubgraphEngine;
         crate::engines::graphgen_plus::GraphGenPlus
-            .generate(&g, &seeds, &ecfg, &crate::pipeline::QueueSink { queue: &queue })
+            .generate(&g, &seeds, &ecfg, &crate::pipeline::QueueSink { queue: &queue, warm: None })
             .unwrap();
         queue.close();
         let report = train(

@@ -34,6 +34,27 @@ thread_local! {
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
+/// Stable small slot id for the calling thread, assigned on first use
+/// (pool workers claim theirs when they start; any other thread gets the
+/// next free id). Contended per-thread structures — e.g. the
+/// [`FrameArena`](crate::engines::common::FrameArena) freelist — shard on
+/// this so the common acquire/release path never crosses threads.
+pub fn worker_slot() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SLOT.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT.fetch_add(1, Ordering::Relaxed);
+        s.set(v);
+        v
+    })
+}
+
 /// Number of worker threads to use by default: `GG_THREADS` env override,
 /// else available parallelism, else 4. Cached in a `OnceLock` — the
 /// environment is read once per process, not once per call site.
@@ -217,6 +238,48 @@ impl WorkPool {
         if saw_poison.get() {
             panic!("WorkPool: a worker panicked while executing a job");
         }
+    }
+
+    /// Parallel write over the `rows × stride` elements of `out`: rows are
+    /// split into `chunk_rows`-sized ranges and `f(first_row, sub_slice)`
+    /// runs once per range, each range receiving its disjoint `&mut`
+    /// sub-slice. The bulk-gather fan-out primitive of the feature store:
+    /// callers fill contiguous row blocks without a result collection pass.
+    /// Falls back to a single inline call for small work or `threads <= 1`.
+    pub fn run_row_chunks<T: Send>(
+        &self,
+        out: &mut [T],
+        stride: usize,
+        threads: usize,
+        chunk_rows: usize,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
+        let stride = stride.max(1);
+        // Load-bearing for coverage: a ragged buffer would leave its tail
+        // silently unwritten, so reject it in release builds too.
+        assert_eq!(out.len() % stride, 0, "out must be whole rows");
+        let rows = out.len() / stride;
+        let chunk_rows = chunk_rows.max(1);
+        let chunks = rows.div_ceil(chunk_rows);
+        if threads <= 1 || chunks <= 1 {
+            f(0, out);
+            return;
+        }
+        struct Base<T>(*mut T);
+        unsafe impl<T: Send> Sync for Base<T> {}
+        let base = Base(out.as_mut_ptr());
+        let base = &base;
+        self.run(chunks, threads, 1, |c| {
+            let r0 = c * chunk_rows;
+            let r1 = (r0 + chunk_rows).min(rows);
+            // SAFETY: chunk row ranges are disjoint (each chunk index is
+            // claimed exactly once) and `out` outlives `run`, which blocks
+            // until every claim finishes.
+            let sub = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r0 * stride), (r1 - r0) * stride)
+            };
+            f(r0, sub);
+        });
     }
 
     /// Parallel map `0..n -> R`, results written in place to pre-sized
@@ -415,5 +478,40 @@ mod tests {
     fn default_threads_positive_and_cached() {
         assert!(default_threads() >= 1);
         assert_eq!(default_threads(), default_threads());
+    }
+
+    #[test]
+    fn worker_slot_is_stable_per_thread_and_distinct_across_threads() {
+        let mine = worker_slot();
+        assert_eq!(mine, worker_slot(), "slot must be sticky");
+        let other = std::thread::spawn(worker_slot).join().unwrap();
+        assert_ne!(mine, other, "each thread gets its own slot");
+    }
+
+    #[test]
+    fn row_chunks_cover_every_row_once() {
+        let rows = 1000;
+        let stride = 7;
+        let mut out = vec![0u64; rows * stride];
+        WorkPool::global().run_row_chunks(&mut out, stride, 8, 16, |r0, sub| {
+            for (j, row) in sub.chunks_mut(stride).enumerate() {
+                for (k, v) in row.iter_mut().enumerate() {
+                    *v += ((r0 + j) * stride + k) as u64 + 1;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1, "element {i} written once with its value");
+        }
+        // Serial fallback path (threads = 1) produces the same bytes.
+        let mut serial = vec![0u64; rows * stride];
+        WorkPool::global().run_row_chunks(&mut serial, stride, 1, 16, |r0, sub| {
+            for (j, row) in sub.chunks_mut(stride).enumerate() {
+                for (k, v) in row.iter_mut().enumerate() {
+                    *v += ((r0 + j) * stride + k) as u64 + 1;
+                }
+            }
+        });
+        assert_eq!(out, serial);
     }
 }

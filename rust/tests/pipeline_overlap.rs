@@ -1,0 +1,186 @@
+//! PR-3 wave-pipelining properties: the double-buffered wave schedule
+//! (hop-1 of wave w+1 overlapping reduce/emit of wave w) must be
+//! invisible in the output — byte-identical subgraphs vs the sequential
+//! schedule for every engine and thread count, identical training
+//! trajectories through the pipeline driver — while the steady-state
+//! counters prove the overlap runs allocation- and spawn-free.
+
+use graphgen_plus::engines::{by_name, CollectSink, EngineConfig};
+use graphgen_plus::graph::generator;
+use graphgen_plus::graph::NodeId;
+use graphgen_plus::sampler::FanoutSpec;
+
+fn cfg(threads: usize, pipelined: bool, tag: &str) -> EngineConfig {
+    EngineConfig {
+        workers: 4,
+        threads,
+        wave_size: 24, // 96 seeds → 4 waves: enough to alternate lanes
+        fanout: FanoutSpec::new(vec![4, 3]),
+        sample_seed: 4242,
+        wave_pipeline: pipelined,
+        spill_dir: Some(std::env::temp_dir().join(format!(
+            "gg-overlap-{tag}-{threads}-{pipelined}-{}",
+            std::process::id()
+        ))),
+        ..Default::default()
+    }
+}
+
+/// The determinism barrier: for all four engines, the pipelined schedule
+/// must produce byte-identical subgraphs to the sequential one at every
+/// thread count (including threads = 1, where the helper thread is the
+/// only concurrency).
+#[test]
+fn pipelined_schedule_is_byte_identical_to_sequential() {
+    let g = generator::from_spec("rmat:n=1024,e=8192", 23).unwrap().csr();
+    let seeds: Vec<NodeId> = (0..96).collect();
+    for engine in ["graphgen+", "graphgen", "agl", "sql-like"] {
+        let run = |threads: usize, pipelined: bool| {
+            let sink = CollectSink::default();
+            by_name(engine)
+                .unwrap()
+                .generate(&g, &seeds, &cfg(threads, pipelined, engine), &sink)
+                .unwrap();
+            sink.take_sorted()
+        };
+        let sequential = run(4, false);
+        assert_eq!(sequential.len(), 96, "{engine}");
+        for threads in [1usize, 2, 8] {
+            let pipelined = run(threads, true);
+            assert_eq!(
+                pipelined, sequential,
+                "{engine} pipelined output diverged at threads={threads}"
+            );
+        }
+    }
+}
+
+/// Overlap actually happens and stays zero-overhead: all but the first
+/// wave are prefetched, both lanes reuse their frame arenas after their
+/// own warm-up wave, and a second run on the warm process pool spawns no
+/// threads.
+#[test]
+fn pipelined_run_overlaps_and_reuses_steadily() {
+    let g = generator::from_spec("rmat:n=2048,e=65536", 3).unwrap().csr();
+    let seeds: Vec<NodeId> = (0..192).collect(); // 8 waves of 24
+    let c = cfg(8, true, "steady");
+    let engine = by_name("graphgen+").unwrap();
+    let r1 = engine.generate(&g, &seeds, &c, &CollectSink::default()).unwrap();
+    assert_eq!(r1.wave_pipeline.waves, 8);
+    assert_eq!(
+        r1.wave_pipeline.overlapped_waves, 7,
+        "all but the first wave must be prefetched: {:?}",
+        r1.wave_pipeline
+    );
+    assert_eq!(
+        r1.scratch.steady_frame_allocs, 0,
+        "post-warm-up waves must not allocate frames: {:?}",
+        r1.scratch
+    );
+    assert!(
+        r1.scratch.frames_reused > r1.scratch.frames_allocated,
+        "most frame acquisitions must hit the arena: {:?}",
+        r1.scratch
+    );
+    // The adaptive sizer ran and stayed within the warm-up ceiling.
+    let base = (c.workers * 4).max(c.threads * 4) as u64;
+    for hop in 0..2 {
+        let t = r1.scratch.scan_tasks[hop];
+        assert!(t > 0, "hop {} never sized: {:?}", hop + 1, r1.scratch);
+        assert!(t <= base, "hop {} exceeded the warm-up task ceiling", hop + 1);
+    }
+    let r2 = engine.generate(&g, &seeds, &c, &CollectSink::default()).unwrap();
+    assert_eq!(
+        r2.scratch.pool_threads_spawned, 0,
+        "warm-pool runs must not spawn threads: {:?}",
+        r2.scratch
+    );
+    assert_eq!(r2.scratch.steady_frame_allocs, 0, "{:?}", r2.scratch);
+}
+
+/// Training-side equivalence (artifact-gated): through the concurrent
+/// pipeline driver, wave pipelining plus wave-ahead cache warming plus
+/// batch-buffer reuse must leave the loss trajectory and final parameters
+/// bit-identical — and batch assembly must allocate nothing after warm-up.
+#[test]
+fn pipelined_training_trajectory_and_batch_reuse() {
+    use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
+    use graphgen_plus::featurestore::{FeatureService, HotCache};
+    use graphgen_plus::graph::features::FeatureStore;
+    use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
+    use graphgen_plus::train::trainer::TrainConfig;
+    use graphgen_plus::train::ModelRuntime;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let runtime = ModelRuntime::load(&dir, 1).unwrap();
+    let spec = runtime.meta().spec;
+    let gen = generator::from_spec("planted:n=2048,e=16384,c=8", 9).unwrap();
+    let g = gen.csr();
+    let store = FeatureStore::with_labels(
+        spec.dim,
+        spec.classes as u32,
+        gen.labels.clone().unwrap(),
+        3,
+    );
+    let iters = 8usize;
+    let seeds: Vec<NodeId> =
+        (0..(spec.batch * 2 * iters) as u32).map(|i| i % g.num_nodes()).collect();
+    let tcfg = TrainConfig { replicas: 2, curve_every: 1, prefetch: true, ..Default::default() };
+    let run = |pipelined: bool, cache: bool| {
+        let features = if cache {
+            FeatureService::procedural(store.clone()).with_cache(HotCache::new(4096, spec.dim))
+        } else {
+            FeatureService::procedural(store.clone())
+        };
+        let ecfg = EngineConfig {
+            workers: 4,
+            wave_size: spec.batch * 2, // one iteration group per wave
+            fanout: FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]),
+            wave_pipeline: pipelined,
+            ..Default::default()
+        };
+        run_pipeline(
+            &g,
+            &seeds,
+            &GraphGenPlus,
+            &ecfg,
+            &features,
+            &runtime,
+            &tcfg,
+            PipelineMode::Concurrent,
+        )
+        .unwrap()
+    };
+    let sequential = run(false, false);
+    let pipelined = run(true, false);
+    let warmed = run(true, true);
+    assert_eq!(sequential.train.iterations, iters as u64);
+    assert_eq!(pipelined.train.loss_curve, sequential.train.loss_curve);
+    assert_eq!(pipelined.train.params, sequential.train.params);
+    // Cache warming moves gather latency, never bytes: same trajectory.
+    assert_eq!(warmed.train.loss_curve, sequential.train.loss_curve);
+    assert_eq!(warmed.train.params, sequential.train.params);
+    assert!(
+        warmed.warmed_waves > 0,
+        "cache-backed pipeline must warm waves ahead: {}",
+        warmed.render()
+    );
+    // Batch-buffer arena: warm after iteration 2, zero allocs afterwards.
+    for r in [&sequential, &pipelined, &warmed] {
+        assert_eq!(
+            r.train.batch_reuse.steady_allocs, 0,
+            "steady-state batch assembly must not allocate: {:?}",
+            r.train.batch_reuse
+        );
+        assert!(
+            r.train.batch_reuse.reused > 0,
+            "batch buffers must be recycled: {:?}",
+            r.train.batch_reuse
+        );
+    }
+    runtime.shutdown();
+}

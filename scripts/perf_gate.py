@@ -1,0 +1,53 @@
+#!/usr/bin/env python3
+"""CI perf gate over the E1 trajectory files.
+
+Usage: perf_gate.py <previous BENCH_e1.json> <current BENCH_e1.json>
+
+Compares graphgen+ generation throughput (nodes/sec, 1-core wall) against
+the previous main run's artifact and fails on a regression larger than
+THRESHOLD. Missing/unreadable previous data skips the gate (first run,
+expired artifact) rather than failing it.
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.20  # fail on >20% nodes/sec regression
+ENGINES = ("graphgen+",)
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    prev_path, cur_path = sys.argv[1], sys.argv[2]
+    try:
+        with open(prev_path) as f:
+            prev = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate: no usable previous trajectory ({e}); skipping")
+        return 0
+    with open(cur_path) as f:
+        cur = json.load(f)
+
+    failures = []
+    for engine in ENGINES:
+        p = prev.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
+        c = cur.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
+        if not p or not c:
+            print(f"perf gate: missing nodes_per_sec_wall for {engine}; skipping")
+            continue
+        ratio = c / p
+        print(f"perf gate: {engine} nodes/sec {p:,.0f} -> {c:,.0f} ({ratio:.2f}x)")
+        if ratio < 1.0 - THRESHOLD:
+            failures.append(
+                f"{engine} regressed {(1.0 - ratio) * 100:.0f}% "
+                f"(threshold {THRESHOLD * 100:.0f}%)"
+            )
+    for f_ in failures:
+        print(f"PERF REGRESSION: {f_}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
