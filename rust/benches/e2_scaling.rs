@@ -6,23 +6,34 @@
 //! scan work dominates, flattening as the fixed-cost merge rounds and
 //! per-message latency take over — the same knee the paper's 256-worker
 //! deployment sits past. Real 1-core wall time is reported for reference.
+//!
+//! Environment knobs: `GG_TASK_TARGET_US` overrides the adaptive scan
+//! sizer's per-task target (default 120 µs) so the sweep can validate the
+//! target across cluster scales — the chosen value, plus the sizer's
+//! chosen task counts and EWMA per scale, is recorded in the emitted
+//! `BENCH_e2.json` (path override: `GG_BENCH_E2_JSON`).
 
 use graphgen_plus::bench_harness::{render_markdown, Bench};
 use graphgen_plus::cluster::CostModel;
+use graphgen_plus::engines::common::TaskSizer;
 use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
 use graphgen_plus::engines::{EngineConfig, NullSink, SubgraphEngine};
 use graphgen_plus::graph::generator;
 use graphgen_plus::sampler::FanoutSpec;
 use graphgen_plus::util::bytes::{fmt_rate, fmt_secs};
+use graphgen_plus::util::json::Json;
 
 fn main() {
     let gen = generator::from_spec("rmat:n=65536,e=1048576", 2).unwrap();
     let g = gen.csr();
     let seeds: Vec<u32> = (0..8192u32).map(|i| i * 5 % g.num_nodes()).collect();
     let model = CostModel::calibrated();
+    let target_us = TaskSizer::target_task_ns() / 1_000.0;
+    println!("e2_scaling: per-task target {target_us:.0} us (GG_TASK_TARGET_US to override)");
     let mut bench = Bench::new("e2_scaling");
     let mut rows = Vec::new();
     let mut base_rate = None;
+    let mut scales_json = Json::obj();
     for workers in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
         let cfg = EngineConfig {
             workers,
@@ -33,21 +44,40 @@ fn main() {
         let name = format!("workers={workers}");
         let mut nodes = 0u64;
         let mut sim = 0.0f64;
+        let mut scan_tasks = [0u64; 2];
+        let mut task_ewma_ns = [0u64; 2];
         bench.measure(&name, None, || {
             let sink = NullSink::default();
             let r = GraphGenPlus.generate(&g, &seeds, &cfg, &sink).unwrap();
             nodes = r.sampled_nodes;
             sim = r.sim(&model).total_secs;
+            scan_tasks = r.scratch.scan_tasks;
+            task_ewma_ns = r.scratch.task_ewma_ns;
         });
         let rate = nodes as f64 / sim;
         let base = *base_rate.get_or_insert(rate);
+        // How far the sizer's settled per-task cost sits from the target:
+        // the sweep's validation signal. Ratios near 1 mean the target
+        // holds at this scale; large ratios flag over/under-splitting.
+        let ewma_us = task_ewma_ns[0] as f64 / 1_000.0;
         rows.push(vec![
             workers.to_string(),
             fmt_secs(sim),
             fmt_rate(rate, "nodes"),
             format!("{:.2}x", rate / base),
             fmt_rate(rate / workers as f64, "nodes"),
+            format!("{}/{}", scan_tasks[0], scan_tasks[1]),
+            format!("{:.0} us ({:.2}x)", ewma_us, ewma_us / target_us),
         ]);
+        let mut o = Json::obj();
+        o.set("modeled_secs", sim)
+            .set("nodes_per_sec_modeled", rate)
+            .set("wall_mean_s", bench.mean_of(&name).unwrap_or(0.0))
+            .set("scan_tasks_hop1", scan_tasks[0] as f64)
+            .set("scan_tasks_hop2", scan_tasks[1] as f64)
+            .set("task_ewma_us_hop1", task_ewma_ns[0] as f64 / 1_000.0)
+            .set("task_ewma_us_hop2", task_ewma_ns[1] as f64 / 1_000.0);
+        scales_json.set(&name, o);
     }
     bench.report(None);
     println!(
@@ -59,9 +89,22 @@ fn main() {
                 "cluster time".into(),
                 "throughput".into(),
                 "speedup".into(),
-                "per-worker".into()
+                "per-worker".into(),
+                "scan tasks h1/h2".into(),
+                "per-task vs target".into()
             ],
             &rows
         )
     );
+    // Machine-readable trajectory: the task-target knob and what the
+    // sizer actually settled on at every scale.
+    let mut out = Json::obj();
+    out.set("bench", "e2_scaling")
+        .set("task_target_us", target_us)
+        .set("scales", scales_json);
+    let path = std::env::var("GG_BENCH_E2_JSON").unwrap_or_else(|_| "BENCH_e2.json".into());
+    match std::fs::write(&path, out.to_pretty()) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  failed to write {path}: {e}"),
+    }
 }

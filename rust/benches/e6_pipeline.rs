@@ -28,9 +28,29 @@ use graphgen_plus::train::trainer::TrainConfig;
 use graphgen_plus::train::ModelRuntime;
 use graphgen_plus::util::bytes::{fmt_count, fmt_secs};
 
-/// Artifact-free fallback: concurrent-vs-sequential *generation* schedule
-/// (wave pipelining on/off) on the same workload — wall, bubble and
-/// overlapped-wave counts into BENCH_e6.json with `"gen_only": true`.
+/// Per-mode wave-pipeline counters → JSON (shared by both trajectories).
+fn wave_pipeline_json(
+    o: &mut graphgen_plus::util::json::Json,
+    wall_s: f64,
+    wp: &graphgen_plus::engines::common::WavePipelineStats,
+) {
+    o.set("pipeline_bubble_s", wp.bubble.as_secs_f64())
+        .set("bubble_fraction", wp.bubble.as_secs_f64() / wall_s.max(1e-12))
+        .set("overlapped_waves", wp.overlapped_waves as f64)
+        .set("deep_waves", wp.deep_waves as f64)
+        .set("waves", wp.waves as f64)
+        .set("lane_starved_stalls", wp.lane_starved_stalls as f64)
+        .set("queue_full_stalls", wp.queue_full_stalls as f64)
+        .set("queue_full_wait_s", wp.queue_full_wait.as_secs_f64())
+        .set("gather_wait_s", wp.gather_wait.as_secs_f64());
+}
+
+/// Artifact-free fallback: the generation schedule at look-ahead depths
+/// {sequential, 1, 2 (default)} on the same workload — wall, per-depth
+/// bubble fraction, stall taxonomy and waves/sec (the `iters_per_sec`
+/// perf-gate metric) into BENCH_e6.json with `"gen_only": true`. The
+/// depth-1 entry is exactly the PR-3 double buffer, so the JSON itself
+/// shows the depth ≥ 2 bubble win.
 fn gen_only_trajectory() {
     use graphgen_plus::engines::NullSink;
     use graphgen_plus::util::json::Json;
@@ -45,23 +65,29 @@ fn gen_only_trajectory() {
     let g = gen.csr();
     let seeds: Vec<u32> = (0..n_seeds as u32).map(|i| i % g.num_nodes()).collect();
     let mut modes_json = Json::obj();
-    for (key, pipelined) in [("pipelined", true), ("sequential_schedule", false)] {
+    for (key, pipelined, depth) in [
+        ("pipelined", true, 2usize),
+        ("pipelined_depth1", true, 1),
+        ("sequential_schedule", false, 1),
+    ] {
         let ecfg = EngineConfig {
             workers: 8,
             wave_size: 1024,
             fanout: FanoutSpec::new(vec![10, 5]),
             wave_pipeline: pipelined,
+            lookahead_depth: depth,
             ..Default::default()
         };
         let sink = NullSink::default();
         let r = GraphGenPlus.generate(&g, &seeds, &ecfg, &sink).unwrap();
         println!("{key}: {}", r.render());
+        let wall_s = r.wall.as_secs_f64();
         let mut o = Json::obj();
-        o.set("wall_s", r.wall.as_secs_f64())
+        o.set("wall_s", wall_s)
             .set("nodes_per_sec_wall", r.nodes_per_sec())
-            .set("pipeline_bubble_s", r.wave_pipeline.bubble.as_secs_f64())
-            .set("overlapped_waves", r.wave_pipeline.overlapped_waves as f64)
-            .set("waves", r.wave_pipeline.waves as f64);
+            .set("lookahead_depth", depth as f64)
+            .set("iters_per_sec", r.wave_pipeline.waves as f64 / wall_s.max(1e-12));
+        wave_pipeline_json(&mut o, wall_s, &r.wave_pipeline);
         modes_json.set(key, o);
     }
     let mut out = Json::obj();
@@ -100,8 +126,11 @@ fn main() {
     let seeds: Vec<u32> = (0..(spec.batch * replicas * iters) as u32)
         .map(|i| i % g.num_nodes())
         .collect();
-    // Leave half the cores to training (see module docs).
-    let gen_threads = (graphgen_plus::util::workpool::default_threads() / 2).max(2);
+    // Leave half the cores to training (see module docs), and split the
+    // generation half between hop scans and feature gathers.
+    let half = (graphgen_plus::util::workpool::default_threads() / 2).max(2);
+    let (gen_threads, gather_threads) = graphgen_plus::pipeline::split_pool_budget(half, 0);
+    let features = features.with_threads(gather_threads);
     let ecfg = EngineConfig {
         workers: 8,
         threads: gen_threads,
@@ -151,17 +180,19 @@ fn main() {
                 .unwrap_or_else(|| "0 B".into()),
         ]);
         println!("{label}: {}", r.render());
+        let wall_s = r.wall.as_secs_f64();
         let mut o = graphgen_plus::util::json::Json::obj();
-        o.set("wall_s", r.wall.as_secs_f64())
+        o.set("wall_s", wall_s)
             .set("gen_wall_s", r.gen.wall.as_secs_f64())
             .set("gen_modeled_s", gen_sim)
             .set("train_s", train_secs)
             .set("modeled_e2e_s", modeled)
             .set("final_loss", r.train.final_loss as f64)
             .set("overlap_ratio", r.overlap_ratio())
-            .set("pipeline_bubble_s", r.bubble.as_secs_f64())
-            .set("overlapped_waves", r.gen.wave_pipeline.overlapped_waves as f64)
-            .set("warmed_waves", r.warmed_waves as f64);
+            .set("iters_per_sec", r.train.iterations as f64 / wall_s.max(1e-12))
+            .set("warmed_waves", r.warmed_waves as f64)
+            .set("warm_skipped_waves", r.warm_skipped_waves as f64);
+        wave_pipeline_json(&mut o, wall_s, &r.gen.wave_pipeline);
         modes_json.set(key, o);
     }
     // Machine-readable trajectory (BENCH_e6.json): lets CI watch the

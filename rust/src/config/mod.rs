@@ -49,9 +49,16 @@ pub struct RunConfig {
     pub feature_cache_mb: usize,
     /// Overlap feature gather for batch t+1 with training on batch t.
     pub feature_prefetch: bool,
-    /// Overlap hop-1 of wave w+1 with reduce/emit of wave w (byte-identical
-    /// output; scheduling only).
+    /// Overlap hop work of future waves with reduce/emit of the current
+    /// one (byte-identical output; scheduling only).
     pub wave_pipeline: bool,
+    /// Look-ahead ring depth: waves the generation pipeline may run ahead
+    /// of the one being emitted (≥ 1; ≥ 2 also speculates hop-2).
+    pub lookahead_depth: usize,
+    /// Worker threads reserved for feature gathers in the concurrent
+    /// pipeline (0 = auto: a quarter of `threads`). The remainder goes to
+    /// generation hop scans — see `pipeline::split_pool_budget`.
+    pub gather_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -80,6 +87,8 @@ impl Default for RunConfig {
             feature_cache_mb: 0,
             feature_prefetch: false,
             wave_pipeline: true,
+            lookahead_depth: 2,
+            gather_threads: 0,
         }
     }
 }
@@ -136,6 +145,8 @@ impl RunConfig {
             "feature_cache_mb" => self.feature_cache_mb = p(value, key)?,
             "feature_prefetch" => self.feature_prefetch = p(value, key)?,
             "wave_pipeline" => self.wave_pipeline = p(value, key)?,
+            "lookahead_depth" => self.lookahead_depth = p(value, key)?,
+            "gather_threads" => self.gather_threads = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -161,6 +172,7 @@ impl RunConfig {
             spill_dir: None,
             spill_compress: false,
             wave_pipeline: self.wave_pipeline,
+            lookahead_depth: self.lookahead_depth.max(1),
         })
     }
 
@@ -203,7 +215,9 @@ impl RunConfig {
             .set("feature_backend", self.feature_backend.clone())
             .set("feature_cache_mb", self.feature_cache_mb)
             .set("feature_prefetch", self.feature_prefetch)
-            .set("wave_pipeline", self.wave_pipeline);
+            .set("wave_pipeline", self.wave_pipeline)
+            .set("lookahead_depth", self.lookahead_depth)
+            .set("gather_threads", self.gather_threads);
         o
     }
 }
@@ -258,6 +272,22 @@ mod tests {
         assert!(c.train_config().unwrap().prefetch);
         assert!(c.apply_override("feature_prefetch", "maybe").is_err());
         assert!(c.to_json().to_pretty().contains("feature_backend"));
+    }
+
+    #[test]
+    fn pipeline_depth_and_budget_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.lookahead_depth, 2);
+        assert_eq!(c.gather_threads, 0);
+        c.apply_override("lookahead_depth", "4").unwrap();
+        c.apply_override("gather_threads", "3").unwrap();
+        assert_eq!(c.engine_config().unwrap().lookahead_depth, 4);
+        assert_eq!(c.gather_threads, 3);
+        // Depth 0 clamps to 1 at materialization (never a dead pipeline).
+        c.apply_override("lookahead_depth", "0").unwrap();
+        assert_eq!(c.engine_config().unwrap().lookahead_depth, 1);
+        assert!(c.to_json().to_pretty().contains("lookahead_depth"));
+        assert!(c.to_json().to_pretty().contains("gather_threads"));
     }
 
     #[test]

@@ -44,7 +44,6 @@ impl SubgraphEngine for AglNodeCentric {
         let (table, waves) = phases.time("map.balance", || plan_waves(seeds, cfg));
         let mut subgraphs = 0u64;
         let mut sampled_nodes = 0u64;
-        let want_waves = sink.wants_waves();
         lanes.run(
             graph,
             &table,
@@ -54,10 +53,8 @@ impl SubgraphEngine for AglNodeCentric {
             &mut ledger,
             &mut phases,
             node_centric_hop,
+            Some(sink),
             |phases, _ledger, slots| {
-                if want_waves {
-                    sink.wave_complete(&slots.unique_nodes());
-                }
                 phases.time("emit", || -> anyhow::Result<()> {
                     for (worker, sg) in slots.into_subgraphs() {
                         subgraphs += 1;
@@ -129,33 +126,51 @@ fn node_centric_hop(
     }
     // One sequential task per node: the hub's whole neighbor list × all
     // interested subgraphs runs on one thread (the AGL bottleneck).
+    // Claim granularity is routed through the per-hop adaptive sizer
+    // (measured per-item cost → ~target-sized claims) instead of the
+    // fixed threads×8 divisor; chunking only changes scheduling, so the
+    // output bytes are unaffected.
     let seeds = slots.seeds;
     let (index, nodes, frames) = (&scratch.index, &scratch.nodes, &scratch.frames);
     let n = nodes.len();
-    let chunk = (n / (cfg.threads.max(1) * 8)).max(1);
-    let partials: Vec<Frame> = WorkPool::global().map_collect(n, cfg.threads, chunk, |i| {
-        let v = nodes[i];
-        let mut frame = frames.acquire();
-        let entries = index.get(v);
-        // A node's index entries carry ascending ordinals, so the frame
-        // fills positionally — no sort, no hashing.
-        frame.prepare(k, entries.iter().map(|&(_, ord)| ord));
-        let neigh = g.neighbors(v);
-        for &(slot, ord) in entries {
-            let seed = seeds[slot as usize];
-            let base = crate::sampler::priority_base(cfg.sample_seed, hop, seed, v);
-            let res = frame.tok_for(ord);
-            let mut threshold = res.threshold();
-            for &nbr in neigh {
-                let p = crate::sampler::priority_from_base(base, nbr);
-                if p < threshold {
-                    res.insert(p, nbr);
-                    threshold = res.threshold();
+    let hop_idx = (hop - 1) as usize;
+    let chunk = n.div_ceil(scratch.sizers[hop_idx].num_tasks(cfg)).max(1);
+    // Chunk-granular timing rides in the result slots (two clock reads
+    // per claimed chunk, none per node — see `ChunkClock`); the sizer
+    // sees the summed CPU after collection.
+    let clock = super::common::ChunkClock::new(chunk, n);
+    let timed: Vec<(Frame, std::time::Duration)> = WorkPool::global()
+        .map_collect(n, cfg.threads, chunk, |i| {
+            clock.start(i);
+            let v = nodes[i];
+            let mut frame = frames.acquire();
+            let entries = index.get(v);
+            // A node's index entries carry ascending ordinals, so the
+            // frame fills positionally — no sort, no hashing.
+            frame.prepare(k, entries.iter().map(|&(_, ord)| ord));
+            let neigh = g.neighbors(v);
+            for &(slot, ord) in entries {
+                let seed = seeds[slot as usize];
+                let base = crate::sampler::priority_base(cfg.sample_seed, hop, seed, v);
+                let res = frame.tok_for(ord);
+                let mut threshold = res.threshold();
+                for &nbr in neigh {
+                    let p = crate::sampler::priority_from_base(base, nbr);
+                    if p < threshold {
+                        res.insert(p, nbr);
+                        threshold = res.threshold();
+                    }
                 }
             }
-        }
-        frame
-    });
+            (frame, clock.stop(i))
+        });
+    let mut cpu = std::time::Duration::ZERO;
+    let mut partials = Vec::with_capacity(timed.len());
+    for (frame, took) in timed {
+        cpu += took;
+        partials.push(frame);
+    }
+    scratch.sizers[hop_idx].record(n.div_ceil(chunk), cpu);
     // Merge: each ordinal lives in exactly one node's partial (an ordinal
     // is one frontier entry, owned by one node), and every frontier node
     // has a partial — so the union is dense and disjoint. Build the
@@ -222,6 +237,24 @@ mod tests {
         AglNodeCentric.generate(&g, &seeds, &cfg(), &a).unwrap();
         GraphGenPlus.generate(&g, &seeds, &cfg(), &b).unwrap();
         assert_eq!(a.take_sorted(), b.take_sorted());
+    }
+
+    #[test]
+    fn per_node_chunking_routes_through_task_sizer() {
+        let g = generator::from_spec("rmat:n=1024,e=8192", 9).unwrap().csr();
+        let seeds: Vec<NodeId> = (0..128).collect();
+        let report = AglNodeCentric
+            .generate(&g, &seeds, &cfg(), &crate::engines::NullSink::default())
+            .unwrap();
+        for hop in 0..2 {
+            assert!(
+                report.scratch.scan_tasks[hop] > 0,
+                "hop {} sizer never recorded a round: {:?}",
+                hop + 1,
+                report.scratch
+            );
+            assert!(report.scratch.task_ewma_ns[hop] > 0, "{:?}", report.scratch);
+        }
     }
 
     #[test]

@@ -42,10 +42,10 @@ use crate::util::timer::PhaseTimer;
 use crate::util::workpool::WorkPool;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use super::{EngineConfig, ReduceTopology};
+use super::{EngineConfig, ReduceTopology, SubgraphSink};
 
 /// In-progress subgraphs of one wave. Seeds and worker assignments are
 /// borrowed straight from the balance table — no per-wave copies.
@@ -403,10 +403,24 @@ pub struct TaskSizer {
 }
 
 impl TaskSizer {
-    /// Target per-task CPU time: long enough to amortize claim/dispatch
-    /// overhead, short enough to pack threads without straggler tails.
-    const TARGET_TASK_NS: f64 = 120_000.0;
     const ALPHA: f64 = 0.4;
+
+    /// Target per-task CPU time in ns: long enough to amortize
+    /// claim/dispatch overhead, short enough to pack threads without
+    /// straggler tails. Default 120 µs; overridable once per process via
+    /// `GG_TASK_TARGET_US` (the E2 sweep validates the default across
+    /// cluster scales).
+    pub fn target_task_ns() -> f64 {
+        static CACHED: OnceLock<f64> = OnceLock::new();
+        *CACHED.get_or_init(|| {
+            std::env::var("GG_TASK_TARGET_US")
+                .ok()
+                .and_then(|v| v.parse::<f64>().ok())
+                .filter(|us| *us > 0.0)
+                .map(|us| us * 1_000.0)
+                .unwrap_or(120_000.0)
+        })
+    }
 
     /// Tasks to use for the next round of this hop.
     pub fn num_tasks(&self, cfg: &EngineConfig) -> usize {
@@ -423,7 +437,7 @@ impl TaskSizer {
         // parts of the simulated accounting (merge fan-in, reduce-tree
         // fabric bytes) stable in practice.
         let total_ns = self.ewma_task_ns * self.last_tasks as f64;
-        let want = (total_ns / Self::TARGET_TASK_NS).ceil() as usize;
+        let want = (total_ns / Self::target_task_ns()).ceil() as usize;
         want.next_power_of_two().clamp(cfg.workers.max(cfg.threads), base)
     }
 
@@ -447,6 +461,51 @@ impl TaskSizer {
     /// `(last task count, EWMA per-task ns)` for reports.
     pub fn snapshot(&self) -> (u64, u64) {
         (self.last_tasks, self.ewma_task_ns as u64)
+    }
+}
+
+thread_local! {
+    /// Start stamp of the claim chunk the current thread is scanning
+    /// (see [`ChunkClock`]).
+    static CHUNK_T0: std::cell::Cell<Option<Instant>> = const { std::cell::Cell::new(None) };
+}
+
+/// Claim-chunk-granular timing for per-item `map_collect` engines (AGL's
+/// per-node tasks, SQL's per-chunk materialization): the work pool claims
+/// `chunk`-strided index ranges and each range runs consecutively on one
+/// thread, so stamping a thread-local start on a chunk's first index and
+/// reading it on the chunk's last costs **two clock reads per claimed
+/// chunk** instead of two per item — the same granularity the
+/// edge-centric engines get from their per-task timing. Feeds
+/// [`TaskSizer::record`] through the per-index result slots.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkClock {
+    chunk: usize,
+    n: usize,
+}
+
+impl ChunkClock {
+    pub fn new(chunk: usize, n: usize) -> Self {
+        Self { chunk: chunk.max(1), n }
+    }
+
+    /// Call at the top of the per-index closure.
+    #[inline]
+    pub fn start(&self, i: usize) {
+        if i % self.chunk == 0 {
+            CHUNK_T0.with(|t| t.set(Some(Instant::now())));
+        }
+    }
+
+    /// Call at the end of the per-index closure: returns the chunk's
+    /// elapsed time on its final index, `Duration::ZERO` otherwise.
+    #[inline]
+    pub fn stop(&self, i: usize) -> Duration {
+        if i % self.chunk == self.chunk - 1 || i + 1 == self.n {
+            CHUNK_T0.with(|t| t.take()).map_or(Duration::ZERO, |t0| t0.elapsed())
+        } else {
+            Duration::ZERO
+        }
     }
 }
 
@@ -902,22 +961,79 @@ pub fn assign_hop(
 }
 
 // ---------------------------------------------------------------------------
-// Double-buffered wave pipeline
+// Depth-k look-ahead wave ring
 // ---------------------------------------------------------------------------
 
+/// Look-ahead depths tracked individually by the occupancy histogram;
+/// deeper rings fold into the last bucket.
+pub const MAX_TRACKED_DEPTH: usize = 8;
+
 /// Counters of the wave pipeline (exposed in
-/// [`GenReport`](super::GenReport) and surfaced as the pipeline bubble in
+/// [`GenReport`](super::GenReport) and surfaced — bubble, stall taxonomy
+/// and ring occupancy — through
 /// [`PipelineReport`](crate::pipeline::PipelineReport)).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct WavePipelineStats {
     /// Waves processed by the run.
     pub waves: u64,
-    /// Waves whose hop-1 scan was prefetched while the previous wave was
+    /// Waves whose hop-1 scan was prefetched while an earlier wave was
     /// still reducing/emitting.
     pub overlapped_waves: u64,
-    /// Wall time the wave loop spent waiting for a prefetched hop-1 that
-    /// was not ready yet — the pipeline bubble. 0 = fully hidden.
-    pub bubble: std::time::Duration,
+    /// Waves whose hop-2 was also speculated on the look-ahead worker
+    /// (ring depth ≥ 2, no newer hop-1 request pending, and the caller
+    /// still holding an earlier prefetched wave — i.e. genuine idle
+    /// time).
+    pub deep_waves: u64,
+    /// Wall time the wave loop spent waiting for a prefetched wave that
+    /// was not ready yet — the **lane-starved** pipeline bubble. 0 =
+    /// fully hidden.
+    pub bubble: Duration,
+    /// Times the wave loop found no prefetched wave ready (each wait
+    /// contributes to [`bubble`](Self::bubble)).
+    pub lane_starved_stalls: u64,
+    /// Times ring admission stalled on training-queue backpressure
+    /// ([`SubgraphSink::lookahead_admit`] said no).
+    pub queue_full_stalls: u64,
+    /// Wall time spent in those admission stalls.
+    pub queue_full_wait: Duration,
+    /// Wave-completion hooks executed on the wave loop (the feature-cache
+    /// warming gather) — the **gather-wait** component of the taxonomy.
+    pub gather_waits: u64,
+    /// Wall time those hooks held the wave loop.
+    pub gather_wait: Duration,
+    /// `occupancy[d]` counts waves handed back with `d` waves in flight
+    /// on the ring (clamped to [`MAX_TRACKED_DEPTH`]`-1`). Steady state
+    /// concentrates at the configured depth; mass in lower buckets means
+    /// the ring ran admission-starved (backpressure or tail).
+    pub occupancy: [u64; MAX_TRACKED_DEPTH],
+}
+
+/// Stall/occupancy counters one pipelined `run` call accumulates before
+/// folding into [`WavePipelineStats`].
+#[derive(Debug, Default)]
+struct RingCounters {
+    overlapped: u64,
+    deep: u64,
+    bubble: Duration,
+    lane_starved: u64,
+    queue_full_stalls: u64,
+    queue_full_wait: Duration,
+    gather_waits: u64,
+    gather_wait: Duration,
+    occupancy: [u64; MAX_TRACKED_DEPTH],
+}
+
+/// Block on the sink's admission gate before handing a speculative wave
+/// to the look-ahead worker (the training-queue backpressure hook).
+fn admission_gate(sink: Option<&dyn SubgraphSink>, stalls: &mut u64, wait: &mut Duration) {
+    if let Some(s) = sink {
+        if !s.lookahead_admit() {
+            let t0 = Instant::now();
+            s.lookahead_wait();
+            *stalls += 1;
+            *wait += t0.elapsed();
+        }
+    }
 }
 
 /// One engine hop round: fills `hop` of `slots`, drawing all transient
@@ -933,19 +1049,34 @@ pub type HopFn = for<'a> fn(
     &mut ScratchArena,
 );
 
-/// Two [`ScratchArena`] lanes plus the shared per-wave loop of all four
-/// engines. With [`EngineConfig::wave_pipeline`] enabled, the hop-1 scan
-/// of wave *w+1* runs on a helper thread (lane B) while the current wave's
-/// hop-2/reduce/emit drain on the caller's thread (lane A); the lanes swap
-/// every wave. The schedule is a pure reordering: every hop consumes
-/// exactly the inputs it would see sequentially (hop 1 depends only on the
-/// balance table), reservoirs are a pure function of the candidate
-/// multiset, and waves emit in order from the caller's thread — so the
-/// produced subgraph bytes are **identical** to the sequential schedule
-/// (the determinism barrier asserted by `tests/pipeline_overlap.rs`).
+/// A ring of [`ScratchArena`] lanes plus the shared per-wave loop of all
+/// four engines. With [`EngineConfig::wave_pipeline`] enabled, a
+/// long-lived look-ahead worker runs hop-1 of up to
+/// [`EngineConfig::lookahead_depth`] future waves while the current wave's
+/// remaining hops/reduce/emit drain on the caller's thread; lanes rotate
+/// through the ring as waves complete. At depth ≥ 2 the worker also
+/// *speculates hop-2* of a look-ahead wave — but only when no newer
+/// hop-1 request is pending **and** the caller is still busy with an
+/// earlier prefetched wave, so deep prefetch fills genuine idle time
+/// instead of stealing work the caller would start immediately; the
+/// caller's thread skips straight to emit for such waves.
+///
+/// Admission is **backpressured by the sink**: before handing a wave to
+/// the worker, the ring consults [`SubgraphSink::lookahead_admit`] and
+/// blocks in [`SubgraphSink::lookahead_wait`] while the training queue
+/// sits above its high-water mark (credits return on dequeue), so
+/// generation can never run unboundedly ahead of the trainer.
+///
+/// The schedule is a pure reordering: every hop consumes exactly the
+/// inputs it would see sequentially (waves are mutually independent and
+/// hop 1 depends only on the balance table), reservoirs are a pure
+/// function of the candidate multiset, and waves emit in order from the
+/// caller's thread — so the produced subgraph bytes are **identical** to
+/// the sequential schedule at every depth (the determinism barrier
+/// asserted by `tests/pipeline_overlap.rs`).
 #[derive(Debug, Default)]
 pub struct WaveLanes {
-    lanes: [ScratchArena; 2],
+    lanes: Vec<ScratchArena>,
     /// Pipeline counters accumulated across `run` calls.
     pub stats: WavePipelineStats,
 }
@@ -955,23 +1086,35 @@ impl WaveLanes {
         Self::default()
     }
 
-    /// Aggregate scratch counters over both lanes (sizer snapshot comes
-    /// from lane 0, which runs the most rounds).
-    pub fn scratch_stats(&self, pool_threads_spawned: u64) -> ScratchStats {
-        let a = self.lanes[0].stats(pool_threads_spawned);
-        let b = self.lanes[1].stats(0);
-        ScratchStats {
-            frames_allocated: a.frames_allocated + b.frames_allocated,
-            frames_reused: a.frames_reused + b.frames_reused,
-            steady_frame_allocs: a.steady_frame_allocs + b.steady_frame_allocs,
-            pool_threads_spawned,
-            scan_tasks: a.scan_tasks,
-            task_ewma_ns: a.task_ewma_ns,
+    fn ensure_lanes(&mut self, n: usize) {
+        while self.lanes.len() < n {
+            self.lanes.push(ScratchArena::default());
         }
     }
 
-    /// Run every wave of `table`: all hops via `hop`, then `emit` with the
+    /// Aggregate scratch counters over every lane (sizer snapshot comes
+    /// from lane 0; all lanes carry full waves through the ring, so any
+    /// lane's sizers have seen both hops).
+    pub fn scratch_stats(&self, pool_threads_spawned: u64) -> ScratchStats {
+        let mut total = ScratchStats { pool_threads_spawned, ..Default::default() };
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let s = lane.stats(0);
+            total.frames_allocated += s.frames_allocated;
+            total.frames_reused += s.frames_reused;
+            total.steady_frame_allocs += s.steady_frame_allocs;
+            if i == 0 {
+                total.scan_tasks = s.scan_tasks;
+                total.task_ewma_ns = s.task_ewma_ns;
+            }
+        }
+        total
+    }
+
+    /// Run every wave of `table`: all hops via `hop`, the sink's
+    /// wave-completion hook (timed as gather-wait), then `emit` with the
     /// finished [`WaveSlots`] (called in wave order on this thread).
+    /// `sink` also provides the look-ahead admission gate; pass `None`
+    /// for engines whose sink never sees in-flight waves (offline spill).
     #[allow(clippy::too_many_arguments)]
     pub fn run<'t>(
         &mut self,
@@ -983,14 +1126,19 @@ impl WaveLanes {
         ledger: &mut WorkLedger,
         phases: &mut PhaseTimer,
         hop: HopFn,
+        sink: Option<&dyn SubgraphSink>,
         mut emit: impl FnMut(&mut PhaseTimer, &mut WorkLedger, WaveSlots<'t>) -> anyhow::Result<()>,
     ) -> anyhow::Result<()> {
         let hops = cfg.fanout.hops() as u32;
         self.stats.waves += waves.len() as u64;
+        let wave_hook = sink.filter(|s| s.wants_waves());
         if !cfg.wave_pipeline || waves.len() < 2 {
             // Sequential schedule: one lane, hops back to back.
-            let lane = &mut self.lanes[0];
+            self.ensure_lanes(1);
+            let mut gather_waits = 0u64;
+            let mut gather_wait = Duration::ZERO;
             for (wi, wave) in waves.iter().enumerate() {
+                let lane = &mut self.lanes[0];
                 let mut slots = WaveSlots::new(
                     &table.seeds[wave.clone()],
                     &table.worker_of[wave.clone()],
@@ -1000,30 +1148,61 @@ impl WaveLanes {
                         hop(g, &mut slots, h, cfg, fabric, ledger, lane)
                     });
                 }
+                if let Some(s) = wave_hook {
+                    let t0 = Instant::now();
+                    s.wave_complete(&slots.unique_nodes());
+                    gather_wait += t0.elapsed();
+                    gather_waits += 1;
+                }
                 emit(&mut *phases, &mut *ledger, slots)?;
                 if wi == 0 {
-                    lane.mark_warm();
+                    self.lanes[0].mark_warm();
                 }
             }
+            self.stats.gather_waits += gather_waits;
+            self.stats.gather_wait += gather_wait;
             return Ok(());
         }
-        // --- pipelined schedule -------------------------------------------
-        let [mut lane_a, lane_b] = std::mem::take(&mut self.lanes);
-        let mut bubble = Duration::ZERO;
-        let mut overlapped = 0u64;
+        // --- depth-k pipelined schedule -----------------------------------
+        // `depth` look-ahead lanes plus one for the wave in hand.
+        let depth = cfg.lookahead_depth.max(1).min(waves.len() - 1);
+        let speculate = depth >= 2 && hops >= 2;
+        self.ensure_lanes(depth + 1);
+        let mut spare: Vec<ScratchArena> = std::mem::take(&mut self.lanes);
+        let mut lane0 = spare.pop().expect("ring lane");
+        // Prefetched waves the caller has not consumed yet. Hop-2
+        // speculation is gated on this being ≥ 1: only when the caller is
+        // still busy with an earlier wave is deepening the next one free —
+        // otherwise the worker would steal hop-2 work the caller would
+        // start immediately, converting caller busy time into measured
+        // bubble for no wall-clock gain.
+        let outstanding = AtomicUsize::new(0);
         let outcome = std::thread::scope(
-            |s| -> anyhow::Result<(WorkLedger, PhaseTimer, Vec<ScratchArena>)> {
+            |s| -> anyhow::Result<(WorkLedger, PhaseTimer, Vec<ScratchArena>, RingCounters)> {
+                let mut c = RingCounters::default();
                 let (req_tx, req_rx) =
                     mpsc::channel::<(std::ops::Range<usize>, ScratchArena)>();
-                let (res_tx, res_rx) = mpsc::channel::<(WaveSlots<'t>, ScratchArena)>();
+                let (res_tx, res_rx) = mpsc::channel::<(WaveSlots<'t>, ScratchArena, u32)>();
                 // Long-lived look-ahead worker: one spawn per run, not per
                 // wave. It owns its own ledger/timer; both merge back after
                 // the loop (ledger charges are commutative sums, so the
-                // merged totals equal the sequential schedule's).
+                // merged totals equal the sequential schedule's). Requests
+                // are served FIFO in admission = wave order, so results
+                // arrive in wave order too.
+                let outstanding = &outstanding;
                 let helper = s.spawn(move || {
                     let mut hledger = WorkLedger::new(cfg.workers);
                     let mut hphases = PhaseTimer::new();
-                    while let Ok((range, mut lane)) = req_rx.recv() {
+                    let mut deep = 0u64;
+                    let mut pending: Option<(std::ops::Range<usize>, ScratchArena)> = None;
+                    loop {
+                        let (range, mut lane) = match pending.take() {
+                            Some(m) => m,
+                            None => match req_rx.recv() {
+                                Ok(m) => m,
+                                Err(_) => break,
+                            },
+                        };
                         let mut slots = WaveSlots::new(
                             &table.seeds[range.clone()],
                             &table.worker_of[range],
@@ -1031,73 +1210,144 @@ impl WaveLanes {
                         hphases.time("hop1", || {
                             hop(g, &mut slots, 1, cfg, fabric, &mut hledger, &mut lane)
                         });
-                        if res_tx.send((slots, lane)).is_err() {
+                        let mut done = 1u32;
+                        if speculate {
+                            // Breadth first: a newer hop-1 request beats
+                            // deepening this wave; and speculation only
+                            // fills genuine idle time — the caller must
+                            // still be holding an earlier prefetched wave.
+                            match req_rx.try_recv() {
+                                Ok(next) => pending = Some(next),
+                                Err(_) => {
+                                    if outstanding.load(Ordering::Relaxed) >= 1 {
+                                        hphases.time("hop2", || {
+                                            hop(
+                                                g,
+                                                &mut slots,
+                                                2,
+                                                cfg,
+                                                fabric,
+                                                &mut hledger,
+                                                &mut lane,
+                                            )
+                                        });
+                                        done = 2;
+                                        deep += 1;
+                                    }
+                                }
+                            }
+                        }
+                        outstanding.fetch_add(1, Ordering::Relaxed);
+                        if res_tx.send((slots, lane, done)).is_err() {
                             break;
                         }
                     }
-                    (hledger, hphases)
+                    (hledger, hphases, deep)
                 });
-                // Wave 0's hop-1 runs inline; wave 1 prefetches at once.
+                // Wave 0's hop-1 runs inline; the ring fills behind it.
                 let mut slots0 = WaveSlots::new(
                     &table.seeds[waves[0].clone()],
                     &table.worker_of[waves[0].clone()],
                 );
                 phases.time("hop1", || {
-                    hop(g, &mut slots0, 1, cfg, fabric, ledger, &mut lane_a)
+                    hop(g, &mut slots0, 1, cfg, fabric, ledger, &mut lane0)
                 });
-                req_tx
-                    .send((waves[1].clone(), lane_b))
-                    .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
-                let mut cur = Some((slots0, lane_a));
-                let mut parked: Vec<ScratchArena> = Vec::with_capacity(2);
+                let mut next_admit = 1usize;
+                let mut in_flight = 0usize;
+                while next_admit < waves.len() && in_flight < depth {
+                    admission_gate(sink, &mut c.queue_full_stalls, &mut c.queue_full_wait);
+                    let lane = spare.pop().expect("ring lane");
+                    req_tx
+                        .send((waves[next_admit].clone(), lane))
+                        .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
+                    next_admit += 1;
+                    in_flight += 1;
+                }
+                let mut cur = Some((slots0, lane0, 1u32));
+                let mut parked: Vec<ScratchArena> = Vec::with_capacity(depth + 1);
                 for wi in 0..waves.len() {
-                    let (mut slots, mut lane) = cur.take().expect("current wave in hand");
-                    for h in 2..=hops {
+                    let (mut slots, mut lane, done) = cur.take().expect("current wave in hand");
+                    // Ring occupancy as this wave is taken into hand —
+                    // before its lane is re-admitted below.
+                    let ring_now = in_flight;
+                    for h in (done + 1)..=hops {
                         phases.time(&format!("hop{h}"), || {
                             hop(g, &mut slots, h, cfg, fabric, ledger, &mut lane)
                         });
                     }
-                    // Each lane warms after its own first full wave
-                    // (wave 0 = lane A, wave 1 = lane B).
-                    if wi < 2 {
-                        lane.mark_warm();
-                    }
+                    // Idempotent: stocks the slack on the lane's first
+                    // full wave, no-ops afterwards.
+                    lane.mark_warm();
                     // The lane is free as soon as its hops are done: hand
-                    // it to the prefetcher *before* emitting, so
-                    // hop-1(w+2) also overlaps the emit.
-                    if wi + 2 < waves.len() {
+                    // it back to the ring *before* emitting, so look-ahead
+                    // hop work also overlaps the emit.
+                    if next_admit < waves.len() {
+                        admission_gate(sink, &mut c.queue_full_stalls, &mut c.queue_full_wait);
                         req_tx
-                            .send((waves[wi + 2].clone(), lane))
+                            .send((waves[next_admit].clone(), lane))
                             .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
+                        next_admit += 1;
+                        in_flight += 1;
                     } else {
                         parked.push(lane);
                     }
+                    if let Some(s) = wave_hook {
+                        let t0 = Instant::now();
+                        s.wave_complete(&slots.unique_nodes());
+                        c.gather_wait += t0.elapsed();
+                        c.gather_waits += 1;
+                    }
                     emit(&mut *phases, &mut *ledger, slots)?;
                     if wi + 1 < waves.len() {
-                        let wait = Instant::now();
-                        let next = res_rx
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
-                        bubble += wait.elapsed();
-                        overlapped += 1;
+                        c.occupancy[ring_now.min(MAX_TRACKED_DEPTH - 1)] += 1;
+                        let next = match res_rx.try_recv() {
+                            Ok(m) => m,
+                            Err(mpsc::TryRecvError::Empty) => {
+                                c.lane_starved += 1;
+                                let wait = Instant::now();
+                                let m = res_rx.recv().map_err(|_| {
+                                    anyhow::anyhow!("wave prefetcher exited early")
+                                })?;
+                                c.bubble += wait.elapsed();
+                                m
+                            }
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                return Err(anyhow::anyhow!("wave prefetcher exited early"))
+                            }
+                        };
+                        outstanding.fetch_sub(1, Ordering::Relaxed);
+                        c.overlapped += 1;
+                        in_flight -= 1;
                         cur = Some(next);
                     }
                 }
                 drop(req_tx);
-                let (hledger, hphases) = helper
+                let (hledger, hphases, deep) = helper
                     .join()
                     .map_err(|_| anyhow::anyhow!("wave prefetcher panicked"))?;
-                Ok((hledger, hphases, parked))
+                c.deep = deep;
+                Ok((hledger, hphases, parked, c))
             },
         );
-        let (hledger, hphases, mut parked) = outcome?;
+        let (hledger, hphases, mut parked, c) = outcome?;
         ledger.merge(&hledger);
         phases.merge(&hphases);
-        let l1 = parked.pop().unwrap_or_default();
-        let l0 = parked.pop().unwrap_or_default();
-        self.lanes = [l0, l1];
-        self.stats.bubble += bubble;
-        self.stats.overlapped_waves += overlapped;
+        parked.append(&mut spare);
+        while parked.len() < depth + 1 {
+            parked.push(ScratchArena::default());
+        }
+        self.lanes = parked;
+        self.stats.bubble += c.bubble;
+        self.stats.overlapped_waves += c.overlapped;
+        self.stats.deep_waves += c.deep;
+        self.stats.lane_starved_stalls += c.lane_starved;
+        self.stats.queue_full_stalls += c.queue_full_stalls;
+        self.stats.queue_full_wait += c.queue_full_wait;
+        self.stats.gather_waits += c.gather_waits;
+        self.stats.gather_wait += c.gather_wait;
+        for (dst, src) in self.stats.occupancy.iter_mut().zip(c.occupancy.iter()) {
+            *dst += src;
+        }
         Ok(())
     }
 }

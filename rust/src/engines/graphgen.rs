@@ -65,6 +65,9 @@ impl SubgraphEngine for GraphGenOffline {
             &mut ledger,
             &mut phases,
             edge_centric_hop,
+            // Offline: the sink never sees in-flight waves (subgraphs go
+            // to disk first), so the ring runs without admission gating.
+            None,
             |phases, ledger, slots| {
                 // Offline: subgraphs go to DISK, not to the consumer.
                 phases.time("spill.write", || -> anyhow::Result<()> {

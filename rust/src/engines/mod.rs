@@ -51,6 +51,20 @@ pub trait SubgraphSink: Sync {
     /// ([`common::WaveSlots::unique_nodes`]) — the hook the pipeline uses
     /// to warm the feature cache a whole wave ahead of training.
     fn wave_complete(&self, _nodes: &[NodeId]) {}
+
+    /// Non-blocking admission probe for the look-ahead wave ring: `false`
+    /// while the sink sits above its backpressure high-water mark and no
+    /// further speculative wave should be admitted (see
+    /// [`common::WaveLanes`]). Sinks without backpressure always admit.
+    fn lookahead_admit(&self) -> bool {
+        true
+    }
+
+    /// Block until [`lookahead_admit`](Self::lookahead_admit) may succeed
+    /// again (credits return when the consumer dequeues) or the sink
+    /// shuts down — implementations must return promptly on shutdown so
+    /// generation can surface the error instead of hanging.
+    fn lookahead_wait(&self) {}
 }
 
 /// Collects into a mutex-guarded vector (tests, small runs).
@@ -119,10 +133,16 @@ pub struct EngineConfig {
     pub spill_dir: Option<std::path::PathBuf>,
     /// Compress spill shards.
     pub spill_compress: bool,
-    /// Overlap hop-1 of wave *w+1* with hop-2/reduce/emit of wave *w*
-    /// (double-buffered scratch lanes). Output bytes are identical either
-    /// way — this only reorders the schedule; see [`common::WaveLanes`].
+    /// Overlap hop work of future waves with reduce/emit of the current
+    /// one (look-ahead scratch-lane ring). Output bytes are identical
+    /// either way — this only reorders the schedule; see
+    /// [`common::WaveLanes`].
     pub wave_pipeline: bool,
+    /// Look-ahead ring depth: how many waves may be in flight on the
+    /// look-ahead worker ahead of the wave being emitted (≥ 1; depth ≥ 2
+    /// also speculates hop-2 of look-ahead waves when the worker would
+    /// otherwise idle). Admission is backpressured by the sink.
+    pub lookahead_depth: usize,
 }
 
 impl Default for EngineConfig {
@@ -138,6 +158,7 @@ impl Default for EngineConfig {
             spill_dir: None,
             spill_compress: false,
             wave_pipeline: true,
+            lookahead_depth: 2,
         }
     }
 }
@@ -196,18 +217,31 @@ impl GenReport {
         );
         if let Some(sp) = &self.spill {
             s.push_str(&format!(
-                " storage={} write={} read={}",
+                " storage={} write={} flush={} (wait={}) read={}",
                 fmt_bytes(sp.disk_bytes),
                 fmt_secs(sp.write_time.as_secs_f64()),
+                fmt_secs(sp.flush_time.as_secs_f64()),
+                fmt_secs(sp.flush_wait.as_secs_f64()),
                 fmt_secs(sp.read_time.as_secs_f64()),
             ));
         }
-        if self.wave_pipeline.overlapped_waves > 0 {
+        // Sequential-schedule runs accrue gather-wait too — show the
+        // taxonomy whenever any of it is populated, not only when the
+        // ring overlapped (the pipelined-vs-sequential ablation needs
+        // both sides).
+        if self.wave_pipeline.overlapped_waves > 0 || self.wave_pipeline.gather_waits > 0 {
+            let wp = &self.wave_pipeline;
             s.push_str(&format!(
-                " overlap={}/{} bubble={}",
-                self.wave_pipeline.overlapped_waves,
-                self.wave_pipeline.waves,
-                fmt_secs(self.wave_pipeline.bubble.as_secs_f64()),
+                " overlap={}/{} deep={} bubble={} stalls[lane={} queue={}({}) gather={}({})]",
+                wp.overlapped_waves,
+                wp.waves,
+                wp.deep_waves,
+                fmt_secs(wp.bubble.as_secs_f64()),
+                wp.lane_starved_stalls,
+                wp.queue_full_stalls,
+                fmt_secs(wp.queue_full_wait.as_secs_f64()),
+                wp.gather_waits,
+                fmt_secs(wp.gather_wait.as_secs_f64()),
             ));
         }
         s

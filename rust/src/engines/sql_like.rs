@@ -70,7 +70,6 @@ impl SubgraphEngine for SqlLike {
         let (table, waves) = phases.time("map.balance", || plan_waves(seeds, cfg));
         let mut subgraphs = 0u64;
         let mut sampled_nodes = 0u64;
-        let want_waves = sink.wants_waves();
         lanes.run(
             graph,
             &table,
@@ -80,10 +79,8 @@ impl SubgraphEngine for SqlLike {
             &mut ledger,
             &mut phases,
             sql_hop,
+            Some(sink),
             |phases, _ledger, slots| {
-                if want_waves {
-                    sink.wave_complete(&slots.unique_nodes());
-                }
                 phases.time("emit", || -> anyhow::Result<()> {
                     for (worker, sg) in slots.into_subgraphs() {
                         subgraphs += 1;
@@ -137,36 +134,50 @@ fn sql_hop(
     for &v in &scratch.nodes {
         scratch.chunks.push(ScanChunk { node: v, lo: 0, hi: g.degree(v) });
     }
+    // Claim granularity is routed through the per-hop adaptive sizer
+    // (measured per-chunk materialization cost → ~target-sized claims)
+    // instead of the fixed threads×8 divisor; row order is per-index, so
+    // the materialized table — and the output — is unaffected.
     let seeds = slots.seeds;
     let (index, chunks, offsets) = (&scratch.index, &scratch.chunks, &scratch.offsets);
     let n = chunks.len();
-    let auto_chunk = (n / (cfg.threads.max(1) * 8)).max(1);
+    let hop_idx = (hop - 1) as usize;
+    let auto_chunk = n.div_ceil(scratch.sizers[hop_idx].num_tasks(cfg)).max(1);
     let pool = WorkPool::global();
-    let row_chunks: Vec<Vec<Row>> = pool.map_collect(n, cfg.threads, auto_chunk, |ci| {
-        let c = &chunks[ci];
-        let neigh = g.neighbors(c.node);
-        let entries = index.get(c.node);
-        let mut rows = Vec::with_capacity(neigh.len() * entries.len());
-        for &(slot, ord) in entries {
-            let seed = seeds[slot as usize];
-            let pos = ord - offsets[slot as usize];
-            let base = crate::sampler::priority_base(cfg.sample_seed, hop, seed, c.node);
-            for &nbr in neigh {
-                rows.push(Row {
-                    key: super::common::slot_key(slot, pos),
-                    order: crate::sampler::priority_from_base(base, nbr),
-                    neighbor: nbr,
-                    _pad: 0,
-                });
+    // Claim-chunk-granular timing rides in the result slots (two clock
+    // reads per claimed chunk — see `ChunkClock`); the sizer sees the
+    // summed CPU below.
+    let clock = super::common::ChunkClock::new(auto_chunk, n);
+    let row_chunks: Vec<(Vec<Row>, std::time::Duration)> =
+        pool.map_collect(n, cfg.threads, auto_chunk, |ci| {
+            clock.start(ci);
+            let c = &chunks[ci];
+            let neigh = g.neighbors(c.node);
+            let entries = index.get(c.node);
+            let mut rows = Vec::with_capacity(neigh.len() * entries.len());
+            for &(slot, ord) in entries {
+                let seed = seeds[slot as usize];
+                let pos = ord - offsets[slot as usize];
+                let base = crate::sampler::priority_base(cfg.sample_seed, hop, seed, c.node);
+                for &nbr in neigh {
+                    rows.push(Row {
+                        key: super::common::slot_key(slot, pos),
+                        order: crate::sampler::priority_from_base(base, nbr),
+                        neighbor: nbr,
+                        _pad: 0,
+                    });
+                }
             }
-        }
-        rows
-    });
+            (rows, clock.stop(ci))
+        });
     // Concatenate = the materialized join output table.
-    let mut rows: Vec<Row> = Vec::with_capacity(row_chunks.iter().map(Vec::len).sum());
-    for mut c in row_chunks {
+    let mut cpu = std::time::Duration::ZERO;
+    let mut rows: Vec<Row> = Vec::with_capacity(row_chunks.iter().map(|(r, _)| r.len()).sum());
+    for (mut c, took) in row_chunks {
+        cpu += took;
         rows.append(&mut c);
     }
+    scratch.sizers[hop_idx].record(n.div_ceil(auto_chunk), cpu);
     // --- SHUFFLE: every row crosses the network to its sort partition ---
     let w = cfg.workers;
     let mut per_dst_rows = vec![0u64; w];
@@ -281,6 +292,24 @@ mod tests {
         SqlLike.generate(&g, &seeds, &cfg(), &a).unwrap();
         GraphGenPlus.generate(&g, &seeds, &cfg(), &b).unwrap();
         assert_eq!(a.take_sorted(), b.take_sorted());
+    }
+
+    #[test]
+    fn join_chunking_routes_through_task_sizer() {
+        let g = generator::from_spec("rmat:n=1024,e=8192", 6).unwrap().csr();
+        let seeds: Vec<NodeId> = (0..128).collect();
+        let report = SqlLike
+            .generate(&g, &seeds, &cfg(), &crate::engines::NullSink::default())
+            .unwrap();
+        for hop in 0..2 {
+            assert!(
+                report.scratch.scan_tasks[hop] > 0,
+                "hop {} sizer never recorded a round: {:?}",
+                hop + 1,
+                report.scratch
+            );
+            assert!(report.scratch.task_ewma_ns[hop] > 0, "{:?}", report.scratch);
+        }
     }
 
     #[test]

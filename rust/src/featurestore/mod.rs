@@ -80,6 +80,17 @@ pub trait FeatureBackend: Send + Sync {
         }
     }
 
+    /// [`gather_into`](Self::gather_into) under an explicit worker-thread
+    /// budget (see [`FeatureService::with_threads`]): a parallel backend
+    /// must fan out over at most `threads` pool workers so gathers stop
+    /// competing with generation hop scans for the whole pool. The
+    /// default ignores the budget — serial backends have nothing to cap.
+    /// Bytes written are identical at every budget.
+    fn gather_into_budget(&self, ids: &[NodeId], out: &mut [f32], threads: usize) {
+        let _ = threads;
+        self.gather_into(ids, out)
+    }
+
     /// Partition owning `v`'s row, or `None` when the row is computable
     /// locally on every worker (the procedural store) — such reads are
     /// never charged as traffic.
@@ -184,6 +195,8 @@ pub struct FeatureService {
     cache: Option<Mutex<HotCache>>,
     fabric: Fabric,
     counters: Counters,
+    /// Worker-thread budget for gather fan-outs (scatter + bulk copies).
+    gather_threads: usize,
     /// Reset-don't-free pool for assembled batches and id scratch.
     batches: crate::train::batch::BatchArena,
 }
@@ -196,6 +209,7 @@ impl FeatureService {
             cache: None,
             fabric: Fabric::new(parts),
             counters: Counters::default(),
+            gather_threads: crate::util::workpool::default_threads(),
             batches: crate::train::batch::BatchArena::default(),
         }
     }
@@ -210,6 +224,21 @@ impl FeatureService {
         assert_eq!(cache.dim(), self.backend.dim(), "cache dim mismatch");
         self.cache = Some(Mutex::new(cache));
         self
+    }
+
+    /// Cap the pool share feature gathers may claim (builder style). The
+    /// concurrent pipeline splits the machine between generation scans
+    /// and gathers ([`crate::pipeline::split_pool_budget`]) so the two
+    /// stop fighting over the same workers; gathered bytes are identical
+    /// at every budget.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.gather_threads = threads.max(1);
+        self
+    }
+
+    /// The gather-side worker budget currently in force.
+    pub fn gather_threads(&self) -> usize {
+        self.gather_threads
     }
 
     pub fn backend(&self) -> &dyn FeatureBackend {
@@ -295,7 +324,7 @@ impl FeatureService {
             return;
         }
         let mut rows = vec![0.0f32; missing.len() * d];
-        self.backend.gather_into(&missing, &mut rows);
+        self.backend.gather_into_budget(&missing, &mut rows, self.gather_threads);
         let mut c = cache.lock().unwrap();
         for (j, &v) in missing.iter().enumerate() {
             if !c.contains(v) {
@@ -356,8 +385,9 @@ impl FeatureService {
             );
         }
         // One pool-parallel scatter over every missing row, chunked so no
-        // job crosses an owner group (the bulk-per-owner fetch shape).
-        scatter_rows(&*self.backend, &plan, &index, &mut feats, &mut labels);
+        // job crosses an owner group (the bulk-per-owner fetch shape),
+        // capped at the service's gather-thread budget.
+        scatter_rows(&*self.backend, &plan, &index, &mut feats, &mut labels, self.gather_threads);
         // 3. Freshly fetched rows become cache candidates.
         if let Some(cache) = &self.cache {
             let mut c = cache.lock().unwrap();
@@ -388,7 +418,9 @@ impl FeatureService {
         self.batches.release_ids(ids);
         let fb = FrameBackend { frame: &frame, classes: self.num_classes() };
         let mut out = self.batches.acquire(spec);
-        crate::train::batch::BatchBuilder::new(spec, &fb).build_into(subgraphs, &mut out)?;
+        crate::train::batch::BatchBuilder::new(spec, &fb)
+            .with_threads(self.gather_threads)
+            .build_into(subgraphs, &mut out)?;
         Ok(out)
     }
 }
@@ -404,6 +436,7 @@ fn scatter_rows(
     index: &FxHashMap<NodeId, u32>,
     feats: &mut [f32],
     labels: &mut [u32],
+    threads: usize,
 ) {
     let d = backend.dim().max(1);
     let groups: Vec<&[NodeId]> = std::iter::once(plan.local.as_slice())
@@ -414,7 +447,7 @@ fn scatter_rows(
     if rows == 0 {
         return;
     }
-    let threads = crate::util::workpool::default_threads();
+    let threads = threads.max(1);
     const PAR_MIN_ROWS: usize = 512;
     if threads <= 1 || rows < PAR_MIN_ROWS {
         for g in groups {
@@ -436,12 +469,13 @@ fn scatter_rows(
             lo = hi;
         }
     }
-    struct Ptr<T>(*mut T);
-    unsafe impl<T: Send> Sync for Ptr<T> {}
-    let fp = Ptr(feats.as_mut_ptr());
-    let lp = Ptr(labels.as_mut_ptr());
+    let fp = crate::util::workpool::RawParts(feats.as_mut_ptr());
+    let lp = crate::util::workpool::RawParts(labels.as_mut_ptr());
     let (fp, lp) = (&fp, &lp);
-    crate::util::workpool::WorkPool::global().run(jobs.len(), threads, 1, |j| {
+    // The gather pool, not the generation pool: pools admit one job at a
+    // time, so sharing a pool would serialize this scatter behind hop
+    // scans regardless of the thread budget.
+    crate::util::workpool::WorkPool::gather_global().run(jobs.len(), threads, 1, |j| {
         for &v in jobs[j] {
             let i = index[&v] as usize;
             // SAFETY: ids are unique across the plan, so frame row `i` is
@@ -553,6 +587,18 @@ mod tests {
         let cs = svc.cache_stats().unwrap();
         assert_eq!(cs.hits, 3);
         assert_eq!(cs.insertions, 4);
+    }
+
+    #[test]
+    fn gather_thread_budget_is_value_invariant() {
+        let wide = FeatureService::procedural(store());
+        let narrow = FeatureService::procedural(store()).with_threads(1);
+        assert_eq!(narrow.gather_threads(), 1);
+        let ids: Vec<u32> = (0..600u32).map(|i| (i * 13) % 100).collect();
+        let a = wide.gather(&ids, 0);
+        let b = narrow.gather(&ids, 0);
+        assert_eq!(a.feats, b.feats, "budget must never change gathered bytes");
+        assert_eq!(a.labels, b.labels);
     }
 
     #[test]

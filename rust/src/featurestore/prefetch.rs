@@ -39,11 +39,17 @@ pub struct WaveWarmer<'a> {
     service: &'a FeatureService,
     waves: AtomicU64,
     nodes: AtomicU64,
+    skipped: AtomicU64,
 }
 
 impl<'a> WaveWarmer<'a> {
     pub fn new(service: &'a FeatureService) -> Self {
-        Self { service, waves: AtomicU64::new(0), nodes: AtomicU64::new(0) }
+        Self {
+            service,
+            waves: AtomicU64::new(0),
+            nodes: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+        }
     }
 
     /// Push one wave's unique node ids into the service's cache.
@@ -53,9 +59,22 @@ impl<'a> WaveWarmer<'a> {
         self.service.warm_cache(ids);
     }
 
+    /// Record a wave whose warming was clamped because it completed
+    /// outside the backpressure window (deep look-ahead ran far ahead of
+    /// consumption — inserting its rows would churn the resident hot
+    /// set; see [`crate::pipeline::QueueSink`]).
+    pub fn note_skipped(&self) {
+        self.skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// `(waves, node ids)` pushed through the warmer so far.
     pub fn stats(&self) -> (u64, u64) {
         (self.waves.load(Ordering::Relaxed), self.nodes.load(Ordering::Relaxed))
+    }
+
+    /// Waves whose warming was clamped by backpressure.
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
     }
 }
 

@@ -131,17 +131,24 @@ impl FeatureBackend for ShardedStore {
     }
 
     fn gather_into(&self, ids: &[NodeId], out: &mut [f32]) {
+        self.gather_into_budget(ids, out, crate::util::workpool::default_threads())
+    }
+
+    fn gather_into_budget(&self, ids: &[NodeId], out: &mut [f32], threads: usize) {
         let d = self.dim;
         assert_eq!(out.len(), ids.len() * d, "gather buffer size mismatch");
-        let threads = crate::util::workpool::default_threads();
+        let threads = threads.max(1);
         // Big bulk gathers (whole-wave warms, batch frames) fan out over
-        // the persistent work pool: contiguous id ranges write disjoint
-        // row ranges of `out`. Small gathers stay serial — dispatch would
-        // cost more than the copies.
+        // the persistent work pool — capped at the caller's gather budget
+        // so copies never crowd out generation scans: contiguous id
+        // ranges write disjoint row ranges of `out`. Small gathers stay
+        // serial — dispatch would cost more than the copies.
         const PAR_MIN_FLOATS: usize = 1 << 15;
         if threads > 1 && out.len() >= PAR_MIN_FLOATS {
             let chunk_rows = ids.len().div_ceil(threads * 4).max(64);
-            crate::util::workpool::WorkPool::global().run_row_chunks(
+            // Gather pool: bulk copies must not occupy the generation
+            // pool's single job slot (see `WorkPool::gather_global`).
+            crate::util::workpool::WorkPool::gather_global().run_row_chunks(
                 out,
                 d,
                 threads,
@@ -241,6 +248,19 @@ mod tests {
         for (i, &v) in ids.iter().enumerate() {
             st.write_feature(v, &mut one);
             assert_eq!(&bulk[i * 6..(i + 1) * 6], &one[..], "row {i} (node {v})");
+        }
+    }
+
+    #[test]
+    fn budgeted_gather_matches_default_at_every_budget() {
+        let st = ShardedStore::build(&source(), 200, 4, 3);
+        let ids: Vec<u32> = (0..6000u32).map(|i| (i * 11) % 200).collect();
+        let mut reference = vec![0.0f32; ids.len() * 6];
+        st.gather_into(&ids, &mut reference);
+        for threads in [1usize, 2, 8] {
+            let mut got = vec![0.0f32; ids.len() * 6];
+            st.gather_into_budget(&ids, &mut got, threads);
+            assert_eq!(got, reference, "budget {threads} changed gathered bytes");
         }
     }
 

@@ -38,7 +38,8 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
         opt("mapping", "seed mapping: paper|contiguous|hash", None),
         opt("reduce", "aggregation: tree|flat", None),
         opt("reduce-arity", "tree reduction arity", None),
-        opt("wave-pipeline", "overlap next wave's hop-1 with reduce/emit (true|false)", None),
+        opt("wave-pipeline", "overlap look-ahead waves with reduce/emit (true|false)", None),
+        opt("lookahead-depth", "wave look-ahead ring depth (>=1; >=2 speculates hop-2)", None),
         flag("dump-config", "print the effective config and exit"),
     ]
 }
@@ -76,6 +77,7 @@ fn build_app() -> App {
                     o.push(opt("feature-backend", "feature store: procedural|sharded", None));
                     o.push(opt("feature-cache-mb", "hot-node feature cache (MiB, 0=off)", None));
                     o.push(opt("feature-prefetch", "overlap feature gather with training (true|false)", None));
+                    o.push(opt("gather-threads", "pool threads reserved for feature gathers (0=auto)", None));
                     o.push(opt("pjrt-pool", "PJRT executor threads", None));
                     o.push(opt("save-ckpt", "write trained params to this path", None));
                     o.push(opt("eval-seeds", "evaluate on N held-out seeds after training", None));
@@ -247,6 +249,15 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
     }
     let engine = engines::by_name(p.get("engine").unwrap_or(&cfg.engine))?;
     let mode: PipelineMode = cfg.mode.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    if mode == PipelineMode::Concurrent {
+        // Partition the pool between generation scans and feature gathers
+        // so the two stop fighting over the same workers.
+        let (gen_threads, gather_threads) =
+            graphgen_plus::pipeline::split_pool_budget(ecfg.threads, cfg.gather_threads);
+        ecfg.threads = gen_threads;
+        features = features.with_threads(gather_threads);
+        log::info!("pool budget: {gen_threads} generation / {gather_threads} gather threads");
+    }
     let report = run_pipeline(
         &g, &seeds, engine.as_ref(), &ecfg, &features, &runtime, &cfg.train_config()?, mode,
     )?;

@@ -57,12 +57,18 @@ pub struct PipelineReport {
     /// End-to-end wall time (≤ gen.wall + train.wall when concurrent).
     pub wall: Duration,
     /// Generation-side pipeline bubble: wall time the wave loop stalled
-    /// waiting for a prefetched hop-1 that was not ready (the overlap
-    /// gap; 0 when wave pipelining is off or fully hidden).
+    /// lane-starved, waiting for a prefetched wave that was not ready
+    /// (the overlap gap; 0 when wave pipelining is off or fully hidden).
+    /// The full stall taxonomy — lane-starved vs queue-full vs
+    /// gather-wait — and the ring occupancy histogram live in
+    /// `gen.wave_pipeline`.
     pub bubble: Duration,
     /// Waves whose unique nodes were warmed into the feature cache ahead
     /// of training (0 without a cache).
     pub warmed_waves: u64,
+    /// Waves whose warming was clamped because they completed above the
+    /// queue's backpressure high-water mark (speculative run-ahead).
+    pub warm_skipped_waves: u64,
 }
 
 impl PipelineReport {
@@ -75,8 +81,9 @@ impl PipelineReport {
 
     pub fn render(&self) -> String {
         use crate::util::bytes::{fmt_bytes, fmt_secs};
+        let wp = &self.gen.wave_pipeline;
         format!(
-            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% bubble={} warmed_waves={} queue_max={} feat_remote={} feat_cache={:.0}%",
+            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% bubble={} stalls[lane={} queue={} gather={}] warmed_waves={} warm_skipped={} queue_max={} feat_remote={} feat_cache={:.0}%",
             self.mode,
             fmt_secs(self.wall.as_secs_f64()),
             fmt_secs(self.gen.wall.as_secs_f64()),
@@ -86,7 +93,11 @@ impl PipelineReport {
             self.train.accuracy,
             self.overlap_ratio() * 100.0,
             fmt_secs(self.bubble.as_secs_f64()),
+            wp.lane_starved_stalls,
+            wp.queue_full_stalls,
+            fmt_secs(wp.gather_wait.as_secs_f64()),
             self.warmed_waves,
+            self.warm_skipped_waves,
             self.queue.max_depth,
             fmt_bytes(self.train.feature_fetch.remote_bytes),
             self.train.feature_fetch.cache_hit_rate() * 100.0,
@@ -99,6 +110,25 @@ impl PipelineReport {
 /// (that bounded footprint is the "in-memory, no external storage" claim).
 pub fn default_queue_cap(tcfg: &TrainConfig, batch: usize) -> usize {
     (tcfg.replicas * batch * 4).max(64)
+}
+
+/// Split the machine's worker threads between generation hop scans and
+/// feature gathers for the concurrent pipeline. Gathers run on their own
+/// pool ([`WorkPool::gather_global`](crate::util::workpool::WorkPool)),
+/// so [`ShardedStore::gather_into`](crate::featurestore::ShardedStore)
+/// bulk copies and hop scans genuinely run concurrently; this split
+/// apportions the cores between the two sides.
+/// `gather_threads == 0` picks the default split (a quarter of the
+/// budget, at least one); an explicit request is clamped so generation
+/// always keeps at least one thread and the shares sum to `total`. Both
+/// shares are ≥ 1; on a single-thread budget the shares overlap — there
+/// is nothing to partition.
+pub fn split_pool_budget(total: usize, gather_threads: usize) -> (usize, usize) {
+    let total = total.max(1);
+    let cap = (total - 1).max(1);
+    let gather = if gather_threads > 0 { gather_threads.min(cap) } else { (total / 4).max(1) };
+    let gen = (total - gather.min(total - 1)).max(1);
+    (gen, gather)
 }
 
 /// Run `engine` over `seeds` and train on the produced subgraphs.
@@ -129,12 +159,19 @@ pub fn run_pipeline(
     let (gen_report, train_report) = match mode {
         PipelineMode::Concurrent => std::thread::scope(|scope| -> Result<_> {
             let gen_handle = scope.spawn(|| {
-                let sink = QueueSink { queue: &queue, warm: warmer.as_ref() };
+                let sink = QueueSink::new(&queue, warmer.as_ref());
                 let r = engine.generate(graph, seeds, ecfg, &sink);
                 queue.close(); // close even on error so the trainer exits
                 r
             });
-            let train_report = train(runtime, features, &queue, tcfg)?;
+            let train_report = train(runtime, features, &queue, tcfg);
+            // If training died, the generator may be parked in push or in
+            // the look-ahead backpressure wait with nobody left to drain —
+            // close the queue so it fails fast and the scope can join it.
+            if train_report.is_err() {
+                queue.close();
+            }
+            let train_report = train_report?;
             let gen_report = gen_handle
                 .join()
                 .map_err(|_| anyhow::anyhow!("generator panicked"))??;
@@ -147,7 +184,7 @@ pub fn run_pipeline(
                 graph,
                 seeds,
                 ecfg,
-                &QueueSink { queue: &staging, warm: warmer.as_ref() },
+                &QueueSink::new(&staging, warmer.as_ref()),
             )?;
             staging.close();
             // Only after generation fully completed: forward into the
@@ -161,7 +198,13 @@ pub fn run_pipeline(
                     }
                     queue.close();
                 });
-                let train_report = train(runtime, features, &queue, tcfg)?;
+                let train_report = train(runtime, features, &queue, tcfg);
+                // Same fail-fast as the concurrent arm: a dead trainer
+                // must not leave the forwarder parked in push forever.
+                if train_report.is_err() {
+                    queue.close();
+                }
+                let train_report = train_report?;
                 fwd.join().map_err(|_| anyhow::anyhow!("forwarder panicked"))?;
                 Ok(train_report)
             })
@@ -173,6 +216,7 @@ pub fn run_pipeline(
         queue: queue.stats(),
         bubble: gen_report.wave_pipeline.bubble,
         warmed_waves: warmer.as_ref().map_or(0, |w| w.stats().0),
+        warm_skipped_waves: warmer.as_ref().map_or(0, |w| w.skipped()),
         gen: gen_report,
         train: train_report,
         feature_fabric: features.fabric_stats().delta(&feature_fabric_before),
@@ -195,6 +239,22 @@ mod tests {
             eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
             None
         }
+    }
+
+    #[test]
+    fn pool_budget_partitions_without_oversubscribing() {
+        // Auto split: a quarter to gather, remainder to generation.
+        assert_eq!(split_pool_budget(8, 0), (6, 2));
+        assert_eq!(split_pool_budget(16, 0), (12, 4));
+        // Explicit requests clamp so the shares sum to the budget and
+        // generation keeps at least one thread.
+        assert_eq!(split_pool_budget(8, 3), (5, 3));
+        assert_eq!(split_pool_budget(8, 8), (1, 7));
+        assert_eq!(split_pool_budget(8, 100), (1, 7));
+        // Degenerate single-thread budget: both shares overlap on it.
+        assert_eq!(split_pool_budget(1, 0), (1, 1));
+        assert_eq!(split_pool_budget(1, 5), (1, 1));
+        assert_eq!(split_pool_budget(0, 0), (1, 1));
     }
 
     #[test]

@@ -5,11 +5,16 @@
 //! * [`queue`] — bounded MPMC queue with blocking push/pop, close
 //!   semantics and backpressure counters. This queue *is* the "in-memory
 //!   graph learning" handoff: it replaces GraphGen's disk round trip.
+//!   [`QueueSink`] doubles as the look-ahead ring's admission gate: above
+//!   the high-water mark it parks speculative generation until trainer
+//!   dequeues return credits, and clamps wave-ahead cache warming to the
+//!   same window.
 //! * [`driver`] — runs generation and training concurrently (GraphGen+)
-//!   or sequentially (ablation), producing the E6 comparison.
+//!   or sequentially (ablation), producing the E6 comparison; also owns
+//!   the generation/gather pool split ([`split_pool_budget`]).
 
 pub mod driver;
 pub mod queue;
 
-pub use driver::{run_pipeline, PipelineMode, PipelineReport};
+pub use driver::{run_pipeline, split_pool_budget, PipelineMode, PipelineReport};
 pub use queue::{BoundedQueue, QueueSink, QueueStats};

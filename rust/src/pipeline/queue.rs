@@ -83,7 +83,11 @@ impl<T> BoundedQueue<T> {
             if let Some(item) = st.items.pop_front() {
                 st.pops += 1;
                 drop(st);
-                self.not_full.notify_one();
+                // `not_full` has two kinds of waiters — capacity-blocked
+                // producers and look-ahead backpressure waits
+                // (`wait_depth_at_most`) — so a single token could land
+                // on the wrong one and strand the other.
+                self.not_full.notify_all();
                 return Some(item);
             }
             if st.closed {
@@ -111,6 +115,20 @@ impl<T> BoundedQueue<T> {
         self.len() == 0
     }
 
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Block until the queue depth is at or below `mark` (credits return
+    /// as the consumer dequeues) or the queue is closed — the look-ahead
+    /// ring's backpressure wait. Returns immediately when already below.
+    pub fn wait_depth_at_most(&self, mark: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() > mark && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
     pub fn stats(&self) -> QueueStats {
         let st = self.state.lock().unwrap();
         QueueStats {
@@ -128,10 +146,44 @@ impl<T> BoundedQueue<T> {
 /// completed wave's unique nodes are pushed into the feature cache from
 /// the generator thread — a whole wave ahead of the batches that need
 /// them (see [`crate::featurestore::prefetch`]).
+///
+/// The sink is also the look-ahead ring's backpressure authority: while
+/// the queue sits above `high_water`, [`SubgraphSink::lookahead_admit`]
+/// refuses new speculative waves and [`SubgraphSink::lookahead_wait`]
+/// parks the ring until the trainer's dequeues return credits — so
+/// generation memory (queue + in-flight lanes) stays bounded even at
+/// deep look-ahead. Warming is clamped to the same window: a wave that
+/// completes while the queue is above the mark is far ahead of
+/// consumption, and inserting its rows would evict the hot set batches
+/// pending *now* still need.
 pub struct QueueSink<'a> {
     pub queue: &'a BoundedQueue<Subgraph>,
     /// Optional wave-ahead feature warmer.
     pub warm: Option<&'a crate::featurestore::WaveWarmer<'a>>,
+    /// Look-ahead admission high-water mark (queue depth).
+    pub high_water: usize,
+}
+
+impl<'a> QueueSink<'a> {
+    /// Default backpressure window: 3/4 of the queue capacity. Unbounded
+    /// staging queues get an effectively infinite mark — never gated.
+    pub fn default_high_water(cap: usize) -> usize {
+        (cap - cap / 4).max(1)
+    }
+
+    pub fn new(
+        queue: &'a BoundedQueue<Subgraph>,
+        warm: Option<&'a crate::featurestore::WaveWarmer<'a>>,
+    ) -> Self {
+        let high_water = Self::default_high_water(queue.capacity());
+        Self { queue, warm, high_water }
+    }
+
+    /// Override the backpressure mark (tests, tuning).
+    pub fn with_high_water(mut self, mark: usize) -> Self {
+        self.high_water = mark.max(1);
+        self
+    }
 }
 
 impl SubgraphSink for QueueSink<'_> {
@@ -147,8 +199,20 @@ impl SubgraphSink for QueueSink<'_> {
 
     fn wave_complete(&self, nodes: &[crate::graph::NodeId]) {
         if let Some(w) = self.warm {
-            w.warm(nodes);
+            if self.queue.len() > self.high_water {
+                w.note_skipped();
+            } else {
+                w.warm(nodes);
+            }
         }
+    }
+
+    fn lookahead_admit(&self) -> bool {
+        self.queue.len() <= self.high_water
+    }
+
+    fn lookahead_wait(&self) {
+        self.queue.wait_depth_at_most(self.high_water);
     }
 }
 
@@ -204,6 +268,45 @@ mod tests {
         q.close();
         assert_eq!(consumer.join().unwrap(), None);
         assert!(q.push(1).is_err());
+    }
+
+    #[test]
+    fn wait_depth_at_most_returns_on_drain_and_close() {
+        let q = Arc::new(BoundedQueue::new(8));
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.wait_depth_at_most(2));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(!waiter.is_finished(), "must block while above the mark");
+        for _ in 0..4 {
+            q.pop();
+        }
+        waiter.join().unwrap();
+        // Closing releases a fresh waiter even above the mark.
+        let q3 = Arc::new(BoundedQueue::new(8));
+        for i in 0..6 {
+            q3.push(i).unwrap();
+        }
+        let q4 = q3.clone();
+        let waiter = std::thread::spawn(move || q4.wait_depth_at_most(1));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q3.close();
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn sink_gates_lookahead_on_high_water() {
+        let q = BoundedQueue::<Subgraph>::new(16);
+        let sink = QueueSink::new(&q, None).with_high_water(2);
+        assert!(sink.lookahead_admit());
+        for s in 0..3u32 {
+            q.push(Subgraph::new(s)).unwrap();
+        }
+        assert!(!sink.lookahead_admit(), "above the mark must refuse admission");
+        q.pop();
+        assert!(sink.lookahead_admit(), "dequeue returns credits");
     }
 
     #[test]

@@ -1,8 +1,19 @@
 //! Sharded on-disk subgraph store for the offline (GraphGen) baseline.
+//!
+//! The encoder is **double-buffered** the same way the wave lanes work:
+//! the generation thread appends records into the active shard buffer,
+//! and a full shard is handed to a background flusher that compresses and
+//! writes it while the foreground fills the swapped-in spare — so the
+//! offline engine's spill no longer serializes disk writes against the
+//! wave loop. Shards keep their admission order (single FIFO flusher),
+//! so the on-disk layout — and every read-back — is byte-identical to
+//! the synchronous encoder's.
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};
 use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -21,8 +32,43 @@ pub struct SpillReport {
     pub logical_bytes: u64,
     /// Bytes on disk (after optional compression).
     pub disk_bytes: u64,
+    /// Foreground time: encoding records plus handing shards off.
     pub write_time: Duration,
+    /// Background time the flusher spent compressing + writing shards
+    /// (overlaps the wave loop; compare against `write_time` to see the
+    /// disk work the double buffer hid).
+    pub flush_time: Duration,
+    /// Foreground time blocked handing a shard to a still-busy flusher —
+    /// the encoder's own backpressure bubble. 0 = flushes fully hidden.
+    pub flush_wait: Duration,
+    /// Shards handed to the background flusher (compress+write runs off
+    /// the wave loop while the foreground keeps encoding).
+    pub overlapped_flushes: u32,
     pub read_time: Duration,
+}
+
+/// One shard handed to the background flusher.
+struct ShardJob {
+    idx: u32,
+    count: u32,
+    buf: Vec<u8>,
+}
+
+/// What the flusher reports back at join time.
+#[derive(Default)]
+struct FlushOutcome {
+    disk_bytes: u64,
+    flush_time: Duration,
+    flushed: u32,
+}
+
+struct Flusher {
+    tx: Option<SyncSender<ShardJob>>,
+    /// Drained buffers come back here for reuse (bounded ring).
+    spare_rx: Receiver<Vec<u8>>,
+    /// Shards handed to this flusher (checked against its outcome).
+    sent: u32,
+    handle: Option<JoinHandle<Result<FlushOutcome>>>,
 }
 
 /// Writer/reader for sharded subgraph spill files.
@@ -36,6 +82,7 @@ pub struct SpillStore {
     // write state
     buf: Vec<u8>,
     buf_count: u32,
+    flusher: Option<Flusher>,
     report: SpillReport,
 }
 
@@ -46,55 +93,151 @@ impl SpillStore {
             std::fs::remove_dir_all(&dir).with_context(|| format!("wipe {}", dir.display()))?;
         }
         std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
-        Ok(Self { dir, compress, buf: Vec::with_capacity(SHARD_BYTES + 4096), buf_count: 0, report: SpillReport::default() })
+        Ok(Self {
+            dir,
+            compress,
+            buf: Vec::with_capacity(SHARD_BYTES + 4096),
+            buf_count: 0,
+            flusher: None,
+            report: SpillReport::default(),
+        })
     }
 
-    /// Append one subgraph (buffered; shards rotate at ~4 MiB).
+    /// Append one subgraph (buffered; shards rotate at ~4 MiB and flush
+    /// in the background).
     pub fn write(&mut self, sg: &Subgraph) -> Result<()> {
         let t0 = Instant::now();
         sg.encode_into(&mut self.buf);
         self.buf_count += 1;
         self.report.subgraphs += 1;
         if self.buf.len() >= SHARD_BYTES {
-            self.flush_shard()?;
+            self.hand_off_shard()?;
         }
         self.report.write_time += t0.elapsed();
         Ok(())
     }
 
-    fn shard_path(&self, idx: u32) -> PathBuf {
-        let ext = if self.compress { "sg.z" } else { "sg" };
-        self.dir.join(format!("shard-{idx:05}.{ext}"))
+    fn shard_path(dir: &std::path::Path, compress: bool, idx: u32) -> PathBuf {
+        let ext = if compress { "sg.z" } else { "sg" };
+        dir.join(format!("shard-{idx:05}.{ext}"))
     }
 
-    fn flush_shard(&mut self) -> Result<()> {
+    /// Compress + write one shard to disk (runs on the flusher thread).
+    fn write_shard(dir: &std::path::Path, compress: bool, job: &ShardJob) -> Result<u64> {
+        let path = Self::shard_path(dir, compress, job.idx);
+        let f = File::create(&path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(&job.count.to_le_bytes())?;
+        if compress {
+            let mut enc = flate2::write::DeflateEncoder::new(w, flate2::Compression::fast());
+            enc.write_all(&job.buf)?;
+            enc.finish()?.flush()?;
+        } else {
+            w.write_all(&job.buf)?;
+            w.flush()?;
+        }
+        Ok(std::fs::metadata(&path)?.len())
+    }
+
+    fn spawn_flusher(dir: PathBuf, compress: bool) -> Flusher {
+        // Depth 1 = the double buffer: one shard in flight behind the one
+        // being filled. A second hand-off blocks (`flush_wait`) until the
+        // in-flight shard hits disk — bounded memory, in-order layout.
+        let (tx, rx) = sync_channel::<ShardJob>(1);
+        let (spare_tx, spare_rx) = sync_channel::<Vec<u8>>(2);
+        let handle = std::thread::Builder::new()
+            .name("gg-spill-flush".into())
+            .spawn(move || -> Result<FlushOutcome> {
+                let mut out = FlushOutcome::default();
+                while let Ok(mut job) = rx.recv() {
+                    let t0 = Instant::now();
+                    out.disk_bytes += Self::write_shard(&dir, compress, &job)?;
+                    out.flush_time += t0.elapsed();
+                    out.flushed += 1;
+                    job.buf.clear();
+                    // Ring full or foreground gone: drop the buffer.
+                    let _ = spare_tx.try_send(job.buf);
+                }
+                Ok(out)
+            })
+            .expect("spawn spill flusher");
+        Flusher { tx: Some(tx), spare_rx, sent: 0, handle: Some(handle) }
+    }
+
+    /// Hand the filled shard buffer to the background flusher, swapping
+    /// in a recycled (or fresh) buffer for the foreground to keep
+    /// encoding into.
+    fn hand_off_shard(&mut self) -> Result<()> {
         if self.buf_count == 0 {
             return Ok(());
         }
-        let path = self.shard_path(self.report.shards);
-        let f = File::create(&path).with_context(|| format!("create {}", path.display()))?;
-        let mut w = BufWriter::new(f);
-        w.write_all(&self.buf_count.to_le_bytes())?;
-        self.report.logical_bytes += self.buf.len() as u64 + 4;
-        if self.compress {
-            let mut enc = flate2::write::DeflateEncoder::new(w, flate2::Compression::fast());
-            enc.write_all(&self.buf)?;
-            enc.finish()?.flush()?;
-        } else {
-            w.write_all(&self.buf)?;
-            w.flush()?;
+        if self.flusher.is_none() {
+            self.flusher = Some(Self::spawn_flusher(self.dir.clone(), self.compress));
         }
-        self.report.disk_bytes += std::fs::metadata(&path)?.len();
+        let idx = self.report.shards;
         self.report.shards += 1;
-        self.buf.clear();
+        self.report.logical_bytes += self.buf.len() as u64 + 4;
+        self.report.overlapped_flushes += 1;
+        let flusher = self.flusher.as_mut().expect("flusher just ensured");
+        let spare = flusher
+            .spare_rx
+            .try_recv()
+            .unwrap_or_else(|_| Vec::with_capacity(SHARD_BYTES + 4096));
+        let buf = std::mem::replace(&mut self.buf, spare);
+        let job = ShardJob { idx, count: self.buf_count, buf };
         self.buf_count = 0;
+        let tx = flusher.tx.as_ref().expect("flusher channel open");
+        let mut flusher_died = false;
+        match tx.try_send(job) {
+            Ok(()) => flusher.sent += 1,
+            Err(TrySendError::Full(job)) => {
+                // Previous shard still writing: the double buffer is the
+                // bound, so wait here and account the bubble.
+                let t0 = Instant::now();
+                if tx.send(job).is_err() {
+                    flusher_died = true;
+                } else {
+                    flusher.sent += 1;
+                }
+                self.report.flush_wait += t0.elapsed();
+            }
+            Err(TrySendError::Disconnected(_)) => flusher_died = true,
+        }
+        if flusher_died {
+            // The flusher hit an I/O error and exited; surface it.
+            self.join_flusher()?;
+            anyhow::bail!("spill flusher died before draining all shards");
+        }
         Ok(())
     }
 
-    /// Flush pending writes; call once generation finishes.
+    /// Drain and join the flusher, folding its accounting into the report.
+    fn join_flusher(&mut self) -> Result<()> {
+        let Some(mut flusher) = self.flusher.take() else { return Ok(()) };
+        drop(flusher.tx.take());
+        let outcome = flusher
+            .handle
+            .take()
+            .expect("flusher handle")
+            .join()
+            .map_err(|_| anyhow::anyhow!("spill flusher panicked"))??;
+        self.report.disk_bytes += outcome.disk_bytes;
+        self.report.flush_time += outcome.flush_time;
+        anyhow::ensure!(
+            outcome.flushed == flusher.sent,
+            "spill flusher wrote {} of {} handed-off shards",
+            outcome.flushed,
+            flusher.sent
+        );
+        Ok(())
+    }
+
+    /// Flush pending writes and quiesce the background flusher; call once
+    /// generation finishes (before any read-back).
     pub fn finish_writes(&mut self) -> Result<()> {
         let t0 = Instant::now();
-        self.flush_shard()?;
+        self.hand_off_shard()?;
+        self.join_flusher()?;
         self.report.write_time += t0.elapsed();
         Ok(())
     }
@@ -103,7 +246,7 @@ impl SpillStore {
     pub fn read_all(&mut self, mut f: impl FnMut(Subgraph) -> Result<()>) -> Result<()> {
         let t0 = Instant::now();
         for idx in 0..self.report.shards {
-            let path = self.shard_path(idx);
+            let path = Self::shard_path(&self.dir, self.compress, idx);
             let mut file = File::open(&path).with_context(|| format!("open {}", path.display()))?;
             let mut count_buf = [0u8; 4];
             file.read_exact(&mut count_buf)?;
@@ -129,7 +272,8 @@ impl SpillStore {
     }
 
     /// Remove the spill directory.
-    pub fn cleanup(self) -> Result<()> {
+    pub fn cleanup(mut self) -> Result<()> {
+        self.join_flusher()?;
         std::fs::remove_dir_all(&self.dir).with_context(|| format!("rm {}", self.dir.display()))
     }
 }
@@ -203,14 +347,54 @@ mod tests {
         }
         store.finish_writes().unwrap();
         assert!(store.report().shards > 1, "expected rotation, got 1 shard");
+        // Every shard went through the background flusher, in order.
+        assert_eq!(store.report().overlapped_flushes, store.report().shards);
+        assert!(store.report().flush_time > Duration::ZERO);
         let mut n = 0;
-        store.read_all(|_| {
+        let mut prev_seed = None::<NodeId>;
+        store.read_all(|s| {
+            // In-order layout: seeds were written ascending.
+            if let Some(p) = prev_seed {
+                assert!(s.seed > p, "shard order broken: {p} then {}", s.seed);
+            }
+            prev_seed = Some(s.seed);
             n += 1;
             Ok(())
         })
         .unwrap();
         assert_eq!(n, 3000);
         store.cleanup().unwrap();
+    }
+
+    #[test]
+    fn double_buffer_matches_synchronous_bytes() {
+        // The overlapped encoder must produce the exact same shard files
+        // as a fully quiesced one: write in two batches with a full
+        // quiesce between them, then compare against one streamed pass.
+        let subs: Vec<Subgraph> = (0..2500).map(|i| sg(i, 20)).collect();
+        let mut streamed = SpillStore::create(dir("db-a"), false).unwrap();
+        for s in &subs {
+            streamed.write(s).unwrap();
+        }
+        streamed.finish_writes().unwrap();
+        let mut paced = SpillStore::create(dir("db-b"), false).unwrap();
+        for s in &subs[..1000] {
+            paced.write(s).unwrap();
+        }
+        // Let the flusher fully drain mid-stream, then continue.
+        std::thread::sleep(Duration::from_millis(20));
+        for s in &subs[1000..] {
+            paced.write(s).unwrap();
+        }
+        paced.finish_writes().unwrap();
+        assert_eq!(streamed.report().shards, paced.report().shards);
+        for idx in 0..streamed.report().shards {
+            let a = std::fs::read(SpillStore::shard_path(&dir("db-a"), false, idx)).unwrap();
+            let b = std::fs::read(SpillStore::shard_path(&dir("db-b"), false, idx)).unwrap();
+            assert_eq!(a, b, "shard {idx} bytes differ");
+        }
+        streamed.cleanup().unwrap();
+        paced.cleanup().unwrap();
     }
 
     #[test]

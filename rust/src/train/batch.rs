@@ -33,12 +33,22 @@ use super::runtime::HostBatch;
 pub struct BatchBuilder<'a> {
     pub spec: ModelSpec,
     pub features: &'a dyn FeatureBackend,
+    /// Worker-thread cap for the per-subgraph fill fan-out (the
+    /// feature-path budget; see
+    /// [`FeatureService::with_threads`](crate::featurestore::FeatureService::with_threads)).
+    threads: usize,
 }
 
 impl<'a> BatchBuilder<'a> {
     pub fn new(spec: ModelSpec, features: &'a dyn FeatureBackend) -> Self {
         assert_eq!(features.dim(), spec.dim, "feature dim must match artifact spec");
-        Self { spec, features }
+        Self { spec, features, threads: crate::util::workpool::default_threads() }
+    }
+
+    /// Cap the fill fan-out at `threads` pool workers (builder style).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Assemble exactly `spec.batch` subgraphs into a fresh batch.
@@ -84,37 +94,41 @@ impl<'a> BatchBuilder<'a> {
         let seeds: Vec<NodeId> = subgraphs.iter().map(|sg| sg.seed).collect();
         self.features.gather_into(&seeds, &mut out.x_seed);
         let features = self.features;
+        use crate::util::workpool::RawParts;
         struct Tensors {
-            x_h1: *mut f32,
-            x_h2: *mut f32,
-            m_h1: *mut f32,
-            m_h2: *mut f32,
-            y: *mut i32,
+            x_h1: RawParts<f32>,
+            x_h2: RawParts<f32>,
+            m_h1: RawParts<f32>,
+            m_h2: RawParts<f32>,
+            y: RawParts<i32>,
         }
-        unsafe impl Sync for Tensors {}
         let t = Tensors {
-            x_h1: out.x_h1.as_mut_ptr(),
-            x_h2: out.x_h2.as_mut_ptr(),
-            m_h1: out.m_h1.as_mut_ptr(),
-            m_h2: out.m_h2.as_mut_ptr(),
-            y: out.y.as_mut_ptr(),
+            x_h1: RawParts(out.x_h1.as_mut_ptr()),
+            x_h2: RawParts(out.x_h2.as_mut_ptr()),
+            m_h1: RawParts(out.m_h1.as_mut_ptr()),
+            m_h2: RawParts(out.m_h2.as_mut_ptr()),
+            y: RawParts(out.y.as_mut_ptr()),
         };
         let t = &t;
-        let threads = crate::util::workpool::default_threads().min(b);
+        // Trainer-side work runs on the gather pool under the feature
+        // budget, so batch assembly never occupies the generation pool's
+        // job slot (see `WorkPool::gather_global`).
+        let threads = self.threads.min(b);
         let per_sg: Vec<u64> =
-            crate::util::workpool::WorkPool::global().map_collect(b, threads, 1, |bi| {
+            crate::util::workpool::WorkPool::gather_global().map_collect(b, threads, 1, |bi| {
                 let sg = &subgraphs[bi];
                 // SAFETY: every slice is the exclusive `bi`-indexed range
                 // of its tensor, and `out` outlives this blocking call.
                 let x_h1 =
-                    unsafe { std::slice::from_raw_parts_mut(t.x_h1.add(bi * f1 * d), f1 * d) };
+                    unsafe { std::slice::from_raw_parts_mut(t.x_h1.0.add(bi * f1 * d), f1 * d) };
                 let x_h2 = unsafe {
-                    std::slice::from_raw_parts_mut(t.x_h2.add(bi * f1 * f2 * d), f1 * f2 * d)
+                    std::slice::from_raw_parts_mut(t.x_h2.0.add(bi * f1 * f2 * d), f1 * f2 * d)
                 };
-                let m_h1 = unsafe { std::slice::from_raw_parts_mut(t.m_h1.add(bi * f1), f1) };
-                let m_h2 =
-                    unsafe { std::slice::from_raw_parts_mut(t.m_h2.add(bi * f1 * f2), f1 * f2) };
-                unsafe { *t.y.add(bi) = features.label(sg.seed) as i32 };
+                let m_h1 = unsafe { std::slice::from_raw_parts_mut(t.m_h1.0.add(bi * f1), f1) };
+                let m_h2 = unsafe {
+                    std::slice::from_raw_parts_mut(t.m_h2.0.add(bi * f1 * f2), f1 * f2)
+                };
+                unsafe { *t.y.0.add(bi) = features.label(sg.seed) as i32 };
                 let t1 = sg.hop1.len().min(f1);
                 features.gather_into(&sg.hop1[..t1], &mut x_h1[..t1 * d]);
                 for i in 0..t1 {

@@ -299,7 +299,7 @@ mod tests {
         };
         use crate::engines::SubgraphEngine;
         crate::engines::graphgen_plus::GraphGenPlus
-            .generate(&g, &seeds, &ecfg, &crate::pipeline::QueueSink { queue: &queue, warm: None })
+            .generate(&g, &seeds, &ecfg, &crate::pipeline::QueueSink::new(&queue, None))
             .unwrap();
         queue.close();
         let report = train(

@@ -70,6 +70,19 @@ pub fn default_threads() -> usize {
     })
 }
 
+/// Lifetime-erased raw pointer to the start of a buffer that parallel
+/// jobs write at provably **disjoint** offsets. `Sync` so job closures
+/// can share it; soundness rests on two caller obligations, stated at
+/// each use site: every claim writes a distinct element range, and the
+/// buffer outlives the (blocking) pool call. Centralizes the ad-hoc
+/// `struct Ptr(*mut T); unsafe impl Sync` pattern that disjoint-write
+/// fan-outs (row chunks, result slots, tensor scatters) all need.
+pub struct RawParts<T>(pub *mut T);
+
+// SAFETY: see the type docs — disjointness and lifetime are per-use-site
+// obligations of the fan-out that shares this pointer.
+unsafe impl<T: Send> Sync for RawParts<T> {}
+
 /// One published job: a lifetime-erased data-parallel closure over
 /// `0..n`, claimed in `chunk`-sized strides by workers `0..helpers` plus
 /// the submitting thread.
@@ -145,6 +158,18 @@ impl WorkPool {
     /// The process-wide pool. Never dropped; threads persist across engine
     /// runs, waves and benchmark iterations.
     pub fn global() -> &'static WorkPool {
+        static POOL: OnceLock<WorkPool> = OnceLock::new();
+        POOL.get_or_init(WorkPool::new)
+    }
+
+    /// The process-wide **feature-gather** pool, disjoint from
+    /// [`global`](Self::global). A pool admits one job at a time, so
+    /// routing gather fan-outs through the generation pool would park
+    /// them behind hop-scan jobs (and vice versa) no matter how the
+    /// thread budget is split; separate pools give the two sides real
+    /// concurrency, and the per-side `threads` arguments
+    /// ([`crate::pipeline::split_pool_budget`]) apportion the cores.
+    pub fn gather_global() -> &'static WorkPool {
         static POOL: OnceLock<WorkPool> = OnceLock::new();
         POOL.get_or_init(WorkPool::new)
     }
@@ -265,9 +290,7 @@ impl WorkPool {
             f(0, out);
             return;
         }
-        struct Base<T>(*mut T);
-        unsafe impl<T: Send> Sync for Base<T> {}
-        let base = Base(out.as_mut_ptr());
+        let base = RawParts(out.as_mut_ptr());
         let base = &base;
         self.run(chunks, threads, 1, |c| {
             let r0 = c * chunk_rows;
@@ -298,9 +321,7 @@ impl WorkPool {
         // SAFETY: MaybeUninit needs no initialization; every slot is
         // written exactly once below before being read.
         unsafe { out.set_len(n) };
-        struct Slots<R>(*mut std::mem::MaybeUninit<R>);
-        unsafe impl<R: Send> Sync for Slots<R> {}
-        let slots = Slots(out.as_mut_ptr());
+        let slots = RawParts(out.as_mut_ptr());
         let slots_ref = &slots;
         self.run(n, threads, chunk, |i| {
             let v = f(i);

@@ -53,7 +53,7 @@ fn generation_into_closed_queue_errors_not_hangs() {
     };
     let queue = BoundedQueue::<Subgraph>::new(8);
     queue.close(); // consumer never starts
-    let sink = graphgen_plus::pipeline::QueueSink { queue: &queue, warm: None };
+    let sink = graphgen_plus::pipeline::QueueSink::new(&queue, None);
     let err = by_name("graphgen+")
         .unwrap()
         .generate(&g, &seeds, &cfg, &sink)

@@ -1,8 +1,10 @@
-//! PR-3 wave-pipelining properties: the double-buffered wave schedule
-//! (hop-1 of wave w+1 overlapping reduce/emit of wave w) must be
-//! invisible in the output — byte-identical subgraphs vs the sequential
-//! schedule for every engine and thread count, identical training
-//! trajectories through the pipeline driver — while the steady-state
+//! Wave-pipelining properties of the depth-k look-ahead ring: the
+//! overlapped schedule (hop work of up to `lookahead_depth` future waves
+//! running behind the wave being emitted, hop-2 speculated at depth ≥ 2)
+//! must be invisible in the output — byte-identical subgraphs vs the
+//! sequential schedule for every engine × depth × thread count, identical
+//! training trajectories through the pipeline driver — while queue
+//! backpressure bounds how far generation runs ahead and the steady-state
 //! counters prove the overlap runs allocation- and spawn-free.
 
 use graphgen_plus::engines::{by_name, CollectSink, EngineConfig};
@@ -10,16 +12,17 @@ use graphgen_plus::graph::generator;
 use graphgen_plus::graph::NodeId;
 use graphgen_plus::sampler::FanoutSpec;
 
-fn cfg(threads: usize, pipelined: bool, tag: &str) -> EngineConfig {
+fn cfg(threads: usize, pipelined: bool, depth: usize, tag: &str) -> EngineConfig {
     EngineConfig {
         workers: 4,
         threads,
-        wave_size: 24, // 96 seeds → 4 waves: enough to alternate lanes
+        wave_size: 24, // 96 seeds → 4 waves: enough to rotate the ring
         fanout: FanoutSpec::new(vec![4, 3]),
         sample_seed: 4242,
         wave_pipeline: pipelined,
+        lookahead_depth: depth,
         spill_dir: Some(std::env::temp_dir().join(format!(
-            "gg-overlap-{tag}-{threads}-{pipelined}-{}",
+            "gg-overlap-{tag}-{threads}-{pipelined}-{depth}-{}",
             std::process::id()
         ))),
         ..Default::default()
@@ -28,50 +31,56 @@ fn cfg(threads: usize, pipelined: bool, tag: &str) -> EngineConfig {
 
 /// The determinism barrier: for all four engines, the pipelined schedule
 /// must produce byte-identical subgraphs to the sequential one at every
-/// thread count (including threads = 1, where the helper thread is the
-/// only concurrency).
+/// look-ahead depth and thread count (including threads = 1, where the
+/// ring worker is the only concurrency).
 #[test]
 fn pipelined_schedule_is_byte_identical_to_sequential() {
     let g = generator::from_spec("rmat:n=1024,e=8192", 23).unwrap().csr();
     let seeds: Vec<NodeId> = (0..96).collect();
     for engine in ["graphgen+", "graphgen", "agl", "sql-like"] {
-        let run = |threads: usize, pipelined: bool| {
+        let run = |threads: usize, pipelined: bool, depth: usize| {
             let sink = CollectSink::default();
             by_name(engine)
                 .unwrap()
-                .generate(&g, &seeds, &cfg(threads, pipelined, engine), &sink)
+                .generate(&g, &seeds, &cfg(threads, pipelined, depth, engine), &sink)
                 .unwrap();
             sink.take_sorted()
         };
-        let sequential = run(4, false);
+        let sequential = run(4, false, 1);
         assert_eq!(sequential.len(), 96, "{engine}");
-        for threads in [1usize, 2, 8] {
-            let pipelined = run(threads, true);
-            assert_eq!(
-                pipelined, sequential,
-                "{engine} pipelined output diverged at threads={threads}"
-            );
+        for depth in [1usize, 2, 4] {
+            for threads in [1usize, 2, 8] {
+                let pipelined = run(threads, true, depth);
+                assert_eq!(
+                    pipelined, sequential,
+                    "{engine} output diverged at depth={depth} threads={threads}"
+                );
+            }
         }
     }
 }
 
 /// Overlap actually happens and stays zero-overhead: all but the first
-/// wave are prefetched, both lanes reuse their frame arenas after their
+/// wave are prefetched, every ring lane reuses its frame arena after its
 /// own warm-up wave, and a second run on the warm process pool spawns no
-/// threads.
+/// threads. At depth ≥ 2 the worker also speculates hop-2 for at least
+/// some waves.
 #[test]
 fn pipelined_run_overlaps_and_reuses_steadily() {
     let g = generator::from_spec("rmat:n=2048,e=65536", 3).unwrap().csr();
-    let seeds: Vec<NodeId> = (0..192).collect(); // 8 waves of 24
-    let c = cfg(8, true, "steady");
+    let seeds: Vec<NodeId> = (0..288).collect(); // 12 waves of 24
+    let c = cfg(8, true, 2, "steady");
     let engine = by_name("graphgen+").unwrap();
     let r1 = engine.generate(&g, &seeds, &c, &CollectSink::default()).unwrap();
-    assert_eq!(r1.wave_pipeline.waves, 8);
+    assert_eq!(r1.wave_pipeline.waves, 12);
     assert_eq!(
-        r1.wave_pipeline.overlapped_waves, 7,
+        r1.wave_pipeline.overlapped_waves, 11,
         "all but the first wave must be prefetched: {:?}",
         r1.wave_pipeline
     );
+    // The ring was actually occupied: occupancy mass beyond depth 0.
+    let occupied: u64 = r1.wave_pipeline.occupancy[1..].iter().sum();
+    assert!(occupied > 0, "ring never held a wave in flight: {:?}", r1.wave_pipeline);
     assert_eq!(
         r1.scratch.steady_frame_allocs, 0,
         "post-warm-up waves must not allocate frames: {:?}",
@@ -98,10 +107,63 @@ fn pipelined_run_overlaps_and_reuses_steadily() {
     assert_eq!(r2.scratch.steady_frame_allocs, 0, "{:?}", r2.scratch);
 }
 
+/// Queue backpressure bounds how far generation runs ahead of a slow
+/// consumer: ring admission stalls at the high-water mark (credits return
+/// on dequeue), so peak queue depth stays within the mark plus the waves
+/// already in flight — instead of racing to the queue's capacity.
+#[test]
+fn backpressure_bounds_peak_queue_depth_at_high_water() {
+    use graphgen_plus::pipeline::{BoundedQueue, QueueSink};
+    use graphgen_plus::sampler::Subgraph;
+
+    let g = generator::from_spec("rmat:n=1024,e=8192", 23).unwrap().csr();
+    let seeds: Vec<NodeId> = (0..192).collect();
+    let depth = 4usize;
+    let wave_size = 24usize;
+    let high_water = 16usize;
+    // Capacity far above the high-water mark: any bound observed below
+    // it comes from ring admission, not from push blocking.
+    let queue = BoundedQueue::<Subgraph>::new(4096);
+    let mut c = cfg(4, true, depth, "bp");
+    c.wave_size = wave_size;
+    let stats = std::thread::scope(|scope| {
+        let consumer = scope.spawn(|| {
+            let mut n = 0u64;
+            while let Some(_sg) = queue.pop() {
+                n += 1;
+                // Slow trainer: generation must outrun it and hit the gate.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            n
+        });
+        let sink = QueueSink::new(&queue, None).with_high_water(high_water);
+        let r = by_name("graphgen+").unwrap().generate(&g, &seeds, &c, &sink).unwrap();
+        queue.close();
+        assert_eq!(consumer.join().unwrap(), 192);
+        r
+    });
+    assert!(
+        stats.wave_pipeline.queue_full_stalls > 0,
+        "slow consumer must trigger admission stalls: {:?}",
+        stats.wave_pipeline
+    );
+    // Bound: at admission the depth was ≤ high_water, and at most
+    // depth+1 waves (in flight + in hand) can still emit past the gate.
+    let bound = high_water + (depth + 1) * wave_size;
+    let q = queue.stats();
+    assert!(
+        q.max_depth <= bound,
+        "peak queue depth {} exceeded backpressure bound {bound}",
+        q.max_depth
+    );
+    assert_eq!(q.pushes, 192);
+}
+
 /// Training-side equivalence (artifact-gated): through the concurrent
-/// pipeline driver, wave pipelining plus wave-ahead cache warming plus
-/// batch-buffer reuse must leave the loss trajectory and final parameters
-/// bit-identical — and batch assembly must allocate nothing after warm-up.
+/// pipeline driver, deep wave look-ahead plus wave-ahead cache warming
+/// plus batch-buffer reuse must leave the loss trajectory and final
+/// parameters bit-identical — and batch assembly must allocate nothing
+/// after warm-up.
 #[test]
 fn pipelined_training_trajectory_and_batch_reuse() {
     use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
@@ -130,7 +192,7 @@ fn pipelined_training_trajectory_and_batch_reuse() {
     let seeds: Vec<NodeId> =
         (0..(spec.batch * 2 * iters) as u32).map(|i| i % g.num_nodes()).collect();
     let tcfg = TrainConfig { replicas: 2, curve_every: 1, prefetch: true, ..Default::default() };
-    let run = |pipelined: bool, cache: bool| {
+    let run = |pipelined: bool, depth: usize, cache: bool| {
         let features = if cache {
             FeatureService::procedural(store.clone()).with_cache(HotCache::new(4096, spec.dim))
         } else {
@@ -141,6 +203,7 @@ fn pipelined_training_trajectory_and_batch_reuse() {
             wave_size: spec.batch * 2, // one iteration group per wave
             fanout: FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]),
             wave_pipeline: pipelined,
+            lookahead_depth: depth,
             ..Default::default()
         };
         run_pipeline(
@@ -155,12 +218,16 @@ fn pipelined_training_trajectory_and_batch_reuse() {
         )
         .unwrap()
     };
-    let sequential = run(false, false);
-    let pipelined = run(true, false);
-    let warmed = run(true, true);
+    let sequential = run(false, 1, false);
+    let pipelined = run(true, 1, false);
+    let deep = run(true, 4, false);
+    let warmed = run(true, 4, true);
     assert_eq!(sequential.train.iterations, iters as u64);
     assert_eq!(pipelined.train.loss_curve, sequential.train.loss_curve);
     assert_eq!(pipelined.train.params, sequential.train.params);
+    // Depth must be invisible in the trajectory too.
+    assert_eq!(deep.train.loss_curve, sequential.train.loss_curve);
+    assert_eq!(deep.train.params, sequential.train.params);
     // Cache warming moves gather latency, never bytes: same trajectory.
     assert_eq!(warmed.train.loss_curve, sequential.train.loss_curve);
     assert_eq!(warmed.train.params, sequential.train.params);
@@ -170,7 +237,7 @@ fn pipelined_training_trajectory_and_batch_reuse() {
         warmed.render()
     );
     // Batch-buffer arena: warm after iteration 2, zero allocs afterwards.
-    for r in [&sequential, &pipelined, &warmed] {
+    for r in [&sequential, &pipelined, &deep, &warmed] {
         assert_eq!(
             r.train.batch_reuse.steady_allocs, 0,
             "steady-state batch assembly must not allocate: {:?}",

@@ -60,10 +60,12 @@ fn engines_are_thread_count_invariant_and_pool_reuse_is_stateless() {
 /// process pool (zero thread spawns on the second run).
 #[test]
 fn steady_state_hop_rounds_reuse_pool_and_arena() {
-    // Dense graph, 4 equal waves — wave 1 establishes the arena
-    // high-water mark, waves 2-4 must run allocation-free.
+    // Dense graph, 8 equal waves — each look-ahead ring lane's first
+    // wave establishes its arena high-water mark, every later wave must
+    // run allocation-free (the ring holds lookahead_depth+1 lanes, so
+    // several waves are warm-up; the rest prove steady-state reuse).
     let g = generator::from_spec("rmat:n=2048,e=65536", 3).unwrap().csr();
-    let seeds: Vec<NodeId> = (0..128).collect();
+    let seeds: Vec<NodeId> = (0..256).collect();
     let c = cfg(8);
     let engine = by_name("graphgen+").unwrap();
     // Run 1 warms the process-wide pool (and proves multi-wave arena

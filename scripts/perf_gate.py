@@ -1,49 +1,94 @@
 #!/usr/bin/env python3
-"""CI perf gate over the E1 trajectory files.
+"""CI perf gate over the E1/E6 trajectory files.
 
-Usage: perf_gate.py <previous BENCH_e1.json> <current BENCH_e1.json>
+Usage: perf_gate.py <prev BENCH_e1.json> <cur BENCH_e1.json> \
+                    [<prev BENCH_e6.json> <cur BENCH_e6.json>]
 
-Compares graphgen+ generation throughput (nodes/sec, 1-core wall) against
-the previous main run's artifact and fails on a regression larger than
-THRESHOLD. Missing/unreadable previous data skips the gate (first run,
+Compares graphgen+ generation throughput (nodes/sec, 1-core wall) and —
+when the e6 pair is given — end-to-end pipeline iterations/sec against
+the previous main run's artifacts, failing on a regression larger than
+THRESHOLD. Missing/unreadable previous data skips that gate (first run,
 expired artifact) rather than failing it.
 """
 
 import json
 import sys
 
-THRESHOLD = 0.20  # fail on >20% nodes/sec regression
+THRESHOLD = 0.20  # fail on >20% regression
 ENGINES = ("graphgen+",)
+# e6 gate metric, in preference order: the full concurrent pipeline's
+# iterations/sec when artifacts were available, else the generation-only
+# trajectory's waves/sec (both recorded as "iters_per_sec").
+E6_MODES = ("concurrent", "pipelined")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate: no usable trajectory at {path} ({e}); skipping")
+        return None
+
+
+def e6_iters_per_sec(data):
+    """(mode, iters_per_sec) from an e6 trajectory, or (None, None)."""
+    modes = data.get("modes", {})
+    for mode in E6_MODES:
+        v = modes.get(mode, {}).get("iters_per_sec")
+        if v:
+            return mode, v
+    return None, None
+
+
+def check(label, prev, cur, failures):
+    if not prev or not cur:
+        print(f"perf gate: missing {label}; skipping")
+        return
+    ratio = cur / prev
+    print(f"perf gate: {label} {prev:,.2f} -> {cur:,.2f} ({ratio:.2f}x)")
+    if ratio < 1.0 - THRESHOLD:
+        failures.append(
+            f"{label} regressed {(1.0 - ratio) * 100:.0f}% "
+            f"(threshold {THRESHOLD * 100:.0f}%)"
+        )
 
 
 def main() -> int:
-    if len(sys.argv) != 3:
+    if len(sys.argv) not in (3, 5):
         print(__doc__)
         return 2
-    prev_path, cur_path = sys.argv[1], sys.argv[2]
-    try:
-        with open(prev_path) as f:
-            prev = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"perf gate: no usable previous trajectory ({e}); skipping")
-        return 0
-    with open(cur_path) as f:
-        cur = json.load(f)
-
     failures = []
-    for engine in ENGINES:
-        p = prev.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
-        c = cur.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
-        if not p or not c:
-            print(f"perf gate: missing nodes_per_sec_wall for {engine}; skipping")
-            continue
-        ratio = c / p
-        print(f"perf gate: {engine} nodes/sec {p:,.0f} -> {c:,.0f} ({ratio:.2f}x)")
-        if ratio < 1.0 - THRESHOLD:
-            failures.append(
-                f"{engine} regressed {(1.0 - ratio) * 100:.0f}% "
-                f"(threshold {THRESHOLD * 100:.0f}%)"
-            )
+
+    prev = load(sys.argv[1])
+    if prev is not None:
+        with open(sys.argv[2]) as f:
+            cur = json.load(f)
+        for engine in ENGINES:
+            p = prev.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
+            c = cur.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
+            check(f"e1 {engine} nodes/sec", p, c, failures)
+
+    if len(sys.argv) == 5:
+        prev6 = load(sys.argv[3])
+        # The *current* trajectory must exist and parse — the e6 bench is
+        # expected to emit it on every run (gen-only fallback included), so
+        # a missing/broken file means the bench broke and must fail the
+        # gate loudly instead of silently disabling it.
+        with open(sys.argv[4]) as f:
+            cur6 = json.load(f)
+        if prev6 is not None:
+            pmode, p = e6_iters_per_sec(prev6)
+            cmode, c = e6_iters_per_sec(cur6)
+            if pmode != cmode:
+                # Artifact availability changed between runs; the metrics
+                # aren't comparable (training vs generation-only rates).
+                print(
+                    f"perf gate: e6 mode changed ({pmode} -> {cmode}); skipping"
+                )
+            else:
+                check(f"e6 {cmode} iters/sec", p, c, failures)
+
     for f_ in failures:
         print(f"PERF REGRESSION: {f_}")
     return 1 if failures else 0
