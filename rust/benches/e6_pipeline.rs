@@ -42,15 +42,70 @@ fn wave_pipeline_json(
         .set("lane_starved_stalls", wp.lane_starved_stalls as f64)
         .set("queue_full_stalls", wp.queue_full_stalls as f64)
         .set("queue_full_wait_s", wp.queue_full_wait.as_secs_f64())
-        .set("gather_wait_s", wp.gather_wait.as_secs_f64());
+        .set("gather_wait_s", wp.gather_wait.as_secs_f64())
+        .set("deepen_steps", wp.deepen_steps as f64)
+        .set("shallow_steps", wp.shallow_steps as f64)
+        .set("effective_depth_last", wp.effective_depth_last as f64);
+}
+
+/// The adaptive controller's decision trace → JSON array (uploaded as a
+/// CI artifact so depth behaviour is inspectable across PRs).
+fn controller_trace_json(
+    wp: &graphgen_plus::engines::common::WavePipelineStats,
+) -> graphgen_plus::util::json::Json {
+    use graphgen_plus::util::json::Json;
+    let decisions: Vec<Json> = wp
+        .depth_trace
+        .iter()
+        .map(|d| {
+            let mut o = Json::obj();
+            o.set("wave", d.wave as f64)
+                .set("depth", d.depth as f64)
+                .set("starve_ewma", d.starve_ewma as f64)
+                .set("queue_ewma", d.queue_ewma as f64);
+            o
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("effective_depth_last", wp.effective_depth_last as f64)
+        .set("deepen_steps", wp.deepen_steps as f64)
+        .set("shallow_steps", wp.shallow_steps as f64)
+        .set("decisions", Json::Arr(decisions));
+    o
+}
+
+/// Write the per-mode controller traces next to BENCH_e6.json.
+fn write_trace_file(traces: graphgen_plus::util::json::Json) {
+    use graphgen_plus::util::json::Json;
+    let mut out = Json::obj();
+    out.set("bench", "e6_pipeline_controller_trace").set("modes", traces);
+    let path =
+        std::env::var("GG_BENCH_E6_TRACE_JSON").unwrap_or_else(|_| "BENCH_e6_trace.json".into());
+    match std::fs::write(&path, out.to_pretty()) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  failed to write {path}: {e}"),
+    }
+}
+
+/// Look-ahead worker count for the default pipelined/concurrent modes
+/// (CI smoke runs set GG_LOOKAHEAD_WORKERS=2 explicitly).
+fn lookahead_workers_env() -> usize {
+    std::env::var("GG_LOOKAHEAD_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&w| w >= 1)
+        .unwrap_or(2)
 }
 
 /// Artifact-free fallback: the generation schedule at look-ahead depths
 /// {sequential, 1, 2 (default)} on the same workload — wall, per-depth
 /// bubble fraction, stall taxonomy and waves/sec (the `iters_per_sec`
 /// perf-gate metric) into BENCH_e6.json with `"gen_only": true`. The
-/// depth-1 entry is exactly the PR-3 double buffer, so the JSON itself
-/// shows the depth ≥ 2 bubble win.
+/// depth-1 entry is exactly the PR-3 double buffer, and the depth-4
+/// worker ablation (`pipelined_d4_w1` vs `pipelined_d4_w2`) isolates the
+/// multi-worker reorder win: same thread budget, deeper ring, one vs two
+/// speculators — the hop-2 tail one worker serializes is what re-opens
+/// the bubble that the second worker hides.
 fn gen_only_trajectory() {
     use graphgen_plus::engines::NullSink;
     use graphgen_plus::util::json::Json;
@@ -64,11 +119,16 @@ fn gen_only_trajectory() {
     let gen = generator::from_spec(gspec, 6).unwrap();
     let g = gen.csr();
     let seeds: Vec<u32> = (0..n_seeds as u32).map(|i| i % g.num_nodes()).collect();
+    let la_workers = lookahead_workers_env();
     let mut modes_json = Json::obj();
-    for (key, pipelined, depth) in [
-        ("pipelined", true, 2usize),
-        ("pipelined_depth1", true, 1),
-        ("sequential_schedule", false, 1),
+    let mut traces = Json::obj();
+    let mut d4_bubble = [f64::NAN; 2]; // [w1, w2]
+    for (key, pipelined, depth, workers) in [
+        ("pipelined", true, 2usize, la_workers),
+        ("pipelined_depth1", true, 1, 1),
+        ("sequential_schedule", false, 1, 1),
+        ("pipelined_d4_w1", true, 4, 1),
+        ("pipelined_d4_w2", true, 4, 2),
     ] {
         let ecfg = EngineConfig {
             workers: 8,
@@ -76,20 +136,33 @@ fn gen_only_trajectory() {
             fanout: FanoutSpec::new(vec![10, 5]),
             wave_pipeline: pipelined,
             lookahead_depth: depth,
+            lookahead_workers: workers,
             ..Default::default()
         };
         let sink = NullSink::default();
         let r = GraphGenPlus.generate(&g, &seeds, &ecfg, &sink).unwrap();
         println!("{key}: {}", r.render());
         let wall_s = r.wall.as_secs_f64();
+        let bubble_fraction = r.wave_pipeline.bubble.as_secs_f64() / wall_s.max(1e-12);
+        match key {
+            "pipelined_d4_w1" => d4_bubble[0] = bubble_fraction,
+            "pipelined_d4_w2" => d4_bubble[1] = bubble_fraction,
+            _ => {}
+        }
         let mut o = Json::obj();
         o.set("wall_s", wall_s)
             .set("nodes_per_sec_wall", r.nodes_per_sec())
             .set("lookahead_depth", depth as f64)
+            .set("lookahead_workers", workers as f64)
             .set("iters_per_sec", r.wave_pipeline.waves as f64 / wall_s.max(1e-12));
         wave_pipeline_json(&mut o, wall_s, &r.wave_pipeline);
         modes_json.set(key, o);
+        traces.set(key, controller_trace_json(&r.wave_pipeline));
     }
+    println!(
+        "depth-4 bubble fraction: {:.4} (1 worker) vs {:.4} (2 workers)",
+        d4_bubble[0], d4_bubble[1]
+    );
     let mut out = Json::obj();
     out.set("bench", "e6_pipeline").set("gen_only", true).set("modes", modes_json);
     let path = std::env::var("GG_BENCH_E6_JSON").unwrap_or_else(|_| "BENCH_e6.json".into());
@@ -97,6 +170,7 @@ fn gen_only_trajectory() {
         Ok(()) => println!("  wrote {path}"),
         Err(e) => eprintln!("  failed to write {path}: {e}"),
     }
+    write_trace_file(traces);
 }
 
 fn main() {
@@ -136,6 +210,7 @@ fn main() {
         threads: gen_threads,
         wave_size: 2048,
         fanout: FanoutSpec::new(vec![spec.f1 as u32, spec.f2 as u32]),
+        lookahead_workers: lookahead_workers_env(),
         spill_dir: Some(std::env::temp_dir().join(format!("gg-e6-{}", std::process::id()))),
         ..Default::default()
     };
@@ -149,6 +224,7 @@ fn main() {
     let model = graphgen_plus::cluster::CostModel::calibrated();
     let mut rows = Vec::new();
     let mut modes_json = graphgen_plus::util::json::Json::obj();
+    let mut traces = graphgen_plus::util::json::Json::obj();
     for (key, label, engine, mode) in [
         (
             "concurrent",
@@ -194,6 +270,7 @@ fn main() {
             .set("warm_skipped_waves", r.warm_skipped_waves as f64);
         wave_pipeline_json(&mut o, wall_s, &r.gen.wave_pipeline);
         modes_json.set(key, o);
+        traces.set(key, controller_trace_json(&r.gen.wave_pipeline));
     }
     // Machine-readable trajectory (BENCH_e6.json): lets CI watch the
     // concurrent-vs-sequential gap and the pipeline bubble across PRs.
@@ -206,6 +283,7 @@ fn main() {
         Ok(()) => println!("  wrote {path}"),
         Err(e) => eprintln!("  failed to write {path}: {e}"),
     }
+    write_trace_file(traces);
     println!(
         "\n{}",
         render_markdown(

@@ -367,6 +367,53 @@ fn main() {
         format!("{:.1}", naive_total / cached_prefetch_total.max(1e-12)),
     );
 
+    // --- gather-thread budget sweep (the E6 pool-split knee, measured on
+    // the feature bench): per-batch gather wall of the sharded+batched
+    // service at each worker budget, plus the knee — the smallest budget
+    // past which another doubling buys < 10% — which is what
+    // `pipeline::split_pool_budget` should hand the gather pool. --------
+    let sweep_budgets = [1usize, 2, 4, 8];
+    let sweep_epochs = if fast { 2usize } else { 4 };
+    let mut sweep_lat: Vec<(usize, f64)> = Vec::new();
+    for &t in &sweep_budgets {
+        let svc = FeatureService::new(sharded.clone()).with_threads(t);
+        run_service_epoch(&svc); // warm pool + pages
+        let t0 = std::time::Instant::now();
+        for _ in 0..sweep_epochs {
+            run_service_epoch(&svc);
+        }
+        let per_batch =
+            t0.elapsed().as_secs_f64() / (sweep_epochs * num_batches) as f64;
+        sweep_lat.push((t, per_batch));
+    }
+    let mut knee = sweep_lat.last().unwrap().0;
+    for w in sweep_lat.windows(2) {
+        let (_, cur) = w[0];
+        let (_, next) = w[1];
+        if (cur - next) / cur.max(1e-12) < 0.10 {
+            knee = w[0].0;
+            break;
+        }
+    }
+    let sweep_rows: Vec<Vec<String>> = sweep_lat
+        .iter()
+        .map(|(t, lat)| {
+            vec![
+                t.to_string(),
+                fmt_secs(*lat),
+                if *t == knee { "<- knee".into() } else { String::new() },
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_markdown(
+            "e7 gather_threads sweep (sharded + batched fetch, wall per batch)",
+            &["gather_threads".into(), "wall/batch".into(), "".into()],
+            &sweep_rows
+        )
+    );
+
     // --- machine-readable trajectory (BENCH_e7.json) ---------------------
     use graphgen_plus::util::json::Json;
     let mut variants = Json::obj();
@@ -382,6 +429,10 @@ fn main() {
             .set("dedup_factor", fetch.dedup_factor());
         variants.set(name, o);
     }
+    let mut sweep_json = Json::obj();
+    for (t, lat) in &sweep_lat {
+        sweep_json.set(&t.to_string(), *lat);
+    }
     let mut out = Json::obj();
     out.set("bench", "e7_featurestore")
         .set("batches", num_batches as f64)
@@ -392,6 +443,8 @@ fn main() {
             "naive_vs_cached_prefetch_speedup",
             naive_total / cached_prefetch_total.max(1e-12),
         )
+        .set("gather_sweep_per_batch_s", sweep_json)
+        .set("knee_gather_threads", knee as f64)
         .set("variants", variants);
     let path = std::env::var("GG_BENCH_E7_JSON").unwrap_or_else(|_| "BENCH_e7.json".into());
     match std::fs::write(&path, out.to_pretty()) {

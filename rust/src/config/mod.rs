@@ -52,9 +52,15 @@ pub struct RunConfig {
     /// Overlap hop work of future waves with reduce/emit of the current
     /// one (byte-identical output; scheduling only).
     pub wave_pipeline: bool,
-    /// Look-ahead ring depth: waves the generation pipeline may run ahead
-    /// of the one being emitted (≥ 1; ≥ 2 also speculates hop-2).
+    /// Look-ahead ring depth ceiling: waves the generation pipeline may
+    /// run ahead of the one being emitted (≥ 1; ≥ 2 also speculates
+    /// hop-2). The effective depth adapts within `[1, lookahead_depth]`
+    /// from the measured stall mix.
     pub lookahead_depth: usize,
+    /// Look-ahead worker pool size: speculator threads claiming future
+    /// waves out of order (emission stays FIFO via the reorder buffer,
+    /// so output bytes are identical at any value).
+    pub lookahead_workers: usize,
     /// Worker threads reserved for feature gathers in the concurrent
     /// pipeline (0 = auto: a quarter of `threads`). The remainder goes to
     /// generation hop scans — see `pipeline::split_pool_budget`.
@@ -88,6 +94,7 @@ impl Default for RunConfig {
             feature_prefetch: false,
             wave_pipeline: true,
             lookahead_depth: 2,
+            lookahead_workers: 2,
             gather_threads: 0,
         }
     }
@@ -146,6 +153,7 @@ impl RunConfig {
             "feature_prefetch" => self.feature_prefetch = p(value, key)?,
             "wave_pipeline" => self.wave_pipeline = p(value, key)?,
             "lookahead_depth" => self.lookahead_depth = p(value, key)?,
+            "lookahead_workers" => self.lookahead_workers = p(value, key)?,
             "gather_threads" => self.gather_threads = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
@@ -173,6 +181,8 @@ impl RunConfig {
             spill_compress: false,
             wave_pipeline: self.wave_pipeline,
             lookahead_depth: self.lookahead_depth.max(1),
+            lookahead_workers: self.lookahead_workers.max(1),
+            wave_delay: None,
         })
     }
 
@@ -217,6 +227,7 @@ impl RunConfig {
             .set("feature_prefetch", self.feature_prefetch)
             .set("wave_pipeline", self.wave_pipeline)
             .set("lookahead_depth", self.lookahead_depth)
+            .set("lookahead_workers", self.lookahead_workers)
             .set("gather_threads", self.gather_threads);
         o
     }
@@ -279,14 +290,21 @@ mod tests {
         let mut c = RunConfig::default();
         assert_eq!(c.lookahead_depth, 2);
         assert_eq!(c.gather_threads, 0);
+        assert_eq!(c.lookahead_workers, 2);
         c.apply_override("lookahead_depth", "4").unwrap();
+        c.apply_override("lookahead_workers", "3").unwrap();
         c.apply_override("gather_threads", "3").unwrap();
         assert_eq!(c.engine_config().unwrap().lookahead_depth, 4);
+        assert_eq!(c.engine_config().unwrap().lookahead_workers, 3);
         assert_eq!(c.gather_threads, 3);
         // Depth 0 clamps to 1 at materialization (never a dead pipeline).
         c.apply_override("lookahead_depth", "0").unwrap();
         assert_eq!(c.engine_config().unwrap().lookahead_depth, 1);
+        // Worker count 0 clamps to 1 at materialization too.
+        c.apply_override("lookahead_workers", "0").unwrap();
+        assert_eq!(c.engine_config().unwrap().lookahead_workers, 1);
         assert!(c.to_json().to_pretty().contains("lookahead_depth"));
+        assert!(c.to_json().to_pretty().contains("lookahead_workers"));
         assert!(c.to_json().to_pretty().contains("gather_threads"));
     }
 

@@ -41,8 +41,9 @@ use crate::sampler::Subgraph;
 use crate::util::timer::PhaseTimer;
 use crate::util::workpool::WorkPool;
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex, OnceLock};
+use std::sync::{mpsc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::{EngineConfig, ReduceTopology, SubgraphSink};
@@ -968,11 +969,192 @@ pub fn assign_hop(
 /// deeper rings fold into the last bucket.
 pub const MAX_TRACKED_DEPTH: usize = 8;
 
+/// Cap on the recorded adaptive-depth decision trace (counters keep
+/// accumulating past it; only the per-decision detail is bounded).
+pub const MAX_DEPTH_TRACE: usize = 256;
+
+/// One adaptive-depth decision: the controller closed a stall window and
+/// moved the effective look-ahead depth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DepthDecision {
+    /// Wave ordinal (within the run) at which the new depth took effect.
+    pub wave: u64,
+    /// New effective look-ahead depth.
+    pub depth: u32,
+    /// Lane-starved stall rate EWMA (stalled waves / wave) at decision
+    /// time.
+    pub starve_ewma: f32,
+    /// Queue-full admission stall rate EWMA (stalls / wave) at decision
+    /// time.
+    pub queue_ewma: f32,
+}
+
+/// Stall-driven adaptive look-ahead depth: retunes the *effective* ring
+/// depth within `[1, lookahead_depth]` from an EWMA over the measured
+/// stall taxonomy, one decision per wave window.
+///
+/// * **lane-starved ⇒ deepen** — the wave loop waited for a prefetched
+///   wave that was not ready, so the ring should run further ahead;
+/// * **queue-full ⇒ shallow** — admission stalled on training-queue
+///   backpressure, so running further ahead only parks speculative waves
+///   against the high-water mark (and churns the warmed cache window).
+///
+/// Both rates are folded per window (`window()` waves) with EWMA weight
+/// [`ALPHA`](Self::ALPHA); a small deadband keeps a clean pipeline from
+/// oscillating. The queue signal wins ties: backpressure means the
+/// consumer is the bottleneck, and deepening cannot help.
+#[derive(Debug)]
+pub struct DepthController {
+    max_depth: usize,
+    depth: usize,
+    window: u64,
+    waves: u64,
+    win_waves: u64,
+    win_starved: u64,
+    win_queue: u64,
+    starve_ewma: f64,
+    queue_ewma: f64,
+}
+
+impl DepthController {
+    const ALPHA: f64 = 0.5;
+    /// Stall rate (per wave) below which a window counts as clean.
+    const DEADBAND: f64 = 0.05;
+
+    pub fn new(max_depth: usize) -> Self {
+        let max_depth = max_depth.max(1);
+        Self {
+            max_depth,
+            depth: max_depth,
+            window: ((max_depth * 2).max(4)) as u64,
+            waves: 0,
+            win_waves: 0,
+            win_starved: 0,
+            win_queue: 0,
+            starve_ewma: 0.0,
+            queue_ewma: 0.0,
+        }
+    }
+
+    /// Effective depth currently in force.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Waves per decision window.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Record one retired wave; closes a window every `window()` waves
+    /// and returns the decision when the effective depth changed.
+    pub fn on_wave(&mut self, lane_starved: bool, queue_stalls: u64) -> Option<DepthDecision> {
+        self.waves += 1;
+        self.win_waves += 1;
+        self.win_starved += lane_starved as u64;
+        self.win_queue += queue_stalls;
+        if self.win_waves < self.window {
+            return None;
+        }
+        let starve_rate = self.win_starved as f64 / self.win_waves as f64;
+        let queue_rate = self.win_queue as f64 / self.win_waves as f64;
+        self.starve_ewma = Self::ALPHA * starve_rate + (1.0 - Self::ALPHA) * self.starve_ewma;
+        self.queue_ewma = Self::ALPHA * queue_rate + (1.0 - Self::ALPHA) * self.queue_ewma;
+        self.win_waves = 0;
+        self.win_starved = 0;
+        self.win_queue = 0;
+        let old = self.depth;
+        if self.queue_ewma > Self::DEADBAND && self.queue_ewma >= self.starve_ewma {
+            self.depth = (self.depth - 1).max(1);
+        } else if self.starve_ewma > Self::DEADBAND {
+            self.depth = (self.depth + 1).min(self.max_depth);
+        }
+        if self.depth == old {
+            return None;
+        }
+        Some(DepthDecision {
+            wave: self.waves,
+            depth: self.depth as u32,
+            starve_ewma: self.starve_ewma as f32,
+            queue_ewma: self.queue_ewma as f32,
+        })
+    }
+}
+
+/// Closable MPMC queue the look-ahead workers claim wave requests from
+/// (`std::sync::mpsc` receivers are single-consumer, so the M-worker pool
+/// needs its own; [`crate::pipeline::BoundedQueue`] is deliberately not
+/// reused — it carries capacity/backpressure/stats machinery this hot
+/// path doesn't want, lacks `try_pop`, and pulling it in would point a
+/// dependency from `engines` back at `pipeline`). Push order is
+/// admission = sequence order; workers pop FIFO but *finish* out of
+/// order — the reorder buffer on the consume side restores FIFO
+/// emission.
+struct ReqQueue<T> {
+    state: Mutex<(VecDeque<T>, bool)>,
+    ready: Condvar,
+}
+
+impl<T> ReqQueue<T> {
+    fn new() -> Self {
+        Self { state: Mutex::new((VecDeque::new(), false)), ready: Condvar::new() }
+    }
+
+    /// False if the queue was already closed (item dropped).
+    fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.1 {
+            return false;
+        }
+        st.0.push_back(item);
+        drop(st);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.0.pop_front() {
+                return Some(v);
+            }
+            if st.1 {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    fn try_pop(&self) -> Option<T> {
+        self.state.lock().unwrap().0.pop_front()
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 = true;
+        drop(st);
+        self.ready.notify_all();
+    }
+}
+
+/// Closes a [`ReqQueue`] on drop — held by the consume loop *and* every
+/// worker, so any early exit (emit error, worker panic) unparks the rest
+/// of the pool instead of deadlocking the scope join.
+struct CloseReqQueue<'a, T>(&'a ReqQueue<T>);
+
+impl<T> Drop for CloseReqQueue<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
 /// Counters of the wave pipeline (exposed in
-/// [`GenReport`](super::GenReport) and surfaced — bubble, stall taxonomy
-/// and ring occupancy — through
-/// [`PipelineReport`](crate::pipeline::PipelineReport)).
-#[derive(Debug, Clone, Copy, Default)]
+/// [`GenReport`](super::GenReport) and surfaced — bubble, stall taxonomy,
+/// effective-depth histogram and the adaptive controller's decision
+/// trace — through [`PipelineReport`](crate::pipeline::PipelineReport)).
+#[derive(Debug, Clone, Default)]
 pub struct WavePipelineStats {
     /// Waves processed by the run.
     pub waves: u64,
@@ -1001,11 +1183,30 @@ pub struct WavePipelineStats {
     pub gather_waits: u64,
     /// Wall time those hooks held the wave loop.
     pub gather_wait: Duration,
-    /// `occupancy[d]` counts waves handed back with `d` waves in flight
-    /// on the ring (clamped to [`MAX_TRACKED_DEPTH`]`-1`). Steady state
-    /// concentrates at the configured depth; mass in lower buckets means
-    /// the ring ran admission-starved (backpressure or tail).
+    /// `occupancy[d]` counts waves retired while the adaptive
+    /// controller's **effective depth** was `d` (clamped to
+    /// [`MAX_TRACKED_DEPTH`]`-1`) — the same axis the controller's
+    /// decision trace and the sink's per-sequence admission credits use.
+    /// (It previously bucketed by raw in-flight lane count, a different
+    /// axis from the per-wave credit grants entirely.) Totals match the
+    /// credits wave for wave; an individual wave can land one bucket
+    /// apart when a window boundary moves the depth between its
+    /// admission and its retirement. Steady state concentrates at the
+    /// configured depth; mass in lower buckets means backpressure
+    /// shallowed the ring.
     pub occupancy: [u64; MAX_TRACKED_DEPTH],
+    /// Times the adaptive controller deepened the effective depth
+    /// (lane-starved pressure).
+    pub deepen_steps: u64,
+    /// Times the adaptive controller shallowed it (queue-full pressure).
+    pub shallow_steps: u64,
+    /// Effective depth in force when the last pipelined run finished
+    /// (0 = the ring never ran).
+    pub effective_depth_last: u32,
+    /// The controller's decision trace, in order (capped at
+    /// [`MAX_DEPTH_TRACE`] entries; the step counters above keep
+    /// counting past the cap).
+    pub depth_trace: Vec<DepthDecision>,
 }
 
 /// Stall/occupancy counters one pipelined `run` call accumulates before
@@ -1013,7 +1214,6 @@ pub struct WavePipelineStats {
 #[derive(Debug, Default)]
 struct RingCounters {
     overlapped: u64,
-    deep: u64,
     bubble: Duration,
     lane_starved: u64,
     queue_full_stalls: u64,
@@ -1021,6 +1221,10 @@ struct RingCounters {
     gather_waits: u64,
     gather_wait: Duration,
     occupancy: [u64; MAX_TRACKED_DEPTH],
+    deepen: u64,
+    shallow: u64,
+    eff_last: u32,
+    trace: Vec<DepthDecision>,
 }
 
 /// Block on the sink's admission gate before handing a speculative wave
@@ -1050,30 +1254,47 @@ pub type HopFn = for<'a> fn(
 );
 
 /// A ring of [`ScratchArena`] lanes plus the shared per-wave loop of all
-/// four engines. With [`EngineConfig::wave_pipeline`] enabled, a
-/// long-lived look-ahead worker runs hop-1 of up to
-/// [`EngineConfig::lookahead_depth`] future waves while the current wave's
-/// remaining hops/reduce/emit drain on the caller's thread; lanes rotate
-/// through the ring as waves complete. At depth ≥ 2 the worker also
-/// *speculates hop-2* of a look-ahead wave — but only when no newer
-/// hop-1 request is pending **and** the caller is still busy with an
-/// earlier prefetched wave, so deep prefetch fills genuine idle time
-/// instead of stealing work the caller would start immediately; the
-/// caller's thread skips straight to emit for such waves.
+/// four engines. With [`EngineConfig::wave_pipeline`] enabled, a pool of
+/// [`EngineConfig::lookahead_workers`] long-lived speculator threads
+/// claims up to `effective_depth` future waves **out of order** from a
+/// shared request queue while the current wave's remaining
+/// hops/reduce/emit drain on the caller's thread; lanes rotate through
+/// the ring as waves complete. Every request carries its wave sequence
+/// number, and a **reorder buffer** on the consume side parks
+/// out-of-order completions until their turn — waves are still reduced
+/// and emitted in FIFO sequence order, so the output bytes are identical
+/// to the sequential schedule at every (depth × workers × threads)
+/// combination. At depth ≥ 2 an otherwise-idle worker also *speculates
+/// hop-2* of its wave — but only when no newer hop-1 request is pending
+/// **and** the caller still holds an earlier prefetched wave, so deep
+/// prefetch fills genuine idle time instead of stealing work the caller
+/// would start immediately; the caller's thread skips straight to emit
+/// for such waves.
+///
+/// The ring depth itself is **adaptive**: a [`DepthController`] retunes
+/// the effective depth within `[1, lookahead_depth]` each wave window
+/// from the measured stall taxonomy — lane-starved waves deepen it,
+/// queue-full admission stalls shallow it — and records every decision
+/// in [`WavePipelineStats::depth_trace`].
 ///
 /// Admission is **backpressured by the sink**: before handing a wave to
-/// the worker, the ring consults [`SubgraphSink::lookahead_admit`] and
+/// the pool, the ring consults [`SubgraphSink::lookahead_admit`] and
 /// blocks in [`SubgraphSink::lookahead_wait`] while the training queue
 /// sits above its high-water mark (credits return on dequeue), so
-/// generation can never run unboundedly ahead of the trainer.
+/// generation can never run unboundedly ahead of the trainer. Each
+/// successful admission is reported per sequence through
+/// [`SubgraphSink::lookahead_admitted`] together with the effective
+/// depth that granted it.
 ///
 /// The schedule is a pure reordering: every hop consumes exactly the
 /// inputs it would see sequentially (waves are mutually independent and
 /// hop 1 depends only on the balance table), reservoirs are a pure
-/// function of the candidate multiset, and waves emit in order from the
-/// caller's thread — so the produced subgraph bytes are **identical** to
-/// the sequential schedule at every depth (the determinism barrier
-/// asserted by `tests/pipeline_overlap.rs`).
+/// function of the candidate multiset, and waves emit in sequence order
+/// from the caller's thread — so the produced subgraph bytes are
+/// **identical** to the sequential schedule at every depth and worker
+/// count (the determinism barrier asserted by
+/// `tests/pipeline_overlap.rs`, including forced out-of-order completion
+/// via [`EngineConfig::wave_delay`]).
 #[derive(Debug, Default)]
 pub struct WaveLanes {
     lanes: Vec<ScratchArena>,
@@ -1163,87 +1384,151 @@ impl WaveLanes {
             self.stats.gather_wait += gather_wait;
             return Ok(());
         }
-        // --- depth-k pipelined schedule -----------------------------------
-        // `depth` look-ahead lanes plus one for the wave in hand.
+        // --- depth-k pipelined schedule, M out-of-order workers -----------
+        // `depth` look-ahead lanes plus one for the wave in hand; the
+        // speculator pool never needs more workers than lanes.
         let depth = cfg.lookahead_depth.max(1).min(waves.len() - 1);
+        let m_workers = cfg.lookahead_workers.max(1).min(depth);
         let speculate = depth >= 2 && hops >= 2;
         self.ensure_lanes(depth + 1);
         let mut spare: Vec<ScratchArena> = std::mem::take(&mut self.lanes);
         let mut lane0 = spare.pop().expect("ring lane");
-        // Prefetched waves the caller has not consumed yet. Hop-2
+        // Prefetched waves the caller has not consumed yet (buffered in
+        // the result channel or parked in the reorder buffer). Hop-2
         // speculation is gated on this being ≥ 1: only when the caller is
         // still busy with an earlier wave is deepening the next one free —
         // otherwise the worker would steal hop-2 work the caller would
         // start immediately, converting caller busy time into measured
         // bubble for no wall-clock gain.
         let outstanding = AtomicUsize::new(0);
+        // Shared request queue: admission pushes `(seq, range, lane)` in
+        // sequence order; any idle worker claims the head. Completion
+        // order is whatever the pool produces — the reorder buffer below
+        // restores FIFO.
+        let reqq: ReqQueue<(u64, std::ops::Range<usize>, ScratchArena)> = ReqQueue::new();
         let outcome = std::thread::scope(
-            |s| -> anyhow::Result<(WorkLedger, PhaseTimer, Vec<ScratchArena>, RingCounters)> {
+            |s| -> anyhow::Result<(Vec<(WorkLedger, PhaseTimer, u64)>, RingCounters)> {
                 let mut c = RingCounters::default();
-                let (req_tx, req_rx) =
-                    mpsc::channel::<(std::ops::Range<usize>, ScratchArena)>();
-                let (res_tx, res_rx) = mpsc::channel::<(WaveSlots<'t>, ScratchArena, u32)>();
-                // Long-lived look-ahead worker: one spawn per run, not per
-                // wave. It owns its own ledger/timer; both merge back after
-                // the loop (ledger charges are commutative sums, so the
-                // merged totals equal the sequential schedule's). Requests
-                // are served FIFO in admission = wave order, so results
-                // arrive in wave order too.
+                let (res_tx, res_rx) =
+                    mpsc::channel::<(u64, WaveSlots<'t>, ScratchArena, u32)>();
                 let outstanding = &outstanding;
-                let helper = s.spawn(move || {
-                    let mut hledger = WorkLedger::new(cfg.workers);
-                    let mut hphases = PhaseTimer::new();
-                    let mut deep = 0u64;
-                    let mut pending: Option<(std::ops::Range<usize>, ScratchArena)> = None;
-                    loop {
-                        let (range, mut lane) = match pending.take() {
-                            Some(m) => m,
-                            None => match req_rx.recv() {
-                                Ok(m) => m,
-                                Err(_) => break,
-                            },
-                        };
-                        let mut slots = WaveSlots::new(
-                            &table.seeds[range.clone()],
-                            &table.worker_of[range],
+                let reqq = &reqq;
+                // If the consume loop bails early (emit error), closing
+                // the request queue on drop unparks every worker so the
+                // scope can join them.
+                let _close = CloseReqQueue(reqq);
+                // Long-lived speculator pool: M spawns per run, not per
+                // wave. Each worker owns its own ledger/timer; all merge
+                // back after the loop (ledger charges are commutative
+                // sums, so the merged totals equal the sequential
+                // schedule's regardless of which worker ran which wave).
+                let mut helpers = Vec::with_capacity(m_workers);
+                for widx in 0..m_workers {
+                    let res_tx = res_tx.clone();
+                    helpers.push(s.spawn(move || {
+                        // Stable frame-arena shard across runs: speculator
+                        // threads are respawned per run, so without a
+                        // pinned slot each respawn would burn a fresh
+                        // monotonic id and drift away from the shard its
+                        // predecessor's warm frames were released to.
+                        crate::util::workpool::pin_worker_slot(
+                            crate::util::workpool::speculator_slot(widx),
                         );
-                        hphases.time("hop1", || {
-                            hop(g, &mut slots, 1, cfg, fabric, &mut hledger, &mut lane)
-                        });
-                        let mut done = 1u32;
-                        if speculate {
-                            // Breadth first: a newer hop-1 request beats
-                            // deepening this wave; and speculation only
-                            // fills genuine idle time — the caller must
-                            // still be holding an earlier prefetched wave.
-                            match req_rx.try_recv() {
-                                Ok(next) => pending = Some(next),
-                                Err(_) => {
-                                    if outstanding.load(Ordering::Relaxed) >= 1 {
-                                        hphases.time("hop2", || {
-                                            hop(
-                                                g,
-                                                &mut slots,
-                                                2,
-                                                cfg,
-                                                fabric,
-                                                &mut hledger,
-                                                &mut lane,
-                                            )
-                                        });
-                                        done = 2;
-                                        deep += 1;
+                        // Any worker exit (panic included) closes the
+                        // queue so its peers exit and the caller's recv
+                        // disconnects instead of hanging.
+                        let _close = CloseReqQueue(reqq);
+                        let mut hledger = WorkLedger::new(cfg.workers);
+                        let mut hphases = PhaseTimer::new();
+                        let mut deep = 0u64;
+                        let mut pending: Option<(
+                            u64,
+                            std::ops::Range<usize>,
+                            ScratchArena,
+                        )> = None;
+                        loop {
+                            let (seq, range, mut lane) = match pending.take() {
+                                Some(m) => m,
+                                None => match reqq.pop() {
+                                    Some(m) => m,
+                                    None => break,
+                                },
+                            };
+                            // Test-only jitter: lets the overlap tests
+                            // force wave w+2 to finish before w+1.
+                            if let Some(d) = cfg.wave_delay {
+                                d.apply(seq as usize);
+                            }
+                            let mut slots = WaveSlots::new(
+                                &table.seeds[range.clone()],
+                                &table.worker_of[range],
+                            );
+                            hphases.time("hop1", || {
+                                hop(g, &mut slots, 1, cfg, fabric, &mut hledger, &mut lane)
+                            });
+                            let mut done = 1u32;
+                            if speculate {
+                                // Breadth first: a pending hop-1 request
+                                // (for any worker) beats deepening this
+                                // wave; and speculation only fills genuine
+                                // idle time — the caller must still be
+                                // holding an earlier prefetched wave.
+                                match reqq.try_pop() {
+                                    Some(next) => pending = Some(next),
+                                    None => {
+                                        if outstanding.load(Ordering::Relaxed) >= 1 {
+                                            hphases.time("hop2", || {
+                                                hop(
+                                                    g,
+                                                    &mut slots,
+                                                    2,
+                                                    cfg,
+                                                    fabric,
+                                                    &mut hledger,
+                                                    &mut lane,
+                                                )
+                                            });
+                                            done = 2;
+                                            deep += 1;
+                                        }
                                     }
                                 }
                             }
+                            outstanding.fetch_add(1, Ordering::Relaxed);
+                            if res_tx.send((seq, slots, lane, done)).is_err() {
+                                break;
+                            }
                         }
-                        outstanding.fetch_add(1, Ordering::Relaxed);
-                        if res_tx.send((slots, lane, done)).is_err() {
-                            break;
+                        (hledger, hphases, deep)
+                    }));
+                }
+                // Workers hold the only senders: recv disconnects when
+                // the whole pool has exited.
+                drop(res_tx);
+                // Admit waves in sequence order up to the controller's
+                // effective depth, each behind the sink's backpressure
+                // gate; credits are granted per sequence at that depth.
+                let admit = |next_admit: &mut usize,
+                             in_flight: &mut usize,
+                             spare: &mut Vec<ScratchArena>,
+                             c: &mut RingCounters,
+                             eff: usize|
+                 -> anyhow::Result<()> {
+                    while *next_admit < waves.len() && *in_flight < eff {
+                        admission_gate(sink, &mut c.queue_full_stalls, &mut c.queue_full_wait);
+                        let lane = spare.pop().expect("ring lane");
+                        let seq = *next_admit as u64;
+                        if !reqq.push((seq, waves[*next_admit].clone(), lane)) {
+                            anyhow::bail!("wave prefetcher exited early");
                         }
+                        if let Some(sk) = sink {
+                            sk.lookahead_admitted(seq, eff);
+                        }
+                        *next_admit += 1;
+                        *in_flight += 1;
                     }
-                    (hledger, hphases, deep)
-                });
+                    Ok(())
+                };
                 // Wave 0's hop-1 runs inline; the ring fills behind it.
                 let mut slots0 = WaveSlots::new(
                     &table.seeds[waves[0].clone()],
@@ -1252,24 +1537,17 @@ impl WaveLanes {
                 phases.time("hop1", || {
                     hop(g, &mut slots0, 1, cfg, fabric, ledger, &mut lane0)
                 });
+                let mut ctl = DepthController::new(depth);
                 let mut next_admit = 1usize;
                 let mut in_flight = 0usize;
-                while next_admit < waves.len() && in_flight < depth {
-                    admission_gate(sink, &mut c.queue_full_stalls, &mut c.queue_full_wait);
-                    let lane = spare.pop().expect("ring lane");
-                    req_tx
-                        .send((waves[next_admit].clone(), lane))
-                        .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
-                    next_admit += 1;
-                    in_flight += 1;
-                }
+                admit(&mut next_admit, &mut in_flight, &mut spare, &mut c, ctl.depth())?;
                 let mut cur = Some((slots0, lane0, 1u32));
-                let mut parked: Vec<ScratchArena> = Vec::with_capacity(depth + 1);
+                // Reorder buffer: completions whose turn has not come yet
+                // (at most `depth` entries, so a linear scan is fine).
+                let mut stash: Vec<(u64, WaveSlots<'t>, ScratchArena, u32)> =
+                    Vec::with_capacity(depth);
                 for wi in 0..waves.len() {
                     let (mut slots, mut lane, done) = cur.take().expect("current wave in hand");
-                    // Ring occupancy as this wave is taken into hand —
-                    // before its lane is re-admitted below.
-                    let ring_now = in_flight;
                     for h in (done + 1)..=hops {
                         phases.time(&format!("hop{h}"), || {
                             hop(g, &mut slots, h, cfg, fabric, ledger, &mut lane)
@@ -1281,16 +1559,9 @@ impl WaveLanes {
                     // The lane is free as soon as its hops are done: hand
                     // it back to the ring *before* emitting, so look-ahead
                     // hop work also overlaps the emit.
-                    if next_admit < waves.len() {
-                        admission_gate(sink, &mut c.queue_full_stalls, &mut c.queue_full_wait);
-                        req_tx
-                            .send((waves[next_admit].clone(), lane))
-                            .map_err(|_| anyhow::anyhow!("wave prefetcher exited early"))?;
-                        next_admit += 1;
-                        in_flight += 1;
-                    } else {
-                        parked.push(lane);
-                    }
+                    spare.push(lane);
+                    let q_before = c.queue_full_stalls;
+                    admit(&mut next_admit, &mut in_flight, &mut spare, &mut c, ctl.depth())?;
                     if let Some(s) = wave_hook {
                         let t0 = Instant::now();
                         s.wave_complete(&slots.unique_nodes());
@@ -1298,53 +1569,100 @@ impl WaveLanes {
                         c.gather_waits += 1;
                     }
                     emit(&mut *phases, &mut *ledger, slots)?;
+                    let mut starved = false;
                     if wi + 1 < waves.len() {
-                        c.occupancy[ring_now.min(MAX_TRACKED_DEPTH - 1)] += 1;
-                        let next = match res_rx.try_recv() {
-                            Ok(m) => m,
-                            Err(mpsc::TryRecvError::Empty) => {
+                        // Histogram bucket = the effective depth in force
+                        // as this wave retires — the same axis as the
+                        // controller trace and the per-sequence admission
+                        // credits (totals agree; a wave admitted just
+                        // before a window boundary may sit one bucket
+                        // apart from its credit).
+                        c.occupancy[ctl.depth().min(MAX_TRACKED_DEPTH - 1)] += 1;
+                        let want = (wi + 1) as u64;
+                        let next = loop {
+                            if let Some(pos) = stash.iter().position(|(sq, ..)| *sq == want) {
+                                let (_, sl, la, d) = stash.swap_remove(pos);
+                                break (sl, la, d);
+                            }
+                            match res_rx.try_recv() {
+                                Ok(m) => {
+                                    stash.push(m);
+                                    continue;
+                                }
+                                Err(mpsc::TryRecvError::Empty) => {}
+                                Err(mpsc::TryRecvError::Disconnected) => {
+                                    return Err(anyhow::anyhow!(
+                                        "wave prefetcher exited early"
+                                    ))
+                                }
+                            }
+                            // The wave whose turn it is isn't done: one
+                            // lane-starved stall, however many
+                            // out-of-order completions land while we wait.
+                            if !starved {
+                                starved = true;
                                 c.lane_starved += 1;
-                                let wait = Instant::now();
-                                let m = res_rx.recv().map_err(|_| {
-                                    anyhow::anyhow!("wave prefetcher exited early")
-                                })?;
-                                c.bubble += wait.elapsed();
-                                m
                             }
-                            Err(mpsc::TryRecvError::Disconnected) => {
-                                return Err(anyhow::anyhow!("wave prefetcher exited early"))
-                            }
+                            let wait = Instant::now();
+                            let m = res_rx.recv().map_err(|_| {
+                                anyhow::anyhow!("wave prefetcher exited early")
+                            })?;
+                            c.bubble += wait.elapsed();
+                            stash.push(m);
                         };
                         outstanding.fetch_sub(1, Ordering::Relaxed);
                         c.overlapped += 1;
                         in_flight -= 1;
                         cur = Some(next);
                     }
+                    // Close the controller's books on this wave; a window
+                    // boundary may move the effective depth used by the
+                    // next iteration's admission.
+                    let before = ctl.depth();
+                    if let Some(d) = ctl.on_wave(starved, c.queue_full_stalls - q_before) {
+                        if (d.depth as usize) > before {
+                            c.deepen += 1;
+                        } else {
+                            c.shallow += 1;
+                        }
+                        if c.trace.len() < MAX_DEPTH_TRACE {
+                            c.trace.push(d);
+                        }
+                    }
                 }
-                drop(req_tx);
-                let (hledger, hphases, deep) = helper
-                    .join()
-                    .map_err(|_| anyhow::anyhow!("wave prefetcher panicked"))?;
-                c.deep = deep;
-                Ok((hledger, hphases, parked, c))
+                reqq.close();
+                let mut outs = Vec::with_capacity(helpers.len());
+                for h in helpers {
+                    outs.push(
+                        h.join()
+                            .map_err(|_| anyhow::anyhow!("wave prefetcher panicked"))?,
+                    );
+                }
+                c.eff_last = ctl.depth() as u32;
+                Ok((outs, c))
             },
         );
-        let (hledger, hphases, mut parked, c) = outcome?;
-        ledger.merge(&hledger);
-        phases.merge(&hphases);
-        parked.append(&mut spare);
-        while parked.len() < depth + 1 {
-            parked.push(ScratchArena::default());
+        let (worker_outs, c) = outcome?;
+        for (hledger, hphases, deep) in &worker_outs {
+            ledger.merge(hledger);
+            phases.merge(hphases);
+            self.stats.deep_waves += deep;
         }
-        self.lanes = parked;
+        while spare.len() < depth + 1 {
+            spare.push(ScratchArena::default());
+        }
+        self.lanes = spare;
         self.stats.bubble += c.bubble;
         self.stats.overlapped_waves += c.overlapped;
-        self.stats.deep_waves += c.deep;
         self.stats.lane_starved_stalls += c.lane_starved;
         self.stats.queue_full_stalls += c.queue_full_stalls;
         self.stats.queue_full_wait += c.queue_full_wait;
         self.stats.gather_waits += c.gather_waits;
         self.stats.gather_wait += c.gather_wait;
+        self.stats.deepen_steps += c.deepen;
+        self.stats.shallow_steps += c.shallow;
+        self.stats.effective_depth_last = c.eff_last;
+        self.stats.depth_trace.extend(c.trace);
         for (dst, src) in self.stats.occupancy.iter_mut().zip(c.occupancy.iter()) {
             *dst += src;
         }
@@ -1576,5 +1894,69 @@ mod tests {
         let covered: usize = waves.iter().map(|r| r.len()).sum();
         assert_eq!(covered, table.seeds.len());
         assert!(waves.iter().all(|r| r.len() <= 64));
+    }
+
+    #[test]
+    fn depth_controller_shallows_on_queue_and_deepens_on_starvation() {
+        let mut ctl = DepthController::new(4);
+        assert_eq!(ctl.depth(), 4, "starts at the configured maximum");
+        let w = ctl.window();
+        // Three windows of sustained queue-full stalls: one shallow step
+        // per window, down to the floor.
+        let mut decisions = Vec::new();
+        for _ in 0..w * 3 {
+            if let Some(d) = ctl.on_wave(false, 2) {
+                decisions.push(d);
+            }
+        }
+        assert_eq!(ctl.depth(), 1, "sustained backpressure must shallow to 1");
+        assert_eq!(decisions.len(), 3);
+        assert!(decisions.iter().all(|d| d.queue_ewma > d.starve_ewma));
+        // Sustained lane starvation: deepens back once the stale queue
+        // EWMA decays below the starvation EWMA.
+        for _ in 0..w * 8 {
+            ctl.on_wave(true, 0);
+        }
+        assert_eq!(ctl.depth(), 4, "sustained starvation must deepen to the max");
+        // Never leaves [1, max] no matter how long the pressure lasts.
+        for _ in 0..w * 50 {
+            ctl.on_wave(false, 5);
+        }
+        assert_eq!(ctl.depth(), 1);
+        for _ in 0..w * 50 {
+            ctl.on_wave(true, 0);
+        }
+        assert_eq!(ctl.depth(), 4);
+    }
+
+    #[test]
+    fn depth_controller_holds_steady_when_clean() {
+        // No stalls at all: the deadband keeps the depth parked at max
+        // and the trace stays empty.
+        let mut ctl = DepthController::new(3);
+        for _ in 0..ctl.window() * 20 {
+            assert!(ctl.on_wave(false, 0).is_none());
+        }
+        assert_eq!(ctl.depth(), 3);
+    }
+
+    #[test]
+    fn req_queue_is_fifo_and_close_unparks() {
+        let q: ReqQueue<u32> = ReqQueue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        let done = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert_eq!(q.pop(), None, "close must drain to None");
+                done.store(true, Ordering::Relaxed);
+            });
+            std::thread::sleep(Duration::from_millis(10));
+            q.close();
+        });
+        assert!(done.load(Ordering::Relaxed));
+        assert!(!q.push(3), "push after close must be refused");
     }
 }

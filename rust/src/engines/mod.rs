@@ -65,6 +65,14 @@ pub trait SubgraphSink: Sync {
     /// shuts down — implementations must return promptly on shutdown so
     /// generation can surface the error instead of hanging.
     fn lookahead_wait(&self) {}
+
+    /// Ring-admission notification: wave `seq` was handed to the
+    /// look-ahead pool while the adaptive controller's effective depth
+    /// was `depth`. Lets a backpressuring sink account its admission
+    /// credits **per sequence**, bucketed by the same effective-depth
+    /// axis the ring's occupancy histogram and decision trace use (see
+    /// [`crate::pipeline::QueueSink::admits_by_depth`]). Default no-op.
+    fn lookahead_admitted(&self, _seq: u64, _depth: usize) {}
 }
 
 /// Collects into a mutex-guarded vector (tests, small runs).
@@ -138,11 +146,24 @@ pub struct EngineConfig {
     /// either way — this only reorders the schedule; see
     /// [`common::WaveLanes`].
     pub wave_pipeline: bool,
-    /// Look-ahead ring depth: how many waves may be in flight on the
-    /// look-ahead worker ahead of the wave being emitted (≥ 1; depth ≥ 2
-    /// also speculates hop-2 of look-ahead waves when the worker would
-    /// otherwise idle). Admission is backpressured by the sink.
+    /// Look-ahead ring depth ceiling: how many waves may be in flight on
+    /// the speculator pool ahead of the wave being emitted (≥ 1; depth
+    /// ≥ 2 also speculates hop-2 of look-ahead waves when a worker would
+    /// otherwise idle). The *effective* depth adapts within
+    /// `[1, lookahead_depth]` from the measured stall taxonomy (see
+    /// [`common::DepthController`]); admission is backpressured by the
+    /// sink.
     pub lookahead_depth: usize,
+    /// Look-ahead worker pool size: speculator threads that claim future
+    /// waves **out of order** from the admission queue (clamped to the
+    /// ring depth). A sequence-numbered reorder buffer keeps emission in
+    /// FIFO wave order, so output bytes are identical at any value.
+    pub lookahead_workers: usize,
+    /// Test-only scheduling jitter: per-wave delays injected on the
+    /// speculators so out-of-order completion can be forced
+    /// deterministically (see [`crate::testkit::WaveDelay`]). `None` in
+    /// production; timing only, never output.
+    pub wave_delay: Option<crate::testkit::WaveDelay>,
 }
 
 impl Default for EngineConfig {
@@ -159,6 +180,8 @@ impl Default for EngineConfig {
             spill_compress: false,
             wave_pipeline: true,
             lookahead_depth: 2,
+            lookahead_workers: 2,
+            wave_delay: None,
         }
     }
 }
@@ -217,12 +240,14 @@ impl GenReport {
         );
         if let Some(sp) = &self.spill {
             s.push_str(&format!(
-                " storage={} write={} flush={} (wait={}) read={}",
+                " storage={} write={} flush={} (wait={}) read={} (wait={}, overlapped={})",
                 fmt_bytes(sp.disk_bytes),
                 fmt_secs(sp.write_time.as_secs_f64()),
                 fmt_secs(sp.flush_time.as_secs_f64()),
                 fmt_secs(sp.flush_wait.as_secs_f64()),
                 fmt_secs(sp.read_time.as_secs_f64()),
+                fmt_secs(sp.read_wait.as_secs_f64()),
+                sp.overlapped_reads,
             ));
         }
         // Sequential-schedule runs accrue gather-wait too — show the
@@ -232,7 +257,7 @@ impl GenReport {
         if self.wave_pipeline.overlapped_waves > 0 || self.wave_pipeline.gather_waits > 0 {
             let wp = &self.wave_pipeline;
             s.push_str(&format!(
-                " overlap={}/{} deep={} bubble={} stalls[lane={} queue={}({}) gather={}({})]",
+                " overlap={}/{} deep={} bubble={} stalls[lane={} queue={}({}) gather={}({})] depth_ctl[eff={} +{}/-{}]",
                 wp.overlapped_waves,
                 wp.waves,
                 wp.deep_waves,
@@ -242,6 +267,9 @@ impl GenReport {
                 fmt_secs(wp.queue_full_wait.as_secs_f64()),
                 wp.gather_waits,
                 fmt_secs(wp.gather_wait.as_secs_f64()),
+                wp.effective_depth_last,
+                wp.deepen_steps,
+                wp.shallow_steps,
             ));
         }
         s

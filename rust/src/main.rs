@@ -39,7 +39,8 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
         opt("reduce", "aggregation: tree|flat", None),
         opt("reduce-arity", "tree reduction arity", None),
         opt("wave-pipeline", "overlap look-ahead waves with reduce/emit (true|false)", None),
-        opt("lookahead-depth", "wave look-ahead ring depth (>=1; >=2 speculates hop-2)", None),
+        opt("lookahead-depth", "wave look-ahead ring depth ceiling (>=1; >=2 speculates hop-2)", None),
+        opt("lookahead-workers", "look-ahead speculator threads claiming waves out of order (>=1)", None),
         flag("dump-config", "print the effective config and exit"),
     ]
 }

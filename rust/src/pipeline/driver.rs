@@ -60,7 +60,8 @@ pub struct PipelineReport {
     /// lane-starved, waiting for a prefetched wave that was not ready
     /// (the overlap gap; 0 when wave pipelining is off or fully hidden).
     /// The full stall taxonomy — lane-starved vs queue-full vs
-    /// gather-wait — and the ring occupancy histogram live in
+    /// gather-wait — plus the adaptive depth controller's decision trace
+    /// and the effective-depth occupancy histogram live in
     /// `gen.wave_pipeline`.
     pub bubble: Duration,
     /// Waves whose unique nodes were warmed into the feature cache ahead
@@ -83,7 +84,7 @@ impl PipelineReport {
         use crate::util::bytes::{fmt_bytes, fmt_secs};
         let wp = &self.gen.wave_pipeline;
         format!(
-            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% bubble={} stalls[lane={} queue={} gather={}] warmed_waves={} warm_skipped={} queue_max={} feat_remote={} feat_cache={:.0}%",
+            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% bubble={} stalls[lane={} queue={} gather={}] depth_ctl[eff={} +{}/-{} decisions={}] warmed_waves={} warm_skipped={} queue_max={} feat_remote={} feat_cache={:.0}%",
             self.mode,
             fmt_secs(self.wall.as_secs_f64()),
             fmt_secs(self.gen.wall.as_secs_f64()),
@@ -96,6 +97,10 @@ impl PipelineReport {
             wp.lane_starved_stalls,
             wp.queue_full_stalls,
             fmt_secs(wp.gather_wait.as_secs_f64()),
+            wp.effective_depth_last,
+            wp.deepen_steps,
+            wp.shallow_steps,
+            wp.depth_trace.len(),
             self.warmed_waves,
             self.warm_skipped_waves,
             self.queue.max_depth,

@@ -7,8 +7,10 @@
 //!   graph learning" handoff: it replaces GraphGen's disk round trip.
 //!   [`QueueSink`] doubles as the look-ahead ring's admission gate: above
 //!   the high-water mark it parks speculative generation until trainer
-//!   dequeues return credits, and clamps wave-ahead cache warming to the
-//!   same window.
+//!   dequeues return credits — granted **per wave sequence** and
+//!   bucketed by the adaptive controller's effective depth
+//!   ([`QueueSink::admits_by_depth`]) — and clamps wave-ahead cache
+//!   warming to the same window.
 //! * [`driver`] — runs generation and training concurrently (GraphGen+)
 //!   or sequentially (ablation), producing the E6 comparison; also owns
 //!   the generation/gather pool split ([`split_pool_budget`]).

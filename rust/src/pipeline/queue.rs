@@ -1,8 +1,10 @@
 //! Bounded MPMC queue with close semantics and backpressure accounting.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
+use crate::engines::common::MAX_TRACKED_DEPTH;
 use crate::engines::SubgraphSink;
 use crate::sampler::Subgraph;
 
@@ -152,7 +154,12 @@ impl<T> BoundedQueue<T> {
 /// refuses new speculative waves and [`SubgraphSink::lookahead_wait`]
 /// parks the ring until the trainer's dequeues return credits — so
 /// generation memory (queue + in-flight lanes) stays bounded even at
-/// deep look-ahead. Warming is clamped to the same window: a wave that
+/// deep look-ahead. Credits are granted **per wave sequence**: each
+/// admission is reported through
+/// [`SubgraphSink::lookahead_admitted`] with the adaptive controller's
+/// effective depth, and [`QueueSink::admits_by_depth`] buckets them on
+/// that axis so the sink's view matches the ring's occupancy histogram
+/// and decision trace. Warming is clamped to the same window: a wave that
 /// completes while the queue is above the mark is far ahead of
 /// consumption, and inserting its rows would evict the hot set batches
 /// pending *now* still need.
@@ -162,6 +169,13 @@ pub struct QueueSink<'a> {
     pub warm: Option<&'a crate::featurestore::WaveWarmer<'a>>,
     /// Look-ahead admission high-water mark (queue depth).
     pub high_water: usize,
+    /// Per-sequence admission credits, bucketed by the adaptive
+    /// controller's effective depth at grant time — the same axis the
+    /// ring's occupancy histogram and decision trace use, so the three
+    /// views stay consistent (credits used to be observable only as an
+    /// aggregate, which drifted from the histogram whenever the
+    /// controller moved mid-run).
+    admits_by_depth: [AtomicU64; MAX_TRACKED_DEPTH],
 }
 
 impl<'a> QueueSink<'a> {
@@ -176,13 +190,28 @@ impl<'a> QueueSink<'a> {
         warm: Option<&'a crate::featurestore::WaveWarmer<'a>>,
     ) -> Self {
         let high_water = Self::default_high_water(queue.capacity());
-        Self { queue, warm, high_water }
+        Self {
+            queue,
+            warm,
+            high_water,
+            admits_by_depth: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
     }
 
     /// Override the backpressure mark (tests, tuning).
     pub fn with_high_water(mut self, mark: usize) -> Self {
         self.high_water = mark.max(1);
         self
+    }
+
+    /// Snapshot of the per-sequence admission credits: `[d]` counts waves
+    /// admitted while the ring's effective look-ahead depth was `d`
+    /// (clamped to `MAX_TRACKED_DEPTH - 1`). Totals match the ring's
+    /// occupancy histogram wave for wave; a single wave can sit one
+    /// bucket apart from its occupancy entry when the controller moved
+    /// between its admission and its retirement.
+    pub fn admits_by_depth(&self) -> [u64; MAX_TRACKED_DEPTH] {
+        std::array::from_fn(|d| self.admits_by_depth[d].load(Ordering::Relaxed))
     }
 }
 
@@ -213,6 +242,10 @@ impl SubgraphSink for QueueSink<'_> {
 
     fn lookahead_wait(&self) {
         self.queue.wait_depth_at_most(self.high_water);
+    }
+
+    fn lookahead_admitted(&self, _seq: u64, depth: usize) {
+        self.admits_by_depth[depth.min(MAX_TRACKED_DEPTH - 1)].fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -307,6 +340,22 @@ mod tests {
         assert!(!sink.lookahead_admit(), "above the mark must refuse admission");
         q.pop();
         assert!(sink.lookahead_admit(), "dequeue returns credits");
+    }
+
+    #[test]
+    fn admission_credits_bucket_by_effective_depth() {
+        let q = BoundedQueue::<Subgraph>::new(16);
+        let sink = QueueSink::new(&q, None);
+        sink.lookahead_admitted(0, 2);
+        sink.lookahead_admitted(1, 2);
+        sink.lookahead_admitted(2, 1);
+        // Depths beyond the tracked range fold into the last bucket.
+        sink.lookahead_admitted(3, MAX_TRACKED_DEPTH + 5);
+        let by_depth = sink.admits_by_depth();
+        assert_eq!(by_depth[2], 2);
+        assert_eq!(by_depth[1], 1);
+        assert_eq!(by_depth[MAX_TRACKED_DEPTH - 1], 1);
+        assert_eq!(by_depth.iter().sum::<u64>(), 4);
     }
 
     #[test]

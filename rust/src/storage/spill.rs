@@ -45,6 +45,16 @@ pub struct SpillReport {
     /// the wave loop while the foreground keeps encoding).
     pub overlapped_flushes: u32,
     pub read_time: Duration,
+    /// Consumer-side time blocked waiting on the prefetch reader during
+    /// read-back — the read bubble. 0 = reads fully hidden behind the
+    /// previous shard's consumption.
+    pub read_wait: Duration,
+    /// Shards that were already read+inflated (delivered near-instantly)
+    /// when the consumer asked — i.e. prefetches that genuinely hid the
+    /// disk work behind the previous shard's consumption. A consumer
+    /// faster than the disk legitimately reports 0 here with all the
+    /// latency showing up in `read_wait` instead.
+    pub overlapped_reads: u32,
 }
 
 /// One shard handed to the background flusher.
@@ -242,29 +252,89 @@ impl SpillStore {
         Ok(())
     }
 
+    /// Read one shard from disk and inflate it (runs on the prefetch
+    /// thread): record count plus the decompressed payload.
+    fn read_shard(dir: &std::path::Path, compress: bool, idx: u32) -> Result<(u32, Vec<u8>)> {
+        let path = Self::shard_path(dir, compress, idx);
+        let mut file = File::open(&path).with_context(|| format!("open {}", path.display()))?;
+        let mut count_buf = [0u8; 4];
+        file.read_exact(&mut count_buf)?;
+        let count = u32::from_le_bytes(count_buf);
+        let mut data = Vec::new();
+        if compress {
+            flate2::read::DeflateDecoder::new(file).read_to_end(&mut data)?;
+        } else {
+            file.read_to_end(&mut data)?;
+        }
+        Ok((count, data))
+    }
+
     /// Read every stored subgraph back (in shard order), invoking `f`.
+    ///
+    /// Read-back mirrors the write path's double buffer: shard `n+1` is
+    /// read **and inflated** on a background prefetch thread while shard
+    /// `n`'s records are decoded and consumed here, so disk latency
+    /// overlaps the consumer instead of serializing ahead of training.
+    /// The depth-1 channel bounds memory to one decoded shard in flight;
+    /// delivery stays in shard order, so the record stream is
+    /// byte-identical to the serial reader's. `read_wait` accounts the
+    /// residual consumer-side blocking; `overlapped_reads` counts shards
+    /// that were already decoded when requested (the prefetches that
+    /// genuinely hid disk work).
     pub fn read_all(&mut self, mut f: impl FnMut(Subgraph) -> Result<()>) -> Result<()> {
         let t0 = Instant::now();
-        for idx in 0..self.report.shards {
-            let path = Self::shard_path(&self.dir, self.compress, idx);
-            let mut file = File::open(&path).with_context(|| format!("open {}", path.display()))?;
-            let mut count_buf = [0u8; 4];
-            file.read_exact(&mut count_buf)?;
-            let count = u32::from_le_bytes(count_buf);
-            let mut data = Vec::new();
-            if self.compress {
-                flate2::read::DeflateDecoder::new(file).read_to_end(&mut data)?;
-            } else {
-                file.read_to_end(&mut data)?;
-            }
-            let mut pos = 0usize;
-            for _ in 0..count {
-                f(Subgraph::decode_from(&data, &mut pos)?)?;
-            }
-            anyhow::ensure!(pos == data.len(), "trailing bytes in {}", path.display());
+        let shards = self.report.shards;
+        if shards == 0 {
+            self.report.read_time += t0.elapsed();
+            return Ok(());
         }
+        let dir = self.dir.clone();
+        let compress = self.compress;
+        let result = std::thread::scope(|s| -> Result<()> {
+            // Depth 1 = the read-side double buffer: one decoded shard
+            // buffered ahead of the one being consumed.
+            let (tx, rx) = sync_channel::<Result<(u32, Vec<u8>)>>(1);
+            s.spawn(move || {
+                for idx in 0..shards {
+                    let shard = Self::read_shard(&dir, compress, idx);
+                    let failed = shard.is_err();
+                    // Consumer gone (early error downstream) or this
+                    // shard failed: either way the prefetcher is done.
+                    if tx.send(shard).is_err() || failed {
+                        return;
+                    }
+                }
+            });
+            for idx in 0..shards {
+                let wait = Instant::now();
+                let shard = rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("spill prefetch reader exited early"))?;
+                let waited = wait.elapsed();
+                self.report.read_wait += waited;
+                // A near-instant delivery means the prefetcher had this
+                // shard decoded before it was asked for: the disk work
+                // was genuinely hidden behind the previous shard's
+                // consumption. (The first shard has nothing to hide
+                // behind; a blocking recv is the read bubble.)
+                if idx > 0 && waited < Duration::from_millis(1) {
+                    self.report.overlapped_reads += 1;
+                }
+                let (count, data) = shard?;
+                let mut pos = 0usize;
+                for _ in 0..count {
+                    f(Subgraph::decode_from(&data, &mut pos)?)?;
+                }
+                anyhow::ensure!(
+                    pos == data.len(),
+                    "trailing bytes in {}",
+                    Self::shard_path(&self.dir, compress, idx).display()
+                );
+            }
+            Ok(())
+        });
         self.report.read_time += t0.elapsed();
-        Ok(())
+        result
     }
 
     pub fn report(&self) -> &SpillReport {
@@ -363,6 +433,75 @@ mod tests {
         })
         .unwrap();
         assert_eq!(n, 3000);
+        // A fast consumer may or may not catch the prefetcher in time —
+        // only the bound is machine-independent.
+        assert!(store.report().overlapped_reads <= store.report().shards - 1);
+        store.cleanup().unwrap();
+    }
+
+    #[test]
+    fn read_prefetch_overlaps_slow_consumer_without_reordering() {
+        // A consumer slower than the disk: the prefetcher should have the
+        // next shard decoded and waiting, so the consumer's read_wait
+        // stays a small fraction of total read time — and the record
+        // stream is identical to a fast pass over the same store.
+        let subs: Vec<Subgraph> = (0..2500).map(|i| sg(i, 20)).collect();
+        let mut store = SpillStore::create(dir("ro"), true).unwrap();
+        for s in &subs {
+            store.write(s).unwrap();
+        }
+        store.finish_writes().unwrap();
+        assert!(store.report().shards > 1);
+        let mut fast = Vec::new();
+        store.read_all(|s| {
+            fast.push(s);
+            Ok(())
+        })
+        .unwrap();
+        let overlapped_before = store.report().overlapped_reads;
+        let mut slow = Vec::new();
+        let mut seen = 0u32;
+        store.read_all(|s| {
+            // Sleep a few times per shard's worth of records so the
+            // consumer decisively trails the disk: every prefetch must
+            // be ready (and counted as overlapped) by the time it's
+            // requested.
+            seen += 1;
+            if seen % 500 == 0 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            slow.push(s);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(fast, subs, "prefetched read-back must preserve the record stream");
+        assert_eq!(slow, subs, "overlap must not reorder records");
+        assert_eq!(
+            store.report().overlapped_reads - overlapped_before,
+            store.report().shards - 1,
+            "a slow consumer must find every prefetched shard ready: {:?}",
+            store.report()
+        );
+        store.cleanup().unwrap();
+    }
+
+    #[test]
+    fn read_error_in_consumer_does_not_hang_prefetcher() {
+        let mut store = SpillStore::create(dir("rerr"), false).unwrap();
+        for i in 0..3000 {
+            store.write(&sg(i, 20)).unwrap();
+        }
+        store.finish_writes().unwrap();
+        assert!(store.report().shards > 1);
+        let mut n = 0;
+        let r = store.read_all(|_| {
+            n += 1;
+            if n == 10 {
+                anyhow::bail!("consumer bailed");
+            }
+            Ok(())
+        });
+        assert!(r.is_err(), "consumer error must surface");
         store.cleanup().unwrap();
     }
 

@@ -20,6 +20,32 @@
 
 use crate::util::rng::{mix2, Xoshiro256};
 
+/// Deterministic per-wave delay injection for the look-ahead ring tests
+/// (hooked in via `EngineConfig::wave_delay`): a speculator claiming wave
+/// `w` with `w % every == offset` sleeps `delay_ms` before starting
+/// hop 1, so wave `w+1` reliably finishes first and the reorder buffer's
+/// out-of-order path is exercised regardless of machine speed. Pure
+/// scheduling jitter — output bytes are unaffected, which is exactly
+/// what the reorder tests assert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaveDelay {
+    /// Period of the delayed-wave pattern (0 disables).
+    pub every: usize,
+    /// Which residue of the period is delayed.
+    pub offset: usize,
+    /// Sleep applied to matching waves, milliseconds.
+    pub delay_ms: u64,
+}
+
+impl WaveDelay {
+    /// Apply the configured delay if wave `wave` matches the pattern.
+    pub fn apply(&self, wave: usize) {
+        if self.every > 0 && wave % self.every == self.offset % self.every {
+            std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
+        }
+    }
+}
+
 /// Base seed for all property tests; override with `GG_TESTKIT_SEED`.
 pub fn base_seed() -> u64 {
     std::env::var("GG_TESTKIT_SEED")

@@ -32,6 +32,9 @@ thread_local! {
     /// (transitively) submits another job runs it inline instead of
     /// deadlocking on the single job slot.
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// The calling thread's sticky worker-slot id (`usize::MAX` =
+    /// unassigned; see [`worker_slot`] / [`pin_worker_slot`]).
+    static SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
 }
 
 /// Stable small slot id for the calling thread, assigned on first use
@@ -41,9 +44,6 @@ thread_local! {
 /// this so the common acquire/release path never crosses threads.
 pub fn worker_slot() -> usize {
     static NEXT: AtomicUsize = AtomicUsize::new(0);
-    thread_local! {
-        static SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
-    }
     SLOT.with(|s| {
         let v = s.get();
         if v != usize::MAX {
@@ -53,6 +53,26 @@ pub fn worker_slot() -> usize {
         s.set(v);
         v
     })
+}
+
+/// Pin the calling thread's slot explicitly, overriding (or preempting)
+/// the monotonic assignment. Short-lived helper threads that are
+/// respawned every run — the wave ring's M speculators — use this to
+/// keep their sharded-freelist home stable across runs: without it each
+/// respawn burns a fresh id, the thread's arena shard drifts, and warm
+/// own-shard pops degrade into cross-shard steals.
+pub fn pin_worker_slot(slot: usize) {
+    SLOT.with(|s| s.set(slot));
+}
+
+/// Reserved stable slot for look-ahead speculator `i`: a fixed ceiling
+/// far above anything [`worker_slot`]'s monotonic counter hands out in a
+/// realistic process, counted *downwards* so the slots' low bits (what
+/// shard-count-modulo consumers like the frame arena actually key on)
+/// sit at the top of the residue range — away from the low residues the
+/// monotonic ids of pool workers and the main thread occupy.
+pub fn speculator_slot(i: usize) -> usize {
+    (1 << 20) - 1 - i
 }
 
 /// Number of worker threads to use by default: `GG_THREADS` env override,
@@ -507,6 +527,24 @@ mod tests {
         assert_eq!(mine, worker_slot(), "slot must be sticky");
         let other = std::thread::spawn(worker_slot).join().unwrap();
         assert_ne!(mine, other, "each thread gets its own slot");
+    }
+
+    #[test]
+    fn pinned_slot_overrides_monotonic_assignment() {
+        // Two successive "speculator" threads pin the same reserved slot:
+        // both must read it back (stability across respawns), and the
+        // reserved range must not collide with monotonic ids.
+        for _ in 0..2 {
+            let got = std::thread::spawn(|| {
+                pin_worker_slot(speculator_slot(0));
+                worker_slot()
+            })
+            .join()
+            .unwrap();
+            assert_eq!(got, speculator_slot(0));
+        }
+        assert!(speculator_slot(0) > 1 << 19, "reserved range sits above monotonic ids");
+        assert_ne!(speculator_slot(0), speculator_slot(1));
     }
 
     #[test]

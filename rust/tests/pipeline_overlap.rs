@@ -1,10 +1,13 @@
 //! Wave-pipelining properties of the depth-k look-ahead ring: the
 //! overlapped schedule (hop work of up to `lookahead_depth` future waves
-//! running behind the wave being emitted, hop-2 speculated at depth ≥ 2)
-//! must be invisible in the output — byte-identical subgraphs vs the
-//! sequential schedule for every engine × depth × thread count, identical
+//! claimed **out of order** by a pool of `lookahead_workers` speculators,
+//! hop-2 speculated at depth ≥ 2, emission restored to FIFO by the
+//! sequence-numbered reorder buffer) must be invisible in the output —
+//! byte-identical subgraphs *and emission order* vs the sequential
+//! schedule for every engine × workers × depth × thread count, identical
 //! training trajectories through the pipeline driver — while queue
-//! backpressure bounds how far generation runs ahead and the steady-state
+//! backpressure bounds how far generation runs ahead, the adaptive depth
+//! controller stays within `[1, lookahead_depth]`, and the steady-state
 //! counters prove the overlap runs allocation- and spawn-free.
 
 use graphgen_plus::engines::{by_name, CollectSink, EngineConfig};
@@ -105,6 +108,134 @@ fn pipelined_run_overlaps_and_reuses_steadily() {
         r2.scratch
     );
     assert_eq!(r2.scratch.steady_frame_allocs, 0, "{:?}", r2.scratch);
+}
+
+/// Out-of-order completion is invisible: per-wave delays injected on the
+/// speculator pool force wave w+2 to finish before w+1, and the
+/// sequence-numbered reorder buffer must still emit in FIFO wave order —
+/// the *arrival order* at the sink (not just the sorted multiset) is
+/// identical to the sequential schedule for every workers × depth ×
+/// threads combination, while a slow consumer's peak queue depth stays
+/// within the backpressure bound.
+#[test]
+fn out_of_order_completion_reorders_to_fifo_emission() {
+    use graphgen_plus::pipeline::{BoundedQueue, QueueSink};
+    use graphgen_plus::sampler::Subgraph;
+    use graphgen_plus::testkit::WaveDelay;
+
+    let g = generator::from_spec("rmat:n=1024,e=8192", 29).unwrap().csr();
+    let seeds: Vec<NodeId> = (0..96).collect(); // 8 waves of 12
+    let wave_size = 12usize;
+    let high_water = 8usize;
+    // Streams through a QueueSink with a draining consumer so one run
+    // yields both the emission order and the peak queue depth.
+    let run = |c: &EngineConfig| -> (Vec<Subgraph>, usize, u64) {
+        let queue = BoundedQueue::<Subgraph>::new(4096);
+        std::thread::scope(|scope| {
+            let consumer = scope.spawn(|| {
+                let mut got = Vec::new();
+                while let Some(sg) = queue.pop() {
+                    got.push(sg);
+                    // Trail generation slightly so backpressure engages.
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                got
+            });
+            let sink = QueueSink::new(&queue, None).with_high_water(high_water);
+            let r = by_name("graphgen+").unwrap().generate(&g, &seeds, c, &sink).unwrap();
+            queue.close();
+            let got = consumer.join().unwrap();
+            (got, queue.stats().max_depth, r.wave_pipeline.waves)
+        })
+    };
+    let mut base = cfg(4, false, 1, "ooo-ref");
+    base.wave_size = wave_size;
+    let (reference, _, _) = run(&base);
+    assert_eq!(reference.len(), 96);
+    for workers in [1usize, 2, 4] {
+        for depth in [1usize, 2, 4] {
+            for threads in [1usize, 2, 8] {
+                let mut c = cfg(threads, true, depth, "ooo");
+                c.wave_size = wave_size;
+                c.lookahead_workers = workers;
+                // Delay every other wave so its successor overtakes it on
+                // a multi-worker pool.
+                c.wave_delay = Some(WaveDelay { every: 2, offset: 1, delay_ms: 3 });
+                let (got, max_depth, waves) = run(&c);
+                assert_eq!(waves, 8);
+                assert_eq!(
+                    got, reference,
+                    "emission order diverged at workers={workers} depth={depth} threads={threads}"
+                );
+                // At admission the queue was ≤ high_water; at most
+                // depth+1 waves (in flight + in hand) emit past the gate.
+                let bound = high_water + (depth + 1) * wave_size;
+                assert!(
+                    max_depth <= bound,
+                    "peak queue depth {max_depth} exceeded bound {bound} at \
+                     workers={workers} depth={depth} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// Sustained training-queue backpressure makes the adaptive controller
+/// shallow the effective depth (queue-full ⇒ shallow), its decision
+/// trace stays within `[1, lookahead_depth]`, and the per-sequence
+/// admission credits the sink books cover exactly the same waves as the
+/// ring's effective-depth occupancy histogram (totals agree; individual
+/// buckets may sit one step apart when the controller moves between a
+/// wave's admission and its retirement).
+#[test]
+fn adaptive_controller_shallows_under_backpressure_and_traces() {
+    use graphgen_plus::pipeline::{BoundedQueue, QueueSink};
+    use graphgen_plus::sampler::Subgraph;
+
+    let g = generator::from_spec("rmat:n=1024,e=8192", 31).unwrap().csr();
+    let seeds: Vec<NodeId> = (0..288).collect(); // 24 waves of 12
+    let depth = 4usize;
+    let queue = BoundedQueue::<Subgraph>::new(4096);
+    let mut c = cfg(4, true, depth, "ctl");
+    c.wave_size = 12;
+    c.lookahead_workers = 2;
+    let (r, admits) = std::thread::scope(|scope| {
+        let consumer = scope.spawn(|| {
+            let mut n = 0u64;
+            while let Some(_sg) = queue.pop() {
+                n += 1;
+                // Slow trainer: admission must stall on the high-water
+                // mark for most of the run.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            n
+        });
+        let sink = QueueSink::new(&queue, None).with_high_water(8);
+        let r = by_name("graphgen+").unwrap().generate(&g, &seeds, &c, &sink).unwrap();
+        queue.close();
+        assert_eq!(consumer.join().unwrap(), 288);
+        (r, sink.admits_by_depth())
+    });
+    let wp = &r.wave_pipeline;
+    assert!(wp.queue_full_stalls > 0, "slow consumer must stall admission: {wp:?}");
+    assert!(
+        wp.shallow_steps >= 1,
+        "sustained queue-full pressure must shallow the ring: {wp:?}"
+    );
+    assert!(!wp.depth_trace.is_empty(), "decisions must be traced: {wp:?}");
+    for d in &wp.depth_trace {
+        assert!(
+            (1..=depth as u32).contains(&d.depth),
+            "effective depth left [1, {depth}]: {d:?}"
+        );
+    }
+    assert!((1..=depth as u32).contains(&wp.effective_depth_last), "{wp:?}");
+    // Per-sequence credits and the effective-depth histogram count the
+    // same waves on the same axis: every wave but the inline first.
+    let occ_total: u64 = wp.occupancy.iter().sum();
+    let admit_total: u64 = admits.iter().sum();
+    assert_eq!(occ_total, wp.waves - 1, "{wp:?}");
+    assert_eq!(admit_total, wp.waves - 1, "admits {admits:?} vs {wp:?}");
 }
 
 /// Queue backpressure bounds how far generation runs ahead of a slow

@@ -1,12 +1,14 @@
 #!/usr/bin/env python3
-"""CI perf gate over the E1/E6 trajectory files.
+"""CI perf gate over the E1/E6/E7 trajectory files.
 
 Usage: perf_gate.py <prev BENCH_e1.json> <cur BENCH_e1.json> \
-                    [<prev BENCH_e6.json> <cur BENCH_e6.json>]
+                    [<prev BENCH_e6.json> <cur BENCH_e6.json> \
+                     [<prev BENCH_e7.json> <cur BENCH_e7.json>]]
 
-Compares graphgen+ generation throughput (nodes/sec, 1-core wall) and —
-when the e6 pair is given — end-to-end pipeline iterations/sec against
-the previous main run's artifacts, failing on a regression larger than
+Compares graphgen+ generation throughput (nodes/sec, 1-core wall), —
+when the e6 pair is given — end-to-end pipeline iterations/sec, and —
+when the e7 pair is given — per-batch feature-gather latency against the
+previous main run's artifacts, failing on a regression larger than
 THRESHOLD. Missing/unreadable previous data skips that gate (first run,
 expired artifact) rather than failing it.
 """
@@ -20,6 +22,10 @@ ENGINES = ("graphgen+",)
 # iterations/sec when artifacts were available, else the generation-only
 # trajectory's waves/sec (both recorded as "iters_per_sec").
 E6_MODES = ("concurrent", "pipelined")
+# e7 gate metric: measured wall + modeled transfer per batch of the
+# steady-state sharded+batched+cache variant (lower is better).
+E7_VARIANT = "sharded + batched fetch + cache"
+E7_METRIC = "total_per_batch_s"
 
 
 def load(path):
@@ -41,21 +47,23 @@ def e6_iters_per_sec(data):
     return None, None
 
 
-def check(label, prev, cur, failures):
+def check(label, prev, cur, failures, lower_is_better=False):
     if not prev or not cur:
         print(f"perf gate: missing {label}; skipping")
         return
     ratio = cur / prev
-    print(f"perf gate: {label} {prev:,.2f} -> {cur:,.2f} ({ratio:.2f}x)")
-    if ratio < 1.0 - THRESHOLD:
+    print(f"perf gate: {label} {prev:,.6f} -> {cur:,.6f} ({ratio:.2f}x)")
+    regressed = ratio > 1.0 + THRESHOLD if lower_is_better else ratio < 1.0 - THRESHOLD
+    if regressed:
+        moved = (ratio - 1.0) if lower_is_better else (1.0 - ratio)
         failures.append(
-            f"{label} regressed {(1.0 - ratio) * 100:.0f}% "
+            f"{label} regressed {moved * 100:.0f}% "
             f"(threshold {THRESHOLD * 100:.0f}%)"
         )
 
 
 def main() -> int:
-    if len(sys.argv) not in (3, 5):
+    if len(sys.argv) not in (3, 5, 7):
         print(__doc__)
         return 2
     failures = []
@@ -69,7 +77,7 @@ def main() -> int:
             c = cur.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
             check(f"e1 {engine} nodes/sec", p, c, failures)
 
-    if len(sys.argv) == 5:
+    if len(sys.argv) >= 5:
         prev6 = load(sys.argv[3])
         # The *current* trajectory must exist and parse — the e6 bench is
         # expected to emit it on every run (gen-only fallback included), so
@@ -88,6 +96,23 @@ def main() -> int:
                 )
             else:
                 check(f"e6 {cmode} iters/sec", p, c, failures)
+
+    if len(sys.argv) == 7:
+        prev7 = load(sys.argv[5])
+        # Same contract as e6: the e7 bench emits its trajectory on every
+        # run, so a broken current file fails loudly.
+        with open(sys.argv[6]) as f:
+            cur7 = json.load(f)
+        if prev7 is not None:
+            p = prev7.get("variants", {}).get(E7_VARIANT, {}).get(E7_METRIC)
+            c = cur7.get("variants", {}).get(E7_VARIANT, {}).get(E7_METRIC)
+            check(
+                f"e7 {E7_VARIANT} {E7_METRIC}",
+                p,
+                c,
+                failures,
+                lower_is_better=True,
+            )
 
     for f_ in failures:
         print(f"PERF REGRESSION: {f_}")
