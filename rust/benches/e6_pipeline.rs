@@ -81,10 +81,25 @@ fn write_trace_file(traces: graphgen_plus::util::json::Json) {
     out.set("bench", "e6_pipeline_controller_trace").set("modes", traces);
     let path =
         std::env::var("GG_BENCH_E6_TRACE_JSON").unwrap_or_else(|_| "BENCH_e6_trace.json".into());
-    match std::fs::write(&path, out.to_pretty()) {
+    match graphgen_plus::obs::report::write_json(std::path::Path::new(&path), out) {
         Ok(()) => println!("  wrote {path}"),
         Err(e) => eprintln!("  failed to write {path}: {e}"),
     }
+}
+
+/// `--trace-out PATH` from argv (benches have no CLI parser), with
+/// `GG_TRACE_OUT` as the environment fallback CI uses.
+fn trace_out_arg() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--trace-out" {
+            return args.next();
+        }
+        if let Some(v) = a.strip_prefix("--trace-out=") {
+            return Some(v.to_string());
+        }
+    }
+    std::env::var("GG_TRACE_OUT").ok().filter(|v| !v.is_empty())
 }
 
 /// Look-ahead worker count for the default pipelined/concurrent modes
@@ -166,14 +181,108 @@ fn gen_only_trajectory() {
     let mut out = Json::obj();
     out.set("bench", "e6_pipeline").set("gen_only", true).set("modes", modes_json);
     let path = std::env::var("GG_BENCH_E6_JSON").unwrap_or_else(|_| "BENCH_e6.json".into());
-    match std::fs::write(&path, out.to_pretty()) {
+    match graphgen_plus::obs::report::write_json(std::path::Path::new(&path), out) {
         Ok(()) => println!("  wrote {path}"),
         Err(e) => eprintln!("  failed to write {path}: {e}"),
     }
     write_trace_file(traces);
 }
 
+/// Trace-out smoke: drive every concurrency layer once so the exported
+/// timeline shows spans on all five track families — pool workers (hop
+/// scans), speculators (out-of-order look-ahead waves), gather workers
+/// (sharded bulk feature gather), the spill flusher/prefetcher pair (the
+/// offline engine's disk round trip) and a trainer-tagged queue consumer
+/// (`train.step` stand-in: the real training loop needs compiled
+/// artifacts, which CI lacks). Queue admissions, backpressure stalls and
+/// depth-controller steps land as instant events.
+fn trace_smoke() {
+    use graphgen_plus::featurestore::ShardedStore;
+    use graphgen_plus::obs::trace::{set_track, span, Track};
+    use graphgen_plus::pipeline::{BoundedQueue, QueueSink};
+    use std::sync::Arc;
+
+    println!("trace smoke: driving all pipeline layers for the timeline export");
+    let gen = generator::from_spec("planted:n=8192,e=65536,c=8", 11).unwrap();
+    let g = gen.csr();
+    let seeds: Vec<u32> = (0..2048u32).map(|i| i % g.num_nodes()).collect();
+    let ecfg = EngineConfig {
+        workers: 4,
+        threads: 4, // engage the scan pool even on small CI runners
+        wave_size: 512,
+        fanout: FanoutSpec::new(vec![10, 5]),
+        lookahead_depth: 2,
+        lookahead_workers: 2,
+        ..Default::default()
+    };
+
+    // Pool workers + speculators on the generation side; a small queue so
+    // admission backpressure (queue.admit / stall.queue_full instants)
+    // actually engages; the consumer records trainer-track steps.
+    let queue = BoundedQueue::new(64);
+    std::thread::scope(|scope| {
+        let consumer = scope.spawn(|| {
+            set_track(Track::Trainer(0));
+            let mut n = 0u64;
+            while let Some(sg) = queue.pop() {
+                let _step = span("train.step").arg("seq", n as f64);
+                std::hint::black_box(&sg);
+                n += 1;
+            }
+            n
+        });
+        let sink = QueueSink::new(&queue, None);
+        GraphGenPlus.generate(&g, &seeds, &ecfg, &sink).unwrap();
+        queue.close();
+        let consumed = consumer.join().unwrap();
+        println!("  trainer consumer drained {consumed} subgraphs");
+    });
+
+    // Gather pool: one sharded bulk gather large enough to fan out onto
+    // the gather workers (past the parallel-gather floor).
+    let store = FeatureStore::hashed(64, 8, 3);
+    let sharded = Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 0x5eed));
+    let svc = FeatureService::new(sharded).with_threads(4);
+    let ids: Vec<u32> = (0..4096u32).map(|i| i % g.num_nodes()).collect();
+    std::hint::black_box(svc.gather(&ids, 0));
+
+    // Spill flusher + prefetcher: the offline engine's write-behind /
+    // read-ahead disk round trip.
+    let spill_cfg = EngineConfig {
+        spill_dir: Some(
+            std::env::temp_dir().join(format!("gg-e6-trace-{}", std::process::id())),
+        ),
+        ..ecfg
+    };
+    let sink = graphgen_plus::engines::NullSink::default();
+    GraphGenOffline.generate(&g, &seeds[..512], &spill_cfg, &sink).unwrap();
+}
+
 fn main() {
+    let trace_out = trace_out_arg();
+    graphgen_plus::obs::report::set_meta("bench", "e6_pipeline");
+    graphgen_plus::obs::report::set_meta("engine", "graphgen+");
+    graphgen_plus::obs::report::set_meta("lookahead_workers", lookahead_workers_env());
+    let mut obs = graphgen_plus::obs::ObsSession::start(
+        trace_out.as_deref().unwrap_or(""),
+        0,
+        "obs_metrics.jsonl",
+    );
+    run();
+    if trace_out.is_some() {
+        trace_smoke();
+    }
+    match obs.finish() {
+        Ok(()) => {
+            if let Some(p) = &trace_out {
+                println!("  wrote trace timeline {p}");
+            }
+        }
+        Err(e) => eprintln!("  failed to write trace: {e}"),
+    }
+}
+
+fn run() {
     let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("meta.json").exists() {
         // No compiled model (CI runs against the xla_shim stub): the full
@@ -279,7 +388,7 @@ fn main() {
         .set("replicas", replicas as f64)
         .set("modes", modes_json);
     let path = std::env::var("GG_BENCH_E6_JSON").unwrap_or_else(|_| "BENCH_e6.json".into());
-    match std::fs::write(&path, out.to_pretty()) {
+    match graphgen_plus::obs::report::write_json(std::path::Path::new(&path), out) {
         Ok(()) => println!("  wrote {path}"),
         Err(e) => eprintln!("  failed to write {path}: {e}"),
     }

@@ -99,6 +99,9 @@ fn main() {
     };
     let spec = ModelSpec { batch: 32, f1: 10, f2: 5, dim: 64, hidden: 16, classes: 8 };
     let partitions = 8usize;
+    graphgen_plus::obs::report::set_meta("bench", "e7_featurestore");
+    graphgen_plus::obs::report::set_meta("graph", gspec);
+    graphgen_plus::obs::report::set_meta("partitions", partitions);
 
     let gen = generator::from_spec(gspec, 7).unwrap();
     let g = gen.csr();
@@ -447,7 +450,7 @@ fn main() {
         .set("knee_gather_threads", knee as f64)
         .set("variants", variants);
     let path = std::env::var("GG_BENCH_E7_JSON").unwrap_or_else(|_| "BENCH_e7.json".into());
-    match std::fs::write(&path, out.to_pretty()) {
+    match graphgen_plus::obs::report::write_json(std::path::Path::new(&path), out) {
         Ok(()) => println!("  wrote {path}"),
         Err(e) => eprintln!("  failed to write {path}: {e}"),
     }

@@ -198,6 +198,9 @@ impl Bench {
     }
 
     /// Print the table and optionally write JSON (GG_BENCH_JSON=dir).
+    /// JSON goes through the unified report writer
+    /// ([`crate::obs::report::write_json`]), so every group document
+    /// carries the `run_meta` header.
     pub fn report(&self, baseline: Option<&str>) {
         println!("\n{}", self.render_table(baseline));
         if let Ok(dir) = std::env::var("GG_BENCH_JSON") {
@@ -208,7 +211,7 @@ impl Bench {
             );
             let path = std::path::Path::new(&dir).join(format!("{}.json", self.group));
             let _ = std::fs::create_dir_all(&dir);
-            if let Err(e) = std::fs::write(&path, o.to_pretty()) {
+            if let Err(e) = crate::obs::report::write_json(&path, o) {
                 log::warn!("failed to write {}: {e}", path.display());
             }
         }

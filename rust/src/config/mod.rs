@@ -62,9 +62,17 @@ pub struct RunConfig {
     /// so output bytes are identical at any value).
     pub lookahead_workers: usize,
     /// Worker threads reserved for feature gathers in the concurrent
-    /// pipeline (0 = auto: a quarter of `threads`). The remainder goes to
+    /// pipeline (0 = auto: the measured E7 knee when `BENCH_e7.json`
+    /// exists, else a quarter of `threads`). The remainder goes to
     /// generation hop scans — see `pipeline::split_pool_budget`.
     pub gather_threads: usize,
+    /// Chrome-trace timeline output path (empty = tracing off). The file
+    /// loads in Perfetto / `chrome://tracing`; see DESIGN.md
+    /// §Observability.
+    pub trace_out: String,
+    /// Seconds between metrics-registry snapshots appended to
+    /// `obs_metrics.jsonl` (0 = snapshotting off).
+    pub obs_snapshot_secs: u64,
 }
 
 impl Default for RunConfig {
@@ -96,6 +104,8 @@ impl Default for RunConfig {
             lookahead_depth: 2,
             lookahead_workers: 2,
             gather_threads: 0,
+            trace_out: String::new(),
+            obs_snapshot_secs: 0,
         }
     }
 }
@@ -155,6 +165,8 @@ impl RunConfig {
             "lookahead_depth" => self.lookahead_depth = p(value, key)?,
             "lookahead_workers" => self.lookahead_workers = p(value, key)?,
             "gather_threads" => self.gather_threads = p(value, key)?,
+            "trace_out" => self.trace_out = value.into(),
+            "obs_snapshot_secs" => self.obs_snapshot_secs = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -228,7 +240,9 @@ impl RunConfig {
             .set("wave_pipeline", self.wave_pipeline)
             .set("lookahead_depth", self.lookahead_depth)
             .set("lookahead_workers", self.lookahead_workers)
-            .set("gather_threads", self.gather_threads);
+            .set("gather_threads", self.gather_threads)
+            .set("trace_out", self.trace_out.clone())
+            .set("obs_snapshot_secs", self.obs_snapshot_secs);
         o
     }
 }
@@ -306,6 +320,20 @@ mod tests {
         assert!(c.to_json().to_pretty().contains("lookahead_depth"));
         assert!(c.to_json().to_pretty().contains("lookahead_workers"));
         assert!(c.to_json().to_pretty().contains("gather_threads"));
+    }
+
+    #[test]
+    fn obs_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.trace_out, "");
+        assert_eq!(c.obs_snapshot_secs, 0);
+        c.apply_override("trace_out", "trace.json").unwrap();
+        c.apply_override("obs_snapshot_secs", "5").unwrap();
+        assert_eq!(c.trace_out, "trace.json");
+        assert_eq!(c.obs_snapshot_secs, 5);
+        assert!(c.apply_override("obs_snapshot_secs", "soon").is_err());
+        assert!(c.to_json().to_pretty().contains("trace_out"));
+        assert!(c.to_json().to_pretty().contains("obs_snapshot_secs"));
     }
 
     #[test]

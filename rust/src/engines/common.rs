@@ -817,7 +817,7 @@ pub fn edge_centric_hop(
     let seeds = slots.seeds;
     let ntasks = tasks.len();
     let results: Vec<(Frame, u64, Duration)> =
-        WorkPool::global().map_collect(ntasks, cfg.threads, 1, |t| {
+        WorkPool::global().map_collect_labeled(ntasks, cfg.threads, 1, "hop.scan", |t| {
             // Per-task clock, started inside the job: the sizer must see
             // task cost, not time spent queued behind another job on the
             // single-slot pool (the pipelined schedule queues routinely).
@@ -1234,8 +1234,13 @@ fn admission_gate(sink: Option<&dyn SubgraphSink>, stalls: &mut u64, wait: &mut 
         if !s.lookahead_admit() {
             let t0 = Instant::now();
             s.lookahead_wait();
+            let waited = t0.elapsed();
             *stalls += 1;
-            *wait += t0.elapsed();
+            *wait += waited;
+            crate::obs::trace::instant(
+                "stall.queue_full",
+                &[("wait_us", waited.as_micros() as f64)],
+            );
         }
     }
 }
@@ -1359,6 +1364,7 @@ impl WaveLanes {
             let mut gather_waits = 0u64;
             let mut gather_wait = Duration::ZERO;
             for (wi, wave) in waves.iter().enumerate() {
+                let wave_span = crate::obs::trace::span("wave").arg("seq", wi as f64);
                 let lane = &mut self.lanes[0];
                 let mut slots = WaveSlots::new(
                     &table.seeds[wave.clone()],
@@ -1371,11 +1377,14 @@ impl WaveLanes {
                 }
                 if let Some(s) = wave_hook {
                     let t0 = Instant::now();
+                    let gather_span = crate::obs::trace::span("gather.warm");
                     s.wave_complete(&slots.unique_nodes());
+                    drop(gather_span);
                     gather_wait += t0.elapsed();
                     gather_waits += 1;
                 }
                 emit(&mut *phases, &mut *ledger, slots)?;
+                drop(wave_span);
                 if wi == 0 {
                     self.lanes[0].mark_warm();
                 }
@@ -1434,6 +1443,9 @@ impl WaveLanes {
                         crate::util::workpool::pin_worker_slot(
                             crate::util::workpool::speculator_slot(widx),
                         );
+                        crate::obs::trace::set_track(crate::obs::trace::Track::Speculator(
+                            widx as u16,
+                        ));
                         // Any worker exit (panic included) closes the
                         // queue so its peers exit and the caller's recv
                         // disconnects instead of hanging.
@@ -1459,6 +1471,8 @@ impl WaveLanes {
                             if let Some(d) = cfg.wave_delay {
                                 d.apply(seq as usize);
                             }
+                            let mut wave_span =
+                                crate::obs::trace::span("wave.spec").arg("seq", seq as f64);
                             let mut slots = WaveSlots::new(
                                 &table.seeds[range.clone()],
                                 &table.worker_of[range],
@@ -1494,6 +1508,8 @@ impl WaveLanes {
                                     }
                                 }
                             }
+                            wave_span.push_arg("hops", done as f64);
+                            drop(wave_span);
                             outstanding.fetch_add(1, Ordering::Relaxed);
                             if res_tx.send((seq, slots, lane, done)).is_err() {
                                 break;
@@ -1548,6 +1564,7 @@ impl WaveLanes {
                     Vec::with_capacity(depth);
                 for wi in 0..waves.len() {
                     let (mut slots, mut lane, done) = cur.take().expect("current wave in hand");
+                    let wave_span = crate::obs::trace::span("wave").arg("seq", wi as f64);
                     for h in (done + 1)..=hops {
                         phases.time(&format!("hop{h}"), || {
                             hop(g, &mut slots, h, cfg, fabric, ledger, &mut lane)
@@ -1564,11 +1581,14 @@ impl WaveLanes {
                     admit(&mut next_admit, &mut in_flight, &mut spare, &mut c, ctl.depth())?;
                     if let Some(s) = wave_hook {
                         let t0 = Instant::now();
+                        let gather_span = crate::obs::trace::span("gather.warm");
                         s.wave_complete(&slots.unique_nodes());
+                        drop(gather_span);
                         c.gather_wait += t0.elapsed();
                         c.gather_waits += 1;
                     }
                     emit(&mut *phases, &mut *ledger, slots)?;
+                    drop(wave_span);
                     let mut starved = false;
                     if wi + 1 < waves.len() {
                         // Histogram bucket = the effective depth in force
@@ -1602,11 +1622,17 @@ impl WaveLanes {
                             if !starved {
                                 starved = true;
                                 c.lane_starved += 1;
+                                crate::obs::trace::instant(
+                                    "stall.lane_starved",
+                                    &[("wave", want as f64)],
+                                );
                             }
                             let wait = Instant::now();
+                            let wait_span = crate::obs::trace::span("wave.wait");
                             let m = res_rx.recv().map_err(|_| {
                                 anyhow::anyhow!("wave prefetcher exited early")
                             })?;
+                            drop(wait_span);
                             c.bubble += wait.elapsed();
                             stash.push(m);
                         };
@@ -1625,6 +1651,15 @@ impl WaveLanes {
                         } else {
                             c.shallow += 1;
                         }
+                        crate::obs::trace::instant(
+                            "depth.decision",
+                            &[
+                                ("wave", d.wave as f64),
+                                ("depth", d.depth as f64),
+                                ("starve_ewma", d.starve_ewma as f64),
+                                ("queue_ewma", d.queue_ewma as f64),
+                            ],
+                        );
                         if c.trace.len() < MAX_DEPTH_TRACE {
                             c.trace.push(d);
                         }

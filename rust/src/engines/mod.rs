@@ -226,6 +226,56 @@ impl GenReport {
         self.sampled_nodes as f64 / self.sim(model).total_secs.max(1e-12)
     }
 
+    /// JSON view for the unified report writer ([`crate::obs::report`]).
+    /// The work ledger is omitted (cost-model input, not a result).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("engine", self.engine)
+            .set("subgraphs", self.subgraphs)
+            .set("sampled_nodes", self.sampled_nodes)
+            .set("wall_s", self.wall.as_secs_f64())
+            .set("nodes_per_sec", self.nodes_per_sec())
+            .set("discarded_seeds", self.discarded_seeds);
+        let mut phases = Json::obj();
+        for (name, d) in self.phases.iter() {
+            phases.set(name, d.as_secs_f64());
+        }
+        o.set("phases", phases);
+        let mut fabric = Json::obj();
+        fabric
+            .set("workers", self.fabric.workers)
+            .set("total_bytes", self.fabric.total_bytes)
+            .set("total_messages", self.fabric.total_messages);
+        o.set("fabric", fabric);
+        if let Some(sp) = &self.spill {
+            o.set("spill", sp.to_json());
+        }
+        let mut scratch = Json::obj();
+        scratch
+            .set("frames_allocated", self.scratch.frames_allocated)
+            .set("frames_reused", self.scratch.frames_reused)
+            .set("steady_frame_allocs", self.scratch.steady_frame_allocs)
+            .set("pool_threads_spawned", self.scratch.pool_threads_spawned);
+        o.set("scratch", scratch);
+        let wp = &self.wave_pipeline;
+        let mut wave = Json::obj();
+        wave.set("waves", wp.waves)
+            .set("overlapped_waves", wp.overlapped_waves)
+            .set("deep_waves", wp.deep_waves)
+            .set("bubble_s", wp.bubble.as_secs_f64())
+            .set("lane_starved_stalls", wp.lane_starved_stalls)
+            .set("queue_full_stalls", wp.queue_full_stalls)
+            .set("queue_full_wait_s", wp.queue_full_wait.as_secs_f64())
+            .set("gather_waits", wp.gather_waits)
+            .set("gather_wait_s", wp.gather_wait.as_secs_f64())
+            .set("deepen_steps", wp.deepen_steps)
+            .set("shallow_steps", wp.shallow_steps)
+            .set("effective_depth_last", wp.effective_depth_last as u64);
+        o.set("wave_pipeline", wave);
+        o
+    }
+
     pub fn render(&self) -> String {
         use crate::util::bytes::{fmt_bytes, fmt_rate, fmt_secs};
         let mut s = format!(

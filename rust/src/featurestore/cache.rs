@@ -13,6 +13,13 @@
 use crate::graph::NodeId;
 use crate::util::fxhash::FxHashMap;
 
+/// Process-global eviction counter (one registry lookup for the process,
+/// shared by every cache instance).
+fn evictions_counter() -> &'static crate::obs::metrics::Counter {
+    static C: std::sync::OnceLock<crate::obs::metrics::Counter> = std::sync::OnceLock::new();
+    C.get_or_init(|| crate::obs::metrics::counter("cache.evictions"))
+}
+
 /// Hit/miss/eviction counters.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CacheStats {
@@ -153,6 +160,8 @@ impl HotCache {
                 let old = self.node_of[s];
                 self.map.remove(&old);
                 self.stats.evictions += 1;
+                evictions_counter().inc();
+                crate::obs::trace::instant("cache.evict", &[("node", old as f64)]);
                 return s;
             }
         }

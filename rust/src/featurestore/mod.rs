@@ -307,6 +307,7 @@ impl FeatureService {
     /// sets — and inserted under a single cache lock.
     pub fn warm_cache(&self, ids: &[NodeId]) {
         let Some(cache) = &self.cache else { return };
+        let _span = crate::obs::trace::span("cache.warm").arg("ids", ids.len() as f64);
         let d = self.backend.dim();
         let mut missing: Vec<NodeId> = {
             let c = cache.lock().unwrap();
@@ -340,6 +341,9 @@ impl FeatureService {
         let d = self.backend.dim();
         let unique = fetch::dedup_ids(ids);
         let n = unique.len();
+        let _span = crate::obs::trace::span("gather")
+            .arg("requested", ids.len() as f64)
+            .arg("unique", n as f64);
         let mut feats = vec![0.0f32; n * d];
         let mut labels = vec![0u32; n];
         let mut index = FxHashMap::default();
@@ -412,6 +416,7 @@ impl FeatureService {
         subgraphs: &[Subgraph],
         requester: u32,
     ) -> Result<HostBatch> {
+        let _span = crate::obs::trace::span("materialize").arg("subgraphs", subgraphs.len() as f64);
         let mut ids = self.batches.acquire_ids();
         fetch::batch_ids_into(spec, subgraphs, &mut ids);
         let frame = self.gather(&ids, requester);
@@ -475,17 +480,23 @@ fn scatter_rows(
     // The gather pool, not the generation pool: pools admit one job at a
     // time, so sharing a pool would serialize this scatter behind hop
     // scans regardless of the thread budget.
-    crate::util::workpool::WorkPool::gather_global().run(jobs.len(), threads, 1, |j| {
-        for &v in jobs[j] {
-            let i = index[&v] as usize;
-            // SAFETY: ids are unique across the plan, so frame row `i` is
-            // touched by exactly one job; both buffers outlive the
-            // (blocking) pool call.
-            let row = unsafe { std::slice::from_raw_parts_mut(fp.0.add(i * d), d) };
-            backend.write_feature(v, row);
-            unsafe { *lp.0.add(i) = backend.label(v) };
-        }
-    });
+    crate::util::workpool::WorkPool::gather_global().run_labeled(
+        jobs.len(),
+        threads,
+        1,
+        "gather.scatter",
+        |j| {
+            for &v in jobs[j] {
+                let i = index[&v] as usize;
+                // SAFETY: ids are unique across the plan, so frame row `i`
+                // is touched by exactly one job; both buffers outlive the
+                // (blocking) pool call.
+                let row = unsafe { std::slice::from_raw_parts_mut(fp.0.add(i * d), d) };
+                backend.write_feature(v, row);
+                unsafe { *lp.0.add(i) = backend.label(v) };
+            }
+        },
+    );
 }
 
 /// Read-only backend view over an already-gathered frame: batch assembly

@@ -148,11 +148,12 @@ impl FeatureBackend for ShardedStore {
             let chunk_rows = ids.len().div_ceil(threads * 4).max(64);
             // Gather pool: bulk copies must not occupy the generation
             // pool's single job slot (see `WorkPool::gather_global`).
-            crate::util::workpool::WorkPool::gather_global().run_row_chunks(
+            crate::util::workpool::WorkPool::gather_global().run_row_chunks_labeled(
                 out,
                 d,
                 threads,
                 chunk_rows,
+                "gather.rows",
                 |row0, sub| {
                     let rows = sub.len() / d;
                     for (j, &v) in ids[row0..row0 + rows].iter().enumerate() {

@@ -31,6 +31,7 @@ pub mod featurestore;
 pub mod graph;
 pub mod storage;
 pub mod mapreduce;
+pub mod obs;
 pub mod pipeline;
 pub mod sampler;
 pub mod train;

@@ -41,6 +41,8 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
         opt("wave-pipeline", "overlap look-ahead waves with reduce/emit (true|false)", None),
         opt("lookahead-depth", "wave look-ahead ring depth ceiling (>=1; >=2 speculates hop-2)", None),
         opt("lookahead-workers", "look-ahead speculator threads claiming waves out of order (>=1)", None),
+        opt("trace-out", "write a Chrome-trace timeline (Perfetto) to this path", None),
+        opt("obs-snapshot-secs", "metrics snapshot period in seconds (0=off)", None),
         flag("dump-config", "print the effective config and exit"),
     ]
 }
@@ -147,6 +149,7 @@ fn cmd_generate(p: &Parsed) -> Result<()> {
         println!("{}", cfg.to_json().to_pretty());
         return Ok(());
     }
+    let mut obs = start_obs(&cfg, p.get("engine").unwrap_or(&cfg.engine));
     let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
     let g = gen.csr();
     let seeds = seeds_for(&cfg, g.num_nodes());
@@ -155,7 +158,20 @@ fn cmd_generate(p: &Parsed) -> Result<()> {
     let sink = NullSink::default();
     let report = engine.generate(&g, &seeds, &cfg.engine_config()?, &sink)?;
     println!("{}", report.render());
+    obs.finish()?;
     Ok(())
+}
+
+/// Start the per-run observability session and stamp the report header
+/// metadata (engine + effective config) every report writer picks up.
+fn start_obs(cfg: &RunConfig, engine: &str) -> graphgen_plus::obs::ObsSession {
+    graphgen_plus::obs::report::set_run_config_meta(cfg);
+    graphgen_plus::obs::report::set_meta("engine", engine);
+    graphgen_plus::obs::ObsSession::start(
+        &cfg.trace_out,
+        cfg.obs_snapshot_secs,
+        "obs_metrics.jsonl",
+    )
 }
 
 fn cmd_compare(p: &Parsed) -> Result<()> {
@@ -209,6 +225,7 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
         println!("{}", cfg.to_json().to_pretty());
         return Ok(());
     }
+    let mut obs = start_obs(&cfg, p.get("engine").unwrap_or(&cfg.engine));
     let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
     let g = gen.csr();
     let seeds = seeds_for(&cfg, g.num_nodes());
@@ -252,9 +269,11 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
     let mode: PipelineMode = cfg.mode.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     if mode == PipelineMode::Concurrent {
         // Partition the pool between generation scans and feature gathers
-        // so the two stop fighting over the same workers.
+        // so the two stop fighting over the same workers. With no explicit
+        // --gather-threads, the measured E7 knee (BENCH_e7.json) seeds the
+        // gather share.
         let (gen_threads, gather_threads) =
-            graphgen_plus::pipeline::split_pool_budget(ecfg.threads, cfg.gather_threads);
+            graphgen_plus::pipeline::split_pool_budget_seeded(ecfg.threads, cfg.gather_threads);
         ecfg.threads = gen_threads;
         features = features.with_threads(gather_threads);
         log::info!("pool budget: {gen_threads} generation / {gather_threads} gather threads");
@@ -310,6 +329,7 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
         );
     }
     runtime.shutdown();
+    obs.finish()?;
     Ok(())
 }
 

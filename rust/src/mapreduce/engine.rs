@@ -82,7 +82,7 @@ where
     let shuffled = std::sync::atomic::AtomicU64::new(0);
     // buckets[r] collects (K, V) destined for reducer r, from all tasks.
     let buckets: Vec<Mutex<Vec<(K, V)>>> = (0..reduce_tasks).map(|_| Mutex::new(Vec::new())).collect();
-    WorkPool::global().run(inputs.len(), threads.max(1), 1, |t| {
+    WorkPool::global().run_labeled(inputs.len(), threads.max(1), 1, "mr.map", |t| {
         let mut local: Vec<Vec<(K, V)>> = (0..reduce_tasks).map(|_| Vec::new()).collect();
         let mut count = 0u64;
         let mut bytes = 0u64;
@@ -112,14 +112,15 @@ where
         }
     });
     // --- reduce phase ----------------------------------------------------
-    let accs: Vec<A> = WorkPool::global().map_collect(reduce_tasks, threads.max(1), 1, |r| {
-        let pairs = std::mem::take(&mut *buckets[r].lock().unwrap());
-        let mut acc = init();
-        for (k, v) in pairs {
-            fold(&mut acc, k, v);
-        }
-        acc
-    });
+    let accs: Vec<A> =
+        WorkPool::global().map_collect_labeled(reduce_tasks, threads.max(1), 1, "mr.reduce", |r| {
+            let pairs = std::mem::take(&mut *buckets[r].lock().unwrap());
+            let mut acc = init();
+            for (k, v) in pairs {
+                fold(&mut acc, k, v);
+            }
+            acc
+        });
     let stats = MapReduceStats {
         map_tasks: inputs.len(),
         reduce_tasks,

@@ -1,0 +1,274 @@
+//! Process-global metrics registry: named atomic counters/gauges plus
+//! [`LogHistogram`] latency histograms, registered once and snapshotted
+//! as JSON lines.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Hist`]) are cheap clones of the
+//! underlying shared cell; instrumentation sites look them up once (a
+//! registry lock) and then update lock-free (counters/gauges) or under a
+//! short uncontended mutex (histograms). Updates are unconditional —
+//! they are cheap enough to run even when tracing is off, and the
+//! registry allocates only at registration.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// Monotonic named counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins named gauge (an `f64` stored as bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Named latency histogram (log-bucketed nanoseconds).
+#[derive(Clone)]
+pub struct Hist(Arc<Mutex<LogHistogram>>);
+
+impl Hist {
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.0.lock().unwrap().record(ns);
+    }
+
+    /// Fold a locally-accumulated histogram in (one lock instead of one
+    /// per sample — the pattern for per-thread histograms).
+    pub fn merge(&self, other: &LogHistogram) {
+        self.0.lock().unwrap().merge(other);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.lock().unwrap().count()
+    }
+}
+
+enum Slot {
+    C(Counter),
+    G(Gauge),
+    H(Hist),
+}
+
+static REG: OnceLock<Mutex<BTreeMap<String, Slot>>> = OnceLock::new();
+
+fn reg() -> &'static Mutex<BTreeMap<String, Slot>> {
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Get-or-register the named counter. Panics if `name` is already
+/// registered as a different kind (a wiring bug, not a runtime state).
+pub fn counter(name: &str) -> Counter {
+    let mut m = reg().lock().unwrap();
+    match m
+        .entry(name.to_string())
+        .or_insert_with(|| Slot::C(Counter(Arc::new(AtomicU64::new(0)))))
+    {
+        Slot::C(c) => c.clone(),
+        _ => panic!("metric {name:?} already registered with a different kind"),
+    }
+}
+
+/// Get-or-register the named gauge.
+pub fn gauge(name: &str) -> Gauge {
+    let mut m = reg().lock().unwrap();
+    match m
+        .entry(name.to_string())
+        .or_insert_with(|| Slot::G(Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))))
+    {
+        Slot::G(g) => g.clone(),
+        _ => panic!("metric {name:?} already registered with a different kind"),
+    }
+}
+
+/// Get-or-register the named histogram.
+pub fn histogram(name: &str) -> Hist {
+    let mut m = reg().lock().unwrap();
+    match m
+        .entry(name.to_string())
+        .or_insert_with(|| Slot::H(Hist(Arc::new(Mutex::new(LogHistogram::new())))))
+    {
+        Slot::H(h) => h.clone(),
+        _ => panic!("metric {name:?} already registered with a different kind"),
+    }
+}
+
+/// One point-in-time view of the whole registry, keyed by kind. The
+/// snapshotter emits one of these per tick as a JSON line.
+pub fn snapshot() -> Json {
+    let m = reg().lock().unwrap();
+    let mut counters = Json::obj();
+    let mut gauges = Json::obj();
+    let mut hists = Json::obj();
+    for (name, slot) in m.iter() {
+        match slot {
+            Slot::C(c) => {
+                counters.set(name, c.get());
+            }
+            Slot::G(g) => {
+                gauges.set(name, g.get());
+            }
+            Slot::H(h) => {
+                let hg = h.0.lock().unwrap();
+                let mut j = Json::obj();
+                // An empty histogram's mean is NaN, which JSON can't carry.
+                let mean = hg.mean_ns();
+                j.set("count", hg.count())
+                    .set("mean_ns", if mean.is_finite() { mean } else { 0.0 })
+                    .set("p50_ns", hg.quantile_ns(0.50))
+                    .set("p90_ns", hg.quantile_ns(0.90))
+                    .set("p99_ns", hg.quantile_ns(0.99));
+                hists.set(name, j);
+            }
+        }
+    }
+    let mut out = Json::obj();
+    out.set("t_us", super::now_us())
+        .set("counters", counters)
+        .set("gauges", gauges)
+        .set("histograms", hists);
+    out
+}
+
+/// Background thread appending a [`snapshot`] JSON line to a file every
+/// tick. Stopped (with one final snapshot) via [`Snapshotter::stop`] or
+/// drop.
+pub struct Snapshotter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Snapshotter {
+    pub fn spawn(path: &Path, every: Duration) -> Snapshotter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let path = path.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("gg-obs-snapshot".into())
+            .spawn(move || {
+                let file = std::fs::OpenOptions::new().create(true).append(true).open(&path);
+                let mut file = match file {
+                    Ok(f) => f,
+                    Err(e) => {
+                        log::warn!("obs: cannot open snapshot file {}: {e}", path.display());
+                        return;
+                    }
+                };
+                let tick = Duration::from_millis(50);
+                loop {
+                    let mut waited = Duration::ZERO;
+                    while waited < every && !flag.load(Ordering::Relaxed) {
+                        std::thread::sleep(tick.min(every - waited));
+                        waited += tick;
+                    }
+                    let line = snapshot().to_string();
+                    if writeln!(file, "{line}").is_err() {
+                        return;
+                    }
+                    if flag.load(Ordering::Relaxed) {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn obs snapshotter");
+        Snapshotter { stop, handle: Some(handle) }
+    }
+
+    /// Signal the thread, wait for its final snapshot line.
+    pub fn stop(mut self) {
+        self.join();
+    }
+
+    fn join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Snapshotter {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip_through_snapshot() {
+        let c = counter("test.metrics.counter");
+        c.add(3);
+        c.inc();
+        gauge("test.metrics.gauge").set(2.5);
+        histogram("test.metrics.hist").record_ns(1500);
+        let snap = snapshot();
+        let c = snap.get("counters").unwrap().get("test.metrics.counter");
+        assert_eq!(c.unwrap().as_u64(), Some(4));
+        let g = snap.get("gauges").unwrap().get("test.metrics.gauge");
+        assert_eq!(g.unwrap().as_f64(), Some(2.5));
+        let h = snap.get("histograms").unwrap().get("test.metrics.hist");
+        assert_eq!(h.unwrap().get("count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn handles_alias_the_same_cell() {
+        let a = counter("test.metrics.alias");
+        let b = counter("test.metrics.alias");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+    }
+
+    #[test]
+    fn snapshotter_appends_json_lines() {
+        let dir = std::env::temp_dir().join(format!("gg_obs_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+        counter("test.metrics.snapline").inc();
+        let s = Snapshotter::spawn(&path, Duration::from_millis(10));
+        std::thread::sleep(Duration::from_millis(40));
+        s.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert!(!lines.is_empty());
+        for line in lines {
+            let j = Json::parse(line).expect("each snapshot line parses");
+            assert!(j.get("counters").is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,123 @@
+//! Unified runtime observability: span tracing, metrics registry and
+//! Chrome-trace export.
+//!
+//! The pipeline runs five layers of concurrency (work-pool scan tasks,
+//! out-of-order wave look-ahead, the gather pool, the spill
+//! flusher/prefetcher pair and the training queue), and end-of-run
+//! counters alone cannot attribute a bubble to its cause. This module
+//! gives every layer a *track* on a shared clock:
+//!
+//! * [`trace`] — thread-local ring buffers of `(track, name, t_start,
+//!   t_end, seq, args)` events recorded through an RAII [`trace::SpanGuard`],
+//!   plus instant events for point-in-time decisions (depth-controller
+//!   steps, stall classifications, admission credits, cache evictions).
+//!   Drained into Chrome trace-event JSON that loads in Perfetto or
+//!   `chrome://tracing`.
+//! * [`metrics`] — process-global named atomic counters/gauges and
+//!   [`crate::util::stats::LogHistogram`] latency histograms, registered
+//!   once and snapshotted as JSON lines (`--obs-snapshot-secs`).
+//! * [`report`] — the single writer every `BENCH_*.json` / report dump
+//!   goes through, stamping a run-metadata header (engine, threads,
+//!   look-ahead shape, config hash) so perf trajectories are attributable.
+//!
+//! # Overhead contract
+//!
+//! Everything is gated on one process-global flag read with a relaxed
+//! atomic load ([`enabled`]). While disabled, instrumented code performs
+//! **no clock reads and no allocations** — `span()` returns an inert
+//! guard, `instant()` returns immediately, and the steady-state
+//! zero-alloc assertions in `tests/pipeline_overlap.rs` hold with obs
+//! compiled in. While enabled, recording one event costs one clock read
+//! at open, one at close, and a push into a pre-registered thread-local
+//! ring (an uncontended mutex: the owning thread pushes, only drains
+//! contend). Events are fixed-size (`&'static str` names, numeric args),
+//! so steady-state recording allocates only on ring growth up to the
+//! per-thread cap.
+
+pub mod metrics;
+pub mod report;
+pub mod trace;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The single hot-path gate: one relaxed atomic load. Instrumentation
+/// sites check this before touching the clock or any buffer.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on. Pins the trace epoch on first call so all tracks
+/// share one clock.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off. Already-recorded events stay buffered until drained.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Microseconds since the trace epoch. Only called on enabled paths.
+#[inline]
+pub(crate) fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Per-run observability session: enables tracing/snapshotting from the
+/// run config and flushes outputs on drop, so traces survive error paths.
+pub struct ObsSession {
+    trace_out: Option<PathBuf>,
+    snapshotter: Option<metrics::Snapshotter>,
+}
+
+impl ObsSession {
+    /// Start a session. `trace_out` empty and `snapshot_secs == 0` leave
+    /// observability disabled (the zero-overhead default).
+    pub fn start(trace_out: &str, snapshot_secs: u64, snapshot_path: &str) -> ObsSession {
+        let trace_out = if trace_out.is_empty() {
+            None
+        } else {
+            enable();
+            Some(PathBuf::from(trace_out))
+        };
+        let snapshotter = if snapshot_secs > 0 {
+            enable();
+            Some(metrics::Snapshotter::spawn(
+                Path::new(snapshot_path),
+                std::time::Duration::from_secs(snapshot_secs),
+            ))
+        } else {
+            None
+        };
+        ObsSession { trace_out, snapshotter }
+    }
+
+    /// Flush outputs now (also runs on drop; explicit call surfaces I/O
+    /// errors to the caller).
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        if let Some(s) = self.snapshotter.take() {
+            s.stop();
+        }
+        if let Some(path) = self.trace_out.take() {
+            trace::write_chrome_trace(&path)?;
+            log::info!("wrote trace timeline to {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ObsSession {
+    fn drop(&mut self) {
+        if let Err(e) = self.finish() {
+            log::warn!("obs: failed to flush trace output: {e}");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! The single writer every report/trajectory JSON goes through.
+//!
+//! Commands and benches register run metadata once ([`set_meta`]) —
+//! engine, thread budget, look-ahead shape — and every document written
+//! via [`write_json`] is stamped with a `run_meta` header that includes
+//! a hash of the metadata, so a `BENCH_*.json` found in CI artifacts is
+//! attributable to the exact configuration that produced it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::fxhash::fxhash;
+use crate::util::json::Json;
+
+static META: OnceLock<Mutex<BTreeMap<String, Json>>> = OnceLock::new();
+
+fn meta() -> &'static Mutex<BTreeMap<String, Json>> {
+    META.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Record one run-metadata key (last write wins). Standard keys:
+/// `engine`, `threads`, `gather_threads`, `lookahead_depth`,
+/// `lookahead_workers`; callers may add their own.
+pub fn set_meta(key: &str, value: impl Into<Json>) {
+    meta().lock().unwrap().insert(key.to_string(), value.into());
+}
+
+/// Stamp the standard keys from a run configuration in one call.
+pub fn set_run_config_meta(cfg: &crate::config::RunConfig) {
+    set_meta("threads", cfg.threads);
+    set_meta("gather_threads", cfg.gather_threads);
+    set_meta("lookahead_depth", cfg.lookahead_depth);
+    set_meta("lookahead_workers", cfg.lookahead_workers);
+    set_meta("config_json", cfg.to_json().to_string());
+}
+
+/// The run-metadata header: every key set so far plus `config_hash`, a
+/// hash over the canonical serialization of those keys. Two documents
+/// with equal hashes came from identical configurations.
+pub fn run_meta() -> Json {
+    let m = meta().lock().unwrap();
+    let mut out = Json::obj();
+    for (k, v) in m.iter() {
+        out.set(k, v.clone());
+    }
+    let hash = fxhash(&out.to_string());
+    out.set("config_hash", format!("{hash:016x}"));
+    out
+}
+
+/// Write a report/trajectory object to `path`, injecting the `run_meta`
+/// header. `root` must be a JSON object.
+pub fn write_json(path: &Path, mut root: Json) -> std::io::Result<()> {
+    root.set("run_meta", run_meta());
+    std::fs::write(path, root.to_pretty() + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_is_stamped_and_hashed() {
+        set_meta("test_report_key", "v1");
+        let dir = std::env::temp_dir().join(format!("gg_obs_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let mut doc = Json::obj();
+        doc.set("payload", 42u64);
+        write_json(&path, doc).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("payload").unwrap().as_u64(), Some(42));
+        let rm = back.get("run_meta").expect("run_meta header present");
+        assert_eq!(rm.get("test_report_key").unwrap().as_str(), Some("v1"));
+        let hash = rm.get("config_hash").unwrap().as_str().unwrap();
+        assert_eq!(hash.len(), 16);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

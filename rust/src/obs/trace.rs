@@ -1,0 +1,369 @@
+//! Span tracer: per-thread ring buffers of timeline events plus the
+//! Chrome trace-event JSON exporter.
+//!
+//! Every concurrency layer of the pipeline records onto a named
+//! [`Track`] (one Perfetto row per track). Spans are opened with
+//! [`span`]/[`span_on`] and closed by dropping the returned RAII
+//! [`SpanGuard`]; point-in-time decisions (depth-controller steps, stall
+//! classifications, admission credits, cache evictions) are [`instant`]
+//! events. Each event carries a globally monotonic sequence number
+//! assigned at record time, so per-track order is recoverable even after
+//! the per-thread rings are merged.
+//!
+//! Threads record into a thread-local ring registered with a global
+//! collector on first use — persistent pool workers park forever, so the
+//! collector (not thread exit) is what drains them. Rings are bounded
+//! ([`RING_CAP`] events); overflow overwrites the oldest events and is
+//! counted, never reallocated past the cap.
+
+use std::cell::{Cell, OnceCell};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Maximum numeric arguments attached to one event (fixed-size so events
+/// never allocate).
+pub const MAX_ARGS: usize = 4;
+
+/// Per-thread ring capacity in events. At wave/job/batch granularity a
+/// run records a few thousand events per track; 64Ki leaves headroom
+/// without unbounded growth on long runs.
+pub const RING_CAP: usize = 1 << 16;
+
+/// A timeline row. One per concurrency role; indexed variants carry the
+/// worker slot so e.g. each speculator gets its own row.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Track {
+    /// The caller thread driving waves/reduce/emit (also the pipeline
+    /// trainer-side caller in sequential mode).
+    Main,
+    /// The dedicated generation thread of the concurrent pipeline.
+    Generator,
+    /// Training-queue admission/credit events.
+    Queue,
+    /// The spill write-behind flusher thread.
+    SpillFlush,
+    /// The spill read-ahead prefetcher thread.
+    SpillPrefetch,
+    /// Trainer worker `i` of the data-parallel training loop.
+    Trainer(u16),
+    /// Look-ahead speculator `i` (out-of-order wave claiming).
+    Speculator(u16),
+    /// Persistent scan-pool worker `i` (`WorkPool::global`).
+    PoolWorker(u16),
+    /// Gather-pool worker `i` (`WorkPool::gather_global`).
+    GatherWorker(u16),
+}
+
+impl Track {
+    /// Stable Chrome-trace thread id. Ranges are spaced so indexed
+    /// tracks never collide: trainers 10+, speculators 40+, pool workers
+    /// 100+, gather workers 300+.
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Main => 0,
+            Track::Generator => 1,
+            Track::Queue => 2,
+            Track::SpillFlush => 3,
+            Track::SpillPrefetch => 4,
+            Track::Trainer(i) => 10 + i as u64,
+            Track::Speculator(i) => 40 + i as u64,
+            Track::PoolWorker(i) => 100 + (i as u64).min(199),
+            Track::GatherWorker(i) => 300 + (i as u64).min(199),
+        }
+    }
+
+    /// Human-readable row label (the Perfetto thread name).
+    pub fn label(self) -> String {
+        match self {
+            Track::Main => "main".into(),
+            Track::Generator => "generator".into(),
+            Track::Queue => "queue".into(),
+            Track::SpillFlush => "spill-flush".into(),
+            Track::SpillPrefetch => "spill-prefetch".into(),
+            Track::Trainer(i) => format!("trainer-{i}"),
+            Track::Speculator(i) => format!("speculator-{i}"),
+            Track::PoolWorker(i) => format!("pool-worker-{i}"),
+            Track::GatherWorker(i) => format!("gather-worker-{i}"),
+        }
+    }
+}
+
+/// One recorded timeline event (fixed-size, `Copy`, allocation-free).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub track: Track,
+    pub name: &'static str,
+    /// Microseconds since the trace epoch.
+    pub start_us: u64,
+    /// Span duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Instant event (a point marker) rather than a duration span.
+    pub instant: bool,
+    /// Globally monotonic sequence number assigned at record time
+    /// (therefore monotonic within every track).
+    pub seq: u64,
+    pub args: [(&'static str, f64); MAX_ARGS],
+    pub nargs: u8,
+}
+
+const NO_ARGS: [(&'static str, f64); MAX_ARGS] = [("", 0.0); MAX_ARGS];
+
+struct RingInner {
+    buf: Vec<Event>,
+    next: usize,
+    dropped: u64,
+}
+
+/// One thread's event ring. The owning thread pushes; the collector
+/// drains. The mutex is uncontended except at drain time.
+struct ThreadRing {
+    inner: Mutex<RingInner>,
+}
+
+impl ThreadRing {
+    fn push(&self, ev: Event) {
+        let mut r = self.inner.lock().unwrap();
+        if r.buf.len() < RING_CAP {
+            r.buf.push(ev);
+        } else {
+            let i = r.next;
+            r.buf[i] = ev;
+            r.next = (r.next + 1) % RING_CAP;
+            r.dropped += 1;
+        }
+    }
+}
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadRing>>>> = OnceLock::new();
+
+thread_local! {
+    static RING: OnceCell<Arc<ThreadRing>> = const { OnceCell::new() };
+    static TRACK: Cell<Track> = const { Cell::new(Track::Main) };
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadRing>>> {
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn record(ev: Event) {
+    RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let ring = Arc::new(ThreadRing {
+                inner: Mutex::new(RingInner { buf: Vec::new(), next: 0, dropped: 0 }),
+            });
+            registry().lock().unwrap().push(ring.clone());
+            ring
+        });
+        ring.push(ev);
+    });
+}
+
+/// Bind this thread to a track. Long-lived role threads (pool workers,
+/// speculators, trainer workers, spill threads, the generator) call this
+/// once at startup; [`span`]/[`instant`] then land on the bound track.
+pub fn set_track(track: Track) {
+    TRACK.with(|t| t.set(track));
+}
+
+/// The track this thread records onto (default [`Track::Main`]).
+pub fn current_track() -> Track {
+    TRACK.with(|t| t.get())
+}
+
+/// RAII span: records a duration event from construction to drop. Inert
+/// (no clock reads, no buffer touches) when tracing is disabled.
+pub struct SpanGuard {
+    active: bool,
+    track: Track,
+    name: &'static str,
+    start_us: u64,
+    args: [(&'static str, f64); MAX_ARGS],
+    nargs: u8,
+}
+
+impl SpanGuard {
+    /// Attach a numeric argument (builder style). No-op when inert or at
+    /// the [`MAX_ARGS`] cap.
+    pub fn arg(mut self, key: &'static str, value: f64) -> SpanGuard {
+        self.push_arg(key, value);
+        self
+    }
+
+    /// Attach a numeric argument after construction (e.g. a value only
+    /// known mid-span).
+    pub fn push_arg(&mut self, key: &'static str, value: f64) {
+        if self.active && (self.nargs as usize) < MAX_ARGS {
+            self.args[self.nargs as usize] = (key, value);
+            self.nargs += 1;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = super::now_us();
+        record(Event {
+            track: self.track,
+            name: self.name,
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            instant: false,
+            seq: SEQ.fetch_add(1, Ordering::Relaxed),
+            args: self.args,
+            nargs: self.nargs,
+        });
+    }
+}
+
+#[inline]
+fn inert(name: &'static str) -> SpanGuard {
+    SpanGuard { active: false, track: Track::Main, name, start_us: 0, args: NO_ARGS, nargs: 0 }
+}
+
+/// Open a span on the thread's bound track.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !super::enabled() {
+        return inert(name);
+    }
+    span_on(current_track(), name)
+}
+
+/// Open a span on an explicit track (for events recorded on behalf of
+/// another role, e.g. queue-side bookkeeping).
+#[inline]
+pub fn span_on(track: Track, name: &'static str) -> SpanGuard {
+    if !super::enabled() {
+        return inert(name);
+    }
+    SpanGuard {
+        active: true,
+        track,
+        name,
+        start_us: super::now_us(),
+        args: NO_ARGS,
+        nargs: 0,
+    }
+}
+
+/// Record an instant (point) event on the thread's bound track.
+#[inline]
+pub fn instant(name: &'static str, args: &[(&'static str, f64)]) {
+    if !super::enabled() {
+        return;
+    }
+    instant_on(current_track(), name, args);
+}
+
+/// Record an instant event on an explicit track.
+#[inline]
+pub fn instant_on(track: Track, name: &'static str, args: &[(&'static str, f64)]) {
+    if !super::enabled() {
+        return;
+    }
+    let mut a = NO_ARGS;
+    let n = args.len().min(MAX_ARGS);
+    a[..n].copy_from_slice(&args[..n]);
+    record(Event {
+        track,
+        name,
+        start_us: super::now_us(),
+        dur_us: 0,
+        instant: true,
+        seq: SEQ.fetch_add(1, Ordering::Relaxed),
+        args: a,
+        nargs: n as u8,
+    });
+}
+
+/// Drain all threads' rings into one record-order (sequence-sorted)
+/// vector, plus the total number of ring-overflow drops. Rings stay
+/// registered; subsequent events accumulate for the next drain.
+pub fn drain() -> (Vec<Event>, u64) {
+    let mut all = Vec::new();
+    let mut dropped = 0;
+    for ring in registry().lock().unwrap().iter() {
+        let mut r = ring.inner.lock().unwrap();
+        all.append(&mut r.buf);
+        r.next = 0;
+        dropped += r.dropped;
+        r.dropped = 0;
+    }
+    all.sort_by_key(|e| e.seq);
+    (all, dropped)
+}
+
+/// Render drained events as a Chrome trace-event document (the JSON
+/// Object Format: `{"traceEvents": [...], ...}`), loadable in Perfetto
+/// or `chrome://tracing`.
+///
+/// Sequence numbers are renumbered per track (rank in global record
+/// order), so two identical single-threaded runs serialize to identical
+/// bytes modulo the `ts`/`dur` fields.
+pub fn chrome_trace_from(events: &[Event], dropped: u64) -> Json {
+    let mut tracks: BTreeMap<u64, String> = BTreeMap::new();
+    for e in events {
+        tracks.entry(e.track.tid()).or_insert_with(|| e.track.label());
+    }
+
+    let mut out = Vec::with_capacity(events.len() + tracks.len());
+    for (tid, label) in &tracks {
+        let mut name_args = Json::obj();
+        name_args.set("name", label.as_str());
+        let mut m = Json::obj();
+        m.set("ph", "M")
+            .set("pid", 1.0)
+            .set("tid", *tid as f64)
+            .set("name", "thread_name")
+            .set("args", name_args);
+        out.push(m);
+    }
+
+    let mut track_rank: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events {
+        let rank = track_rank.entry(e.track.tid()).or_insert(0);
+        let mut args = Json::obj();
+        args.set("seq", *rank as f64);
+        *rank += 1;
+        for (k, v) in e.args.iter().take(e.nargs as usize) {
+            args.set(k, *v);
+        }
+        let mut j = Json::obj();
+        j.set("pid", 1.0)
+            .set("tid", e.track.tid() as f64)
+            .set("name", e.name)
+            .set("ts", e.start_us as f64)
+            .set("args", args);
+        if e.instant {
+            j.set("ph", "i").set("s", "t");
+        } else {
+            j.set("ph", "X").set("dur", e.dur_us as f64);
+        }
+        out.push(j);
+    }
+
+    let mut other = Json::obj();
+    other.set("run_meta", super::report::run_meta());
+    other.set("dropped_events", dropped as f64);
+
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(out))
+        .set("displayTimeUnit", "ms")
+        .set("otherData", other);
+    doc
+}
+
+/// Drain every ring and write the Chrome trace-event JSON to `path`.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    let (events, dropped) = drain();
+    let doc = chrome_trace_from(&events, dropped);
+    std::fs::write(path, doc.to_string() + "\n")
+}

@@ -80,6 +80,32 @@ impl PipelineReport {
         1.0 - self.wall.as_secs_f64() / serial
     }
 
+    /// JSON view for the unified report writer ([`crate::obs::report`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("mode", format!("{:?}", self.mode))
+            .set("wall_s", self.wall.as_secs_f64())
+            .set("overlap_ratio", self.overlap_ratio())
+            .set("bubble_s", self.bubble.as_secs_f64())
+            .set("warmed_waves", self.warmed_waves)
+            .set("warm_skipped_waves", self.warm_skipped_waves)
+            .set("gen", self.gen.to_json())
+            .set("train", self.train.to_json());
+        let mut q = Json::obj();
+        q.set("pushes", self.queue.pushes)
+            .set("pops", self.queue.pops)
+            .set("max_depth", self.queue.max_depth)
+            .set("push_blocks", self.queue.push_blocks)
+            .set("pop_blocks", self.queue.pop_blocks);
+        o.set("queue", q);
+        let mut ff = Json::obj();
+        ff.set("total_bytes", self.feature_fabric.total_bytes)
+            .set("total_messages", self.feature_fabric.total_messages);
+        o.set("feature_fabric", ff);
+        o
+    }
+
     pub fn render(&self) -> String {
         use crate::util::bytes::{fmt_bytes, fmt_secs};
         let wp = &self.gen.wave_pipeline;
@@ -136,6 +162,38 @@ pub fn split_pool_budget(total: usize, gather_threads: usize) -> (usize, usize) 
     (gen, gather)
 }
 
+/// Parse the measured gather-pool knee (`knee_gather_threads`) out of an
+/// E7 bench trajectory (`BENCH_e7.json`). `None` when the file is
+/// missing, malformed, or records a degenerate knee.
+pub fn knee_gather_threads_from(path: &std::path::Path) -> Option<usize> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let doc = crate::util::json::Json::parse(&text).ok()?;
+    doc.get("knee_gather_threads")?.as_usize().filter(|&k| k > 0)
+}
+
+/// Resolve the gather share fed to [`split_pool_budget`]: an explicit
+/// `--gather-threads` request wins; otherwise the measured knee from the
+/// E7 bench seeds the split (path `BENCH_e7.json`, overridable via
+/// `GG_BENCH_E7_JSON`); with neither, 0 falls through to the quarter-split
+/// default.
+pub fn seeded_gather_threads(gather_threads: usize) -> usize {
+    if gather_threads > 0 {
+        return gather_threads;
+    }
+    let path = std::env::var("GG_BENCH_E7_JSON").unwrap_or_else(|_| "BENCH_e7.json".into());
+    knee_gather_threads_from(std::path::Path::new(&path)).unwrap_or(0)
+}
+
+/// [`split_pool_budget`] with the E7 knee seeding applied, publishing the
+/// chosen shares as obs gauges (`pool.gen_threads` / `pool.gather_threads`)
+/// so snapshots record what the split actually was.
+pub fn split_pool_budget_seeded(total: usize, gather_threads: usize) -> (usize, usize) {
+    let (gen, gather) = split_pool_budget(total, seeded_gather_threads(gather_threads));
+    crate::obs::metrics::gauge("pool.gen_threads").set(gen as f64);
+    crate::obs::metrics::gauge("pool.gather_threads").set(gather as f64);
+    (gen, gather)
+}
+
 /// Run `engine` over `seeds` and train on the produced subgraphs.
 #[allow(clippy::too_many_arguments)]
 pub fn run_pipeline(
@@ -164,6 +222,8 @@ pub fn run_pipeline(
     let (gen_report, train_report) = match mode {
         PipelineMode::Concurrent => std::thread::scope(|scope| -> Result<_> {
             let gen_handle = scope.spawn(|| {
+                crate::obs::trace::set_track(crate::obs::trace::Track::Generator);
+                let _span = crate::obs::trace::span("generate");
                 let sink = QueueSink::new(&queue, warmer.as_ref());
                 let r = engine.generate(graph, seeds, ecfg, &sink);
                 queue.close(); // close even on error so the trainer exits
@@ -185,12 +245,10 @@ pub fn run_pipeline(
         PipelineMode::Sequential => {
             // Unbounded staging (the memory cost sequential pays).
             let staging = BoundedQueue::<Subgraph>::new(usize::MAX >> 1);
-            let gen_report = engine.generate(
-                graph,
-                seeds,
-                ecfg,
-                &QueueSink::new(&staging, warmer.as_ref()),
-            )?;
+            let gen_report = {
+                let _span = crate::obs::trace::span("generate");
+                engine.generate(graph, seeds, ecfg, &QueueSink::new(&staging, warmer.as_ref()))?
+            };
             staging.close();
             // Only after generation fully completed: forward into the
             // training queue while the trainer consumes.
@@ -260,6 +318,32 @@ mod tests {
         assert_eq!(split_pool_budget(1, 0), (1, 1));
         assert_eq!(split_pool_budget(1, 5), (1, 1));
         assert_eq!(split_pool_budget(0, 0), (1, 1));
+    }
+
+    #[test]
+    fn knee_seeding_reads_bench_trajectory() {
+        let dir = std::env::temp_dir().join(format!("gg_knee_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_e7.json");
+
+        // Missing file → no knee.
+        assert_eq!(knee_gather_threads_from(&path), None);
+
+        // Well-formed trajectory → the recorded knee.
+        std::fs::write(&path, r#"{"bench":"e7_featurestore","knee_gather_threads":4}"#).unwrap();
+        assert_eq!(knee_gather_threads_from(&path), Some(4));
+        // The seeded split hands the knee to the gather pool.
+        assert_eq!(split_pool_budget(16, 4), (12, 4));
+
+        // Malformed / degenerate values → no knee, not a panic.
+        std::fs::write(&path, "{not json").unwrap();
+        assert_eq!(knee_gather_threads_from(&path), None);
+        std::fs::write(&path, r#"{"knee_gather_threads":0}"#).unwrap();
+        assert_eq!(knee_gather_threads_from(&path), None);
+        std::fs::write(&path, r#"{"knee_gather_threads":"four"}"#).unwrap();
+        assert_eq!(knee_gather_threads_from(&path), None);
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -18,5 +18,7 @@
 pub mod driver;
 pub mod queue;
 
-pub use driver::{run_pipeline, split_pool_budget, PipelineMode, PipelineReport};
+pub use driver::{
+    run_pipeline, split_pool_budget, split_pool_budget_seeded, PipelineMode, PipelineReport,
+};
 pub use queue::{BoundedQueue, QueueSink, QueueStats};

@@ -241,11 +241,17 @@ impl SubgraphSink for QueueSink<'_> {
     }
 
     fn lookahead_wait(&self) {
+        let _span = crate::obs::trace::span("queue.wait");
         self.queue.wait_depth_at_most(self.high_water);
     }
 
-    fn lookahead_admitted(&self, _seq: u64, depth: usize) {
+    fn lookahead_admitted(&self, seq: u64, depth: usize) {
         self.admits_by_depth[depth.min(MAX_TRACKED_DEPTH - 1)].fetch_add(1, Ordering::Relaxed);
+        crate::obs::trace::instant_on(
+            crate::obs::trace::Track::Queue,
+            "queue.admit",
+            &[("seq", seq as f64), ("depth", depth as f64)],
+        );
     }
 }
 

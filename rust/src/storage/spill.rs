@@ -57,6 +57,26 @@ pub struct SpillReport {
     pub overlapped_reads: u32,
 }
 
+impl SpillReport {
+    /// JSON view for the unified report writer
+    /// ([`crate::obs::report::write_json`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("subgraphs", self.subgraphs)
+            .set("shards", self.shards as u64)
+            .set("logical_bytes", self.logical_bytes)
+            .set("disk_bytes", self.disk_bytes)
+            .set("write_time_s", self.write_time.as_secs_f64())
+            .set("flush_time_s", self.flush_time.as_secs_f64())
+            .set("flush_wait_s", self.flush_wait.as_secs_f64())
+            .set("overlapped_flushes", self.overlapped_flushes as u64)
+            .set("read_time_s", self.read_time.as_secs_f64())
+            .set("read_wait_s", self.read_wait.as_secs_f64())
+            .set("overlapped_reads", self.overlapped_reads as u64);
+        j
+    }
+}
+
 /// One shard handed to the background flusher.
 struct ShardJob {
     idx: u32,
@@ -158,10 +178,15 @@ impl SpillStore {
         let handle = std::thread::Builder::new()
             .name("gg-spill-flush".into())
             .spawn(move || -> Result<FlushOutcome> {
+                crate::obs::trace::set_track(crate::obs::trace::Track::SpillFlush);
                 let mut out = FlushOutcome::default();
                 while let Ok(mut job) = rx.recv() {
                     let t0 = Instant::now();
+                    let span = crate::obs::trace::span("spill.flush")
+                        .arg("shard", job.idx as f64)
+                        .arg("bytes", job.buf.len() as f64);
                     out.disk_bytes += Self::write_shard(&dir, compress, &job)?;
+                    drop(span);
                     out.flush_time += t0.elapsed();
                     out.flushed += 1;
                     job.buf.clear();
@@ -204,12 +229,19 @@ impl SpillStore {
                 // Previous shard still writing: the double buffer is the
                 // bound, so wait here and account the bubble.
                 let t0 = Instant::now();
+                let span = crate::obs::trace::span("spill.handoff_wait");
                 if tx.send(job).is_err() {
                     flusher_died = true;
                 } else {
                     flusher.sent += 1;
                 }
-                self.report.flush_wait += t0.elapsed();
+                drop(span);
+                let waited = t0.elapsed();
+                self.report.flush_wait += waited;
+                crate::obs::trace::instant(
+                    "stall.flush_wait",
+                    &[("wait_us", waited.as_micros() as f64)],
+                );
             }
             Err(TrySendError::Disconnected(_)) => flusher_died = true,
         }
@@ -295,8 +327,11 @@ impl SpillStore {
             // buffered ahead of the one being consumed.
             let (tx, rx) = sync_channel::<Result<(u32, Vec<u8>)>>(1);
             s.spawn(move || {
+                crate::obs::trace::set_track(crate::obs::trace::Track::SpillPrefetch);
                 for idx in 0..shards {
+                    let span = crate::obs::trace::span("spill.read").arg("shard", idx as f64);
                     let shard = Self::read_shard(&dir, compress, idx);
+                    drop(span);
                     let failed = shard.is_err();
                     // Consumer gone (early error downstream) or this
                     // shard failed: either way the prefetcher is done.

@@ -115,35 +115,45 @@ impl<'a> BatchBuilder<'a> {
         // job slot (see `WorkPool::gather_global`).
         let threads = self.threads.min(b);
         let per_sg: Vec<u64> =
-            crate::util::workpool::WorkPool::gather_global().map_collect(b, threads, 1, |bi| {
-                let sg = &subgraphs[bi];
-                // SAFETY: every slice is the exclusive `bi`-indexed range
-                // of its tensor, and `out` outlives this blocking call.
-                let x_h1 =
-                    unsafe { std::slice::from_raw_parts_mut(t.x_h1.0.add(bi * f1 * d), f1 * d) };
-                let x_h2 = unsafe {
-                    std::slice::from_raw_parts_mut(t.x_h2.0.add(bi * f1 * f2 * d), f1 * f2 * d)
-                };
-                let m_h1 = unsafe { std::slice::from_raw_parts_mut(t.m_h1.0.add(bi * f1), f1) };
-                let m_h2 = unsafe {
-                    std::slice::from_raw_parts_mut(t.m_h2.0.add(bi * f1 * f2), f1 * f2)
-                };
-                unsafe { *t.y.0.add(bi) = features.label(sg.seed) as i32 };
-                let t1 = sg.hop1.len().min(f1);
-                features.gather_into(&sg.hop1[..t1], &mut x_h1[..t1 * d]);
-                for i in 0..t1 {
-                    m_h1[i] = 1.0;
-                    if let Some(group) = sg.hop2.get(i) {
-                        let t2 = group.len().min(f2);
-                        let base = i * f2;
-                        features.gather_into(&group[..t2], &mut x_h2[base * d..(base + t2) * d]);
-                        for j in 0..t2 {
-                            m_h2[base + j] = 1.0;
+            crate::util::workpool::WorkPool::gather_global().map_collect_labeled(
+                b,
+                threads,
+                1,
+                "batch.assemble",
+                |bi| {
+                    let sg = &subgraphs[bi];
+                    // SAFETY: every slice is the exclusive `bi`-indexed
+                    // range of its tensor, and `out` outlives this
+                    // blocking call.
+                    let x_h1 = unsafe {
+                        std::slice::from_raw_parts_mut(t.x_h1.0.add(bi * f1 * d), f1 * d)
+                    };
+                    let x_h2 = unsafe {
+                        std::slice::from_raw_parts_mut(t.x_h2.0.add(bi * f1 * f2 * d), f1 * f2 * d)
+                    };
+                    let m_h1 =
+                        unsafe { std::slice::from_raw_parts_mut(t.m_h1.0.add(bi * f1), f1) };
+                    let m_h2 = unsafe {
+                        std::slice::from_raw_parts_mut(t.m_h2.0.add(bi * f1 * f2), f1 * f2)
+                    };
+                    unsafe { *t.y.0.add(bi) = features.label(sg.seed) as i32 };
+                    let t1 = sg.hop1.len().min(f1);
+                    features.gather_into(&sg.hop1[..t1], &mut x_h1[..t1 * d]);
+                    for i in 0..t1 {
+                        m_h1[i] = 1.0;
+                        if let Some(group) = sg.hop2.get(i) {
+                            let t2 = group.len().min(f2);
+                            let base = i * f2;
+                            features
+                                .gather_into(&group[..t2], &mut x_h2[base * d..(base + t2) * d]);
+                            for j in 0..t2 {
+                                m_h2[base + j] = 1.0;
+                            }
                         }
                     }
-                }
-                sg.num_nodes().min((1 + f1 + f1 * f2) as u64)
-            });
+                    sg.num_nodes().min((1 + f1 + f1 * f2) as u64)
+                },
+            );
         out.nodes = per_sg.iter().sum();
         Ok(())
     }

@@ -21,6 +21,17 @@ pub struct EvalReport {
     pub accuracy: f64,
 }
 
+impl EvalReport {
+    /// JSON view for the unified report writer ([`crate::obs::report`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("examples", self.examples)
+            .set("correct", self.correct)
+            .set("accuracy", self.accuracy);
+        o
+    }
+}
+
 /// Generate subgraphs for `seeds` with `engine`, run the forward pass and
 /// score `argmax(logits) == label`. Seeds that don't fill a whole batch
 /// are dropped (fixed-shape artifact), mirroring training semantics.

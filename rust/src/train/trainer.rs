@@ -86,6 +86,52 @@ pub struct TrainReport {
     pub params: Vec<Vec<f32>>,
 }
 
+impl TrainReport {
+    /// JSON view for the unified report writer ([`crate::obs::report`]).
+    /// Trained parameters are omitted (bulky, reproducible from the seed).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("iterations", self.iterations)
+            .set("subgraphs_trained", self.subgraphs_trained)
+            .set("nodes_trained", self.nodes_trained)
+            .set("subgraphs_dropped", self.subgraphs_dropped)
+            .set("final_loss", self.final_loss as f64)
+            .set("accuracy", self.accuracy as f64)
+            .set("wall_s", self.wall.as_secs_f64());
+        let curve: Vec<Json> = self
+            .loss_curve
+            .iter()
+            .map(|&(i, l)| Json::Arr(vec![Json::from(i), Json::from(l as f64)]))
+            .collect();
+        o.set("loss_curve", Json::Arr(curve));
+        let mut fabric = Json::obj();
+        fabric
+            .set("workers", self.fabric.workers)
+            .set("total_bytes", self.fabric.total_bytes)
+            .set("total_messages", self.fabric.total_messages);
+        o.set("fabric", fabric);
+        let mut fetch = Json::obj();
+        fetch
+            .set("requested", self.feature_fetch.requested)
+            .set("unique", self.feature_fetch.unique)
+            .set("cache_hits", self.feature_fetch.cache_hits)
+            .set("local_rows", self.feature_fetch.local_rows)
+            .set("remote_rows", self.feature_fetch.remote_rows)
+            .set("remote_bytes", self.feature_fetch.remote_bytes)
+            .set("remote_msgs", self.feature_fetch.remote_msgs)
+            .set("gathers", self.feature_fetch.gathers);
+        o.set("feature_fetch", fetch);
+        let mut reuse = Json::obj();
+        reuse
+            .set("allocated", self.batch_reuse.allocated)
+            .set("reused", self.batch_reuse.reused)
+            .set("steady_allocs", self.batch_reuse.steady_allocs);
+        o.set("batch_reuse", reuse);
+        o
+    }
+}
+
 /// Train from an in-memory subgraph queue until it closes.
 ///
 /// The dispatcher groups `replicas × batch` subgraphs per iteration and
@@ -151,11 +197,14 @@ pub fn train(
                 BatchFeed::Inline { rx, spec, worker: worker as u32 }
             };
             joins.push(scope.spawn(move || -> Result<WorkerOut> {
+                crate::obs::trace::set_track(crate::obs::trace::Track::Trainer(worker as u16));
                 let store = ParamStore::init(runtime.meta(), cfg.init_seed);
                 let mut params = store.params.clone();
                 let mut out = WorkerOut::default();
                 let mut iter = 0u64;
                 while let Some(next) = feed.next(features) {
+                    let _step_span =
+                        crate::obs::trace::span("train.step").arg("iter", iter as f64);
                     let batch = next?;
                     out.nodes += batch.nodes;
                     out.subgraphs += spec.batch as u64;

@@ -103,15 +103,26 @@ pub struct RawParts<T>(pub *mut T);
 // obligations of the fan-out that shares this pointer.
 unsafe impl<T: Send> Sync for RawParts<T> {}
 
+/// Which timeline family a pool's workers record onto: the scan pool
+/// ([`WorkPool::global`]) traces as `pool-worker-N`, the gather pool
+/// ([`WorkPool::gather_global`]) as `gather-worker-N`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PoolKind {
+    Gen,
+    Gather,
+}
+
 /// One published job: a lifetime-erased data-parallel closure over
 /// `0..n`, claimed in `chunk`-sized strides by workers `0..helpers` plus
-/// the submitting thread.
+/// the submitting thread. `label` names the job's spans on the trace
+/// timeline.
 #[derive(Clone, Copy)]
 struct Job {
     f: *const (dyn Fn(usize) + Sync),
     n: usize,
     chunk: usize,
     helpers: usize,
+    label: &'static str,
 }
 
 // The raw closure pointer crosses threads inside the pool mutex; the
@@ -143,6 +154,8 @@ struct Shared {
     poisoned: AtomicBool,
     /// Total worker threads ever spawned (monotonic; perf counter).
     spawned_total: AtomicU64,
+    /// Trace-track family for this pool's workers.
+    kind: PoolKind,
 }
 
 /// A persistent pool of worker threads. Most callers want the process
@@ -156,6 +169,12 @@ pub struct WorkPool {
 impl WorkPool {
     /// Create an empty pool; workers are spawned lazily on demand.
     pub fn new() -> Self {
+        Self::with_kind(PoolKind::Gen)
+    }
+
+    /// Create an empty pool whose workers trace onto the given track
+    /// family.
+    pub fn with_kind(kind: PoolKind) -> Self {
         Self {
             shared: Arc::new(Shared {
                 state: Mutex::new(PoolState {
@@ -170,6 +189,7 @@ impl WorkPool {
                 next: AtomicUsize::new(0),
                 poisoned: AtomicBool::new(false),
                 spawned_total: AtomicU64::new(0),
+                kind,
             }),
             handles: Mutex::new(Vec::new()),
         }
@@ -191,7 +211,7 @@ impl WorkPool {
     /// ([`crate::pipeline::split_pool_budget`]) apportion the cores.
     pub fn gather_global() -> &'static WorkPool {
         static POOL: OnceLock<WorkPool> = OnceLock::new();
-        POOL.get_or_init(WorkPool::new)
+        POOL.get_or_init(|| WorkPool::with_kind(PoolKind::Gather))
     }
 
     /// Total worker threads ever spawned by this pool (monotonic). Engine
@@ -226,6 +246,20 @@ impl WorkPool {
     /// helpers). `threads <= 1` (or a single chunk of work) runs inline
     /// without touching the pool.
     pub fn run(&self, n: usize, threads: usize, chunk: usize, f: impl Fn(usize) + Sync) {
+        self.run_labeled(n, threads, chunk, "parallel", f);
+    }
+
+    /// [`run`](Self::run) with a trace label: the submitter's and every
+    /// participating worker's span on the timeline carries `label`.
+    pub fn run_labeled(
+        &self,
+        n: usize,
+        threads: usize,
+        chunk: usize,
+        label: &'static str,
+        f: impl Fn(usize) + Sync,
+    ) {
+        let _span = crate::obs::trace::span(label);
         let chunk = chunk.max(1);
         if threads <= 1 || n <= chunk || IN_POOL_WORKER.with(|w| w.get()) {
             for i in 0..n {
@@ -252,7 +286,7 @@ impl WorkPool {
             sh.next.store(0, Ordering::Relaxed);
             st.epoch += 1;
             st.remaining = helpers;
-            st.job = Some(Job { f: f_erased, n, chunk, helpers });
+            st.job = Some(Job { f: f_erased, n, chunk, helpers, label });
             sh.start.notify_all();
         }
         let saw_poison = Cell::new(false);
@@ -299,6 +333,19 @@ impl WorkPool {
         chunk_rows: usize,
         f: impl Fn(usize, &mut [T]) + Sync,
     ) {
+        self.run_row_chunks_labeled(out, stride, threads, chunk_rows, "rows", f);
+    }
+
+    /// [`run_row_chunks`](Self::run_row_chunks) with a trace label.
+    pub fn run_row_chunks_labeled<T: Send>(
+        &self,
+        out: &mut [T],
+        stride: usize,
+        threads: usize,
+        chunk_rows: usize,
+        label: &'static str,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
         let stride = stride.max(1);
         // Load-bearing for coverage: a ragged buffer would leave its tail
         // silently unwritten, so reject it in release builds too.
@@ -312,7 +359,7 @@ impl WorkPool {
         }
         let base = RawParts(out.as_mut_ptr());
         let base = &base;
-        self.run(chunks, threads, 1, |c| {
+        self.run_labeled(chunks, threads, 1, label, |c| {
             let r0 = c * chunk_rows;
             let r1 = (r0 + chunk_rows).min(rows);
             // SAFETY: chunk row ranges are disjoint (each chunk index is
@@ -334,6 +381,18 @@ impl WorkPool {
         chunk: usize,
         f: impl Fn(usize) -> R + Sync,
     ) -> Vec<R> {
+        self.map_collect_labeled(n, threads, chunk, "parallel", f)
+    }
+
+    /// [`map_collect`](Self::map_collect) with a trace label.
+    pub fn map_collect_labeled<R: Send>(
+        &self,
+        n: usize,
+        threads: usize,
+        chunk: usize,
+        label: &'static str,
+        f: impl Fn(usize) -> R + Sync,
+    ) -> Vec<R> {
         if threads <= 1 || n <= 1 {
             return (0..n).map(f).collect();
         }
@@ -343,7 +402,7 @@ impl WorkPool {
         unsafe { out.set_len(n) };
         let slots = RawParts(out.as_mut_ptr());
         let slots_ref = &slots;
-        self.run(n, threads, chunk, |i| {
+        self.run_labeled(n, threads, chunk, label, |i| {
             let v = f(i);
             // SAFETY: index claimed exactly once by the work loop.
             unsafe { (*slots_ref.0.add(i)).write(v) };
@@ -408,6 +467,10 @@ impl Drop for JobGuard<'_> {
 
 fn worker_loop(sh: Arc<Shared>, id: usize) {
     IN_POOL_WORKER.with(|w| w.set(true));
+    crate::obs::trace::set_track(match sh.kind {
+        PoolKind::Gen => crate::obs::trace::Track::PoolWorker(id as u16),
+        PoolKind::Gather => crate::obs::trace::Track::GatherWorker(id as u16),
+    });
     let mut seen = 0u64;
     let mut st = sh.state.lock().unwrap();
     loop {
@@ -427,13 +490,16 @@ fn worker_loop(sh: Arc<Shared>, id: usize) {
         // SAFETY: the submitter keeps the closure alive until `remaining`
         // reaches zero, which requires this worker's decrement below.
         let f = unsafe { &*job.f };
-        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
-            let start = sh.next.fetch_add(job.chunk, Ordering::Relaxed);
-            if start >= job.n {
-                break;
-            }
-            for i in start..(start + job.chunk).min(job.n) {
-                f(i);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _span = crate::obs::trace::span(job.label);
+            loop {
+                let start = sh.next.fetch_add(job.chunk, Ordering::Relaxed);
+                if start >= job.n {
+                    break;
+                }
+                for i in start..(start + job.chunk).min(job.n) {
+                    f(i);
+                }
             }
         }));
         if res.is_err() {

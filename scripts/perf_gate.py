@@ -29,12 +29,32 @@ E7_METRIC = "total_per_batch_s"
 
 
 def load(path):
+    """Baseline loader: a missing or unreadable *previous* trajectory is
+    normal (first run, expired artifact) and skips that gate cleanly."""
     try:
         with open(path) as f:
             return json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"perf gate: no usable trajectory at {path} ({e}); skipping")
+    except OSError as e:
+        print(f"perf gate: no previous trajectory at {path} ({e.strerror}); skipping")
         return None
+    except json.JSONDecodeError as e:
+        print(f"perf gate: previous trajectory at {path} is not valid JSON ({e}); skipping")
+        return None
+
+
+def load_current(path, label):
+    """Current-run loader: every bench is expected to emit its trajectory
+    on every run (fallback paths included), so a missing or malformed
+    *current* file means the bench itself broke — fail the gate with a
+    readable message instead of a traceback, and never silently skip."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        print(f"perf gate: ERROR: current {label} trajectory missing at {path} ({e.strerror})")
+    except json.JSONDecodeError as e:
+        print(f"perf gate: ERROR: current {label} trajectory at {path} is not valid JSON ({e})")
+    return None
 
 
 def e6_iters_per_sec(data):
@@ -69,9 +89,10 @@ def main() -> int:
     failures = []
 
     prev = load(sys.argv[1])
+    cur = load_current(sys.argv[2], "e1")
+    if cur is None:
+        return 1
     if prev is not None:
-        with open(sys.argv[2]) as f:
-            cur = json.load(f)
         for engine in ENGINES:
             p = prev.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
             c = cur.get("engines", {}).get(engine, {}).get("nodes_per_sec_wall")
@@ -79,12 +100,9 @@ def main() -> int:
 
     if len(sys.argv) >= 5:
         prev6 = load(sys.argv[3])
-        # The *current* trajectory must exist and parse — the e6 bench is
-        # expected to emit it on every run (gen-only fallback included), so
-        # a missing/broken file means the bench broke and must fail the
-        # gate loudly instead of silently disabling it.
-        with open(sys.argv[4]) as f:
-            cur6 = json.load(f)
+        cur6 = load_current(sys.argv[4], "e6")
+        if cur6 is None:
+            return 1
         if prev6 is not None:
             pmode, p = e6_iters_per_sec(prev6)
             cmode, c = e6_iters_per_sec(cur6)
@@ -99,10 +117,9 @@ def main() -> int:
 
     if len(sys.argv) == 7:
         prev7 = load(sys.argv[5])
-        # Same contract as e6: the e7 bench emits its trajectory on every
-        # run, so a broken current file fails loudly.
-        with open(sys.argv[6]) as f:
-            cur7 = json.load(f)
+        cur7 = load_current(sys.argv[6], "e7")
+        if cur7 is None:
+            return 1
         if prev7 is not None:
             p = prev7.get("variants", {}).get(E7_VARIANT, {}).get(E7_METRIC)
             c = cur7.get("variants", {}).get(E7_VARIANT, {}).get(E7_METRIC)

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Validate and summarize a Chrome trace-event timeline (--trace-out).
+
+Usage: trace_summary.py <trace.json> [--min-tracks N]
+
+Checks the document is well-formed trace-event JSON (Object Format:
+{"traceEvents": [...]}) that Perfetto / chrome://tracing will load:
+every event carries pid/tid, a known phase (X duration span, i instant,
+M metadata), non-negative timestamps and durations. Then prints one row
+per track (thread_name metadata → label) with its span/instant counts
+and busy fraction (union of span intervals over the trace's time
+extent, so overlapping or nested spans are not double-counted).
+
+--min-tracks N fails (exit 1) unless at least N tracks recorded at
+least one span or instant — the CI smoke bar that proves the tracer is
+actually threaded through every concurrency layer, not just compiled
+in. Malformed input also exits 1; usage errors exit 2.
+"""
+
+import json
+import sys
+
+KNOWN_PHASES = {"X", "i", "M"}
+
+
+def fail(msg):
+    print(f"trace summary: ERROR: {msg}")
+    return 1
+
+
+def merged_busy_us(intervals):
+    """Total length of the union of [start, end) intervals."""
+    busy = 0
+    end = None
+    for s, e in sorted(intervals):
+        if end is None or s > end:
+            busy += e - s
+            end = e
+        elif e > end:
+            busy += e - end
+            end = e
+    return busy
+
+
+def validate_event(i, ev):
+    """One malformed-event description, or None if the event is fine."""
+    if not isinstance(ev, dict):
+        return f"event {i} is not an object"
+    ph = ev.get("ph")
+    if ph not in KNOWN_PHASES:
+        return f"event {i} has unknown phase {ph!r}"
+    for key in ("pid", "tid"):
+        if not isinstance(ev.get(key), (int, float)):
+            return f"event {i} ({ev.get('name')!r}) lacks numeric {key!r}"
+    if ph == "M":
+        return None
+    ts = ev.get("ts")
+    if not isinstance(ts, (int, float)) or ts < 0:
+        return f"event {i} ({ev.get('name')!r}) has bad ts {ts!r}"
+    if ph == "X":
+        dur = ev.get("dur")
+        if not isinstance(dur, (int, float)) or dur < 0:
+            return f"event {i} ({ev.get('name')!r}) has bad dur {dur!r}"
+    return None
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    min_tracks = 0
+    if "--min-tracks" in args:
+        at = args.index("--min-tracks")
+        try:
+            min_tracks = int(args[at + 1])
+        except (IndexError, ValueError):
+            print(__doc__)
+            return 2
+        del args[at : at + 2]
+    if len(args) != 1:
+        print(__doc__)
+        return 2
+    path = args[0]
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        return fail(f"cannot read {path} ({e.strerror})")
+    except json.JSONDecodeError as e:
+        return fail(f"{path} is not valid JSON ({e})")
+
+    events = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(events, list):
+        return fail(f"{path} has no traceEvents array")
+
+    names = {}  # tid -> thread_name label
+    spans = {}  # tid -> [(start, end)]
+    instants = {}  # tid -> count
+    t_min, t_max = None, None
+    for i, ev in enumerate(events):
+        problem = validate_event(i, ev)
+        if problem is not None:
+            return fail(problem)
+        tid = ev["tid"]
+        ph = ev["ph"]
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                names[tid] = ev.get("args", {}).get("name", "?")
+            continue
+        ts = ev["ts"]
+        end = ts + ev["dur"] if ph == "X" else ts
+        t_min = ts if t_min is None else min(t_min, ts)
+        t_max = end if t_max is None else max(t_max, end)
+        if ph == "X":
+            spans.setdefault(tid, []).append((ts, end))
+        else:
+            instants[tid] = instants.get(tid, 0) + 1
+
+    tids = sorted(set(spans) | set(instants))
+    extent_us = (t_max - t_min) if tids else 0
+    print(f"{path}: {len(events)} events, {len(tids)} active tracks, "
+          f"extent {extent_us / 1e6:.3f}s, "
+          f"dropped {doc.get('otherData', {}).get('dropped_events', 0):g}")
+    print(f"{'track':<24} {'spans':>8} {'instants':>8} {'busy':>9} {'bubble':>9}")
+    for tid in tids:
+        track_spans = spans.get(tid, [])
+        busy = merged_busy_us(track_spans)
+        frac = busy / extent_us if extent_us else 0.0
+        bubble = (1.0 - frac) if track_spans else 0.0
+        print(f"{names.get(tid, f'tid-{tid:g}'):<24} {len(track_spans):>8} "
+              f"{instants.get(tid, 0):>8} {frac:>8.1%} {bubble:>8.1%}")
+
+    if len(tids) < min_tracks:
+        return fail(f"only {len(tids)} active tracks, need >= {min_tracks} "
+                    f"(is the tracer threaded through every layer?)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
