@@ -18,10 +18,24 @@ use graphgen_plus::cluster::CostModel;
 use graphgen_plus::engines::common::TaskSizer;
 use graphgen_plus::engines::graphgen_plus::GraphGenPlus;
 use graphgen_plus::engines::{EngineConfig, NullSink, SubgraphEngine};
+use graphgen_plus::graph::csr::Csr;
 use graphgen_plus::graph::generator;
+use graphgen_plus::sampler::inverted::InvertedIndex;
 use graphgen_plus::sampler::FanoutSpec;
 use graphgen_plus::util::bytes::{fmt_rate, fmt_secs};
 use graphgen_plus::util::json::Json;
+use graphgen_plus::util::workpool::default_threads;
+
+/// Best-of-`reps` wall time in milliseconds.
+fn best_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
 
 fn main() {
     let gen = generator::from_spec("rmat:n=65536,e=1048576", 2).unwrap();
@@ -96,12 +110,90 @@ fn main() {
             &rows
         )
     );
+    // ---- build-time section: the chained-scan spine, serial vs pool ----
+    // CSR offset construction and inverted-index rebuild both ride on the
+    // decoupled-lookback prefix scan; this records serial (threads=1)
+    // against the default thread budget per graph scale so the perf gate
+    // can hold the parallel build time (lower is better).
+    let fast = std::env::var("GG_BENCH_FAST").is_ok();
+    let build_scales: &[(&str, &str)] = if fast {
+        &[("small", "rmat:n=16384,e=262144"), ("large", "rmat:n=65536,e=1048576")]
+    } else {
+        &[
+            ("small", "rmat:n=16384,e=262144"),
+            ("medium", "rmat:n=262144,e=2097152"),
+            ("large", "rmat:n=1048576,e=8388608"),
+        ]
+    };
+    let threads = default_threads();
+    let reps = if fast { 3 } else { 5 };
+    let mut build_json = Json::obj();
+    let mut build_rows = Vec::new();
+    for (scale, spec) in build_scales {
+        let bg = generator::from_spec(spec, 2).unwrap();
+        let csr_serial = best_ms(reps, || {
+            std::hint::black_box(Csr::from_edge_list_with_threads(&bg.edges, 1).num_edges());
+        });
+        let csr_parallel = best_ms(reps, || {
+            std::hint::black_box(
+                Csr::from_edge_list_with_threads(&bg.edges, threads).num_edges(),
+            );
+        });
+        // Synthetic frontier proportional to the scale: a duplicate-heavy
+        // node stream like a real hop-2 frontier.
+        let n = bg.edges.num_nodes as u64;
+        let frontier: Vec<(u32, u32, u32)> = (0..bg.edges.len().min(1_000_000) as u64)
+            .map(|i| (((i.wrapping_mul(2654435761)) % n) as u32, (i % 4096) as u32, 0))
+            .collect();
+        let mut ix = InvertedIndex::new();
+        let idx_serial = best_ms(reps, || {
+            ix.rebuild_par(&frontier, 1);
+            std::hint::black_box(ix.num_entries());
+        });
+        let idx_parallel = best_ms(reps, || {
+            ix.rebuild_par(&frontier, threads);
+            std::hint::black_box(ix.num_entries());
+        });
+        build_rows.push(vec![
+            scale.to_string(),
+            format!("{csr_serial:.1} ms"),
+            format!("{csr_parallel:.1} ms"),
+            format!("{:.2}x", csr_serial / csr_parallel),
+            format!("{idx_serial:.1} ms"),
+            format!("{idx_parallel:.1} ms"),
+            format!("{:.2}x", idx_serial / idx_parallel),
+        ]);
+        let mut o = Json::obj();
+        o.set("csr_build_ms_serial", csr_serial)
+            .set("csr_build_ms_parallel", csr_parallel)
+            .set("index_rebuild_ms_serial", idx_serial)
+            .set("index_rebuild_ms_parallel", idx_parallel)
+            .set("threads", threads);
+        build_json.set(scale, o);
+    }
+    println!(
+        "{}",
+        render_markdown(
+            &format!("build-time scaling, serial vs {threads} threads (best of {reps})"),
+            &[
+                "scale".into(),
+                "csr serial".into(),
+                "csr parallel".into(),
+                "csr speedup".into(),
+                "index serial".into(),
+                "index parallel".into(),
+                "index speedup".into(),
+            ],
+            &build_rows
+        )
+    );
     // Machine-readable trajectory: the task-target knob and what the
     // sizer actually settled on at every scale.
     let mut out = Json::obj();
     out.set("bench", "e2_scaling")
         .set("task_target_us", target_us)
-        .set("scales", scales_json);
+        .set("scales", scales_json)
+        .set("build", build_json);
     let path = std::env::var("GG_BENCH_E2_JSON").unwrap_or_else(|_| "BENCH_e2.json".into());
     match std::fs::write(&path, out.to_pretty()) {
         Ok(()) => println!("  wrote {path}"),

@@ -12,8 +12,10 @@
 //! effectively does) and [`MappingStrategy::HashMod`].
 
 use crate::graph::NodeId;
+use crate::util::parallel_scan;
 use crate::util::rng::{mix2, Xoshiro256};
 use crate::util::stats::Samples;
+use crate::util::workpool::{default_threads, WorkPool};
 
 /// Seed→worker mapping strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,19 +93,71 @@ impl BalanceTable {
 
     /// Seeds assigned to `worker`, in assignment order.
     pub fn seeds_for(&self, worker: usize) -> Vec<NodeId> {
-        self.seeds
-            .iter()
-            .zip(&self.worker_of)
-            .filter(|&(_, &w)| w as usize == worker)
-            .map(|(&s, _)| s)
-            .collect()
+        let (starts, grouped) = self.by_worker(1);
+        grouped[starts[worker] as usize..starts[worker + 1] as usize].to_vec()
+    }
+
+    /// All seeds grouped by owning worker, preserving assignment order
+    /// within each group: `(starts, grouped)` with worker `w`'s seeds at
+    /// `grouped[starts[w]..starts[w+1]]`. A counting sort whose offset
+    /// spine is a (parallel) exclusive prefix scan of the per-worker
+    /// histogram — byte-identical at every thread count.
+    pub fn by_worker(&self, threads: usize) -> (Vec<u32>, Vec<NodeId>) {
+        let mut starts: Vec<u32> =
+            self.counts_par(threads).iter().map(|&c| c as u32).collect();
+        starts.push(0);
+        parallel_scan::exclusive_scan(WorkPool::global(), threads, &mut starts);
+        // push(0) + exclusive scan leaves starts[w+1] - starts[w] =
+        // counts[w] with the grand total in the final slot.
+        let mut grouped = vec![0 as NodeId; self.seeds.len()];
+        let mut cursor: Vec<u32> = starts[..self.num_workers].to_vec();
+        // The scatter is sequential: stability (assignment order within a
+        // worker) carries a cursor dependency.
+        for (&s, &w) in self.seeds.iter().zip(&self.worker_of) {
+            let c = &mut cursor[w as usize];
+            grouped[*c as usize] = s;
+            *c += 1;
+        }
+        (starts, grouped)
     }
 
     /// Per-worker seed counts.
     pub fn counts(&self) -> Vec<usize> {
+        self.counts_par(default_threads())
+    }
+
+    /// [`counts`](Self::counts) with a thread budget: per-block partial
+    /// histograms folded in block order (integer sums — identical at any
+    /// thread count).
+    pub fn counts_par(&self, threads: usize) -> Vec<usize> {
+        const BLOCK: usize = 1 << 16;
+        let n = self.worker_of.len();
+        let nblocks = n.div_ceil(BLOCK);
+        if threads <= 1 || nblocks <= 1 {
+            let mut c = vec![0usize; self.num_workers];
+            for &w in &self.worker_of {
+                c[w as usize] += 1;
+            }
+            return c;
+        }
+        let partials = WorkPool::global().map_collect_labeled(
+            nblocks,
+            threads,
+            1,
+            "balance.hist",
+            |b| {
+                let mut c = vec![0usize; self.num_workers];
+                for &w in &self.worker_of[b * BLOCK..((b + 1) * BLOCK).min(n)] {
+                    c[w as usize] += 1;
+                }
+                c
+            },
+        );
         let mut c = vec![0usize; self.num_workers];
-        for &w in &self.worker_of {
-            c[w as usize] += 1;
+        for p in partials {
+            for (acc, v) in c.iter_mut().zip(p) {
+                *acc += v;
+            }
         }
         c
     }

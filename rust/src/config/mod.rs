@@ -73,6 +73,10 @@ pub struct RunConfig {
     /// Seconds between metrics-registry snapshots appended to
     /// `obs_metrics.jsonl` (0 = snapshotting off).
     pub obs_snapshot_secs: u64,
+    /// Pin pool workers (and wave speculators) to cores: worker slot i →
+    /// core `i % cores`. Opt-in; no-op on unsupported platforms. The
+    /// `GG_PIN_CORES` env var is an alternative switch.
+    pub pin_cores: bool,
 }
 
 impl Default for RunConfig {
@@ -106,6 +110,7 @@ impl Default for RunConfig {
             gather_threads: 0,
             trace_out: String::new(),
             obs_snapshot_secs: 0,
+            pin_cores: false,
         }
     }
 }
@@ -167,6 +172,7 @@ impl RunConfig {
             "gather_threads" => self.gather_threads = p(value, key)?,
             "trace_out" => self.trace_out = value.into(),
             "obs_snapshot_secs" => self.obs_snapshot_secs = p(value, key)?,
+            "pin_cores" => self.pin_cores = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -242,7 +248,8 @@ impl RunConfig {
             .set("lookahead_workers", self.lookahead_workers)
             .set("gather_threads", self.gather_threads)
             .set("trace_out", self.trace_out.clone())
-            .set("obs_snapshot_secs", self.obs_snapshot_secs);
+            .set("obs_snapshot_secs", self.obs_snapshot_secs)
+            .set("pin_cores", self.pin_cores);
         o
     }
 }
@@ -334,6 +341,16 @@ mod tests {
         assert!(c.apply_override("obs_snapshot_secs", "soon").is_err());
         assert!(c.to_json().to_pretty().contains("trace_out"));
         assert!(c.to_json().to_pretty().contains("obs_snapshot_secs"));
+    }
+
+    #[test]
+    fn pin_cores_key_roundtrips() {
+        let mut c = RunConfig::default();
+        assert!(!c.pin_cores);
+        c.apply_override("pin_cores", "true").unwrap();
+        assert!(c.pin_cores);
+        assert!(c.apply_override("pin_cores", "sometimes").is_err());
+        assert!(c.to_json().to_pretty().contains("pin_cores"));
     }
 
     #[test]

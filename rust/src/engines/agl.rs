@@ -92,11 +92,11 @@ fn node_centric_hop(
     scratch: &mut ScratchArena,
 ) {
     let k = cfg.fanout.fanouts[(hop - 1) as usize] as usize;
-    slots.fill_frontier(hop, &mut scratch.frontier, &mut scratch.offsets);
+    slots.fill_frontier_par(hop, &mut scratch.frontier, &mut scratch.offsets, cfg.threads);
     if scratch.frontier.is_empty() {
         return;
     }
-    scratch.index.rebuild(&scratch.frontier);
+    scratch.index.rebuild_par(&scratch.frontier, cfg.threads);
     scratch.nodes.clear();
     scratch.nodes.extend_from_slice(scratch.index.nodes());
     scratch.nodes.sort_unstable(); // deterministic task order

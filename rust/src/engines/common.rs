@@ -78,6 +78,21 @@ impl<'a> WaveSlots<'a> {
         out: &mut Vec<(NodeId, u32, u32)>,
         offsets: &mut Vec<u32>,
     ) {
+        self.fill_frontier_par(hop, out, offsets, 1);
+    }
+
+    /// [`fill_frontier`](Self::fill_frontier) with a thread budget: the
+    /// hop-2 slot offsets come from a parallel exclusive scan over the
+    /// hop-1 lengths and the entries are scattered to their (positional,
+    /// disjoint) ranges in parallel — byte-identical to the serial walk
+    /// at every thread count.
+    pub fn fill_frontier_par(
+        &self,
+        hop: u32,
+        out: &mut Vec<(NodeId, u32, u32)>,
+        offsets: &mut Vec<u32>,
+        threads: usize,
+    ) {
         out.clear();
         offsets.clear();
         match hop {
@@ -88,14 +103,38 @@ impl<'a> WaveSlots<'a> {
                 }
             }
             2 => {
-                let mut off = 0u32;
-                for (slot, h1) in self.hop1.iter().enumerate() {
-                    offsets.push(off);
-                    for (i, &v) in h1.iter().enumerate() {
-                        out.push((v, slot as u32, i as u32));
-                    }
-                    off += h1.len() as u32;
-                }
+                offsets.extend(self.hop1.iter().map(|h1| h1.len() as u32));
+                let total = crate::util::parallel_scan::exclusive_scan(
+                    WorkPool::global(),
+                    threads,
+                    offsets,
+                );
+                out.resize(total as usize, (0, 0, 0));
+                let base = crate::util::workpool::RawParts(out.as_mut_ptr());
+                let base = &base;
+                let offs: &[u32] = offsets;
+                WorkPool::global().run_labeled(
+                    self.hop1.len(),
+                    threads,
+                    64,
+                    "frontier.fill",
+                    |slot| {
+                        let h1 = &self.hop1[slot];
+                        // SAFETY: slot ranges [offsets[slot],
+                        // offsets[slot] + len) partition `out` (they are
+                        // the exclusive scan of the lengths) and `out`
+                        // outlives the blocking run.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                base.0.add(offs[slot] as usize),
+                                h1.len(),
+                            )
+                        };
+                        for (i, (&v, d)) in h1.iter().zip(dst.iter_mut()).enumerate() {
+                            *d = (v, slot as u32, i as u32);
+                        }
+                    },
+                );
             }
             _ => panic!("2-hop engines only"),
         }
@@ -797,11 +836,11 @@ pub fn edge_centric_hop(
     scratch: &mut ScratchArena,
 ) {
     let k = cfg.fanout.fanouts[(hop - 1) as usize] as usize;
-    slots.fill_frontier(hop, &mut scratch.frontier, &mut scratch.offsets);
+    slots.fill_frontier_par(hop, &mut scratch.frontier, &mut scratch.offsets, cfg.threads);
     if scratch.frontier.is_empty() {
         return;
     }
-    scratch.index.rebuild(&scratch.frontier);
+    scratch.index.rebuild_par(&scratch.frontier, cfg.threads);
     // Scan tasks play the role of the simulated workers' map tasks. Their
     // count is chosen by the per-hop adaptive sizer: warm-up rounds use a
     // multiple of the cluster width / thread count, later rounds re-split

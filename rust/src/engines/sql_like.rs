@@ -118,11 +118,11 @@ fn sql_hop(
     scratch: &mut ScratchArena,
 ) {
     let k = cfg.fanout.fanouts[(hop - 1) as usize] as usize;
-    slots.fill_frontier(hop, &mut scratch.frontier, &mut scratch.offsets);
+    slots.fill_frontier_par(hop, &mut scratch.frontier, &mut scratch.offsets, cfg.threads);
     if scratch.frontier.is_empty() {
         return;
     }
-    scratch.index.rebuild(&scratch.frontier);
+    scratch.index.rebuild_par(&scratch.frontier, cfg.threads);
     // --- JOIN: seeds ⋈ edges, fully materialized ------------------------
     // Parallel scan is allowed (SQL engines scan in parallel too); the
     // difference vs. GraphGen+ is that every row is allocated, none are

@@ -3,6 +3,8 @@
 
 use super::edgelist::EdgeList;
 use super::NodeId;
+use crate::util::parallel_scan;
+use crate::util::workpool::{default_threads, RawParts, WorkPool};
 
 /// CSR adjacency: `neighbors(v)` is `adj[offsets[v] .. offsets[v+1]]`.
 ///
@@ -19,26 +21,57 @@ impl Csr {
     /// Duplicates and self-loops should have been removed by the caller
     /// (`EdgeList::sort_dedup`); they are tolerated but preserved.
     pub fn from_edge_list(el: &EdgeList) -> Self {
+        Self::from_edge_list_with_threads(el, default_threads())
+    }
+
+    /// [`from_edge_list`](Self::from_edge_list) with an explicit thread
+    /// budget. Output is byte-identical at every thread count: the
+    /// offset spine is an integer prefix scan (associative), edge
+    /// placement is positional, and per-node sorting is order-free.
+    pub fn from_edge_list_with_threads(el: &EdgeList, threads: usize) -> Self {
         let n = el.num_nodes as usize;
+        let pool = WorkPool::global();
         let mut counts = vec![0u64; n + 1];
         for e in &el.edges {
             counts[e.src as usize + 1] += 1;
         }
-        for i in 0..n {
-            counts[i + 1] += counts[i];
-        }
+        // counts[0] is 0 and counts[v+1] holds deg(v), so an inclusive
+        // scan over the whole vec *is* the offset array.
+        parallel_scan::inclusive_scan(pool, threads, &mut counts);
         let offsets = counts;
-        let mut cursor = offsets.clone();
-        let mut adj = vec![0 as NodeId; el.edges.len()];
-        for e in &el.edges {
-            let c = &mut cursor[e.src as usize];
-            adj[*c as usize] = e.dst;
-            *c += 1;
-        }
-        // Sort each adjacency run for deterministic sampling.
-        for v in 0..n {
-            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
-            adj[s..e].sort_unstable();
+        let ne = el.edges.len();
+        let mut adj = vec![0 as NodeId; ne];
+        if el.edges.windows(2).all(|w| w[0] <= w[1]) {
+            // Sorted input (the `sort_dedup` contract): edge `p` lands at
+            // `adj[p]` and each node's run is already dst-ascending, so
+            // the fill is a parallel copy and the sort pass vanishes.
+            pool.run_row_chunks_labeled(&mut adj, 1, threads, 1 << 15, "csr.fill", |r0, sub| {
+                for (i, v) in sub.iter_mut().enumerate() {
+                    *v = el.edges[r0 + i].dst;
+                }
+            });
+        } else {
+            // Unsorted input: cursor scatter preserves input order per
+            // node (sequential — the cursors carry a loop dependency),
+            // then the per-node sorts run in parallel over disjoint runs.
+            let mut cursor = offsets.clone();
+            for e in &el.edges {
+                let c = &mut cursor[e.src as usize];
+                adj[*c as usize] = e.dst;
+                *c += 1;
+            }
+            let base = RawParts(adj.as_mut_ptr());
+            let base = &base;
+            let offs = &offsets;
+            pool.run_labeled(n, threads, 256, "csr.sort_adj", |v| {
+                let (s, e) = (offs[v] as usize, offs[v + 1] as usize);
+                if e - s > 1 {
+                    // SAFETY: node runs [offsets[v], offsets[v+1]) are
+                    // disjoint and `adj` outlives the blocking run.
+                    unsafe { std::slice::from_raw_parts_mut(base.0.add(s), e - s) }
+                        .sort_unstable();
+                }
+            });
         }
         Self { offsets, adj }
     }

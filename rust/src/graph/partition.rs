@@ -13,8 +13,10 @@
 
 use super::csr::Csr;
 use super::NodeId;
+use crate::util::parallel_scan;
 use crate::util::rng::mix2;
 use crate::util::stats::Samples;
+use crate::util::workpool::{default_threads, WorkPool};
 
 /// Partitioning strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,6 +79,22 @@ impl Partitioned {
 
 /// Partition `g`'s source nodes over `workers` workers.
 pub fn partition_graph(g: &Csr, workers: usize, strategy: Strategy, seed: u64) -> Partitioned {
+    partition_graph_par(g, workers, strategy, seed, default_threads())
+}
+
+/// [`partition_graph`] with a thread budget. The hash strategy's owner
+/// map is a pure per-node function, so it parallelizes, and the
+/// per-worker histogram spine is a (parallel) exclusive prefix scan —
+/// output identical to the serial build at every thread count. Range and
+/// edge-balanced strategies stay sequential (edge-balanced carries a
+/// running-total dependency by construction).
+pub fn partition_graph_par(
+    g: &Csr,
+    workers: usize,
+    strategy: Strategy,
+    seed: u64,
+    threads: usize,
+) -> Partitioned {
     assert!(workers >= 1);
     let n = g.num_nodes();
     let mut parts: Vec<Partition> = (0..workers)
@@ -84,10 +102,28 @@ pub fn partition_graph(g: &Csr, workers: usize, strategy: Strategy, seed: u64) -
         .collect();
     match strategy {
         Strategy::Hash => {
-            for v in 0..n {
-                let w = (mix2(seed, v as u64) % workers as u64) as usize;
-                parts[w].nodes.push(v);
-                parts[w].num_edges += g.degree(v) as u64;
+            let pool = WorkPool::global();
+            let owner: Vec<u32> = pool.map_collect_labeled(
+                n as usize,
+                threads,
+                4096,
+                "partition.owner",
+                |v| (mix2(seed, v as u64) % workers as u64) as u32,
+            );
+            let mut starts = vec![0u32; workers + 1];
+            for &w in &owner {
+                starts[w as usize + 1] += 1;
+            }
+            parallel_scan::inclusive_scan(pool, threads, &mut starts);
+            for (w, part) in parts.iter_mut().enumerate() {
+                part.nodes.reserve_exact((starts[w + 1] - starts[w]) as usize);
+            }
+            // Stable scatter (ascending node order within each worker):
+            // sequential, the per-worker cursors carry the dependency.
+            for (v, &w) in owner.iter().enumerate() {
+                let part = &mut parts[w as usize];
+                part.nodes.push(v as NodeId);
+                part.num_edges += g.degree(v as NodeId) as u64;
             }
         }
         Strategy::Range => {

@@ -43,6 +43,7 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
         opt("lookahead-workers", "look-ahead speculator threads claiming waves out of order (>=1)", None),
         opt("trace-out", "write a Chrome-trace timeline (Perfetto) to this path", None),
         opt("obs-snapshot-secs", "metrics snapshot period in seconds (0=off)", None),
+        opt("pin-cores", "pin pool workers to cores, slot i -> core i%cores (true|false)", None),
         flag("dump-config", "print the effective config and exit"),
     ]
 }
@@ -131,6 +132,11 @@ fn run_config(p: &Parsed) -> Result<RunConfig> {
         if cfg.apply_override(&key, v).is_err() && !COMMAND_LOCAL.contains(&key.as_str()) {
             anyhow::bail!("unknown option --{k}");
         }
+    }
+    // Enable-only: leaving the flag off must not clobber a GG_PIN_CORES
+    // opt-in from the environment.
+    if cfg.pin_cores {
+        graphgen_plus::util::workpool::set_pin_cores(true);
     }
     Ok(cfg)
 }

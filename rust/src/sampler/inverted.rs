@@ -12,6 +12,8 @@
 
 use crate::graph::NodeId;
 use crate::util::fxhash::FxHashMap;
+use crate::util::parallel_scan;
+use crate::util::workpool::WorkPool;
 
 /// node → list of (subgraph slot, frontier ordinal) pairs.
 ///
@@ -22,13 +24,18 @@ use crate::util::fxhash::FxHashMap;
 /// parent.
 #[derive(Debug, Default, Clone)]
 pub struct InvertedIndex {
-    /// node → (start, len) into `flat`.
+    /// node → (index into `order`/`starts`/`lens`, fill cursor).
     map: FxHashMap<NodeId, (u32, u32)>,
     /// (slot, ordinal) entries, grouped by node.
     flat: Vec<(u32, u32)>,
     /// Distinct frontier nodes in first-appearance order — the
     /// deterministic iteration order for task construction.
     order: Vec<NodeId>,
+    /// Per-distinct-node entry count, aligned with `order`.
+    lens: Vec<u32>,
+    /// Per-distinct-node group start into `flat` (exclusive prefix scan
+    /// of `lens`), aligned with `order`.
+    starts: Vec<u32>,
 }
 
 impl InvertedIndex {
@@ -39,35 +46,41 @@ impl InvertedIndex {
     /// Rebuild from a frontier, reusing all internal buffers. Entry `i` of
     /// `frontier` is `(node, slot, position)`; its ordinal is `i`.
     pub fn rebuild(&mut self, frontier: &[(NodeId, u32, u32)]) {
+        self.rebuild_par(frontier, 1);
+    }
+
+    /// [`rebuild`](Self::rebuild) with a thread budget for the group-start
+    /// scan: the serial offset-assignment walk over all distinct nodes
+    /// becomes a parallel exclusive prefix scan over `lens`. Layout is
+    /// byte-identical at every thread count.
+    pub fn rebuild_par(&mut self, frontier: &[(NodeId, u32, u32)], threads: usize) {
         self.map.clear();
         self.order.clear();
+        self.lens.clear();
         self.flat.clear();
         self.flat.resize(frontier.len(), (0, 0));
-        // Pass 1: count entries per distinct node.
+        // Pass 1: count entries per distinct node (first-appearance
+        // order), resetting each map cursor for pass 2.
         for &(node, _, _) in frontier {
             match self.map.entry(node) {
                 std::collections::hash_map::Entry::Vacant(e) => {
-                    e.insert((0, 1));
+                    e.insert((self.order.len() as u32, 0));
                     self.order.push(node);
+                    self.lens.push(1);
                 }
-                std::collections::hash_map::Entry::Occupied(mut e) => {
-                    e.get_mut().1 += 1;
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    self.lens[e.get().0 as usize] += 1;
                 }
             }
         }
-        // Assign group starts (first-appearance order) and reset the
-        // lengths to act as fill cursors.
-        let mut off = 0u32;
-        for &node in &self.order {
-            let e = self.map.get_mut(&node).expect("counted");
-            let count = e.1;
-            *e = (off, 0);
-            off += count;
-        }
+        // Group starts: exclusive prefix scan of the counts.
+        self.starts.clear();
+        self.starts.extend_from_slice(&self.lens);
+        parallel_scan::exclusive_scan(WorkPool::global(), threads, &mut self.starts);
         // Pass 2: fill the flat entries.
         for (ord, &(node, slot, _pos)) in frontier.iter().enumerate() {
             let e = self.map.get_mut(&node).expect("counted");
-            self.flat[(e.0 + e.1) as usize] = (slot, ord as u32);
+            self.flat[(self.starts[e.0 as usize] + e.1) as usize] = (slot, ord as u32);
             e.1 += 1;
         }
     }
@@ -83,7 +96,11 @@ impl InvertedIndex {
     #[inline]
     pub fn get(&self, node: NodeId) -> &[(u32, u32)] {
         match self.map.get(&node) {
-            Some(&(start, len)) => &self.flat[start as usize..(start + len) as usize],
+            Some(&(idx, _)) => {
+                let start = self.starts[idx as usize] as usize;
+                let len = self.lens[idx as usize] as usize;
+                &self.flat[start..start + len]
+            }
             None => &[],
         }
     }

@@ -12,7 +12,9 @@
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::OnceLock;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -22,6 +24,23 @@ use crate::sampler::Subgraph;
 
 /// Shard target size before rotation (pre-compression).
 const SHARD_BYTES: usize = 4 << 20;
+
+/// Read-side readahead ring depth: decoded shards the prefetch thread may
+/// queue ahead of the consumer. Depth 1 is the classic double buffer;
+/// the default of 2 rides out one slow read (a compressed shard that
+/// inflates long, a cold page) without starving the consumer, at a bounded
+/// cost of `window × ~4 MiB` in-flight memory. `GG_SPILL_READAHEAD`
+/// overrides, clamped to `1..=16`.
+fn readahead_window() -> u32 {
+    static W: OnceLock<u32> = OnceLock::new();
+    *W.get_or_init(|| {
+        std::env::var("GG_SPILL_READAHEAD")
+            .ok()
+            .and_then(|v| v.parse::<u32>().ok())
+            .map(|v| v.clamp(1, 16))
+            .unwrap_or(2)
+    })
+}
 
 /// I/O accounting for one store lifetime.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -55,6 +74,16 @@ pub struct SpillReport {
     /// faster than the disk legitimately reports 0 here with all the
     /// latency showing up in `read_wait` instead.
     pub overlapped_reads: u32,
+    /// Readahead ring depth used for read-back (see [`readahead_window`]).
+    pub readahead_window: u32,
+    /// Most decoded shards ever queued ahead of the consumer (≤ window).
+    /// Hitting the window means the disk ran ahead of the consumer and the
+    /// ring, not the reader, was the bound.
+    pub readahead_peak: u32,
+    /// Mean ring occupancy sampled at each consumer request (latest
+    /// read-back pass). Near 0 = consumer starved by the disk; near the
+    /// window = disk fully hidden.
+    pub readahead_mean: f64,
 }
 
 impl SpillReport {
@@ -72,7 +101,10 @@ impl SpillReport {
             .set("overlapped_flushes", self.overlapped_flushes as u64)
             .set("read_time_s", self.read_time.as_secs_f64())
             .set("read_wait_s", self.read_wait.as_secs_f64())
-            .set("overlapped_reads", self.overlapped_reads as u64);
+            .set("overlapped_reads", self.overlapped_reads as u64)
+            .set("readahead_window", self.readahead_window as u64)
+            .set("readahead_peak", self.readahead_peak as u64)
+            .set("readahead_mean", self.readahead_mean);
         j
     }
 }
@@ -303,29 +335,38 @@ impl SpillStore {
 
     /// Read every stored subgraph back (in shard order), invoking `f`.
     ///
-    /// Read-back mirrors the write path's double buffer: shard `n+1` is
-    /// read **and inflated** on a background prefetch thread while shard
-    /// `n`'s records are decoded and consumed here, so disk latency
-    /// overlaps the consumer instead of serializing ahead of training.
-    /// The depth-1 channel bounds memory to one decoded shard in flight;
-    /// delivery stays in shard order, so the record stream is
-    /// byte-identical to the serial reader's. `read_wait` accounts the
-    /// residual consumer-side blocking; `overlapped_reads` counts shards
-    /// that were already decoded when requested (the prefetches that
-    /// genuinely hid disk work).
+    /// Read-back generalizes the write path's double buffer to a
+    /// **readahead ring**: up to [`readahead_window`] shards are read
+    /// **and inflated** on a background prefetch thread while shard `n`'s
+    /// records are decoded and consumed here, so disk latency overlaps
+    /// the consumer instead of serializing ahead of training — and one
+    /// slow read no longer stalls the next request. The bounded channel
+    /// caps memory at `window` decoded shards in flight; delivery stays
+    /// in shard order, so the record stream is byte-identical to the
+    /// serial reader's. `read_wait` accounts the residual consumer-side
+    /// blocking; `overlapped_reads` counts shards that were already
+    /// decoded when requested; `readahead_peak`/`readahead_mean` record
+    /// how full the ring actually ran.
     pub fn read_all(&mut self, mut f: impl FnMut(Subgraph) -> Result<()>) -> Result<()> {
         let t0 = Instant::now();
         let shards = self.report.shards;
+        let window = readahead_window();
+        self.report.readahead_window = window;
         if shards == 0 {
             self.report.read_time += t0.elapsed();
             return Ok(());
         }
         let dir = self.dir.clone();
         let compress = self.compress;
+        // Decoded shards enqueued so far; `sent - consumed` sampled at
+        // each request is the ring occupancy. Lives outside the scope so
+        // the prefetch thread may borrow it.
+        let sent = AtomicU32::new(0);
+        let mut peak = 0u32;
+        let mut occ_sum = 0u64;
         let result = std::thread::scope(|s| -> Result<()> {
-            // Depth 1 = the read-side double buffer: one decoded shard
-            // buffered ahead of the one being consumed.
-            let (tx, rx) = sync_channel::<Result<(u32, Vec<u8>)>>(1);
+            let (tx, rx) = sync_channel::<Result<(u32, Vec<u8>)>>(window as usize);
+            let sent_ref = &sent;
             s.spawn(move || {
                 crate::obs::trace::set_track(crate::obs::trace::Track::SpillPrefetch);
                 for idx in 0..shards {
@@ -338,9 +379,13 @@ impl SpillStore {
                     if tx.send(shard).is_err() || failed {
                         return;
                     }
+                    sent_ref.fetch_add(1, Ordering::Release);
                 }
             });
             for idx in 0..shards {
+                let occ = sent.load(Ordering::Acquire).saturating_sub(idx);
+                peak = peak.max(occ);
+                occ_sum += occ as u64;
                 let wait = Instant::now();
                 let shard = rx
                     .recv()
@@ -368,6 +413,8 @@ impl SpillStore {
             }
             Ok(())
         });
+        self.report.readahead_peak = self.report.readahead_peak.max(peak);
+        self.report.readahead_mean = occ_sum as f64 / shards as f64;
         self.report.read_time += t0.elapsed();
         result
     }
@@ -480,13 +527,13 @@ mod tests {
         // next shard decoded and waiting, so the consumer's read_wait
         // stays a small fraction of total read time — and the record
         // stream is identical to a fast pass over the same store.
-        let subs: Vec<Subgraph> = (0..2500).map(|i| sg(i, 20)).collect();
+        let subs: Vec<Subgraph> = (0..12000).map(|i| sg(i, 20)).collect();
         let mut store = SpillStore::create(dir("ro"), true).unwrap();
         for s in &subs {
             store.write(s).unwrap();
         }
         store.finish_writes().unwrap();
-        assert!(store.report().shards > 1);
+        assert!(store.report().shards >= 4, "want several shards, got {}", store.report().shards);
         let mut fast = Vec::new();
         store.read_all(|s| {
             fast.push(s);
@@ -517,6 +564,18 @@ mod tests {
             "a slow consumer must find every prefetched shard ready: {:?}",
             store.report()
         );
+        // The readahead ring ran ahead of the slow consumer: with the
+        // default window of 2 the occupancy must have hit the window at
+        // least once (and never exceeded it).
+        let window = store.report().readahead_window;
+        assert!(window >= 1, "window recorded: {:?}", store.report());
+        assert!(
+            store.report().readahead_peak >= window.min(2),
+            "slow consumer should fill the ring: {:?}",
+            store.report()
+        );
+        assert!(store.report().readahead_peak <= window);
+        assert!(store.report().readahead_mean > 0.0);
         store.cleanup().unwrap();
     }
 

@@ -10,6 +10,7 @@ pub mod bytes;
 pub mod fxhash;
 pub mod json;
 pub mod logging;
+pub mod parallel_scan;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -1,0 +1,403 @@
+//! Single-pass chained (decoupled-lookback) parallel prefix scan.
+//!
+//! Every wave of the generation pipeline used to pay a *sequential*
+//! prefix sum: CSR offsets, inverted-index slot offsets, frontier write
+//! cursors, partition histograms. This module runs those scans on the
+//! persistent [`WorkPool`] with the classic single-pass chained-scan
+//! protocol (Merrill & Garland's decoupled lookback; see the
+//! Koenvisser/workassisting and multi-dimensional-parallel-scan exemplars
+//! in SNIPPETS.md):
+//!
+//! * the input is split into fixed-size **blocks**, claimed in ascending
+//!   order from the pool's atomic work index (submitter assists, exactly
+//!   like [`WorkPool::run`]);
+//! * each block folds its local aggregate, publishes it
+//!   (`AGGREGATE_AVAILABLE`), then **looks back** over its predecessors
+//!   summing published aggregates until it meets a block whose inclusive
+//!   prefix is final (`PREFIX_AVAILABLE`) — no barrier, no second pass
+//!   over the data;
+//! * with the exclusive prefix in hand it scans its slice in place and
+//!   publishes its own inclusive prefix, unblocking successors.
+//!
+//! Status-word layout: each block owns three `AtomicU64` words — `state`
+//! (0 = initialized, 1 = aggregate available, 2 = prefix available),
+//! `aggregate` (sum of the block's input) and `prefix` (inclusive prefix
+//! through the block). Values are stored Relaxed *before* the Release
+//! store of `state`; readers Acquire-load `state` and then read the value
+//! Relaxed, so the release sequence publishes the value with the flag.
+//!
+//! Termination: the pool hands block indices out in ascending order, so
+//! when block `i` is claimed every predecessor is finished or actively
+//! being processed by another participant, and block 0 always publishes a
+//! final prefix immediately — lookback chains bottom out and every spin
+//! has a producer making progress. A scan submitted from *inside* a pool
+//! job (`IN_POOL_WORKER`) degrades to in-order inline execution, where
+//! every block hits the predecessor-final fast path.
+//!
+//! Determinism: the element types are unsigned integers, whose wrapping
+//! addition is associative and commutative — any block split and any
+//! lookback order produces byte-identical output, which the converted
+//! call sites (CSR build, inverted index, frontier offsets, partition
+//! histograms) rely on across thread counts.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::workpool::{RawParts, WorkPool};
+
+/// Element of a parallel scan: an unsigned integer whose wrapping sum is
+/// associative + commutative (the byte-identity requirement) and which
+/// round-trips through the block state's `u64` status words.
+pub trait ScanValue: Copy + Send + Sync + 'static {
+    const ZERO: Self;
+    fn wadd(self, other: Self) -> Self;
+    fn to_u64(self) -> u64;
+    fn from_u64(v: u64) -> Self;
+}
+
+macro_rules! scan_value {
+    ($($t:ty),*) => {$(
+        impl ScanValue for $t {
+            const ZERO: Self = 0;
+            #[inline]
+            fn wadd(self, other: Self) -> Self {
+                self.wrapping_add(other)
+            }
+            #[inline]
+            fn to_u64(self) -> u64 {
+                self as u64
+            }
+            #[inline]
+            fn from_u64(v: u64) -> Self {
+                v as Self
+            }
+        }
+    )*};
+}
+
+scan_value!(u32, u64, usize);
+
+const STATE_INITIALIZED: u64 = 0;
+const STATE_AGGREGATE_AVAILABLE: u64 = 1;
+const STATE_PREFIX_AVAILABLE: u64 = 2;
+
+/// Per-block state machine of one in-flight scan (see module docs for
+/// the status-word protocol).
+struct BlockState {
+    state: AtomicU64,
+    aggregate: AtomicU64,
+    prefix: AtomicU64,
+}
+
+impl BlockState {
+    fn new() -> Self {
+        Self {
+            state: AtomicU64::new(STATE_INITIALIZED),
+            aggregate: AtomicU64::new(0),
+            prefix: AtomicU64::new(0),
+        }
+    }
+}
+
+thread_local! {
+    /// Reused block-state buffer of the submitting thread (steady-state
+    /// scans allocate nothing). Taken out for the duration of a scan so a
+    /// nested scan simply allocates fresh instead of aliasing.
+    static TEMP: RefCell<Vec<BlockState>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Elements per block: sized so one block is roughly one
+/// [`TaskSizer::target_task_ns`](crate::engines::common::TaskSizer)
+/// task at ~1 element/ns scan throughput, rounded to a power of two and
+/// clamped to [2^12, 2^16]. Cached once per process like the target
+/// itself.
+pub fn block_size() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        let target = crate::engines::common::TaskSizer::target_task_ns();
+        (target as usize).next_power_of_two().clamp(1 << 12, 1 << 16)
+    })
+}
+
+/// Below this input length the parallel machinery cannot win (fewer than
+/// two blocks) and the scan runs sequentially.
+pub fn crossover() -> usize {
+    2 * block_size()
+}
+
+/// Sequential in-place inclusive scan; returns the total.
+pub fn inclusive_scan_seq<T: ScanValue>(data: &mut [T]) -> T {
+    let mut acc = T::ZERO;
+    for x in data.iter_mut() {
+        acc = acc.wadd(*x);
+        *x = acc;
+    }
+    acc
+}
+
+/// Sequential in-place exclusive scan; returns the total.
+pub fn exclusive_scan_seq<T: ScanValue>(data: &mut [T]) -> T {
+    let mut acc = T::ZERO;
+    for x in data.iter_mut() {
+        let v = *x;
+        *x = acc;
+        acc = acc.wadd(v);
+    }
+    acc
+}
+
+/// In-place inclusive prefix scan (`out[i] = sum(in[..=i])`) on `pool`,
+/// byte-identical to [`inclusive_scan_seq`] at every thread count.
+/// Returns the total.
+pub fn inclusive_scan<T: ScanValue>(pool: &WorkPool, threads: usize, data: &mut [T]) -> T {
+    scan_in_place_tuned(pool, threads, data, true, block_size(), None)
+}
+
+/// In-place exclusive prefix scan (`out[i] = sum(in[..i])`) on `pool`,
+/// byte-identical to [`exclusive_scan_seq`] at every thread count.
+/// Returns the total.
+pub fn exclusive_scan<T: ScanValue>(pool: &WorkPool, threads: usize, data: &mut [T]) -> T {
+    scan_in_place_tuned(pool, threads, data, false, block_size(), None)
+}
+
+/// Tuned entry point: explicit block size plus an optional per-block
+/// `hook(block_index)` invoked before the block is processed. The hook
+/// exists so tests can stall one block and prove the lookback chain (not
+/// a barrier) resolves the others; production callers use
+/// [`inclusive_scan`] / [`exclusive_scan`].
+#[doc(hidden)]
+pub fn scan_in_place_tuned<T: ScanValue>(
+    pool: &WorkPool,
+    threads: usize,
+    data: &mut [T],
+    inclusive: bool,
+    block: usize,
+    hook: Option<&(dyn Fn(usize) + Sync)>,
+) -> T {
+    let n = data.len();
+    let block = block.max(1);
+    if threads <= 1 || n < 2 * block {
+        metrics().seq_runs.inc();
+        return if inclusive { inclusive_scan_seq(data) } else { exclusive_scan_seq(data) };
+    }
+    let nblocks = n.div_ceil(block);
+    let mut temp = TEMP.with(|t| std::mem::take(&mut *t.borrow_mut()));
+    if temp.len() < nblocks {
+        temp.resize_with(nblocks, BlockState::new);
+    }
+    for s in temp.iter().take(nblocks) {
+        s.state.store(STATE_INITIALIZED, Ordering::Relaxed);
+    }
+    let states = &temp[..nblocks];
+    let lookback_waits = AtomicU64::new(0);
+    let base = RawParts(data.as_mut_ptr());
+    let base = &base;
+    let span = crate::obs::trace::span("scan.blocks")
+        .arg("blocks", nblocks as f64)
+        .arg("n", n as f64);
+    pool.run_labeled(nblocks, threads, 1, "scan.block", |b| {
+        if let Some(h) = hook {
+            h(b);
+        }
+        let start = b * block;
+        let end = (start + block).min(n);
+        // SAFETY: block index ranges are disjoint (each index is claimed
+        // exactly once) and `data` outlives the blocking `run_labeled`.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        // Fast path: the predecessor's inclusive prefix is already final
+        // (always true for block 0, and for every block when the claims
+        // run in order on one thread) — scan directly, no second pass.
+        let known = if b == 0 {
+            Some(T::ZERO)
+        } else {
+            let prev = &states[b - 1];
+            if prev.state.load(Ordering::Acquire) == STATE_PREFIX_AVAILABLE {
+                Some(T::from_u64(prev.prefix.load(Ordering::Relaxed)))
+            } else {
+                None
+            }
+        };
+        let prefix = match known {
+            Some(p) => p,
+            None => {
+                // Reduce first, publish the aggregate, then look back.
+                let mut agg = T::ZERO;
+                for &v in slice.iter() {
+                    agg = agg.wadd(v);
+                }
+                states[b].aggregate.store(agg.to_u64(), Ordering::Relaxed);
+                states[b].state.store(STATE_AGGREGATE_AVAILABLE, Ordering::Release);
+                let mut acc = T::ZERO;
+                let mut j = b - 1;
+                loop {
+                    match states[j].state.load(Ordering::Acquire) {
+                        STATE_PREFIX_AVAILABLE => {
+                            acc = T::from_u64(states[j].prefix.load(Ordering::Relaxed)).wadd(acc);
+                            break;
+                        }
+                        STATE_AGGREGATE_AVAILABLE => {
+                            acc = T::from_u64(states[j].aggregate.load(Ordering::Relaxed))
+                                .wadd(acc);
+                            // Block 0 publishes a final prefix directly,
+                            // so j > 0 here and the chain keeps walking.
+                            j -= 1;
+                        }
+                        _ => {
+                            // Predecessor still folding: its claimant is
+                            // live (claims are handed out in ascending
+                            // order), so spinning terminates.
+                            lookback_waits.fetch_add(1, Ordering::Relaxed);
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+                acc
+            }
+        };
+        let mut acc = prefix;
+        if inclusive {
+            for x in slice.iter_mut() {
+                acc = acc.wadd(*x);
+                *x = acc;
+            }
+        } else {
+            for x in slice.iter_mut() {
+                let v = *x;
+                *x = acc;
+                acc = acc.wadd(v);
+            }
+        }
+        states[b].prefix.store(acc.to_u64(), Ordering::Relaxed);
+        states[b].state.store(STATE_PREFIX_AVAILABLE, Ordering::Release);
+    });
+    // run_labeled's completion protocol (remaining-count under the pool
+    // mutex) orders every block's stores before this read.
+    let total = T::from_u64(states[nblocks - 1].prefix.load(Ordering::Acquire));
+    let waits = lookback_waits.load(Ordering::Relaxed);
+    drop(span);
+    metrics().parallel_runs.inc();
+    metrics().blocks.add(nblocks as u64);
+    metrics().lookback_waits.add(waits);
+    if waits > 0 {
+        crate::obs::trace::instant("scan.lookback_waits", &[("waits", waits as f64)]);
+    }
+    TEMP.with(|t| *t.borrow_mut() = temp);
+    total
+}
+
+struct ScanMetrics {
+    seq_runs: crate::obs::metrics::Counter,
+    parallel_runs: crate::obs::metrics::Counter,
+    blocks: crate::obs::metrics::Counter,
+    lookback_waits: crate::obs::metrics::Counter,
+}
+
+/// Registry handles are looked up once (the registry takes a lock); the
+/// scan hot path only touches atomics.
+fn metrics() -> &'static ScanMetrics {
+    static M: OnceLock<ScanMetrics> = OnceLock::new();
+    M.get_or_init(|| ScanMetrics {
+        seq_runs: crate::obs::metrics::counter("scan.seq_runs"),
+        parallel_runs: crate::obs::metrics::counter("scan.parallel_runs"),
+        blocks: crate::obs::metrics::counter("scan.blocks"),
+        lookback_waits: crate::obs::metrics::counter("scan.lookback_waits"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_u32s(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n).map(|_| (rng.next_u64() & 0xffff) as u32).collect()
+    }
+
+    #[test]
+    fn inclusive_matches_sequential() {
+        for n in [0usize, 1, 5, 1000, 10_000] {
+            let input = random_u32s(n, n as u64);
+            let mut seq = input.clone();
+            let total_seq = inclusive_scan_seq(&mut seq);
+            for threads in [1, 2, 8] {
+                let mut par = input.clone();
+                // Small block size to force the parallel path.
+                let total =
+                    scan_in_place_tuned(WorkPool::global(), threads, &mut par, true, 64, None);
+                assert_eq!(par, seq, "n={n} threads={threads}");
+                assert_eq!(total, total_seq);
+            }
+        }
+    }
+
+    #[test]
+    fn exclusive_matches_sequential() {
+        for n in [0usize, 1, 129, 4096] {
+            let input: Vec<u64> = random_u32s(n, 7 + n as u64).iter().map(|&v| v as u64).collect();
+            let mut seq = input.clone();
+            let total_seq = exclusive_scan_seq(&mut seq);
+            for threads in [1, 2, 8] {
+                let mut par = input.clone();
+                let total =
+                    scan_in_place_tuned(WorkPool::global(), threads, &mut par, false, 32, None);
+                assert_eq!(par, seq, "n={n} threads={threads}");
+                assert_eq!(total, total_seq);
+            }
+        }
+    }
+
+    #[test]
+    fn usize_and_public_entry_points() {
+        let input: Vec<usize> = (0..crossover() + 3).map(|i| i % 7).collect();
+        let mut seq = input.clone();
+        let t0 = inclusive_scan_seq(&mut seq);
+        let mut par = input.clone();
+        let t1 = inclusive_scan(WorkPool::global(), 8, &mut par);
+        assert_eq!(par, seq);
+        assert_eq!(t0, t1);
+        let mut seq_x = input.clone();
+        let t2 = exclusive_scan_seq(&mut seq_x);
+        let mut par_x = input;
+        let t3 = exclusive_scan(WorkPool::global(), 8, &mut par_x);
+        assert_eq!(par_x, seq_x);
+        assert_eq!(t2, t3);
+    }
+
+    #[test]
+    fn below_crossover_stays_sequential_and_identical() {
+        let input = random_u32s(crossover() - 1, 3);
+        let mut seq = input.clone();
+        inclusive_scan_seq(&mut seq);
+        let mut par = input;
+        inclusive_scan(WorkPool::global(), 8, &mut par);
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn block_size_is_pow2_and_clamped() {
+        let b = block_size();
+        assert!(b.is_power_of_two());
+        assert!((1 << 12..=1 << 16).contains(&b));
+        assert_eq!(crossover(), 2 * b);
+    }
+
+    #[test]
+    fn scan_nested_inside_pool_job_is_correct() {
+        // A scan submitted from inside a pool job runs inline in block
+        // order (IN_POOL_WORKER): every block must hit the fast path and
+        // the result must still match the sequential scan.
+        let input = random_u32s(1000, 11);
+        let mut expect = input.clone();
+        inclusive_scan_seq(&mut expect);
+        let results = WorkPool::global().map_collect(4, 4, 1, |_| {
+            let mut data = input.clone();
+            scan_in_place_tuned(WorkPool::global(), 8, &mut data, true, 16, None);
+            data
+        });
+        for r in results {
+            assert_eq!(r, expect);
+        }
+    }
+}

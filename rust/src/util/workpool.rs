@@ -61,8 +61,80 @@ pub fn worker_slot() -> usize {
 /// keep their sharded-freelist home stable across runs: without it each
 /// respawn burns a fresh id, the thread's arena shard drifts, and warm
 /// own-shard pops degrade into cross-shard steals.
+///
+/// When core pinning is enabled ([`pin_cores_enabled`]) the slot also
+/// maps to a CPU core (`slot % cores`) and the calling thread's affinity
+/// is set to it, so a speculator's cache-warm state stays put across
+/// respawns too. No-op on unsupported platforms.
 pub fn pin_worker_slot(slot: usize) {
     SLOT.with(|s| s.set(slot));
+    maybe_pin_to_core(slot);
+}
+
+/// Tri-state core-pinning override: 0 = unset (env decides), 1 = on,
+/// 2 = off.
+static PIN_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Programmatic opt-in/out for core pinning (the `--pin-cores` CLI /
+/// `pin_cores` config key); overrides `GG_PIN_CORES`. Only threads that
+/// start (or pin a slot) after the call are affected.
+pub fn set_pin_cores(on: bool) {
+    PIN_OVERRIDE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// Whether opt-in core pinning is active: the programmatic override if
+/// set, else the `GG_PIN_CORES` environment toggle (read once).
+pub fn pin_cores_enabled() -> bool {
+    match PIN_OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            static ENV: OnceLock<bool> = OnceLock::new();
+            *ENV.get_or_init(|| {
+                std::env::var("GG_PIN_CORES")
+                    .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                    .unwrap_or(false)
+            })
+        }
+    }
+}
+
+/// If pinning is enabled, pin the calling thread to core
+/// `slot % available cores`; returns whether an affinity was applied.
+/// Worker slots map onto cores round-robin, so each pool's workers
+/// `0..k` land on distinct cores (up to the core count) and the
+/// speculators' reserved high slots spread from the top residues down —
+/// away from the pool workers' low residues.
+pub fn maybe_pin_to_core(slot: usize) -> bool {
+    if !pin_cores_enabled() {
+        return false;
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    pin_current_thread_to(slot % cores)
+}
+
+/// Bind the calling thread to one CPU core. Linux-only (a raw
+/// `sched_setaffinity` on the calling thread — the libc crate is not
+/// available offline); other platforms report `false` and run unpinned.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread_to(core: usize) -> bool {
+    // A fixed 1024-bit cpu_set_t, the glibc default width.
+    let mut mask = [0u64; 16];
+    if core >= 1024 {
+        return false;
+    }
+    mask[core / 64] |= 1u64 << (core % 64);
+    extern "C" {
+        // pid 0 = the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Unsupported platform: never pins, callers proceed unpinned.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread_to(_core: usize) -> bool {
+    false
 }
 
 /// Reserved stable slot for look-ahead speculator `i`: a fixed ceiling
@@ -467,6 +539,10 @@ impl Drop for JobGuard<'_> {
 
 fn worker_loop(sh: Arc<Shared>, id: usize) {
     IN_POOL_WORKER.with(|w| w.set(true));
+    // Opt-in locality: worker `id` of either pool sits on core
+    // `id % cores` (the gen and gather pools deliberately share the
+    // mapping — their thread budgets are split, not stacked).
+    maybe_pin_to_core(id);
     crate::obs::trace::set_track(match sh.kind {
         PoolKind::Gen => crate::obs::trace::Track::PoolWorker(id as u16),
         PoolKind::Gather => crate::obs::trace::Track::GatherWorker(id as u16),
@@ -611,6 +687,26 @@ mod tests {
         }
         assert!(speculator_slot(0) > 1 << 19, "reserved range sits above monotonic ids");
         assert_ne!(speculator_slot(0), speculator_slot(1));
+    }
+
+    #[test]
+    fn core_pinning_is_opt_in_and_applies_on_linux() {
+        // Disabled (the default unless GG_PIN_CORES is exported):
+        // maybe_pin_to_core must be a no-op.
+        if std::env::var("GG_PIN_CORES").is_err() {
+            assert!(!pin_cores_enabled());
+            assert!(!maybe_pin_to_core(3));
+        }
+        // The raw affinity call itself, on a sacrificial thread so the
+        // test harness threads stay unpinned.
+        let ok = std::thread::spawn(|| pin_current_thread_to(0)).join().unwrap();
+        if cfg!(target_os = "linux") {
+            assert!(ok, "pinning to core 0 must succeed on linux");
+        } else {
+            assert!(!ok, "non-linux platforms report unpinned");
+        }
+        // Out-of-range core id is rejected, not UB.
+        assert!(!pin_current_thread_to(1 << 20));
     }
 
     #[test]

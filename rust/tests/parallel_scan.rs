@@ -1,0 +1,230 @@
+//! Properties of the chained (decoupled-lookback) parallel scan and the
+//! call sites converted to it: byte-identity with the sequential scan
+//! across sizes × thread counts × scan kinds, proof that the lookback
+//! protocol chains (no barrier), and thread-invariance of every converted
+//! production site (CSR build, inverted index, frontier offsets, balance
+//! table, hash partitioner).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use graphgen_plus::balance::{BalanceTable, MappingStrategy};
+use graphgen_plus::engines::common::WaveSlots;
+use graphgen_plus::graph::csr::Csr;
+use graphgen_plus::graph::edgelist::EdgeList;
+use graphgen_plus::graph::partition::{partition_graph_par, Strategy};
+use graphgen_plus::graph::{generator, NodeId};
+use graphgen_plus::sampler::inverted::InvertedIndex;
+use graphgen_plus::util::parallel_scan::{
+    crossover, exclusive_scan, exclusive_scan_seq, inclusive_scan, inclusive_scan_seq,
+    scan_in_place_tuned,
+};
+use graphgen_plus::util::rng::Xoshiro256;
+use graphgen_plus::util::workpool::WorkPool;
+
+fn random_u32s(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n).map(|_| (rng.next_u64() & 0xffff) as u32).collect()
+}
+
+/// ≡ sequential for every size around the crossover (and far past it),
+/// every thread count, both scan kinds, through the public entry points.
+#[test]
+fn property_scan_equals_sequential_across_sizes_threads_kinds() {
+    let x = crossover();
+    for n in [0usize, 1, x - 1, x, x + 1, 1_000_000] {
+        let input = random_u32s(n, 0xC0FFEE ^ n as u64);
+        let mut incl = input.clone();
+        let incl_total = inclusive_scan_seq(&mut incl);
+        let mut excl = input.clone();
+        let excl_total = exclusive_scan_seq(&mut excl);
+        for threads in [1usize, 2, 8] {
+            let mut par = input.clone();
+            let t = inclusive_scan(WorkPool::global(), threads, &mut par);
+            assert_eq!(par, incl, "inclusive n={n} threads={threads}");
+            assert_eq!(t, incl_total);
+            let mut par = input.clone();
+            let t = exclusive_scan(WorkPool::global(), threads, &mut par);
+            assert_eq!(par, excl, "exclusive n={n} threads={threads}");
+            assert_eq!(t, excl_total);
+        }
+    }
+}
+
+/// Wider element types run through the same machinery.
+#[test]
+fn scan_is_generic_over_u64_and_usize() {
+    let n = crossover() + 17;
+    let input64: Vec<u64> = random_u32s(n, 5).iter().map(|&v| (v as u64) << 20).collect();
+    let mut seq = input64.clone();
+    let t0 = inclusive_scan_seq(&mut seq);
+    let mut par = input64;
+    let t1 = inclusive_scan(WorkPool::global(), 8, &mut par);
+    assert_eq!(par, seq);
+    assert_eq!(t0, t1);
+    let inputus: Vec<usize> = (0..n).map(|i| i % 11).collect();
+    let mut seq = inputus.clone();
+    let t0 = exclusive_scan_seq(&mut seq);
+    let mut par = inputus;
+    let t1 = exclusive_scan(WorkPool::global(), 8, &mut par);
+    assert_eq!(par, seq);
+    assert_eq!(t0, t1);
+}
+
+/// The lookback protocol must chain through a stalled block, not wait at
+/// a barrier: while one block's claimant sleeps, later blocks start (and
+/// publish aggregates); the stalled block's successors resolve their
+/// prefixes by walking the chain once it wakes.
+#[test]
+fn forced_slow_block_proves_lookback_chaining_not_barrier() {
+    const BLOCK: usize = 64;
+    const NBLOCKS: usize = 8;
+    const SLOW: usize = 3;
+    let input = random_u32s(BLOCK * NBLOCKS, 77);
+    let mut expect = input.clone();
+    let expect_total = inclusive_scan_seq(&mut expect);
+
+    let clock = AtomicU64::new(0);
+    let entered: Vec<AtomicU64> = (0..NBLOCKS).map(|_| AtomicU64::new(u64::MAX)).collect();
+    let slow_done = AtomicU64::new(u64::MAX);
+    let hook = |b: usize| {
+        entered[b].store(clock.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+        if b == SLOW {
+            std::thread::sleep(Duration::from_millis(50));
+            slow_done.store(clock.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+        }
+    };
+    let waits_before = graphgen_plus::obs::metrics::counter("scan.lookback_waits").get();
+    let mut data = input;
+    let total =
+        scan_in_place_tuned(WorkPool::global(), 8, &mut data, true, BLOCK, Some(&hook));
+
+    // Chaining resolved every prefix correctly despite the stall.
+    assert_eq!(data, expect);
+    assert_eq!(total, expect_total);
+    // No barrier: at least one block AFTER the slow one entered while the
+    // slow block was still asleep.
+    let done = slow_done.load(Ordering::SeqCst);
+    assert_ne!(done, u64::MAX, "slow block ran");
+    let overtook = (SLOW + 1..NBLOCKS)
+        .filter(|&b| entered[b].load(Ordering::SeqCst) < done)
+        .count();
+    assert!(
+        overtook > 0,
+        "no successor block started during the stall — a barrier would look like this; entry order: {:?}",
+        entered.iter().map(|e| e.load(Ordering::SeqCst)).collect::<Vec<_>>()
+    );
+    // Those successors had to spin on the stalled predecessor: the
+    // lookback-wait counter moved.
+    let waits_after = graphgen_plus::obs::metrics::counter("scan.lookback_waits").get();
+    assert!(waits_after > waits_before, "stalled lookback must be counted");
+}
+
+/// CSR construction (sorted fast path): identical structure at every
+/// thread count, on an input large enough to engage the parallel scan.
+#[test]
+fn csr_build_is_thread_invariant_sorted() {
+    let gen = generator::from_spec("rmat:n=262144,e=524288", 11).unwrap();
+    let a = Csr::from_edge_list_with_threads(&gen.edges, 1);
+    for threads in [2usize, 8] {
+        let b = Csr::from_edge_list_with_threads(&gen.edges, threads);
+        assert_eq!(a.num_nodes(), b.num_nodes());
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert!(a.edges().eq(b.edges()), "threads={threads}");
+    }
+}
+
+/// CSR construction (unsorted scatter+sort path): identical too.
+#[test]
+fn csr_build_is_thread_invariant_unsorted() {
+    let n = 50_000u32;
+    let mut el = EdgeList::new(n);
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    for _ in 0..200_000 {
+        el.push(rng.gen_range(n as u64) as NodeId, rng.gen_range(n as u64) as NodeId);
+    }
+    let a = Csr::from_edge_list_with_threads(&el, 1);
+    let b = Csr::from_edge_list_with_threads(&el, 8);
+    assert_eq!(a.num_nodes(), b.num_nodes());
+    assert!(a.edges().eq(b.edges()));
+}
+
+/// Inverted-index rebuild: same layout (groups, order, entries) whether
+/// the group-start scan ran sequentially or on 8 threads.
+#[test]
+fn inverted_index_rebuild_is_thread_invariant() {
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let frontier: Vec<(NodeId, u32, u32)> = (0..300_000u32)
+        .map(|i| {
+            // Mix of heavily-duplicated and unique nodes.
+            let node =
+                if i % 3 == 0 { rng.gen_range(200_000) as NodeId } else { i as NodeId };
+            (node, i % 4096, i % 7)
+        })
+        .collect();
+    let mut a = InvertedIndex::new();
+    a.rebuild(&frontier);
+    let mut b = InvertedIndex::new();
+    b.rebuild_par(&frontier, 8);
+    assert_eq!(a.num_nodes(), b.num_nodes());
+    assert_eq!(a.num_entries(), b.num_entries());
+    assert_eq!(a.nodes(), b.nodes());
+    for &node in a.nodes() {
+        assert_eq!(a.get(node), b.get(node), "node {node}");
+    }
+}
+
+/// Balance-table grouping: histogram + scan + scatter are identical at
+/// every thread count, and `seeds_for` agrees with the grouped view.
+#[test]
+fn balance_table_grouping_is_thread_invariant() {
+    let workers = 13usize;
+    let seeds: Vec<NodeId> =
+        (0..200_000u64).map(|i| ((i * 7919) % 1_000_003) as NodeId).collect();
+    let t = BalanceTable::build(&seeds, workers, MappingStrategy::HashMod, 5);
+    assert_eq!(t.counts_par(1), t.counts_par(8));
+    let (s1, g1) = t.by_worker(1);
+    let (s8, g8) = t.by_worker(8);
+    assert_eq!(s1, s8);
+    assert_eq!(g1, g8);
+    assert_eq!(*s1.last().unwrap() as usize, t.seeds.len());
+    for w in 0..workers {
+        assert_eq!(t.seeds_for(w), g1[s1[w] as usize..s1[w + 1] as usize].to_vec());
+    }
+}
+
+/// Frontier slot offsets + scatter: the parallel fill produces the exact
+/// entry vector of the serial walk.
+#[test]
+fn frontier_fill_is_thread_invariant() {
+    let seeds: Vec<NodeId> = (0..2000).collect();
+    let worker_of: Vec<u32> = seeds.iter().map(|&s| s % 5).collect();
+    let mut slots = WaveSlots::new(&seeds, &worker_of);
+    for (slot, h1) in slots.hop1.iter_mut().enumerate() {
+        let len = (slot * 13) % 17; // varied lengths, some empty
+        *h1 = (0..len).map(|i| ((slot + 3 * i) % 4096) as NodeId).collect();
+    }
+    let (mut out1, mut off1) = (Vec::new(), Vec::new());
+    let (mut out8, mut off8) = (Vec::new(), Vec::new());
+    for hop in [1u32, 2] {
+        slots.fill_frontier(hop, &mut out1, &mut off1);
+        slots.fill_frontier_par(hop, &mut out8, &mut off8, 8);
+        assert_eq!(out1, out8, "hop {hop}");
+        assert_eq!(off1, off8, "hop {hop}");
+    }
+}
+
+/// Hash partitioning: owner map, per-worker node lists and edge totals
+/// are identical at every thread count.
+#[test]
+fn hash_partition_is_thread_invariant() {
+    let g = generator::from_spec("rmat:n=65536,e=262144", 3).unwrap().csr();
+    let a = partition_graph_par(&g, 9, Strategy::Hash, 7, 1);
+    let b = partition_graph_par(&g, 9, Strategy::Hash, 7, 8);
+    assert_eq!(a.parts.len(), b.parts.len());
+    for (pa, pb) in a.parts.iter().zip(&b.parts) {
+        assert_eq!(pa.worker, pb.worker);
+        assert_eq!(pa.nodes, pb.nodes);
+        assert_eq!(pa.num_edges, pb.num_edges);
+    }
+}

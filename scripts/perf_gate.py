@@ -1,16 +1,19 @@
 #!/usr/bin/env python3
-"""CI perf gate over the E1/E6/E7 trajectory files.
+"""CI perf gate over the E1/E6/E7/E2 trajectory files.
 
 Usage: perf_gate.py <prev BENCH_e1.json> <cur BENCH_e1.json> \
                     [<prev BENCH_e6.json> <cur BENCH_e6.json> \
-                     [<prev BENCH_e7.json> <cur BENCH_e7.json>]]
+                     [<prev BENCH_e7.json> <cur BENCH_e7.json> \
+                      [<prev BENCH_e2.json> <cur BENCH_e2.json>]]]
 
 Compares graphgen+ generation throughput (nodes/sec, 1-core wall), —
-when the e6 pair is given — end-to-end pipeline iterations/sec, and —
-when the e7 pair is given — per-batch feature-gather latency against the
-previous main run's artifacts, failing on a regression larger than
-THRESHOLD. Missing/unreadable previous data skips that gate (first run,
-expired artifact) rather than failing it.
+when the e6 pair is given — end-to-end pipeline iterations/sec, — when
+the e7 pair is given — per-batch feature-gather latency, and — when the
+e2 pair is given — the parallel large-scale graph build time (chained
+prefix scans; lower is better) against the previous main run's
+artifacts, failing on a regression larger than THRESHOLD.
+Missing/unreadable previous data skips that gate (first run, expired
+artifact) rather than failing it.
 """
 
 import json
@@ -26,6 +29,10 @@ E6_MODES = ("concurrent", "pipelined")
 # steady-state sharded+batched+cache variant (lower is better).
 E7_VARIANT = "sharded + batched fetch + cache"
 E7_METRIC = "total_per_batch_s"
+# e2 gate metric: parallel CSR build time at the largest bench scale —
+# the decoupled-lookback scan spine's end-to-end cost (lower is better).
+E2_SCALE = "large"
+E2_METRIC = "csr_build_ms_parallel"
 
 
 def load(path):
@@ -83,7 +90,7 @@ def check(label, prev, cur, failures, lower_is_better=False):
 
 
 def main() -> int:
-    if len(sys.argv) not in (3, 5, 7):
+    if len(sys.argv) not in (3, 5, 7, 9):
         print(__doc__)
         return 2
     failures = []
@@ -115,7 +122,7 @@ def main() -> int:
             else:
                 check(f"e6 {cmode} iters/sec", p, c, failures)
 
-    if len(sys.argv) == 7:
+    if len(sys.argv) >= 7:
         prev7 = load(sys.argv[5])
         cur7 = load_current(sys.argv[6], "e7")
         if cur7 is None:
@@ -125,6 +132,22 @@ def main() -> int:
             c = cur7.get("variants", {}).get(E7_VARIANT, {}).get(E7_METRIC)
             check(
                 f"e7 {E7_VARIANT} {E7_METRIC}",
+                p,
+                c,
+                failures,
+                lower_is_better=True,
+            )
+
+    if len(sys.argv) == 9:
+        prev2 = load(sys.argv[7])
+        cur2 = load_current(sys.argv[8], "e2")
+        if cur2 is None:
+            return 1
+        if prev2 is not None:
+            p = prev2.get("build", {}).get(E2_SCALE, {}).get(E2_METRIC)
+            c = cur2.get("build", {}).get(E2_SCALE, {}).get(E2_METRIC)
+            check(
+                f"e2 build.{E2_SCALE}.{E2_METRIC}",
                 p,
                 c,
                 failures,
