@@ -128,4 +128,75 @@ fn main() {
         n
     });
     bench.report(Some("disk spill (write+read)"));
+
+    // --- out-of-core scale point (tiered memory, PR 8) -------------------
+    // The same generation workload against a *paged* CSR whose page-cache
+    // budget is a tenth of the adjacency working set: edge targets fault
+    // in from the compressed cold tier during hop scans. The interesting
+    // numbers are the steady-state fault rate and how much generation
+    // throughput the paging costs (`iters_per_sec_ratio`, perf-gated).
+    let fast = std::env::var("GG_BENCH_FAST").is_ok();
+    let oc_seeds: Vec<u32> =
+        (0..if fast { 2048u32 } else { 8192 }).map(|i| i * 7 % g.num_nodes()).collect();
+    let oc_cfg = EngineConfig {
+        workers: 8,
+        wave_size: 4096,
+        fanout: FanoutSpec::paper(),
+        ..Default::default()
+    };
+    let adj_bytes = g.num_edges() * 4;
+    let paged = g.to_paged(adj_bytes / 10);
+    let mut oc = Bench::new("e5_out_of_core");
+    let items = Some((oc_seeds.len() as f64, "seeds"));
+    oc.measure("resident CSR generation", items, || {
+        let sink = NullSink::default();
+        GraphGenPlus.generate(&g, &oc_seeds, &oc_cfg, &sink).unwrap().subgraphs
+    });
+    let warm_stats = paged.tier_stats().unwrap();
+    oc.measure("paged CSR generation (10% budget)", items, || {
+        let sink = NullSink::default();
+        GraphGenPlus.generate(&paged, &oc_seeds, &oc_cfg, &sink).unwrap().subgraphs
+    });
+    oc.report(Some("resident CSR generation"));
+    let resident_wall = oc.mean_of("resident CSR generation").unwrap();
+    let paged_wall = oc.mean_of("paged CSR generation (10% budget)").unwrap();
+    // Steady-state faults: measured runs only (the Bench warmup already
+    // primed the cache, so subtract everything seen before them).
+    let ts = paged.tier_stats().unwrap();
+    let steady = graphgen_plus::storage::TierStats {
+        hits: ts.hits - warm_stats.hits,
+        faults: ts.faults - warm_stats.faults,
+        promotions: ts.promotions - warm_stats.promotions,
+        evictions: ts.evictions - warm_stats.evictions,
+    };
+    let ratio = resident_wall / paged_wall.max(1e-12);
+    println!(
+        "out-of-core: cold {} (budget {}), fault rate {:.2}%, paged/resident throughput {:.2}x",
+        fmt_bytes(paged.cold_bytes()),
+        fmt_bytes(adj_bytes / 10),
+        steady.fault_rate() * 100.0,
+        ratio,
+    );
+
+    // --- machine-readable trajectory (BENCH_e5.json) ---------------------
+    use graphgen_plus::util::json::Json;
+    let mut tier = Json::obj();
+    tier.set("budget_bytes", (adj_bytes / 10) as f64)
+        .set("cold_bytes", paged.cold_bytes() as f64)
+        .set("tier_fault_rate", steady.fault_rate())
+        .set("faults", steady.faults as f64)
+        .set("evictions", steady.evictions as f64)
+        .set("iters_per_sec_ratio", ratio)
+        .set("resident_wall_s", resident_wall)
+        .set("paged_wall_s", paged_wall);
+    let mut out = Json::obj();
+    out.set("bench", "e5_storage")
+        .set("seeds", oc_seeds.len() as f64)
+        .set("bytes_per_subgraph", per_sg)
+        .set("out_of_core", tier);
+    let path = std::env::var("GG_BENCH_E5_JSON").unwrap_or_else(|_| "BENCH_e5.json".into());
+    match graphgen_plus::obs::report::write_json(std::path::Path::new(&path), out) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  failed to write {path}: {e}"),
+    }
 }

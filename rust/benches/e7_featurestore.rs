@@ -28,6 +28,7 @@ use graphgen_plus::cluster::Fabric;
 use graphgen_plus::engines::{CollectSink, EngineConfig, SubgraphEngine};
 use graphgen_plus::featurestore::{
     spawn_prefetcher, FeatureBackend, FeatureService, FetchStats, HotCache, ShardedStore,
+    TieredStore,
 };
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::generator;
@@ -417,6 +418,46 @@ fn main() {
         )
     );
 
+    // --- out-of-core scale point (tiered memory, PR 8) -------------------
+    // The tiered backend at a tenth of the feature working set against the
+    // fully resident sharded store, same epoch workload: batches stay
+    // byte-identical while rows fault in from the compressed cold tier.
+    let ws = g.num_nodes() as u64 * spec.dim as u64 * 4;
+    let tiered =
+        Arc::new(TieredStore::build(&store, g.num_nodes(), partitions, 0x5eed, ws / 10));
+    let svc_tiered = FeatureService::new(tiered.clone());
+    assert_eq!(
+        reference,
+        svc_tiered.materialize(spec, &groups[0], 0).unwrap(),
+        "tiered backend must materialize byte-identical batches"
+    );
+    run_service_epoch(&svc_tiered); // warm the hot tier
+    let warm_tier = tiered.tier_stats();
+    let t0 = std::time::Instant::now();
+    for _ in 0..sweep_epochs {
+        run_service_epoch(&svc_tiered);
+    }
+    let tiered_epoch = t0.elapsed().as_secs_f64() / sweep_epochs as f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..sweep_epochs {
+        run_service_epoch(&svc_plan);
+    }
+    let resident_epoch = t0.elapsed().as_secs_f64() / sweep_epochs as f64;
+    let tier_delta = tiered.tier_stats();
+    let steady_faults = tier_delta.faults - warm_tier.faults;
+    let steady_hits = tier_delta.hits - warm_tier.hits;
+    let tier_fault_rate =
+        steady_faults as f64 / (steady_faults + steady_hits).max(1) as f64;
+    let tier_ratio = resident_epoch / tiered_epoch.max(1e-12);
+    println!(
+        "out-of-core: tiered at {} budget ({} hot pages, {} cold): fault rate {:.2}%, tiered/resident throughput {:.2}x",
+        fmt_bytes(ws / 10),
+        tiered.hot_capacity_pages(),
+        fmt_bytes(tiered.cold_bytes()),
+        tier_fault_rate * 100.0,
+        tier_ratio,
+    );
+
     // --- machine-readable trajectory (BENCH_e7.json) ---------------------
     use graphgen_plus::util::json::Json;
     let mut variants = Json::obj();
@@ -449,6 +490,16 @@ fn main() {
         .set("gather_sweep_per_batch_s", sweep_json)
         .set("knee_gather_threads", knee as f64)
         .set("variants", variants);
+    let mut tier_json = Json::obj();
+    tier_json
+        .set("budget_bytes", (ws / 10) as f64)
+        .set("hot_capacity_pages", tiered.hot_capacity_pages() as f64)
+        .set("cold_bytes", tiered.cold_bytes() as f64)
+        .set("tier_fault_rate", tier_fault_rate)
+        .set("iters_per_sec_ratio", tier_ratio)
+        .set("tiered_epoch_s", tiered_epoch)
+        .set("resident_epoch_s", resident_epoch);
+    out.set("tier", tier_json);
     let path = std::env::var("GG_BENCH_E7_JSON").unwrap_or_else(|_| "BENCH_e7.json".into());
     match graphgen_plus::obs::report::write_json(std::path::Path::new(&path), out) {
         Ok(()) => println!("  wrote {path}"),

@@ -43,10 +43,16 @@ pub struct RunConfig {
     pub mode: String,
     pub pjrt_pool: usize,
     pub feature_seed: u64,
-    /// Feature storage backend: `procedural` or `sharded`.
+    /// Feature storage backend: `procedural`, `sharded`, or `tiered`
+    /// (out-of-core compressed cold tier under a CLOCK hot tier).
     pub feature_backend: String,
     /// Hot-node feature cache budget in MiB (0 disables the cache).
     pub feature_cache_mb: usize,
+    /// Total tiered-memory budget in MiB, split between the feature hot
+    /// tier and the graph page cache (see `pipeline::split_memory_budget`).
+    /// 0 = unlimited (resident behaviour); the `GG_MEMORY_BUDGET_MB` env
+    /// var applies when this is 0.
+    pub memory_budget_mb: usize,
     /// Overlap feature gather for batch t+1 with training on batch t.
     pub feature_prefetch: bool,
     /// Overlap hop work of future waves with reduce/emit of the current
@@ -103,6 +109,7 @@ impl Default for RunConfig {
             feature_seed: 5,
             feature_backend: "procedural".into(),
             feature_cache_mb: 0,
+            memory_budget_mb: 0,
             feature_prefetch: false,
             wave_pipeline: true,
             lookahead_depth: 2,
@@ -165,6 +172,7 @@ impl RunConfig {
             "feature_seed" => self.feature_seed = p(value, key)?,
             "feature_backend" => self.feature_backend = value.into(),
             "feature_cache_mb" => self.feature_cache_mb = p(value, key)?,
+            "memory_budget_mb" => self.memory_budget_mb = p(value, key)?,
             "feature_prefetch" => self.feature_prefetch = p(value, key)?,
             "wave_pipeline" => self.wave_pipeline = p(value, key)?,
             "lookahead_depth" => self.lookahead_depth = p(value, key)?,
@@ -242,6 +250,7 @@ impl RunConfig {
             .set("feature_seed", self.feature_seed)
             .set("feature_backend", self.feature_backend.clone())
             .set("feature_cache_mb", self.feature_cache_mb)
+            .set("memory_budget_mb", self.memory_budget_mb)
             .set("feature_prefetch", self.feature_prefetch)
             .set("wave_pipeline", self.wave_pipeline)
             .set("lookahead_depth", self.lookahead_depth)
@@ -351,6 +360,18 @@ mod tests {
         assert!(c.pin_cores);
         assert!(c.apply_override("pin_cores", "sometimes").is_err());
         assert!(c.to_json().to_pretty().contains("pin_cores"));
+    }
+
+    #[test]
+    fn memory_budget_key_roundtrips() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.memory_budget_mb, 0);
+        c.apply_override("memory_budget_mb", "256").unwrap();
+        assert_eq!(c.memory_budget_mb, 256);
+        assert!(c.apply_override("memory_budget_mb", "lots").is_err());
+        assert!(c.to_json().to_pretty().contains("memory_budget_mb"));
+        // A set config value wins over the env fallback.
+        assert_eq!(crate::storage::tier::memory_budget_mb(c.memory_budget_mb), 256);
     }
 
     #[test]

@@ -148,7 +148,9 @@ fn node_centric_hop(
             // A node's index entries carry ascending ordinals, so the
             // frame fills positionally — no sort, no hashing.
             frame.prepare(k, entries.iter().map(|&(_, ord)| ord));
-            let neigh = g.neighbors(v);
+            // Pins the cold page on a tiered graph, borrows when resident.
+            let run = g.neighbors_ref(v);
+            let neigh = &*run;
             for &(slot, ord) in entries {
                 let seed = seeds[slot as usize];
                 let base = crate::sampler::priority_base(cfg.sample_seed, hop, seed, v);

@@ -688,7 +688,11 @@ pub fn scan_task(
     );
     let mut scanned = 0u64;
     for chunk in task {
-        let neigh = &g.neighbors(chunk.node)[chunk.lo as usize..chunk.hi as usize];
+        // `neighbors_ref` pins the cold page when the graph is tiered
+        // (faults charge `tier.fault`; usually pre-warmed a wave ahead
+        // by the speculative hop's prefetch) and borrows when resident.
+        let run = g.neighbors_ref(chunk.node);
+        let neigh = &run[chunk.lo as usize..chunk.hi as usize];
         let entries = index.get(chunk.node);
         scanned += (neigh.len() * entries.len()) as u64;
         for &(slot, ord) in entries {
@@ -849,6 +853,13 @@ pub fn edge_centric_hop(
     let hop_idx = (hop - 1) as usize;
     let num_tasks = scratch.sizers[hop_idx].num_tasks(cfg);
     fill_scan_tasks(g, scratch.index.nodes(), num_tasks, &mut scratch.chunks, &mut scratch.tasks);
+    // Tiered graph: fault this frontier's cold adjacency pages in bulk
+    // before the scan fans out, so scan tasks hit the hot tier instead
+    // of stalling one fault at a time. Under the look-ahead ring this
+    // runs on a speculator a wave ahead of reduce/emit — the prefetch
+    // *is* the wave-ahead warming for topology, the way `WaveWarmer`
+    // warms features. No-op on resident graphs.
+    g.prefetch_pages(scratch.index.nodes(), cfg.threads);
     // --- map phase (persistent pool, results into pre-sized slots) ------
     let scan_phase = format!("hop{hop}.scan");
     let (index, chunks, tasks, frames) =
@@ -1020,6 +1031,9 @@ pub struct DepthDecision {
     pub wave: u64,
     /// New effective look-ahead depth.
     pub depth: u32,
+    /// New effective speculator worker count (1 when the controller is
+    /// not scaling workers).
+    pub workers: u32,
     /// Lane-starved stall rate EWMA (stalled waves / wave) at decision
     /// time.
     pub starve_ewma: f32,
@@ -1042,10 +1056,20 @@ pub struct DepthDecision {
 /// [`ALPHA`](Self::ALPHA); a small deadband keeps a clean pipeline from
 /// oscillating. The queue signal wins ties: backpressure means the
 /// consumer is the bottleneck, and deepening cannot help.
+///
+/// With [`with_workers`](Self::with_workers) the controller also steps
+/// the **effective speculator worker count** within `[1, max_workers]`
+/// from the same EWMAs: starvation means the pool cannot keep the ring
+/// full, so another worker helps; queue backpressure means speculators
+/// only pile waves against the admission gate, so one parks. Worker
+/// steps ride the same window cadence and are reported in the same
+/// [`DepthDecision`] trace as depth steps.
 #[derive(Debug)]
 pub struct DepthController {
     max_depth: usize,
     depth: usize,
+    max_workers: usize,
+    workers: usize,
     window: u64,
     waves: u64,
     win_waves: u64,
@@ -1065,6 +1089,8 @@ impl DepthController {
         Self {
             max_depth,
             depth: max_depth,
+            max_workers: 1,
+            workers: 1,
             window: ((max_depth * 2).max(4)) as u64,
             waves: 0,
             win_waves: 0,
@@ -1075,10 +1101,24 @@ impl DepthController {
         }
     }
 
+    /// Also scale the speculator worker count within `[1, max_workers]`
+    /// (both start at the maximum, like the depth).
+    pub fn with_workers(mut self, max_workers: usize) -> Self {
+        self.max_workers = max_workers.max(1);
+        self.workers = self.max_workers;
+        self
+    }
+
     /// Effective depth currently in force.
     #[inline]
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// Effective speculator worker count currently in force.
+    #[inline]
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Waves per decision window.
@@ -1104,17 +1144,24 @@ impl DepthController {
         self.win_starved = 0;
         self.win_queue = 0;
         let old = self.depth;
+        let old_workers = self.workers;
         if self.queue_ewma > Self::DEADBAND && self.queue_ewma >= self.starve_ewma {
             self.depth = (self.depth - 1).max(1);
+            self.workers = (self.workers - 1).max(1);
         } else if self.starve_ewma > Self::DEADBAND {
             self.depth = (self.depth + 1).min(self.max_depth);
+            self.workers = (self.workers + 1).min(self.max_workers);
         }
-        if self.depth == old {
+        // A worker never outruns the ring: at most one speculator per
+        // look-ahead lane currently in force.
+        self.workers = self.workers.min(self.depth).max(1);
+        if self.depth == old && self.workers == old_workers {
             return None;
         }
         Some(DepthDecision {
             wave: self.waves,
             depth: self.depth as u32,
+            workers: self.workers as u32,
             starve_ewma: self.starve_ewma as f32,
             queue_ewma: self.queue_ewma as f32,
         })
@@ -1148,22 +1195,45 @@ impl<T> ReqQueue<T> {
         }
         st.0.push_back(item);
         drop(st);
-        self.ready.notify_one();
+        // notify_all, not notify_one: with gated pops the woken worker
+        // may be throttled off and go straight back to sleep — every
+        // waiter must get a chance to re-check its gate or the item
+        // strands until close.
+        self.ready.notify_all();
         true
     }
 
     /// Blocking pop; `None` once closed and drained.
     fn pop(&self) -> Option<T> {
+        self.pop_gated(|| true)
+    }
+
+    /// Blocking pop that only claims an item while `gate()` holds —
+    /// the worker-scaling throttle: a worker whose index is at or above
+    /// the effective worker count parks here (still draining to `None`
+    /// on close) until [`wake_all`](Self::wake_all) re-checks it.
+    fn pop_gated(&self, gate: impl Fn() -> bool) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(v) = st.0.pop_front() {
-                return Some(v);
-            }
             if st.1 {
-                return None;
+                // Closed: active workers drain what's left; throttled
+                // ones exit at once (nobody re-notifies after close).
+                return if gate() { st.0.pop_front() } else { None };
+            }
+            if gate() {
+                if let Some(v) = st.0.pop_front() {
+                    return Some(v);
+                }
             }
             st = self.ready.wait(st).unwrap();
         }
+    }
+
+    /// Unpark every waiter so gated pops re-evaluate their gate (called
+    /// after the controller moves the effective worker count).
+    fn wake_all(&self) {
+        let _st = self.state.lock().unwrap();
+        self.ready.notify_all();
     }
 
     fn try_pop(&self) -> Option<T> {
@@ -1242,6 +1312,14 @@ pub struct WavePipelineStats {
     /// Effective depth in force when the last pipelined run finished
     /// (0 = the ring never ran).
     pub effective_depth_last: u32,
+    /// Times the adaptive controller grew the effective speculator
+    /// worker count (lane-starved pressure).
+    pub worker_scale_ups: u64,
+    /// Times the adaptive controller shrank it (queue-full pressure).
+    pub worker_scale_downs: u64,
+    /// Effective speculator worker count in force when the last
+    /// pipelined run finished (0 = the ring never ran).
+    pub effective_workers_last: u32,
     /// The controller's decision trace, in order (capped at
     /// [`MAX_DEPTH_TRACE`] entries; the step counters above keep
     /// counting past the cap).
@@ -1263,6 +1341,9 @@ struct RingCounters {
     deepen: u64,
     shallow: u64,
     eff_last: u32,
+    worker_up: u64,
+    worker_down: u64,
+    eff_workers_last: u32,
     trace: Vec<DepthDecision>,
 }
 
@@ -1449,6 +1530,13 @@ impl WaveLanes {
         // start immediately, converting caller busy time into measured
         // bubble for no wall-clock gain.
         let outstanding = AtomicUsize::new(0);
+        // Effective speculator worker count, stepped by the controller
+        // alongside the depth: worker `widx` only claims requests while
+        // `widx < eff_workers` (a soft throttle — it finishes whatever
+        // it already holds). Scaling the pool changes only *which*
+        // worker runs a wave, never wave content or emission order, so
+        // output bytes stay identical at every effective worker count.
+        let eff_workers = AtomicUsize::new(m_workers);
         // Shared request queue: admission pushes `(seq, range, lane)` in
         // sequence order; any idle worker claims the head. Completion
         // order is whatever the pool produces — the reorder buffer below
@@ -1460,6 +1548,7 @@ impl WaveLanes {
                 let (res_tx, res_rx) =
                     mpsc::channel::<(u64, WaveSlots<'t>, ScratchArena, u32)>();
                 let outstanding = &outstanding;
+                let eff_workers = &eff_workers;
                 let reqq = &reqq;
                 // If the consume loop bails early (emit error), closing
                 // the request queue on drop unparks every worker so the
@@ -1500,7 +1589,9 @@ impl WaveLanes {
                         loop {
                             let (seq, range, mut lane) = match pending.take() {
                                 Some(m) => m,
-                                None => match reqq.pop() {
+                                None => match reqq.pop_gated(|| {
+                                    widx < eff_workers.load(Ordering::Relaxed)
+                                }) {
                                     Some(m) => m,
                                     None => break,
                                 },
@@ -1592,7 +1683,7 @@ impl WaveLanes {
                 phases.time("hop1", || {
                     hop(g, &mut slots0, 1, cfg, fabric, ledger, &mut lane0)
                 });
-                let mut ctl = DepthController::new(depth);
+                let mut ctl = DepthController::new(depth).with_workers(m_workers);
                 let mut next_admit = 1usize;
                 let mut in_flight = 0usize;
                 admit(&mut next_admit, &mut in_flight, &mut spare, &mut c, ctl.depth())?;
@@ -1684,17 +1775,31 @@ impl WaveLanes {
                     // boundary may move the effective depth used by the
                     // next iteration's admission.
                     let before = ctl.depth();
+                    let workers_before = ctl.workers();
                     if let Some(d) = ctl.on_wave(starved, c.queue_full_stalls - q_before) {
                         if (d.depth as usize) > before {
                             c.deepen += 1;
-                        } else {
+                        } else if (d.depth as usize) < before {
                             c.shallow += 1;
+                        }
+                        if (d.workers as usize) > workers_before {
+                            c.worker_up += 1;
+                        } else if (d.workers as usize) < workers_before {
+                            c.worker_down += 1;
+                        }
+                        if (d.workers as usize) != workers_before {
+                            // Publish the new worker count and re-check
+                            // every gated pop — a scale-up must unpark
+                            // throttled workers immediately.
+                            eff_workers.store(d.workers as usize, Ordering::Relaxed);
+                            reqq.wake_all();
                         }
                         crate::obs::trace::instant(
                             "depth.decision",
                             &[
                                 ("wave", d.wave as f64),
                                 ("depth", d.depth as f64),
+                                ("workers", d.workers as f64),
                                 ("starve_ewma", d.starve_ewma as f64),
                                 ("queue_ewma", d.queue_ewma as f64),
                             ],
@@ -1713,6 +1818,7 @@ impl WaveLanes {
                     );
                 }
                 c.eff_last = ctl.depth() as u32;
+                c.eff_workers_last = ctl.workers() as u32;
                 Ok((outs, c))
             },
         );
@@ -1736,6 +1842,9 @@ impl WaveLanes {
         self.stats.deepen_steps += c.deepen;
         self.stats.shallow_steps += c.shallow;
         self.stats.effective_depth_last = c.eff_last;
+        self.stats.worker_scale_ups += c.worker_up;
+        self.stats.worker_scale_downs += c.worker_down;
+        self.stats.effective_workers_last = c.eff_workers_last;
         self.stats.depth_trace.extend(c.trace);
         for (dst, src) in self.stats.occupancy.iter_mut().zip(c.occupancy.iter()) {
             *dst += src;
@@ -2012,6 +2121,73 @@ mod tests {
             assert!(ctl.on_wave(false, 0).is_none());
         }
         assert_eq!(ctl.depth(), 3);
+    }
+
+    #[test]
+    fn depth_controller_scales_workers_with_depth() {
+        let mut ctl = DepthController::new(4).with_workers(3);
+        assert_eq!(ctl.workers(), 3, "starts at the configured maximum");
+        let w = ctl.window();
+        // Sustained backpressure parks workers along with the depth.
+        let mut decisions = Vec::new();
+        for _ in 0..w * 4 {
+            if let Some(d) = ctl.on_wave(false, 2) {
+                decisions.push(d);
+            }
+        }
+        assert_eq!(ctl.depth(), 1);
+        assert_eq!(ctl.workers(), 1, "sustained backpressure must park down to 1 worker");
+        assert!(decisions.iter().all(|d| d.workers >= 1 && d.workers <= 3));
+        // Sustained starvation grows the pool back, never past the max
+        // and never past the effective depth.
+        for _ in 0..w * 12 {
+            if let Some(d) = ctl.on_wave(true, 0) {
+                assert!(d.workers as usize <= d.depth as usize);
+            }
+        }
+        assert_eq!(ctl.depth(), 4);
+        assert_eq!(ctl.workers(), 3, "recovers to max_workers, not max_depth");
+    }
+
+    #[test]
+    fn depth_controller_default_keeps_one_worker() {
+        // Without with_workers the controller must behave exactly as
+        // before worker scaling existed: workers pinned at 1.
+        let mut ctl = DepthController::new(4);
+        for _ in 0..ctl.window() * 6 {
+            if let Some(d) = ctl.on_wave(true, 0) {
+                assert_eq!(d.workers, 1);
+            }
+            ctl.on_wave(false, 3);
+        }
+        assert_eq!(ctl.workers(), 1);
+    }
+
+    #[test]
+    fn req_queue_gated_pop_parks_and_wakes() {
+        let q: ReqQueue<u32> = ReqQueue::new();
+        let gate = std::sync::atomic::AtomicBool::new(false);
+        let got = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Parks while the gate is closed even though an item is
+                // queued; claims it once wake_all re-checks the gate.
+                if let Some(v) = q.pop_gated(|| gate.load(Ordering::Relaxed)) {
+                    got.store(v as u64, Ordering::Relaxed);
+                }
+            });
+            assert!(q.push(7));
+            std::thread::sleep(Duration::from_millis(10));
+            assert_eq!(got.load(Ordering::Relaxed), 0, "gated worker must not claim");
+            gate.store(true, Ordering::Relaxed);
+            q.wake_all();
+        });
+        assert_eq!(got.load(Ordering::Relaxed), 7);
+        // A throttled worker drains to None on close instead of hanging.
+        assert!(q.push(9));
+        q.close();
+        assert_eq!(q.pop_gated(|| false), None);
+        assert_eq!(q.pop_gated(|| true), Some(9), "active worker still drains after close");
     }
 
     #[test]

@@ -271,7 +271,10 @@ impl GenReport {
             .set("gather_wait_s", wp.gather_wait.as_secs_f64())
             .set("deepen_steps", wp.deepen_steps)
             .set("shallow_steps", wp.shallow_steps)
-            .set("effective_depth_last", wp.effective_depth_last as u64);
+            .set("effective_depth_last", wp.effective_depth_last as u64)
+            .set("worker_scale_ups", wp.worker_scale_ups)
+            .set("worker_scale_downs", wp.worker_scale_downs)
+            .set("effective_workers_last", wp.effective_workers_last as u64);
         o.set("wave_pipeline", wave);
         o
     }
@@ -307,7 +310,7 @@ impl GenReport {
         if self.wave_pipeline.overlapped_waves > 0 || self.wave_pipeline.gather_waits > 0 {
             let wp = &self.wave_pipeline;
             s.push_str(&format!(
-                " overlap={}/{} deep={} bubble={} stalls[lane={} queue={}({}) gather={}({})] depth_ctl[eff={} +{}/-{}]",
+                " overlap={}/{} deep={} bubble={} stalls[lane={} queue={}({}) gather={}({})] depth_ctl[eff={} +{}/-{}] workers_ctl[eff={} +{}/-{}]",
                 wp.overlapped_waves,
                 wp.waves,
                 wp.deep_waves,
@@ -320,6 +323,9 @@ impl GenReport {
                 wp.effective_depth_last,
                 wp.deepen_steps,
                 wp.shallow_steps,
+                wp.effective_workers_last,
+                wp.worker_scale_ups,
+                wp.worker_scale_downs,
             ));
         }
         s

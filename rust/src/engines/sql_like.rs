@@ -152,7 +152,9 @@ fn sql_hop(
         pool.map_collect(n, cfg.threads, auto_chunk, |ci| {
             clock.start(ci);
             let c = &chunks[ci];
-            let neigh = g.neighbors(c.node);
+            // Pins the cold page on a tiered graph, borrows when resident.
+            let run = g.neighbors_ref(c.node);
+            let neigh = &*run;
             let entries = index.get(c.node);
             let mut rows = Vec::with_capacity(neigh.len() * entries.len());
             for &(slot, ord) in entries {

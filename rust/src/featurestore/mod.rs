@@ -7,11 +7,14 @@
 //! means feature bytes never crossed the simulated fabric at all. This
 //! module makes feature placement and movement first-class:
 //!
-//! * [`FeatureBackend`] — the storage abstraction. Two implementations:
-//!   the procedural store (replicated everywhere, zero traffic) and
+//! * [`FeatureBackend`] — the storage abstraction. Three implementations:
+//!   the procedural store (replicated everywhere, zero traffic),
 //!   [`ShardedStore`] ([`sharded`]) — dense partition-aligned shards
 //!   materialized from the procedural source, byte-identical rows, but
-//!   with per-row ownership so remote reads are chargeable.
+//!   with per-row ownership so remote reads are chargeable — and
+//!   [`TieredStore`] ([`tiered`]) — the same rows out-of-core, in
+//!   compressed cold-tier pages under a CLOCK hot tier sized by
+//!   `--memory-budget-mb`.
 //! * [`fetch`] — the batched fetch planner: deduplicate a batch's node
 //!   ids, split local vs remote, group remote ids by owner partition and
 //!   issue **one bulk gather per (requester, owner) pair**, charging every
@@ -33,11 +36,13 @@ pub mod cache;
 pub mod fetch;
 pub mod prefetch;
 pub mod sharded;
+pub mod tiered;
 
 pub use cache::{CacheStats, HotCache};
 pub use fetch::{FetchPlan, FetchStats, Gathered};
 pub use prefetch::{spawn_prefetcher, BatchFeed, WaveWarmer};
 pub use sharded::ShardedStore;
+pub use tiered::TieredStore;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -136,6 +141,9 @@ pub enum BackendKind {
     Procedural,
     /// Partition-aligned dense shards with remote-byte accounting.
     Sharded,
+    /// Out-of-core shards: compressed cold-tier pages under a CLOCK hot
+    /// tier sized by `--memory-budget-mb` (see [`TieredStore`]).
+    Tiered,
 }
 
 impl std::str::FromStr for BackendKind {
@@ -144,6 +152,7 @@ impl std::str::FromStr for BackendKind {
         match s {
             "procedural" => Ok(Self::Procedural),
             "sharded" => Ok(Self::Sharded),
+            "tiered" => Ok(Self::Tiered),
             other => Err(format!("unknown feature backend '{other}'")),
         }
     }
@@ -536,6 +545,7 @@ mod tests {
     fn backend_kind_parses() {
         assert_eq!("procedural".parse::<BackendKind>().unwrap(), BackendKind::Procedural);
         assert_eq!("sharded".parse::<BackendKind>().unwrap(), BackendKind::Sharded);
+        assert_eq!("tiered".parse::<BackendKind>().unwrap(), BackendKind::Tiered);
         assert!("csv".parse::<BackendKind>().is_err());
     }
 

@@ -1,0 +1,280 @@
+//! Out-of-core feature shards: the tiered-memory sibling of
+//! [`ShardedStore`](super::ShardedStore).
+//!
+//! Feature rows live in compressed cold-tier pages
+//! ([`crate::storage::tier::PageStore`]) in global node order —
+//! `rows_per_page` consecutive rows per page, each `f32` stored as its
+//! bit pattern — under a CLOCK-managed hot tier
+//! ([`crate::storage::tier::PageCache`]) sized by the feature half of
+//! `--memory-budget-mb`. Labels and the ownership hash stay resident
+//! (4 bytes/node — they are the "offsets" of the feature tier, exactly
+//! as CSR offsets stay resident over paged adjacency).
+//!
+//! The backend contract is unchanged: every row faulted back out of the
+//! cold tier is byte-identical to what the procedural source computes,
+//! at every memory budget and thread count (property-tested in
+//! `tests/featurestore.rs`), so training cannot tell the tiers exist —
+//! only the `tier.*` metrics and the `tier-fault` trace row can.
+
+use std::sync::Arc;
+
+use crate::graph::features::FeatureStore;
+use crate::graph::NodeId;
+use crate::storage::tier::{PageCache, PageStore, PageStoreWriter, TierStats, PAGE_WORDS};
+use crate::util::rng::mix2;
+
+use super::FeatureBackend;
+
+/// Feature store with resident labels over cold-tier feature pages.
+#[derive(Debug)]
+pub struct TieredStore {
+    dim: usize,
+    num_classes: u32,
+    partitions: usize,
+    part_seed: u64,
+    num_nodes: usize,
+    rows_per_page: usize,
+    store: PageStore,
+    cache: PageCache,
+    labels: Vec<u32>,
+}
+
+impl TieredStore {
+    /// Materialize the cold tier for nodes `0..num_nodes` from the
+    /// procedural `source` (write-once), sizing the hot tier to
+    /// `budget_bytes` (0 = unlimited: behaves like a resident store
+    /// after first touch).
+    pub fn build(
+        source: &FeatureStore,
+        num_nodes: NodeId,
+        partitions: usize,
+        part_seed: u64,
+        budget_bytes: u64,
+    ) -> Self {
+        let n = num_nodes as usize;
+        let d = source.dim;
+        let rows_per_page = (PAGE_WORDS / d.max(1)).max(1);
+        let mut writer = PageStoreWriter::create().expect("create feature cold tier");
+        let mut labels = vec![0u32; n];
+        let mut row = vec![0.0f32; d];
+        let mut page = Vec::with_capacity(rows_per_page * d);
+        for v in 0..n {
+            source.write_feature(v as NodeId, &mut row);
+            page.extend(row.iter().map(|f| f.to_bits()));
+            labels[v] = source.label(v as NodeId);
+            if page.len() == rows_per_page * d {
+                writer.push_words(&page).expect("write feature page");
+                page.clear();
+            }
+        }
+        if !page.is_empty() {
+            writer.push_words(&page).expect("write feature page");
+        }
+        let store = writer.finish();
+        let cache = PageCache::with_budget(budget_bytes, store.num_pages());
+        Self {
+            dim: d,
+            num_classes: source.num_classes,
+            partitions: partitions.max(1),
+            part_seed,
+            num_nodes: n,
+            rows_per_page,
+            store,
+            cache,
+            labels,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.store.num_pages()
+    }
+
+    /// Hot-tier capacity in pages.
+    pub fn hot_capacity_pages(&self) -> usize {
+        self.cache.capacity()
+    }
+
+    /// Compressed cold-tier bytes on disk.
+    pub fn cold_bytes(&self) -> u64 {
+        self.store.cold_bytes()
+    }
+
+    /// Resident bytes: labels plus the hot tier's current pages.
+    pub fn memory_bytes(&self) -> u64 {
+        self.labels.len() as u64 * 4 + self.cache.resident_bytes()
+    }
+
+    pub fn tier_stats(&self) -> TierStats {
+        self.cache.stats()
+    }
+
+    #[inline]
+    fn page_of(&self, v: NodeId) -> u32 {
+        let vi = v as usize;
+        assert!(vi < self.num_nodes, "node {v} outside tiered store");
+        (vi / self.rows_per_page) as u32
+    }
+
+    /// Fault (or hit) the page holding `v`; returns the page and the
+    /// word offset of `v`'s row within it.
+    #[inline]
+    fn row_page(&self, v: NodeId) -> (Arc<Vec<u32>>, usize) {
+        let page = self.page_of(v);
+        let arc = self.cache.get(page, &self.store).expect("cold tier fault");
+        let off = (v as usize % self.rows_per_page) * self.dim;
+        (arc, off)
+    }
+
+    #[inline]
+    fn copy_row(words: &[u32], out: &mut [f32]) {
+        for (o, &w) in out.iter_mut().zip(words) {
+            *o = f32::from_bits(w);
+        }
+    }
+}
+
+impl FeatureBackend for TieredStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_classes(&self) -> u32 {
+        self.num_classes
+    }
+
+    fn label(&self, v: NodeId) -> u32 {
+        let vi = v as usize;
+        assert!(vi < self.num_nodes, "node {v} outside tiered store");
+        self.labels[vi]
+    }
+
+    fn write_feature(&self, v: NodeId, out: &mut [f32]) {
+        let (page, off) = self.row_page(v);
+        Self::copy_row(&page[off..off + self.dim], out);
+    }
+
+    fn gather_into(&self, ids: &[NodeId], out: &mut [f32]) {
+        self.gather_into_budget(ids, out, crate::util::workpool::default_threads())
+    }
+
+    fn gather_into_budget(&self, ids: &[NodeId], out: &mut [f32], threads: usize) {
+        let d = self.dim;
+        assert_eq!(out.len(), ids.len() * d, "gather buffer size mismatch");
+        let threads = threads.max(1);
+        // Same fan-out shape as ShardedStore: big gathers split into row
+        // chunks on the gather pool so cold-page faults (read + inflate)
+        // overlap across workers instead of serializing behind one
+        // thread. A one-entry page memo per chunk keeps the common case
+        // (batch ids clustered in a page) at one cache probe per run of
+        // same-page rows.
+        const PAR_MIN_FLOATS: usize = 1 << 15;
+        if threads > 1 && out.len() >= PAR_MIN_FLOATS {
+            let chunk_rows = ids.len().div_ceil(threads * 4).max(64);
+            crate::util::workpool::WorkPool::gather_global().run_row_chunks_labeled(
+                out,
+                d,
+                threads,
+                chunk_rows,
+                "gather.rows",
+                |row0, sub| {
+                    let rows = sub.len() / d;
+                    let mut memo: Option<(u32, Arc<Vec<u32>>)> = None;
+                    for (j, &v) in ids[row0..row0 + rows].iter().enumerate() {
+                        let p = self.page_of(v);
+                        let arc = match &memo {
+                            Some((mp, a)) if *mp == p => a.clone(),
+                            _ => {
+                                let a = self.cache.get(p, &self.store).expect("cold tier fault");
+                                memo = Some((p, a.clone()));
+                                a
+                            }
+                        };
+                        let off = (v as usize % self.rows_per_page) * d;
+                        Self::copy_row(&arc[off..off + d], &mut sub[j * d..(j + 1) * d]);
+                    }
+                },
+            );
+            return;
+        }
+        let mut memo: Option<(u32, Arc<Vec<u32>>)> = None;
+        for (i, &v) in ids.iter().enumerate() {
+            let p = self.page_of(v);
+            let arc = match &memo {
+                Some((mp, a)) if *mp == p => a.clone(),
+                _ => {
+                    let a = self.cache.get(p, &self.store).expect("cold tier fault");
+                    memo = Some((p, a.clone()));
+                    a
+                }
+            };
+            let off = (v as usize % self.rows_per_page) * d;
+            Self::copy_row(&arc[off..off + d], &mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    fn owner_of(&self, v: NodeId) -> Option<u32> {
+        // Stateless ownership hash — identical to ShardedStore's, so
+        // fabric traffic accounting is backend-invariant.
+        Some((mix2(self.part_seed ^ 0xfea7_5702e, v as u64) % self.partitions as u64) as u32)
+    }
+
+    fn partitions(&self) -> usize {
+        self.partitions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ShardedStore;
+    use super::*;
+
+    fn source() -> FeatureStore {
+        FeatureStore::with_labels(6, 4, (0..200).map(|i| i % 4).collect(), 3)
+    }
+
+    #[test]
+    fn rows_are_byte_identical_to_source() {
+        let src = source();
+        let st = TieredStore::build(&src, 200, 5, 42, 0);
+        let mut a = vec![0.0f32; 6];
+        for v in 0..200u32 {
+            st.write_feature(v, &mut a);
+            assert_eq!(a, src.feature(v), "row {v} differs through the tier");
+            assert_eq!(FeatureBackend::label(&st, v), src.label(v));
+        }
+    }
+
+    #[test]
+    fn ownership_matches_sharded_store() {
+        let src = source();
+        let sharded = ShardedStore::build(&src, 200, 5, 42);
+        let tiered = TieredStore::build(&src, 200, 5, 42, 0);
+        for v in 0..200u32 {
+            assert_eq!(tiered.owner_of(v), sharded.owner_of(v), "owner of {v} diverged");
+        }
+        assert_eq!(tiered.partitions(), sharded.partitions());
+    }
+
+    #[test]
+    fn tiny_budget_still_gathers_identical_bytes() {
+        let src = FeatureStore::with_labels(32, 4, (0..4000).map(|i| i % 4).collect(), 3);
+        // One hot page for a multi-page working set: every chunk churns.
+        let st = TieredStore::build(&src, 4000, 4, 3, 1);
+        assert!(st.num_pages() > 1, "test needs a multi-page store");
+        assert_eq!(st.hot_capacity_pages(), 1);
+        let ids: Vec<u32> = (0..6000u32).map(|i| i.wrapping_mul(2654435761) % 4000).collect();
+        let mut got = vec![0.0f32; ids.len() * 32];
+        st.gather_into_budget(&ids, &mut got, 8);
+        let mut one = vec![0.0f32; 32];
+        for (i, &v) in ids.iter().enumerate() {
+            src.write_feature(v, &mut one);
+            assert_eq!(&got[i * 32..(i + 1) * 32], &one[..], "row {i} (node {v})");
+        }
+        let s = st.tier_stats();
+        assert!(s.evictions > 0, "1-page budget must evict: {s:?}");
+    }
+}

@@ -1,10 +1,63 @@
 //! Compressed sparse row (CSR) graph — the frozen, read-only adjacency
 //! structure every engine samples from.
+//!
+//! Adjacency has two storage modes: fully resident (the default), and
+//! **paged** ([`Csr::to_paged`]) — offsets stay resident while the edge
+//! targets live in compressed cold-tier pages
+//! ([`crate::storage::tier`]) under a CLOCK hot tier, faulted in during
+//! hop scans and prefetched a wave ahead. Hot paths read through
+//! [`Csr::neighbors_ref`], which borrows in resident mode and pins the
+//! faulted page in paged mode; the bytes seen are identical either way.
+
+use std::sync::Arc;
 
 use super::edgelist::EdgeList;
 use super::NodeId;
+use crate::storage::tier::{PageCache, PageStore, PageStoreWriter, TierStats, PAGE_WORDS};
 use crate::util::parallel_scan;
 use crate::util::workpool::{default_threads, RawParts, WorkPool};
+
+/// Edge targets, resident or cold-tier paged.
+#[derive(Debug, Clone)]
+enum AdjStorage {
+    Resident(Vec<NodeId>),
+    Paged(Arc<ColdAdj>),
+}
+
+/// Paged adjacency: neighbor runs packed node-aligned into compressed
+/// pages (a run never straddles pages; a hub larger than the page
+/// target gets one oversized page of its own), so one fault pins a
+/// node's whole list.
+#[derive(Debug)]
+struct ColdAdj {
+    store: PageStore,
+    cache: PageCache,
+    /// Page holding node `v`'s neighbor run.
+    page_of: Vec<u32>,
+    /// Global adjacency offset at which each page begins (maps the
+    /// resident `offsets` into within-page positions).
+    page_base: Vec<u64>,
+}
+
+/// A borrowed-or-pinned neighbor list (deref to `&[NodeId]`). Resident
+/// graphs borrow the slice; paged graphs hold the faulted page by `Arc`
+/// so a concurrent eviction cannot free it mid-scan.
+pub enum NeighborsRef<'a> {
+    Resident(&'a [NodeId]),
+    Paged { page: Arc<Vec<u32>>, lo: usize, hi: usize },
+}
+
+impl std::ops::Deref for NeighborsRef<'_> {
+    type Target = [NodeId];
+
+    #[inline]
+    fn deref(&self) -> &[NodeId] {
+        match self {
+            NeighborsRef::Resident(s) => s,
+            NeighborsRef::Paged { page, lo, hi } => &page[*lo..*hi],
+        }
+    }
+}
 
 /// CSR adjacency: `neighbors(v)` is `adj[offsets[v] .. offsets[v+1]]`.
 ///
@@ -13,7 +66,7 @@ use crate::util::workpool::{default_threads, RawParts, WorkPool};
 #[derive(Debug, Clone)]
 pub struct Csr {
     offsets: Vec<u64>,
-    adj: Vec<NodeId>,
+    adj: AdjStorage,
 }
 
 impl Csr {
@@ -73,7 +126,97 @@ impl Csr {
                 }
             });
         }
-        Self { offsets, adj }
+        Self { offsets, adj: AdjStorage::Resident(adj) }
+    }
+
+    /// Re-home the edge targets in the tiered cold store: offsets stay
+    /// resident, neighbor runs are packed node-aligned into compressed
+    /// pages, and a CLOCK hot tier of `budget_bytes` (0 = unlimited)
+    /// serves faults. The paged graph is value-identical to `self` —
+    /// every `neighbors_ref` returns the same bytes — so sampling on it
+    /// produces byte-identical subgraphs at a measured fault cost.
+    pub fn to_paged(&self, budget_bytes: u64) -> Self {
+        let n = self.num_nodes() as usize;
+        let mut writer = PageStoreWriter::create().expect("create adjacency cold tier");
+        let mut page_of = vec![0u32; n];
+        let mut page_base: Vec<u64> = Vec::new();
+        let mut cur: Vec<u32> = Vec::with_capacity(PAGE_WORDS);
+        let mut cur_base = 0u64;
+        for v in 0..n {
+            let run = self.neighbors_ref(v as NodeId);
+            if !cur.is_empty() && cur.len() + run.len() > PAGE_WORDS {
+                page_base.push(cur_base);
+                writer.push_words(&cur).expect("write adjacency page");
+                cur_base += cur.len() as u64;
+                cur.clear();
+            }
+            page_of[v] = page_base.len() as u32;
+            cur.extend_from_slice(&run);
+        }
+        if n > 0 {
+            page_base.push(cur_base);
+            writer.push_words(&cur).expect("write adjacency page");
+        }
+        let store = writer.finish();
+        let cache = PageCache::with_budget(budget_bytes, store.num_pages());
+        Self {
+            offsets: self.offsets.clone(),
+            adj: AdjStorage::Paged(Arc::new(ColdAdj { store, cache, page_of, page_base })),
+        }
+    }
+
+    /// Whether edge targets are cold-tier paged.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.adj, AdjStorage::Paged(_))
+    }
+
+    /// Hot/cold tier counters (None for resident graphs).
+    pub fn tier_stats(&self) -> Option<TierStats> {
+        match &self.adj {
+            AdjStorage::Resident(_) => None,
+            AdjStorage::Paged(cold) => Some(cold.cache.stats()),
+        }
+    }
+
+    /// Compressed cold-tier bytes on disk (0 for resident graphs).
+    pub fn cold_bytes(&self) -> u64 {
+        match &self.adj {
+            AdjStorage::Resident(_) => 0,
+            AdjStorage::Paged(cold) => cold.store.cold_bytes(),
+        }
+    }
+
+    /// Warm the hot tier for an upcoming hop over `nodes` (the next
+    /// frontier): fault every page their runs live on, fanned out over
+    /// the generation pool so reads+inflates overlap. Called by the hop
+    /// scan a wave ahead (speculative hop-1 runs while the previous wave
+    /// reduces), which turns cold faults into hot hits on the scan
+    /// itself. No-op on resident graphs.
+    pub fn prefetch_pages(&self, nodes: &[NodeId], threads: usize) {
+        let AdjStorage::Paged(cold) = &self.adj else { return };
+        let mut pages: Vec<u32> = nodes
+            .iter()
+            .filter(|&&v| self.degree(v) > 0)
+            .map(|&v| cold.page_of[v as usize])
+            .collect();
+        pages.sort_unstable();
+        pages.dedup();
+        if pages.is_empty() {
+            return;
+        }
+        let _span = crate::obs::trace::span("tier.prefetch").arg("pages", pages.len() as f64);
+        let threads = threads.max(1);
+        if threads <= 1 || pages.len() < 4 {
+            for &p in &pages {
+                let _ = cold.cache.get(p, &cold.store);
+            }
+            return;
+        }
+        let pages = &pages;
+        let cold = &**cold;
+        WorkPool::global().run_labeled(pages.len(), threads, 1, "tier.prefetch", |i| {
+            let _ = cold.cache.get(pages[i], &cold.store);
+        });
     }
 
     #[inline]
@@ -83,7 +226,7 @@ impl Csr {
 
     #[inline]
     pub fn num_edges(&self) -> u64 {
-        self.adj.len() as u64
+        self.offsets[self.offsets.len() - 1]
     }
 
     #[inline]
@@ -91,14 +234,53 @@ impl Csr {
         (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
     }
 
+    /// Borrowed neighbor slice — resident graphs only. Hot paths and
+    /// anything that may see a paged graph use
+    /// [`neighbors_ref`](Self::neighbors_ref) instead.
+    ///
+    /// # Panics
+    /// On a paged graph (a borrowed slice cannot pin a faultable page).
     #[inline]
     pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
-        &self.adj[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+        match &self.adj {
+            AdjStorage::Resident(adj) => {
+                &adj[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+            }
+            AdjStorage::Paged(_) => {
+                panic!("neighbors() on a paged CSR — use neighbors_ref()")
+            }
+        }
     }
 
-    /// Iterate all edges as (src, dst) in CSR order.
+    /// Neighbor list of `v` through either storage mode: borrows the
+    /// slice when resident, faults-and-pins the page when cold. The
+    /// returned bytes are identical in both modes.
+    #[inline]
+    pub fn neighbors_ref(&self, v: NodeId) -> NeighborsRef<'_> {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        match &self.adj {
+            AdjStorage::Resident(adj) => NeighborsRef::Resident(&adj[s..e]),
+            AdjStorage::Paged(cold) => {
+                if s == e {
+                    return NeighborsRef::Resident(&[]);
+                }
+                let p = cold.page_of[v as usize];
+                let page = cold.cache.get(p, &cold.store).expect("cold adjacency fault");
+                let base = cold.page_base[p as usize] as usize;
+                NeighborsRef::Paged { page, lo: s - base, hi: e - base }
+            }
+        }
+    }
+
+    /// Iterate all edges as (src, dst) in CSR order. Works on paged
+    /// graphs too (faulting page by page) at a per-node copy cost — a
+    /// cold-path API; hop scans use [`neighbors_ref`](Self::neighbors_ref).
     pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
-        (0..self.num_nodes()).flat_map(move |v| self.neighbors(v).iter().map(move |&d| (v, d)))
+        (0..self.num_nodes()).flat_map(move |v| {
+            let neigh: Vec<NodeId> = self.neighbors_ref(v).to_vec();
+            neigh.into_iter().map(move |d| (v, d))
+        })
     }
 
     /// Max degree and the node achieving it.
@@ -121,9 +303,21 @@ impl Csr {
         self.num_edges() as f64 / self.num_nodes() as f64
     }
 
-    /// Approximate in-memory footprint in bytes.
+    /// Approximate in-memory footprint in bytes. For paged graphs this
+    /// is the resident side only — offsets, page maps, and the hot
+    /// tier's current pages; compressed on-disk bytes are reported
+    /// separately by [`cold_bytes`](Self::cold_bytes).
     pub fn memory_bytes(&self) -> u64 {
-        (self.offsets.len() * 8 + self.adj.len() * 4) as u64
+        let offsets = (self.offsets.len() * 8) as u64;
+        match &self.adj {
+            AdjStorage::Resident(adj) => offsets + (adj.len() * 4) as u64,
+            AdjStorage::Paged(cold) => {
+                offsets
+                    + (cold.page_of.len() * 4) as u64
+                    + (cold.page_base.len() * 8) as u64
+                    + cold.cache.resident_bytes()
+            }
+        }
     }
 
     /// The `k` highest-degree nodes, descending (ties by id) — the hot
@@ -217,5 +411,101 @@ mod tests {
         assert_eq!(g.num_nodes(), 0);
         assert_eq!(g.num_edges(), 0);
         assert_eq!(g.mean_degree(), 0.0);
+    }
+
+    #[test]
+    fn neighbors_ref_matches_neighbors_on_resident() {
+        let g = small();
+        for v in 0..g.num_nodes() {
+            assert_eq!(&*g.neighbors_ref(v), g.neighbors(v));
+        }
+        assert!(!g.is_paged());
+        assert_eq!(g.cold_bytes(), 0);
+        assert!(g.tier_stats().is_none());
+    }
+
+    #[test]
+    fn paged_graph_is_value_identical() {
+        let g = small();
+        for budget in [0u64, 1, u64::MAX] {
+            let p = g.to_paged(budget);
+            assert!(p.is_paged());
+            assert_eq!(p.num_nodes(), g.num_nodes());
+            assert_eq!(p.num_edges(), g.num_edges());
+            for v in 0..g.num_nodes() {
+                assert_eq!(&*p.neighbors_ref(v), g.neighbors(v), "node {v} budget {budget}");
+                assert_eq!(p.degree(v), g.degree(v));
+            }
+            // Identical through the iterator too (and paged edges()
+            // works at all).
+            let a: Vec<_> = g.edges().collect();
+            let b: Vec<_> = p.edges().collect();
+            assert_eq!(a, b);
+            assert!(p.cold_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn paged_large_graph_with_hub_and_tiny_budget() {
+        // A hub whose run exceeds one page plus many small nodes: the
+        // hub gets an oversized page of its own; a 1-byte budget clamps
+        // the hot tier to a single page so every page churns.
+        let n: u32 = PAGE_WORDS as u32 + 1000;
+        let mut el = EdgeList::new(n);
+        for d in 1..n {
+            el.push(0, d); // hub degree n-1 > PAGE_WORDS
+        }
+        for v in 1..n {
+            el.push(v, (v + 1) % n);
+            el.push(v, (v * 7 + 3) % n);
+        }
+        el.sort_dedup();
+        let g = Csr::from_edge_list(&el);
+        let p = g.to_paged(1);
+        for v in 0..n {
+            assert_eq!(&*p.neighbors_ref(v), g.neighbors(v), "node {v}");
+        }
+        let s = p.tier_stats().unwrap();
+        assert!(s.evictions > 0, "1-page hot tier over several pages must evict: {s:?}");
+        // Re-walk: previously evicted pages re-fault to identical bytes.
+        for v in 0..n {
+            assert_eq!(&*p.neighbors_ref(v), g.neighbors(v), "re-fault node {v}");
+        }
+    }
+
+    #[test]
+    fn prefetch_warms_pages_into_hits() {
+        let mut el = EdgeList::new(600);
+        for v in 0..600u32 {
+            for k in 1..=40u32 {
+                el.push(v, (v + k) % 600);
+            }
+        }
+        el.sort_dedup();
+        let g = Csr::from_edge_list(&el).to_paged(0); // unlimited: nothing evicts
+        let nodes: Vec<NodeId> = (0..600).collect();
+        g.prefetch_pages(&nodes, 4);
+        let faults_after_prefetch = g.tier_stats().unwrap().faults;
+        assert!(faults_after_prefetch > 0);
+        for v in 0..600u32 {
+            let _ = g.neighbors_ref(v);
+        }
+        let s = g.tier_stats().unwrap();
+        assert_eq!(s.faults, faults_after_prefetch, "post-prefetch scans must be all hits");
+        assert!(s.hits > 0);
+        // Prefetch on a resident graph is a no-op.
+        let r = Csr::from_edge_list(&el);
+        r.prefetch_pages(&nodes, 4);
+        assert!(r.tier_stats().is_none());
+    }
+
+    #[test]
+    fn empty_and_all_isolated_graphs_page_cleanly() {
+        let empty = Csr::from_edge_list(&EdgeList::new(0)).to_paged(1);
+        assert_eq!(empty.num_nodes(), 0);
+        let isolated = Csr::from_edge_list(&EdgeList::new(9)).to_paged(1);
+        for v in 0..9 {
+            assert_eq!(&*isolated.neighbors_ref(v), &[] as &[NodeId]);
+        }
     }
 }

@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 use graphgen_plus::cli::{flag, opt, App, CliError, CommandSpec, Parsed};
 use graphgen_plus::config::RunConfig;
 use graphgen_plus::engines::{self, NullSink};
-use graphgen_plus::featurestore::{BackendKind, FeatureService, HotCache, ShardedStore};
+use graphgen_plus::featurestore::{BackendKind, FeatureService, HotCache, ShardedStore, TieredStore};
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::{generator, io, partition};
 use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
@@ -44,6 +44,11 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
         opt("trace-out", "write a Chrome-trace timeline (Perfetto) to this path", None),
         opt("obs-snapshot-secs", "metrics snapshot period in seconds (0=off)", None),
         opt("pin-cores", "pin pool workers to cores, slot i -> core i%cores (true|false)", None),
+        opt(
+            "memory-budget-mb",
+            "tiered-memory budget (MiB) split between feature hot tier and graph page cache; 0=resident (GG_MEMORY_BUDGET_MB also applies)",
+            None,
+        ),
         flag("dump-config", "print the effective config and exit"),
     ]
 }
@@ -78,7 +83,7 @@ fn build_app() -> App {
                     o.push(opt("lr", "learning rate", None));
                     o.push(opt("allreduce", "ring|tree", None));
                     o.push(opt("mode", "concurrent|sequential", None));
-                    o.push(opt("feature-backend", "feature store: procedural|sharded", None));
+                    o.push(opt("feature-backend", "feature store: procedural|sharded|tiered", None));
                     o.push(opt("feature-cache-mb", "hot-node feature cache (MiB, 0=off)", None));
                     o.push(opt("feature-prefetch", "overlap feature gather with training (true|false)", None));
                     o.push(opt("gather-threads", "pool threads reserved for feature gathers (0=auto)", None));
@@ -157,15 +162,43 @@ fn cmd_generate(p: &Parsed) -> Result<()> {
     }
     let mut obs = start_obs(&cfg, p.get("engine").unwrap_or(&cfg.engine));
     let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
-    let g = gen.csr();
+    let mut g = gen.csr();
+    // Pure generation has no feature tier: the whole memory budget goes
+    // to the graph page cache.
+    let budget_mb = graphgen_plus::storage::tier::memory_budget_mb(cfg.memory_budget_mb);
+    if budget_mb > 0 {
+        let (_, graph_bytes) = graphgen_plus::pipeline::split_memory_budget(budget_mb, false, true);
+        g = g.to_paged(graph_bytes);
+        log::info!(
+            "paged graph: {} cold (compressed), {} resident budget",
+            fmt_bytes(g.cold_bytes()),
+            fmt_bytes(graph_bytes)
+        );
+    }
     let seeds = seeds_for(&cfg, g.num_nodes());
     let engine = engines::by_name(p.get("engine").unwrap_or(&cfg.engine))?;
     log::info!("graph {}: {} nodes, {} edges", gen.name, g.num_nodes(), g.num_edges());
     let sink = NullSink::default();
     let report = engine.generate(&g, &seeds, &cfg.engine_config()?, &sink)?;
     println!("{}", report.render());
+    print_tier_stats(&g);
     obs.finish()?;
     Ok(())
+}
+
+/// Report hot/cold tier traffic for a paged graph (no-op when resident).
+fn print_tier_stats(g: &graphgen_plus::graph::csr::Csr) {
+    if let Some(s) = g.tier_stats() {
+        println!(
+            "graph tier: {} faults / {} hits ({:.1}% fault rate), {} promotions, {} evictions, {} cold",
+            s.faults,
+            s.hits,
+            s.fault_rate() * 100.0,
+            s.promotions,
+            s.evictions,
+            fmt_bytes(g.cold_bytes())
+        );
+    }
 }
 
 /// Start the per-run observability session and stamp the report header
@@ -250,6 +283,24 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
         .feature_backend
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
+    // Tiered memory: split the budget between the feature hot tier (only
+    // when the tiered backend is selected) and the graph page cache (any
+    // time a budget is set). Budget 0 keeps everything resident.
+    let budget_mb = graphgen_plus::storage::tier::memory_budget_mb(cfg.memory_budget_mb);
+    let (feat_bytes, graph_bytes) = graphgen_plus::pipeline::split_memory_budget(
+        budget_mb,
+        backend == BackendKind::Tiered,
+        budget_mb > 0,
+    );
+    let g = if budget_mb > 0 { g.to_paged(graph_bytes) } else { g };
+    if g.is_paged() {
+        log::info!(
+            "paged graph: {} cold (compressed), {} resident budget",
+            fmt_bytes(g.cold_bytes()),
+            fmt_bytes(graph_bytes)
+        );
+    }
+    let mut tiered_store: Option<std::sync::Arc<TieredStore>> = None;
     let mut features = match backend {
         BackendKind::Procedural => FeatureService::procedural(store),
         BackendKind::Sharded => FeatureService::new(std::sync::Arc::new(ShardedStore::build(
@@ -258,6 +309,17 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
             cfg.workers.max(1),
             cfg.sample_seed,
         ))),
+        BackendKind::Tiered => {
+            let ts = std::sync::Arc::new(TieredStore::build(
+                &store,
+                g.num_nodes(),
+                cfg.workers.max(1),
+                cfg.sample_seed,
+                feat_bytes,
+            ));
+            tiered_store = Some(ts.clone());
+            FeatureService::new(ts)
+        }
     };
     if cfg.feature_cache_mb > 0 {
         let cache = HotCache::from_mb(cfg.feature_cache_mb, spec.dim);
@@ -301,6 +363,19 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
             cs.lookups(),
             cs.hit_rate() * 100.0,
             cs.evictions
+        );
+    }
+    print_tier_stats(&g);
+    if let Some(ts) = &tiered_store {
+        let s = ts.tier_stats();
+        println!(
+            "feature tier: {} faults / {} hits ({:.1}% fault rate), {} promotions, {} evictions, {} cold",
+            s.faults,
+            s.hits,
+            s.fault_rate() * 100.0,
+            s.promotions,
+            s.evictions,
+            fmt_bytes(ts.cold_bytes())
         );
     }
     println!("loss curve (iter, loss):");

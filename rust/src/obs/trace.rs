@@ -48,6 +48,9 @@ pub enum Track {
     SpillFlush,
     /// The spill read-ahead prefetcher thread.
     SpillPrefetch,
+    /// Cold-tier page faults (tiered memory): one marker per promotion
+    /// so paging stalls line up against generation bubbles.
+    TierFault,
     /// Trainer worker `i` of the data-parallel training loop.
     Trainer(u16),
     /// Look-ahead speculator `i` (out-of-order wave claiming).
@@ -69,6 +72,7 @@ impl Track {
             Track::Queue => 2,
             Track::SpillFlush => 3,
             Track::SpillPrefetch => 4,
+            Track::TierFault => 5,
             Track::Trainer(i) => 10 + i as u64,
             Track::Speculator(i) => 40 + i as u64,
             Track::PoolWorker(i) => 100 + (i as u64).min(199),
@@ -84,6 +88,7 @@ impl Track {
             Track::Queue => "queue".into(),
             Track::SpillFlush => "spill-flush".into(),
             Track::SpillPrefetch => "spill-prefetch".into(),
+            Track::TierFault => "tier-fault".into(),
             Track::Trainer(i) => format!("trainer-{i}"),
             Track::Speculator(i) => format!("speculator-{i}"),
             Track::PoolWorker(i) => format!("pool-worker-{i}"),

@@ -110,7 +110,7 @@ impl PipelineReport {
         use crate::util::bytes::{fmt_bytes, fmt_secs};
         let wp = &self.gen.wave_pipeline;
         format!(
-            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% bubble={} stalls[lane={} queue={} gather={}] depth_ctl[eff={} +{}/-{} decisions={}] warmed_waves={} warm_skipped={} queue_max={} feat_remote={} feat_cache={:.0}%",
+            "mode={:?} wall={} gen={} train={} iters={} loss={:.4} acc={:.3} overlap={:.0}% bubble={} stalls[lane={} queue={} gather={}] depth_ctl[eff={} +{}/-{} decisions={}] workers_ctl[eff={} +{}/-{}] warmed_waves={} warm_skipped={} queue_max={} feat_remote={} feat_cache={:.0}%",
             self.mode,
             fmt_secs(self.wall.as_secs_f64()),
             fmt_secs(self.gen.wall.as_secs_f64()),
@@ -127,6 +127,9 @@ impl PipelineReport {
             wp.deepen_steps,
             wp.shallow_steps,
             wp.depth_trace.len(),
+            wp.effective_workers_last,
+            wp.worker_scale_ups,
+            wp.worker_scale_downs,
             self.warmed_waves,
             self.warm_skipped_waves,
             self.queue.max_depth,
@@ -192,6 +195,31 @@ pub fn split_pool_budget_seeded(total: usize, gather_threads: usize) -> (usize, 
     crate::obs::metrics::gauge("pool.gen_threads").set(gen as f64);
     crate::obs::metrics::gauge("pool.gather_threads").set(gather as f64);
     (gen, gather)
+}
+
+/// Split the tiered-memory budget (`--memory-budget-mb`, already
+/// env-resolved via [`crate::storage::tier::memory_budget_mb`]) between
+/// the feature hot tier and the graph page cache, in bytes: half/half
+/// when both sides are tiered, everything to the one side otherwise.
+/// Returns `(feature_bytes, graph_bytes)`; a 0 budget (unlimited) stays
+/// 0 on both sides. The chosen split is published as the
+/// `tier.budget_feature_bytes` / `tier.budget_graph_bytes` gauges.
+pub fn split_memory_budget(
+    total_mb: usize,
+    features_tiered: bool,
+    graph_tiered: bool,
+) -> (u64, u64) {
+    let total = total_mb as u64 * 1024 * 1024;
+    let (feat, graph) = match (total, features_tiered, graph_tiered) {
+        (0, _, _) => (0, 0),
+        (t, true, true) => (t / 2, t - t / 2),
+        (t, true, false) => (t, 0),
+        (t, false, true) => (0, t),
+        (_, false, false) => (0, 0),
+    };
+    crate::obs::metrics::gauge("tier.budget_feature_bytes").set(feat as f64);
+    crate::obs::metrics::gauge("tier.budget_graph_bytes").set(graph as f64);
+    (feat, graph)
 }
 
 /// Run `engine` over `seeds` and train on the produced subgraphs.
@@ -318,6 +346,24 @@ mod tests {
         assert_eq!(split_pool_budget(1, 0), (1, 1));
         assert_eq!(split_pool_budget(1, 5), (1, 1));
         assert_eq!(split_pool_budget(0, 0), (1, 1));
+    }
+
+    #[test]
+    fn memory_budget_splits_by_tiered_sides() {
+        const MB: u64 = 1024 * 1024;
+        // Unlimited budget stays unlimited on both sides.
+        assert_eq!(split_memory_budget(0, true, true), (0, 0));
+        // Both tiered: half each (odd totals round the graph side up).
+        assert_eq!(split_memory_budget(64, true, true), (32 * MB, 32 * MB));
+        assert_eq!(split_memory_budget(1, true, true), (MB / 2, MB - MB / 2));
+        // One side tiered: it gets the whole budget.
+        assert_eq!(split_memory_budget(64, true, false), (64 * MB, 0));
+        assert_eq!(split_memory_budget(64, false, true), (0, 64 * MB));
+        assert_eq!(split_memory_budget(64, false, false), (0, 0));
+        // The chosen split lands on the gauges for snapshots.
+        let (f, g) = split_memory_budget(10, true, true);
+        assert_eq!(crate::obs::metrics::gauge("tier.budget_feature_bytes").get(), f as f64);
+        assert_eq!(crate::obs::metrics::gauge("tier.budget_graph_bytes").get(), g as f64);
     }
 
     #[test]

@@ -8,5 +8,7 @@
 //! overhead experiment.
 
 pub mod spill;
+pub mod tier;
 
 pub use spill::{SpillReport, SpillStore};
+pub use tier::{PageCache, PageStore, PageStoreWriter, TierStats, PAGE_BYTES, PAGE_WORDS};

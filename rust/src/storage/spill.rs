@@ -415,6 +415,8 @@ impl SpillStore {
         });
         self.report.readahead_peak = self.report.readahead_peak.max(peak);
         self.report.readahead_mean = occ_sum as f64 / shards as f64;
+        crate::obs::metrics::gauge("spill.readahead_peak").set(self.report.readahead_peak as f64);
+        crate::obs::metrics::gauge("spill.readahead_mean").set(self.report.readahead_mean);
         self.report.read_time += t0.elapsed();
         result
     }
@@ -488,6 +490,34 @@ mod tests {
         assert_eq!(got, subs);
         plain.cleanup().unwrap();
         comp.cleanup().unwrap();
+    }
+
+    #[test]
+    fn readahead_gauges_mirror_report() {
+        let mut store = SpillStore::create(dir("g"), false).unwrap();
+        for i in 0..3000 {
+            store.write(&sg(i, 20)).unwrap();
+        }
+        store.finish_writes().unwrap();
+        // The gauges are process-global and the other tests in this
+        // module race their own read_all passes against ours — retry
+        // until a pass observes its own values un-interleaved (settles
+        // as soon as the parallel tests drain).
+        let mut ok = false;
+        for _ in 0..100 {
+            store.read_all(|_| Ok(())).unwrap();
+            let peak = crate::obs::metrics::gauge("spill.readahead_peak").get();
+            let mean = crate::obs::metrics::gauge("spill.readahead_mean").get();
+            if peak == store.report().readahead_peak as f64
+                && mean == store.report().readahead_mean
+            {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(ok, "readahead gauges never matched this store's report");
+        store.cleanup().unwrap();
     }
 
     #[test]

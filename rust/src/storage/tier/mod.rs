@@ -1,0 +1,546 @@
+//! Tiered hot/cold memory: a page-granular compressed cold tier on disk
+//! beneath a CLOCK-managed hot tier in RAM.
+//!
+//! GraphScale's thesis (PAPERS.md) is that separating storage from
+//! compute is what unlocks billion-node scale; DistDGL likewise keeps
+//! only hot state resident per worker. This module is the storage half
+//! of that hierarchy, shared by the out-of-core feature backend
+//! ([`crate::featurestore::TieredStore`]) and the paged CSR adjacency
+//! ([`crate::graph::csr::Csr::to_paged`]):
+//!
+//! * [`PageStore`] — the **cold tier**: fixed-target-size row-group
+//!   pages of 4-byte words (f32 feature rows stored as bit patterns,
+//!   u32 adjacency targets stored natively), deflate-compressed with
+//!   the same codec the spill machinery uses, written **once** at load
+//!   to an anonymous temp file and read back with positioned reads
+//!   (`pread`) into pooled page buffers.
+//! * [`PageCache`] — the **hot tier**: a CLOCK-replaced cache of
+//!   decompressed pages under a byte budget. Pages are
+//!   **promoted on access** (a miss faults the page in from the cold
+//!   tier) and **write-once/read-many** — eviction never writes back,
+//!   it just drops the buffer onto a freelist for the next fault.
+//!
+//! Faults are charged to the `tier.fault` span and the
+//! `tier.{faults,promotions,evictions,fault_wait_ns}` metrics, and each
+//! fault drops a marker on the dedicated
+//! [`Track::TierFault`](crate::obs::trace::Track::TierFault) timeline
+//! row so Perfetto shows paging stalls next to generation bubbles.
+//!
+//! The tier is **value-invariant** by construction: deflate is
+//! lossless and pages are immutable, so a faulted page is always
+//! byte-identical to the one written at load — the property the
+//! equivalence tests in `tests/featurestore.rs` pin across memory
+//! budgets and thread counts.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::fxhash::FxHashMap;
+
+/// Target uncompressed page size in bytes. Row groups are packed up to
+/// this size; a single row (a hub's neighbor list, a very wide feature
+/// row) larger than the target gets one oversized page of its own.
+pub const PAGE_BYTES: usize = 64 * 1024;
+
+/// [`PAGE_BYTES`] in 4-byte words (the cold tier's element unit).
+pub const PAGE_WORDS: usize = PAGE_BYTES / 4;
+
+fn faults_counter() -> &'static crate::obs::metrics::Counter {
+    static C: OnceLock<crate::obs::metrics::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::metrics::counter("tier.faults"))
+}
+
+fn promotions_counter() -> &'static crate::obs::metrics::Counter {
+    static C: OnceLock<crate::obs::metrics::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::metrics::counter("tier.promotions"))
+}
+
+fn evictions_counter() -> &'static crate::obs::metrics::Counter {
+    static C: OnceLock<crate::obs::metrics::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::metrics::counter("tier.evictions"))
+}
+
+fn fault_wait_hist() -> &'static crate::obs::metrics::Hist {
+    static H: OnceLock<crate::obs::metrics::Hist> = OnceLock::new();
+    H.get_or_init(|| crate::obs::metrics::histogram("tier.fault_wait_ns"))
+}
+
+/// Location and size of one compressed page in the cold-tier file.
+#[derive(Debug, Clone, Copy)]
+struct PageMeta {
+    offset: u64,
+    /// Compressed length in bytes.
+    clen: u32,
+    /// Uncompressed length in words.
+    uwords: u32,
+}
+
+/// Write-once cold tier: compressed pages in an anonymous temp file.
+///
+/// The backing file is unlinked immediately after creation (the handle
+/// keeps it alive), so cold-tier storage can never leak past process
+/// exit regardless of how the process dies.
+#[derive(Debug)]
+pub struct PageStore {
+    file: File,
+    pages: Vec<PageMeta>,
+    cold_bytes: u64,
+    raw_bytes: u64,
+}
+
+/// Sequential page writer (the load-time half of [`PageStore`]).
+#[derive(Debug)]
+pub struct PageStoreWriter {
+    file: File,
+    pages: Vec<PageMeta>,
+    offset: u64,
+    scratch: Vec<u8>,
+    raw_bytes: u64,
+}
+
+impl PageStoreWriter {
+    /// Open a fresh anonymous cold-tier file.
+    pub fn create() -> Result<Self> {
+        static UNIQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "gg-tier-{}-{}.cold",
+            std::process::id(),
+            UNIQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = std::fs::OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("create cold tier {}", path.display()))?;
+        // Unlink now; the open handle keeps the data reachable.
+        let _ = std::fs::remove_file(&path);
+        Ok(Self { file, pages: Vec::new(), offset: 0, scratch: Vec::new(), raw_bytes: 0 })
+    }
+
+    /// Compress and append one page of words; returns its page id.
+    pub fn push_words(&mut self, words: &[u32]) -> Result<u32> {
+        self.scratch.clear();
+        let mut enc = flate2::write::DeflateEncoder::new(
+            std::mem::take(&mut self.scratch),
+            flate2::Compression::fast(),
+        );
+        for w in words {
+            enc.write_all(&w.to_le_bytes())?;
+        }
+        self.scratch = enc.finish().context("compress cold page")?;
+        self.file
+            .write_all_at(&self.scratch, self.offset)
+            .context("write cold page")?;
+        let id = self.pages.len() as u32;
+        self.pages.push(PageMeta {
+            offset: self.offset,
+            clen: self.scratch.len() as u32,
+            uwords: words.len() as u32,
+        });
+        self.offset += self.scratch.len() as u64;
+        self.raw_bytes += words.len() as u64 * 4;
+        Ok(id)
+    }
+
+    /// Freeze into the read-only store.
+    pub fn finish(self) -> PageStore {
+        PageStore {
+            file: self.file,
+            pages: self.pages,
+            cold_bytes: self.offset,
+            raw_bytes: self.raw_bytes,
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread compressed-read scratch, reused across faults so the
+    /// steady-state fault path allocates nothing once warm.
+    static READ_SCRATCH: std::cell::RefCell<Vec<u8>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl PageStore {
+    pub fn num_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Uncompressed size of page `id` in words.
+    pub fn page_words(&self, id: u32) -> usize {
+        self.pages[id as usize].uwords as usize
+    }
+
+    /// Compressed bytes on disk across all pages.
+    pub fn cold_bytes(&self) -> u64 {
+        self.cold_bytes
+    }
+
+    /// Uncompressed bytes across all pages.
+    pub fn raw_bytes(&self) -> u64 {
+        self.raw_bytes
+    }
+
+    /// Fault page `id` from the cold tier: positioned read of the
+    /// compressed bytes, inflate, decode into `out` (cleared first).
+    /// Charged to the `tier.fault` span / metrics by [`PageCache`]; this
+    /// raw read is also usable directly (tests, prefetchers).
+    pub fn read_page_into(&self, id: u32, out: &mut Vec<u32>) -> Result<()> {
+        let meta = self.pages[id as usize];
+        READ_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.resize(meta.clen as usize, 0);
+            self.file
+                .read_exact_at(&mut scratch, meta.offset)
+                .context("read cold page")?;
+            out.clear();
+            out.reserve(meta.uwords as usize);
+            let mut dec = flate2::read::DeflateDecoder::new(&scratch[..]);
+            let mut word = [0u8; 4];
+            for _ in 0..meta.uwords {
+                dec.read_exact(&mut word).context("inflate cold page")?;
+                out.push(u32::from_le_bytes(word));
+            }
+            Ok(())
+        })
+    }
+}
+
+/// Point-in-time hot-tier counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Hot-tier hits (page already resident).
+    pub hits: u64,
+    /// Cold-tier faults (page read + decompressed).
+    pub faults: u64,
+    /// Pages promoted into the hot tier (≤ faults: racing faults for
+    /// the same page promote once).
+    pub promotions: u64,
+    /// Pages evicted by the CLOCK sweep (never written back — the cold
+    /// tier is write-once).
+    pub evictions: u64,
+}
+
+impl TierStats {
+    /// Faults per access (0 when the tier was never touched).
+    pub fn fault_rate(&self) -> f64 {
+        let total = self.hits + self.faults;
+        if total == 0 {
+            0.0
+        } else {
+            self.faults as f64 / total as f64
+        }
+    }
+}
+
+struct CacheInner {
+    map: FxHashMap<u32, u32>,
+    /// Slot → page id, parallel to `refbit` and `slots`.
+    page_of: Vec<u32>,
+    refbit: Vec<bool>,
+    slots: Vec<Arc<Vec<u32>>>,
+    hand: usize,
+    /// Reclaimed page buffers (pooled: eviction feeds the next fault).
+    freelist: Vec<Vec<u32>>,
+}
+
+/// CLOCK-replaced hot tier over a [`PageStore`].
+///
+/// Readers hold pages by `Arc`, so a page a gather is still copying out
+/// of survives its own eviction; the buffer returns to the freelist
+/// when the last reader drops it (or is simply freed).
+pub struct PageCache {
+    cap: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    faults: AtomicU64,
+    promotions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl std::fmt::Debug for PageCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PageCache")
+            .field("cap", &self.cap)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl PageCache {
+    /// Cache holding at most `cap_pages` resident pages.
+    pub fn new(cap_pages: usize) -> Self {
+        Self {
+            cap: cap_pages.max(1),
+            inner: Mutex::new(CacheInner {
+                map: FxHashMap::default(),
+                page_of: Vec::new(),
+                refbit: Vec::new(),
+                slots: Vec::new(),
+                hand: 0,
+                freelist: Vec::new(),
+            }),
+            hits: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Size by byte budget: `budget_bytes / PAGE_BYTES` resident pages,
+    /// clamped to `[1, total_pages]`. A budget of 0 means **unlimited**
+    /// (every page may stay resident — the in-memory baseline).
+    pub fn with_budget(budget_bytes: u64, total_pages: usize) -> Self {
+        let total = total_pages.max(1);
+        let cap = if budget_bytes == 0 {
+            total
+        } else {
+            ((budget_bytes / PAGE_BYTES as u64) as usize).clamp(1, total)
+        };
+        Self::new(cap)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn stats(&self) -> TierStats {
+        TierStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            faults: self.faults.load(Ordering::Relaxed),
+            promotions: self.promotions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Resident bytes currently pinned by the hot tier.
+    pub fn resident_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.slots.iter().map(|s| s.len() as u64 * 4).sum()
+    }
+
+    /// Get page `page`, faulting it in from `store` on a miss
+    /// (promotion-on-access). The fault's read+decompress runs **outside**
+    /// the cache lock, so concurrent faults for different pages overlap;
+    /// a racing fault for the same page is detected at insert and the
+    /// duplicate decompress is simply discarded (pages are immutable, so
+    /// either copy is correct).
+    pub fn get(&self, page: u32, store: &PageStore) -> Result<Arc<Vec<u32>>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(&slot) = inner.map.get(&page) {
+                let s = slot as usize;
+                inner.refbit[s] = true;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(inner.slots[s].clone());
+            }
+        }
+        // Cold-tier fault: pooled buffer, positioned read, inflate.
+        let t0 = Instant::now();
+        let _span = crate::obs::trace::span("tier.fault").arg("page", page as f64);
+        let mut buf = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.freelist.pop().unwrap_or_default()
+        };
+        store.read_page_into(page, &mut buf)?;
+        let wait_ns = t0.elapsed().as_nanos() as u64;
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        faults_counter().inc();
+        fault_wait_hist().record_ns(wait_ns);
+        crate::obs::trace::instant_on(
+            crate::obs::trace::Track::TierFault,
+            "tier.fault",
+            &[("page", page as f64), ("wait_us", wait_ns as f64 / 1e3)],
+        );
+        let arc = Arc::new(buf);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&slot) = inner.map.get(&page) {
+            // A racing fault promoted this page while we decompressed;
+            // keep the resident copy, reclaim ours.
+            let s = slot as usize;
+            inner.refbit[s] = true;
+            let resident = inner.slots[s].clone();
+            if let Ok(buf) = Arc::try_unwrap(arc) {
+                inner.freelist.push(buf);
+            }
+            return Ok(resident);
+        }
+        self.promotions.fetch_add(1, Ordering::Relaxed);
+        promotions_counter().inc();
+        if inner.slots.len() < self.cap {
+            let s = inner.slots.len();
+            inner.page_of.push(page);
+            inner.refbit.push(true);
+            inner.slots.push(arc.clone());
+            inner.map.insert(page, s as u32);
+        } else {
+            let s = Self::evict(&mut inner, self.cap);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            evictions_counter().inc();
+            inner.page_of[s] = page;
+            inner.refbit[s] = true;
+            let old = std::mem::replace(&mut inner.slots[s], arc.clone());
+            // Reclaim the victim's buffer if no reader still holds it.
+            if let Ok(buf) = Arc::try_unwrap(old) {
+                inner.freelist.push(buf);
+            }
+            inner.map.insert(page, s as u32);
+        }
+        Ok(arc)
+    }
+
+    /// CLOCK sweep: advance the hand clearing reference bits until an
+    /// unreferenced victim is found (terminates within two sweeps).
+    fn evict(inner: &mut CacheInner, cap: usize) -> usize {
+        loop {
+            let s = inner.hand;
+            inner.hand = (inner.hand + 1) % cap;
+            if inner.refbit[s] {
+                inner.refbit[s] = false;
+            } else {
+                let old = inner.page_of[s];
+                inner.map.remove(&old);
+                return s;
+            }
+        }
+    }
+}
+
+/// Effective memory budget in MiB: the config value when set, else the
+/// `GG_MEMORY_BUDGET_MB` environment opt-in, else 0 (unlimited —
+/// everything stays resident, the pre-tier behaviour).
+pub fn memory_budget_mb(config_mb: usize) -> usize {
+    if config_mb > 0 {
+        return config_mb;
+    }
+    std::env::var("GG_MEMORY_BUDGET_MB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with_pages(pages: &[Vec<u32>]) -> PageStore {
+        let mut w = PageStoreWriter::create().unwrap();
+        for p in pages {
+            w.push_words(p).unwrap();
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn pages_roundtrip_byte_identically() {
+        let pages: Vec<Vec<u32>> = (0..5u32)
+            .map(|p| (0..100 + p * 37).map(|i| i.wrapping_mul(0x9e37_79b9) ^ p).collect())
+            .collect();
+        let store = store_with_pages(&pages);
+        assert_eq!(store.num_pages(), 5);
+        assert!(store.cold_bytes() > 0);
+        let mut buf = Vec::new();
+        for (i, expect) in pages.iter().enumerate() {
+            store.read_page_into(i as u32, &mut buf).unwrap();
+            assert_eq!(&buf, expect, "page {i} changed through the cold tier");
+        }
+        // Repeated and out-of-order reads stay identical (pread is
+        // stateless).
+        store.read_page_into(3, &mut buf).unwrap();
+        assert_eq!(&buf, &pages[3]);
+        store.read_page_into(0, &mut buf).unwrap();
+        assert_eq!(&buf, &pages[0]);
+    }
+
+    #[test]
+    fn float_bit_patterns_survive_the_tier() {
+        let rows: Vec<u32> = [1.5f32, -0.0, 3.25e-30, f32::MIN_POSITIVE, 7.0e30]
+            .iter()
+            .map(|f| f.to_bits())
+            .collect();
+        let store = store_with_pages(&[rows.clone()]);
+        let mut buf = Vec::new();
+        store.read_page_into(0, &mut buf).unwrap();
+        let back: Vec<f32> = buf.iter().map(|&w| f32::from_bits(w)).collect();
+        let orig: Vec<f32> = rows.iter().map(|&w| f32::from_bits(w)).collect();
+        assert_eq!(back, orig);
+    }
+
+    #[test]
+    fn cache_promotes_hits_and_evicts_under_budget() {
+        let pages: Vec<Vec<u32>> = (0..6u32).map(|p| vec![p; 64]).collect();
+        let store = store_with_pages(&pages);
+        let cache = PageCache::new(2);
+        // First touch of each page faults + promotes.
+        for p in 0..4u32 {
+            let got = cache.get(p, &store).unwrap();
+            assert_eq!(&*got, &pages[p as usize]);
+        }
+        let s = cache.stats();
+        assert_eq!(s.faults, 4);
+        assert_eq!(s.promotions, 4);
+        assert_eq!(s.evictions, 2, "capacity 2 must evict to admit pages 3 and 4");
+        // Page 3 was just promoted: a re-read is a hit.
+        cache.get(3, &store).unwrap();
+        assert_eq!(cache.stats().hits, 1);
+        assert!(cache.stats().fault_rate() > 0.0 && cache.stats().fault_rate() < 1.0);
+    }
+
+    #[test]
+    fn evicted_page_refaults_to_identical_bytes() {
+        let pages: Vec<Vec<u32>> = (0..3u32)
+            .map(|p| (0..500u32).map(|i| i.wrapping_mul(p + 11)).collect())
+            .collect();
+        let store = store_with_pages(&pages);
+        let cache = PageCache::new(1);
+        let first = cache.get(0, &store).unwrap().to_vec();
+        cache.get(1, &store).unwrap(); // evicts 0
+        cache.get(2, &store).unwrap(); // evicts 1
+        assert!(cache.stats().evictions >= 2);
+        let again = cache.get(0, &store).unwrap(); // re-fault
+        assert_eq!(&*again, &first, "promoted-then-evicted page changed on re-fault");
+    }
+
+    #[test]
+    fn with_budget_sizes_and_zero_means_unlimited() {
+        assert_eq!(PageCache::with_budget(0, 100).capacity(), 100);
+        assert_eq!(PageCache::with_budget(PAGE_BYTES as u64 * 7, 100).capacity(), 7);
+        assert_eq!(PageCache::with_budget(1, 100).capacity(), 1, "tiny budget clamps to one page");
+        assert_eq!(PageCache::with_budget(u64::MAX, 10).capacity(), 10, "cap never exceeds pages");
+    }
+
+    #[test]
+    fn concurrent_readers_see_identical_pages() {
+        let pages: Vec<Vec<u32>> = (0..8u32)
+            .map(|p| (0..PAGE_WORDS as u32 / 8).map(|i| i ^ (p << 20)).collect())
+            .collect();
+        let store = store_with_pages(&pages);
+        let cache = PageCache::new(2); // far below working set: constant churn
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let (store, cache, pages) = (&store, &cache, &pages);
+                s.spawn(move || {
+                    for i in 0..64u32 {
+                        let p = (i * (t + 1)) % 8;
+                        let got = cache.get(p, store).unwrap();
+                        assert_eq!(&*got, &pages[p as usize], "thread {t} page {p}");
+                    }
+                });
+            }
+        });
+        assert!(cache.stats().evictions > 0);
+    }
+
+    #[test]
+    fn budget_env_fallback() {
+        // Config value wins outright; only 0 consults the environment.
+        assert_eq!(memory_budget_mb(64), 64);
+        // (The env branch is exercised by CI's GG_MEMORY_BUDGET_MB re-run;
+        // don't mutate process env here — tests share the process.)
+    }
+}

@@ -56,6 +56,44 @@ fn all_engines_agree_across_graph_families() {
     }
 }
 
+/// Tiered-memory acceptance: running every engine against a *paged* CSR
+/// (cold adjacency tier, tiny page-cache budget) produces exactly the
+/// subgraphs the resident CSR does — paging edge targets out of core is
+/// invisible to sampling.
+#[test]
+fn all_engines_agree_on_paged_graph_across_budgets() {
+    let spec = "rmat:n=1024,e=16384";
+    let seeds: Vec<NodeId> = (0..48).collect();
+    let mut c = cfg(4, vec![4, 3]);
+    // Own spill dir: the graphgen baseline spills to disk and this test
+    // runs concurrently with the other cfg(4, ..) tests.
+    c.spill_dir =
+        Some(std::env::temp_dir().join(format!("gg-eq-paged-{}", std::process::id())));
+    let g = generator::from_spec(spec, 11).unwrap().csr();
+    let reference = {
+        let sink = CollectSink::default();
+        by_name("graphgen+").unwrap().generate(&g, &seeds, &c, &sink).unwrap();
+        sink.take_sorted()
+    };
+    // One-page budget forces constant fault/evict churn; u64::MAX keeps
+    // everything hot after the first fault. Both must match resident.
+    for budget in [1u64, u64::MAX] {
+        let paged = g.to_paged(budget);
+        assert!(paged.is_paged());
+        for engine in ["graphgen+", "graphgen", "agl", "sql-like"] {
+            let sink = CollectSink::default();
+            by_name(engine).unwrap().generate(&paged, &seeds, &c, &sink).unwrap();
+            assert_eq!(
+                sink.take_sorted(),
+                reference,
+                "{engine} diverged on paged graph (budget={budget})"
+            );
+        }
+        let ts = paged.tier_stats().unwrap();
+        assert!(ts.faults > 0, "paged run must fault pages in: {ts:?}");
+    }
+}
+
 #[test]
 fn output_is_invariant_to_cluster_width() {
     let seeds: Vec<NodeId> = (0..64).collect();

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use graphgen_plus::engines::{by_name, CollectSink, EngineConfig};
 use graphgen_plus::featurestore::{
-    fetch, FeatureBackend, FeatureService, HotCache, ShardedStore,
+    fetch, FeatureBackend, FeatureService, HotCache, ShardedStore, TieredStore,
 };
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::generator;
@@ -82,6 +82,85 @@ fn property_sharded_is_byte_identical_across_generators() {
     });
 }
 
+/// Tentpole acceptance: the tiered out-of-core backend returns
+/// byte-identical rows to the fully resident `ShardedStore` at every
+/// memory budget (unlimited, half the working set, a tenth of it) and
+/// every gather thread count — paging is purely a placement decision.
+#[test]
+fn tiered_gathers_byte_identical_across_budgets_and_threads() {
+    let gen = generator::from_spec("planted:n=4096,e=32768,c=6", 17).unwrap();
+    let n = gen.edges.num_nodes;
+    let dim = 24usize;
+    let store = store_for(&gen, dim, 11);
+    let sharded = ShardedStore::build(&store, n, 4, 77);
+    let working_set = n as u64 * dim as u64 * 4;
+    for budget in [0, working_set / 2, working_set / 10] {
+        let tiered = TieredStore::build(&store, n, 4, 77, budget);
+        for threads in [1usize, 2, 8] {
+            // Mixed access pattern: a dense sweep (every page) plus a
+            // strided re-read (promotion hits) per thread count.
+            let sweep: Vec<u32> = (0..n).collect();
+            let strided: Vec<u32> = (0..n).step_by(7).chain((0..n).step_by(3)).collect();
+            for ids in [&sweep, &strided] {
+                let mut a = vec![0.0f32; ids.len() * dim];
+                let mut b = vec![0.0f32; ids.len() * dim];
+                sharded.gather_into_budget(ids, &mut a, threads);
+                tiered.gather_into_budget(ids, &mut b, threads);
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "budget={budget} threads={threads}: tiered rows differ"
+                );
+            }
+        }
+        // Labels and ownership are budget-independent.
+        for v in (0..n).step_by(13) {
+            assert_eq!(FeatureBackend::label(&sharded, v), FeatureBackend::label(&tiered, v));
+            assert_eq!(sharded.owner_of(v), tiered.owner_of(v));
+        }
+        if budget == working_set / 10 {
+            let ts = tiered.tier_stats();
+            assert!(ts.evictions > 0, "a tenth-of-working-set budget must evict: {ts:?}");
+            assert!(ts.faults > 0);
+        }
+    }
+}
+
+/// A page that was promoted hot, then evicted by capacity pressure,
+/// must re-fault from the cold tier to the exact same bytes (write-once
+/// read-many: eviction never writes back, so nothing can drift).
+#[test]
+fn tiered_promoted_then_evicted_page_refaults_identical_bytes() {
+    let store = FeatureStore::hashed(64, 4, 23);
+    let n = 8192u32;
+    // Budget of one page: touching any second page must evict the first.
+    let tiered = TieredStore::build(&store, n, 2, 5, 1);
+    assert_eq!(tiered.hot_capacity_pages(), 1);
+    assert!(tiered.num_pages() >= 4, "need several pages to thrash");
+    let mut expect = vec![0.0f32; 64];
+    let mut got = vec![0.0f32; 64];
+    // Three passes over alternating ends of the id space: every page is
+    // promoted, evicted, and re-faulted repeatedly.
+    for pass in 0..3 {
+        for v in (0..n).step_by(257).chain((0..n).rev().step_by(251)) {
+            store.write_feature(v, &mut expect);
+            tiered.write_feature(v, &mut got);
+            assert_eq!(
+                expect.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "pass {pass}: row {v} drifted after eviction"
+            );
+        }
+    }
+    let ts = tiered.tier_stats();
+    assert!(ts.evictions > 0, "single-page budget must evict: {ts:?}");
+    assert!(
+        ts.faults > tiered.num_pages() as u64,
+        "pages must re-fault after eviction, not just cold-load once: {ts:?}"
+    );
+    assert!(ts.promotions >= ts.evictions);
+}
+
 /// Backend swap is invisible to batch materialization: procedural,
 /// sharded, and sharded+cache services produce bit-identical batches.
 #[test]
@@ -97,6 +176,11 @@ fn materialized_batches_identical_across_backends() {
     let sharded = FeatureService::new(Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 7)));
     let cached = FeatureService::new(Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 7)))
         .with_cache(HotCache::new(256, s.dim));
+    // Out-of-core backend at a budget far below the working set: pages
+    // fault and evict under the same batches, bytes must not change.
+    let ws = g.num_nodes() as u64 * s.dim as u64 * 4;
+    let tiered =
+        FeatureService::new(Arc::new(TieredStore::build(&store, g.num_nodes(), 4, 7, ws / 10)));
     for (i, chunk) in subgraphs.chunks(s.batch).take(4).enumerate() {
         let a = procedural.materialize(s, chunk, 0).unwrap();
         // Both sharded services see every chunk twice so their traffic
@@ -106,10 +190,12 @@ fn materialized_batches_identical_across_backends() {
         let b2 = sharded.materialize(s, chunk, 1).unwrap();
         let c = cached.materialize(s, chunk, 2).unwrap();
         let c2 = cached.materialize(s, chunk, 2).unwrap();
+        let t = tiered.materialize(s, chunk, 1).unwrap();
         assert_eq!(a, b, "batch {i}: sharded differs from procedural");
         assert_eq!(b, b2, "batch {i}: sharded not deterministic");
         assert_eq!(a, c, "batch {i}: cached differs from procedural");
         assert_eq!(a, c2, "batch {i}: warm cache changed bytes");
+        assert_eq!(a, t, "batch {i}: tiered differs from procedural");
     }
     // Procedural: zero remote traffic. Sharded: real traffic, bulk msgs.
     assert_eq!(procedural.fabric_stats().total_bytes, 0);
@@ -248,10 +334,14 @@ fn training_loss_curve_identical_across_backends() {
     let tcfg = TrainConfig { replicas: 2, curve_every: 1, ..Default::default() };
     let engine = by_name("graphgen+").unwrap();
     let mut curves = Vec::new();
+    // Tiered at a tenth of the feature working set: the dataset no
+    // longer fits the hot tier, yet the loss curve must be bit-equal.
+    let ws = g.num_nodes() as u64 * mspec.dim as u64 * 4;
     for service in [
         FeatureService::procedural(store.clone()),
         FeatureService::new(Arc::new(ShardedStore::build(&store, g.num_nodes(), 4, 21)))
             .with_cache(HotCache::new(1024, mspec.dim)),
+        FeatureService::new(Arc::new(TieredStore::build(&store, g.num_nodes(), 4, 21, ws / 10))),
     ] {
         let r = run_pipeline(
             &g,
@@ -267,7 +357,9 @@ fn training_loss_curve_identical_across_backends() {
         assert_eq!(r.train.iterations, 6);
         curves.push((r.train.loss_curve.clone(), r.train.params.clone()));
     }
-    assert_eq!(curves[0].0, curves[1].0, "loss curves must be identical");
-    assert_eq!(curves[0].1, curves[1].1, "trained params must be identical");
+    assert_eq!(curves[0].0, curves[1].0, "sharded loss curve must be identical");
+    assert_eq!(curves[0].1, curves[1].1, "sharded trained params must be identical");
+    assert_eq!(curves[0].0, curves[2].0, "tiered loss curve must be identical");
+    assert_eq!(curves[0].1, curves[2].1, "tiered trained params must be identical");
     runtime.shutdown();
 }

@@ -228,8 +228,13 @@ fn adaptive_controller_shallows_under_backpressure_and_traces() {
             (1..=depth as u32).contains(&d.depth),
             "effective depth left [1, {depth}]: {d:?}"
         );
+        assert!(
+            (1..=2u32).contains(&d.workers) && d.workers <= d.depth,
+            "effective workers left [1, min(2, depth)]: {d:?}"
+        );
     }
     assert!((1..=depth as u32).contains(&wp.effective_depth_last), "{wp:?}");
+    assert!((1..=2u32).contains(&wp.effective_workers_last), "{wp:?}");
     // Per-sequence credits and the effective-depth histogram count the
     // same waves on the same axis: every wave but the inline first.
     let occ_total: u64 = wp.occupancy.iter().sum();

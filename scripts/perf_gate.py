@@ -1,10 +1,11 @@
 #!/usr/bin/env python3
-"""CI perf gate over the E1/E6/E7/E2 trajectory files.
+"""CI perf gate over the E1/E6/E7/E2/E5 trajectory files.
 
 Usage: perf_gate.py <prev BENCH_e1.json> <cur BENCH_e1.json> \
                     [<prev BENCH_e6.json> <cur BENCH_e6.json> \
                      [<prev BENCH_e7.json> <cur BENCH_e7.json> \
-                      [<prev BENCH_e2.json> <cur BENCH_e2.json>]]]
+                      [<prev BENCH_e2.json> <cur BENCH_e2.json> \
+                       [<prev BENCH_e5.json> <cur BENCH_e5.json>]]]]
 
 Compares graphgen+ generation throughput (nodes/sec, 1-core wall), —
 when the e6 pair is given — end-to-end pipeline iterations/sec, — when
@@ -14,6 +15,12 @@ prefix scans; lower is better) against the previous main run's
 artifacts, failing on a regression larger than THRESHOLD.
 Missing/unreadable previous data skips that gate (first run, expired
 artifact) rather than failing it.
+
+The e7 and e5 trajectories also carry the tiered-memory out-of-core
+scale points: their paged-vs-resident throughput ratios
+("iters_per_sec_ratio", higher is better) are gated both against the
+previous run and against the absolute floor TIER_MIN_RATIO. Baselines
+written before the tier existed simply lack the keys and skip.
 """
 
 import json
@@ -33,6 +40,11 @@ E7_METRIC = "total_per_batch_s"
 # the decoupled-lookback scan spine's end-to-end cost (lower is better).
 E2_SCALE = "large"
 E2_METRIC = "csr_build_ms_parallel"
+# Tiered-memory out-of-core points (e7 "tier", e5 "out_of_core"): the
+# paged side must retain at least this fraction of resident throughput
+# no matter what the baseline says — a hard floor on paging overhead.
+TIER_MIN_RATIO = 0.02
+TIER_METRIC = "iters_per_sec_ratio"
 
 
 def load(path):
@@ -89,8 +101,29 @@ def check(label, prev, cur, failures, lower_is_better=False):
         )
 
 
+def check_tier_ratio(label, prev_tier, cur_tier, failures):
+    """Gate one out-of-core scale point (a "tier"/"out_of_core" sub-dict
+    holding TIER_METRIC, higher is better): relative regression vs the
+    previous run when it recorded the point, plus the absolute floor on
+    the current value. Pre-tier baselines lack the key and skip the
+    relative check; a current run missing it means the bench broke."""
+    c = (cur_tier or {}).get(TIER_METRIC)
+    if c is None:
+        failures.append(f"{label}: current trajectory lacks {TIER_METRIC}")
+        return
+    if c < TIER_MIN_RATIO:
+        failures.append(
+            f"{label} {TIER_METRIC} {c:.4f} below absolute floor {TIER_MIN_RATIO}"
+        )
+    p = (prev_tier or {}).get(TIER_METRIC)
+    if p is None:
+        print(f"perf gate: no previous {label} {TIER_METRIC}; floor-only")
+        return
+    check(f"{label} {TIER_METRIC}", p, c, failures)
+
+
 def main() -> int:
-    if len(sys.argv) not in (3, 5, 7, 9):
+    if len(sys.argv) not in (3, 5, 7, 9, 11):
         print(__doc__)
         return 2
     failures = []
@@ -137,8 +170,14 @@ def main() -> int:
                 failures,
                 lower_is_better=True,
             )
+        check_tier_ratio(
+            "e7 tier",
+            (prev7 or {}).get("tier"),
+            cur7.get("tier"),
+            failures,
+        )
 
-    if len(sys.argv) == 9:
+    if len(sys.argv) >= 9:
         prev2 = load(sys.argv[7])
         cur2 = load_current(sys.argv[8], "e2")
         if cur2 is None:
@@ -153,6 +192,18 @@ def main() -> int:
                 failures,
                 lower_is_better=True,
             )
+
+    if len(sys.argv) == 11:
+        prev5 = load(sys.argv[9])
+        cur5 = load_current(sys.argv[10], "e5")
+        if cur5 is None:
+            return 1
+        check_tier_ratio(
+            "e5 out_of_core",
+            (prev5 or {}).get("out_of_core"),
+            cur5.get("out_of_core"),
+            failures,
+        )
 
     for f_ in failures:
         print(f"PERF REGRESSION: {f_}")
