@@ -149,6 +149,54 @@ fn main() {
         gg / plus
     );
 
+    // --- measured multi-process cluster point ---------------------------
+    // The modeled cluster time above is a what-if; this one is *measured*:
+    // a real coordinator + 4 `gg-worker` processes over Unix sockets,
+    // byte-equivalent to the in-process runs. Recorded under "dist" in
+    // BENCH_e1.json so CI tracks real cluster_time_ms next to the model.
+    let dist_json = match option_env!("CARGO_BIN_EXE_graphgen-plus") {
+        None => {
+            println!("  dist: worker binary path unavailable at build time; skipping");
+            None
+        }
+        Some(bin) => {
+            use graphgen_plus::cluster::proc::{run_coordinator, DistOptions, DistPlan};
+            use graphgen_plus::config::RunConfig;
+            let processes = 4usize;
+            let rcfg = RunConfig {
+                graph: spec.to_string(),
+                graph_seed: 1,
+                num_seeds: n_seeds,
+                workers: cfg.workers,
+                // Enough waves that all processes pull work.
+                wave_size: (n_seeds / (processes * 4)).max(64),
+                fanout: cfg.fanout.to_string(),
+                ..Default::default()
+            };
+            let run_dir = std::env::temp_dir().join(format!("gg-e1-dist-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&run_dir);
+            let plan = DistPlan::from_config(&rcfg, g.num_nodes()).unwrap();
+            let opts = DistOptions::new(processes, run_dir.clone(), bin.into());
+            let res = run_coordinator(&plan, &opts, |_| Ok(()));
+            let _ = std::fs::remove_dir_all(&run_dir);
+            match res {
+                Ok(r) => {
+                    println!(
+                        "  measured {processes}-process cluster time: {} ({}), shipped {}",
+                        fmt_secs(r.wall.as_secs_f64()),
+                        fmt_rate(r.nodes_per_sec(), "nodes"),
+                        fmt_bytes(r.result_bytes),
+                    );
+                    Some(r.to_json())
+                }
+                Err(e) => {
+                    eprintln!("  dist measurement failed: {e:#}");
+                    None
+                }
+            }
+        }
+    };
+
     // --- machine-readable trajectory file (BENCH_e1.json) ---------------
     let mut engines_json = Json::obj();
     for r in &rows_out {
@@ -184,6 +232,9 @@ fn main() {
         )
         .set("speedup_vs_sql_like_wall", sql / plus)
         .set("speedup_vs_graphgen_wall", gg / plus);
+    if let Some(d) = dist_json {
+        out.set("dist", d);
+    }
     let path = std::env::var("GG_BENCH_E1_JSON").unwrap_or_else(|_| "BENCH_e1.json".into());
     match std::fs::write(&path, out.to_pretty()) {
         Ok(()) => println!("  wrote {path}"),

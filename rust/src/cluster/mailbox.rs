@@ -1,10 +1,96 @@
 //! Typed point-to-point messaging between simulated workers, with every
 //! transfer charged to the [`super::Fabric`].
+//!
+//! Also home of the shared delivery-failure vocabulary: the in-process
+//! endpoints here and the real socket transport in [`super::proc`] both
+//! surface [`MailboxError`], and both drive retries through the same
+//! [`Backoff`] / [`retry_with_backoff`] helpers, so "timed out" vs "peer
+//! is gone" mean the same thing on either side of a process boundary.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::Fabric;
+
+/// Why a receive (or retried operation) failed. `Timeout` is transient —
+/// the caller may retry, check liveness, or give up; `Disconnected` is
+/// terminal — the peer closed its end and no message will ever arrive.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum MailboxError {
+    #[error("receive timed out after {0:?}")]
+    Timeout(Duration),
+    #[error("peer disconnected: {0}")]
+    Disconnected(String),
+}
+
+impl MailboxError {
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, MailboxError::Timeout(_))
+    }
+}
+
+/// Exponential backoff schedule: delays start at `initial`, double each
+/// step, and saturate at `cap`. Used between connect/send retries and
+/// between receive polls (ISSUE 9's transport hardening).
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    next: Duration,
+    cap: Duration,
+}
+
+impl Backoff {
+    pub fn new(initial: Duration, cap: Duration) -> Self {
+        Self { next: initial.max(Duration::from_micros(50)), cap }
+    }
+
+    /// A sensible default for local-socket work: 1 ms doubling to 100 ms.
+    pub fn for_transport() -> Self {
+        Self::new(Duration::from_millis(1), Duration::from_millis(100))
+    }
+
+    /// The delay to wait before the next attempt (and advance the
+    /// schedule).
+    pub fn step(&mut self) -> Duration {
+        let d = self.next;
+        self.next = (self.next * 2).min(self.cap);
+        d
+    }
+
+    /// Sleep one backoff step, clamped so the caller never sleeps past
+    /// `deadline`. Returns `false` when the deadline has already passed
+    /// (nothing slept — the caller should stop retrying).
+    pub fn sleep_before(&mut self, deadline: Instant) -> bool {
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        std::thread::sleep(self.step().min(deadline - now));
+        true
+    }
+}
+
+/// Drive `attempt` until it produces a value or `deadline` passes,
+/// sleeping one [`Backoff`] step between tries. `attempt` returns
+/// `Ok(Some(v))` on success, `Ok(None)` to retry (counted via `on_retry`,
+/// e.g. the `cluster.send_retries` counter), or `Err` to abort — a
+/// disconnect is never retried away.
+pub fn retry_with_backoff<T>(
+    deadline: Instant,
+    backoff: &mut Backoff,
+    mut on_retry: impl FnMut(),
+    mut attempt: impl FnMut() -> Result<Option<T>, MailboxError>,
+) -> Result<T, MailboxError> {
+    let start = Instant::now();
+    loop {
+        if let Some(v) = attempt()? {
+            return Ok(v);
+        }
+        on_retry();
+        if !backoff.sleep_before(deadline) {
+            return Err(MailboxError::Timeout(start.elapsed()));
+        }
+    }
+}
 
 /// Types that know their serialized wire size (for fabric accounting —
 /// messages travel in-process, but the byte counts drive the cluster
@@ -94,15 +180,38 @@ impl<M: Payload> Endpoint<M> {
         self.rx.recv().map_err(|_| anyhow::anyhow!("all senders to {} closed", self.rank))
     }
 
-    /// Receive with timeout, `Ok(None)` on timeout.
-    pub fn recv_timeout(&self, d: Duration) -> anyhow::Result<Option<(usize, M)>> {
+    /// Receive with timeout: typed [`MailboxError`] instead of the old
+    /// ad-hoc `Ok(None)` / stringly-typed disconnect mix, so callers can
+    /// branch on transient-vs-terminal without string matching.
+    pub fn recv_timeout(&self, d: Duration) -> Result<(usize, M), MailboxError> {
         match self.rx.recv_timeout(d) {
-            Ok(v) => Ok(Some(v)),
-            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Ok(v) => Ok(v),
+            Err(RecvTimeoutError::Timeout) => Err(MailboxError::Timeout(d)),
             Err(RecvTimeoutError::Disconnected) => {
-                Err(anyhow::anyhow!("all senders to {} closed", self.rank))
+                Err(MailboxError::Disconnected(format!("all senders to {} closed", self.rank)))
             }
         }
+    }
+
+    /// Receive until an absolute deadline, polling in backoff-paced
+    /// slices so a caller can interleave liveness checks via `on_retry`
+    /// (the coordinator's lease sweep uses exactly this shape).
+    pub fn recv_deadline(
+        &self,
+        deadline: Instant,
+        backoff: &mut Backoff,
+        on_retry: impl FnMut(),
+    ) -> Result<(usize, M), MailboxError> {
+        retry_with_backoff(deadline, backoff, on_retry, || {
+            match self.rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(v) => Ok(Some(v)),
+                Err(RecvTimeoutError::Timeout) => Ok(None),
+                Err(RecvTimeoutError::Disconnected) => Err(MailboxError::Disconnected(format!(
+                    "all senders to {} closed",
+                    self.rank
+                ))),
+            }
+        })
     }
 }
 
@@ -148,11 +257,114 @@ mod tests {
     }
 
     #[test]
-    fn timeout_returns_none() {
+    fn timeout_is_typed_and_transient() {
         let fabric = Fabric::new(2);
         let eps = Endpoints::<Vec<u8>>::new(2, &fabric).into_vec();
-        let got = eps[1].recv_timeout(Duration::from_millis(10)).unwrap();
-        assert!(got.is_none());
+        let err = eps[1].recv_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(err.is_timeout());
+        // The message still arrives on a later attempt: timeout did not
+        // poison the endpoint.
+        eps[0].send(1, vec![7]).unwrap();
+        let (src, m) = eps[1].recv_timeout(Duration::from_millis(100)).unwrap();
+        assert_eq!((src, m), (0, vec![7]));
+    }
+
+    #[test]
+    fn disconnect_is_typed_and_terminal() {
+        let fabric = Fabric::new(2);
+        let mut eps = Endpoints::<Vec<u8>>::new(2, &fabric).into_vec();
+        let e1 = eps.pop().unwrap();
+        drop(eps); // drop rank 0 → all senders to rank 1 close
+        let err = e1.recv_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(!err.is_timeout(), "expected Disconnected, got {err:?}");
+        assert!(matches!(err, MailboxError::Disconnected(_)));
+    }
+
+    #[test]
+    fn recv_deadline_polls_with_backoff_until_delivery() {
+        let fabric = Fabric::new(2);
+        let eps = Endpoints::<Vec<u8>>::new(2, &fabric).into_vec();
+        let mut it = eps.into_iter();
+        let (e0, e1) = (it.next().unwrap(), it.next().unwrap());
+        let mut polls = 0u32;
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                e0.send(1, vec![42]).unwrap();
+            });
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let mut backoff = Backoff::new(Duration::from_millis(1), Duration::from_millis(8));
+            let (src, m) = e1.recv_deadline(deadline, &mut backoff, || polls += 1).unwrap();
+            assert_eq!((src, m), (0, vec![42]));
+        });
+        assert!(polls > 0, "delivery was delayed, so at least one poll must have backed off");
+    }
+
+    #[test]
+    fn recv_deadline_times_out_and_disconnects() {
+        let fabric = Fabric::new(2);
+        let mut eps = Endpoints::<Vec<u8>>::new(2, &fabric).into_vec();
+        let e1 = eps.pop().unwrap();
+        // Deadline path: senders alive, nothing sent.
+        let mut backoff = Backoff::for_transport();
+        let err = e1
+            .recv_deadline(Instant::now() + Duration::from_millis(20), &mut backoff, || {})
+            .unwrap_err();
+        assert!(err.is_timeout());
+        // Disconnect path: terminal immediately, deadline irrelevant.
         drop(eps);
+        let err = e1
+            .recv_deadline(Instant::now() + Duration::from_secs(30), &mut backoff, || {})
+            .unwrap_err();
+        assert!(matches!(err, MailboxError::Disconnected(_)));
+    }
+
+    #[test]
+    fn backoff_doubles_to_cap() {
+        let mut b = Backoff::new(Duration::from_millis(2), Duration::from_millis(7));
+        assert_eq!(b.step(), Duration::from_millis(2));
+        assert_eq!(b.step(), Duration::from_millis(4));
+        assert_eq!(b.step(), Duration::from_millis(7));
+        assert_eq!(b.step(), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn retry_with_backoff_counts_retries_and_respects_deadline() {
+        let mut tries = 0;
+        let mut retries = 0;
+        let got = retry_with_backoff(
+            Instant::now() + Duration::from_secs(5),
+            &mut Backoff::new(Duration::from_micros(100), Duration::from_millis(1)),
+            || retries += 1,
+            || {
+                tries += 1;
+                Ok(if tries == 3 { Some(99) } else { None })
+            },
+        )
+        .unwrap();
+        assert_eq!((got, tries, retries), (99, 3, 2));
+
+        // Exhausted deadline → Timeout.
+        let err: Result<(), _> = retry_with_backoff(
+            Instant::now() + Duration::from_millis(10),
+            &mut Backoff::for_transport(),
+            || {},
+            || Ok(None),
+        );
+        assert!(err.unwrap_err().is_timeout());
+
+        // Hard failure aborts immediately without retrying.
+        let mut tries = 0;
+        let err: Result<(), _> = retry_with_backoff(
+            Instant::now() + Duration::from_secs(5),
+            &mut Backoff::for_transport(),
+            || {},
+            || {
+                tries += 1;
+                Err(MailboxError::Disconnected("gone".into()))
+            },
+        );
+        assert!(matches!(err.unwrap_err(), MailboxError::Disconnected(_)));
+        assert_eq!(tries, 1);
     }
 }

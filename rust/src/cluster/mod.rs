@@ -6,12 +6,17 @@
 //! bandwidth/latency cost model for what-if analysis). The collective
 //! operations used by training — ring/tree AllReduce — live in
 //! [`collective`].
+//!
+//! [`proc`] layers a *real* multi-process transport on top: worker
+//! processes over Unix-domain sockets with heartbeat liveness and
+//! stale-wave recovery, byte-identical to the in-process path.
 
 pub mod collective;
 pub mod costmodel;
 pub mod fabric;
 pub mod mailbox;
+pub mod proc;
 
 pub use costmodel::{CostModel, SimBreakdown, WorkLedger, WorkUnits};
 pub use fabric::{Fabric, FabricStats};
-pub use mailbox::{Endpoints, Payload};
+pub use mailbox::{Backoff, Endpoints, MailboxError, Payload};

@@ -1,0 +1,180 @@
+//! Heartbeat files and lease monitoring (fold-style liveness).
+//!
+//! Every process of a distributed run — each worker and the coordinator —
+//! runs a [`HeartbeatWriter`] thread that bumps a monotonically
+//! increasing beat counter into a file in the shared run directory (an
+//! atomic tmp-file + rename, so readers never see a torn write). Peers
+//! watch each other with a [`LeaseMonitor`]: staleness is decided by the
+//! *content* not advancing for a whole lease — never by mtime, which
+//! filesystems round coarsely and `utimes` can forge — so a SIGKILLed
+//! process goes stale within one lease no matter what the file metadata
+//! says.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Write `content` so readers observe either the old or the new value,
+/// never a partial line.
+pub fn write_atomic(path: &Path, content: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, content)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Background thread bumping `<beat> <pid>` into `path` every `period`.
+/// Stops (and removes nothing — the last beat stays as evidence) when
+/// dropped.
+pub struct HeartbeatWriter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HeartbeatWriter {
+    pub fn start(path: PathBuf, period: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("gg-heartbeat".into())
+            .spawn(move || {
+                let pid = std::process::id();
+                let mut beat = 0u64;
+                while !stop2.load(Ordering::Relaxed) {
+                    beat += 1;
+                    // A full disk or vanished run dir must not kill the
+                    // process that is trying to prove it is alive; the
+                    // peer's lease expiring is the designed consequence.
+                    let _ = write_atomic(&path, &format!("{beat} {pid}\n"));
+                    // Sleep in slices so drop() never waits a full period.
+                    let deadline = Instant::now() + period;
+                    while !stop2.load(Ordering::Relaxed) && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(10).min(period));
+                    }
+                }
+            })
+            .expect("spawn heartbeat thread");
+        Self { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for HeartbeatWriter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Lease verdict for one peer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lease {
+    Alive,
+    /// The beat has not advanced within the lease; `idle` is how long
+    /// since the last observed change.
+    Stale { idle: Duration },
+}
+
+impl Lease {
+    pub fn is_stale(&self) -> bool {
+        matches!(self, Lease::Stale { .. })
+    }
+}
+
+/// Content-based staleness watcher over one heartbeat file. A missing
+/// file counts as "not yet advanced": the monitor's construction time
+/// starts the grace period, so a peer that never writes a single beat
+/// still expires after one lease.
+pub struct LeaseMonitor {
+    path: PathBuf,
+    lease: Duration,
+    last_seen: Option<String>,
+    last_change: Instant,
+}
+
+impl LeaseMonitor {
+    pub fn new(path: PathBuf, lease: Duration) -> Self {
+        Self { path, lease, last_seen: None, last_change: Instant::now() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn check(&mut self) -> Lease {
+        let current = std::fs::read_to_string(&self.path).ok();
+        if current.is_some() && current != self.last_seen {
+            self.last_seen = current;
+            self.last_change = Instant::now();
+            return Lease::Alive;
+        }
+        let idle = self.last_change.elapsed();
+        if idle > self.lease {
+            Lease::Stale { idle }
+        } else {
+            Lease::Alive
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gg-hb-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writer_bumps_the_beat_and_monitor_stays_alive() {
+        let d = dir("alive");
+        let path = d.join("hb");
+        let mut mon = LeaseMonitor::new(path.clone(), Duration::from_millis(300));
+        let _writer = HeartbeatWriter::start(path.clone(), Duration::from_millis(20));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while std::fs::read_to_string(&path).is_err() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let first = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(mon.check(), Lease::Alive);
+        // The beat advances.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while std::fs::read_to_string(&path).unwrap() == first && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_ne!(std::fs::read_to_string(&path).unwrap(), first);
+        assert_eq!(mon.check(), Lease::Alive);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn stopped_writer_goes_stale_within_one_lease() {
+        let d = dir("stale");
+        let path = d.join("hb");
+        {
+            let _writer = HeartbeatWriter::start(path.clone(), Duration::from_millis(10));
+            std::thread::sleep(Duration::from_millis(50));
+        } // writer dropped — the process "died"
+        let mut mon = LeaseMonitor::new(path.clone(), Duration::from_millis(80));
+        assert_eq!(mon.check(), Lease::Alive); // first read observes the last beat
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(mon.check().is_stale(), "beat frozen past the lease must be stale");
+        // Revival: a fresh beat flips it back to alive.
+        write_atomic(&path, "999999 1\n").unwrap();
+        assert_eq!(mon.check(), Lease::Alive);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_file_expires_after_grace() {
+        let d = dir("missing");
+        let mut mon = LeaseMonitor::new(d.join("never-written"), Duration::from_millis(60));
+        assert_eq!(mon.check(), Lease::Alive);
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(mon.check().is_stale());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

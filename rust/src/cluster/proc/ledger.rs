@@ -1,0 +1,192 @@
+//! Durable wave-ownership ledger.
+//!
+//! Append-only text log in the run directory, one flushed line per
+//! transition:
+//!
+//! ```text
+//! C <wave> <rank>   # wave claimed by (assigned to) rank
+//! D <wave> <rank>   # rank returned the wave's bytes
+//! R <wave> <rank>   # rank was lost; its claim is void, wave re-queued
+//! ```
+//!
+//! The coordinator is the only writer; the file exists so that *after a
+//! crash* (or in a test) the exact recovery history is replayable: a
+//! `C` without a matching `D` is an in-flight wave, and an in-flight
+//! wave whose owner died is **stale** — [`WaveLedger::stale_for`] is what
+//! the lease sweep feeds the reclaim queue with. Regeneration is
+//! deterministic per (wave, seed-range), so a reclaimed wave's bytes are
+//! identical no matter which survivor re-runs it.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+
+pub struct WaveLedger {
+    file: std::fs::File,
+    /// wave → current owner (claims voided by `R` are removed).
+    claimed: FxHashMap<u64, u32>,
+    done: FxHashSet<u64>,
+}
+
+impl WaveLedger {
+    pub fn create(path: &Path) -> anyhow::Result<Self> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self { file, claimed: Default::default(), done: Default::default() })
+    }
+
+    fn append(&mut self, tag: char, wave: u64, rank: u32) -> anyhow::Result<()> {
+        // One line per transition, flushed: a SIGKILL between waves can
+        // lose at most the transition being written, never reorder them.
+        writeln!(self.file, "{tag} {wave} {rank}")?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    pub fn claim(&mut self, wave: u64, rank: u32) -> anyhow::Result<()> {
+        self.claimed.insert(wave, rank);
+        self.append('C', wave, rank)
+    }
+
+    pub fn done(&mut self, wave: u64, rank: u32) -> anyhow::Result<()> {
+        self.claimed.remove(&wave);
+        self.done.insert(wave);
+        self.append('D', wave, rank)
+    }
+
+    /// Void a lost rank's claim on `wave` (recorded, then re-queued by
+    /// the caller).
+    pub fn reclaim(&mut self, wave: u64, lost_rank: u32) -> anyhow::Result<()> {
+        self.claimed.remove(&wave);
+        self.append('R', wave, lost_rank)
+    }
+
+    pub fn is_done(&self, wave: u64) -> bool {
+        self.done.contains(&wave)
+    }
+
+    pub fn owner(&self, wave: u64) -> Option<u32> {
+        self.claimed.get(&wave).copied()
+    }
+
+    /// Waves claimed by `rank` and never completed — stale the moment
+    /// `rank` is declared lost, sorted so recovery regenerates in wave
+    /// order.
+    pub fn stale_for(&self, rank: u32) -> Vec<u64> {
+        let mut waves: Vec<u64> =
+            self.claimed.iter().filter(|&(_, &r)| r == rank).map(|(&w, _)| w).collect();
+        waves.sort_unstable();
+        waves
+    }
+
+    pub fn done_count(&self) -> u64 {
+        self.done.len() as u64
+    }
+}
+
+/// Replay a ledger file (crash forensics / tests): returns the in-flight
+/// claims and the done set exactly as a restarted coordinator would see
+/// them.
+pub fn replay(path: &Path) -> anyhow::Result<(FxHashMap<u64, u32>, FxHashSet<u64>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut claimed: FxHashMap<u64, u32> = Default::default();
+    let mut done: FxHashSet<u64> = Default::default();
+    for (lineno, line) in text.lines().enumerate() {
+        let mut parts = line.split_whitespace();
+        let (tag, wave, rank) = (parts.next(), parts.next(), parts.next());
+        let parse = || -> Option<(&str, u64, u32)> {
+            Some((tag?, wave?.parse().ok()?, rank?.parse().ok()?))
+        };
+        // A torn final line (killed mid-write) is expected; anything
+        // torn *before* the end means corruption.
+        let Some((tag, wave, rank)) = parse() else {
+            anyhow::ensure!(
+                lineno + 1 == text.lines().count(),
+                "corrupt ledger line {}: '{line}'",
+                lineno + 1
+            );
+            continue;
+        };
+        match tag {
+            "C" => {
+                claimed.insert(wave, rank);
+            }
+            "D" => {
+                claimed.remove(&wave);
+                done.insert(wave);
+            }
+            "R" => {
+                claimed.remove(&wave);
+            }
+            other => anyhow::bail!("corrupt ledger tag '{other}' at line {}", lineno + 1),
+        }
+    }
+    Ok((claimed, done))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("gg-ledger-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(format!("{tag}.ledger"))
+    }
+
+    #[test]
+    fn claims_completions_and_stale_detection() {
+        let p = path("stale");
+        let _ = std::fs::remove_file(&p);
+        let mut l = WaveLedger::create(&p).unwrap();
+        l.claim(0, 0).unwrap();
+        l.claim(1, 1).unwrap();
+        l.claim(2, 1).unwrap();
+        l.done(1, 1).unwrap();
+        assert_eq!(l.owner(0), Some(0));
+        assert!(l.is_done(1));
+        // Rank 1 dies: wave 2 (claimed, not done) is stale; wave 1 is not.
+        assert_eq!(l.stale_for(1), vec![2]);
+        assert_eq!(l.stale_for(0), vec![0]);
+        l.reclaim(2, 1).unwrap();
+        assert_eq!(l.stale_for(1), Vec::<u64>::new());
+        // Survivor takes it over and finishes.
+        l.claim(2, 0).unwrap();
+        l.done(2, 0).unwrap();
+        assert_eq!(l.done_count(), 2);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn ledger_is_durable_and_replayable() {
+        let p = path("replay");
+        let _ = std::fs::remove_file(&p);
+        {
+            let mut l = WaveLedger::create(&p).unwrap();
+            l.claim(0, 0).unwrap();
+            l.claim(1, 1).unwrap();
+            l.done(0, 0).unwrap();
+            l.claim(2, 0).unwrap();
+            l.reclaim(1, 1).unwrap();
+            l.claim(1, 0).unwrap();
+        } // coordinator "dies" here
+        let (claimed, done) = replay(&p).unwrap();
+        assert!(done.contains(&0));
+        assert_eq!(claimed.get(&1), Some(&0), "reclaimed wave re-owned by rank 0");
+        assert_eq!(claimed.get(&2), Some(&0));
+        assert_eq!(done.len(), 1);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn torn_tail_tolerated_corrupt_middle_rejected() {
+        let p = path("torn");
+        std::fs::write(&p, "C 0 0\nD 0 0\nC 1").unwrap(); // torn final line
+        let (claimed, done) = replay(&p).unwrap();
+        assert!(done.contains(&0));
+        assert!(claimed.is_empty());
+        std::fs::write(&p, "C 0 0\nX 1 1\nD 0 0\n").unwrap(); // bad tag mid-file
+        assert!(replay(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

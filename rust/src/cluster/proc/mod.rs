@@ -1,0 +1,33 @@
+//! Real multi-process distributed execution (PR 9).
+//!
+//! This layer promotes the simulated [`crate::cluster::Fabric`] into an
+//! actual multi-process transport: a coordinator process spawns N
+//! `gg-worker` processes, each of which deterministically rebuilds the
+//! graph + balance table from a shared `config.json` and pulls wave
+//! indices over a Unix-domain socket, returning encoded subgraph bytes.
+//!
+//! Module map:
+//! - [`wire`] — length-prefixed framed messages over Unix sockets, with
+//!   connect/send retry, exponential backoff and per-op deadlines (the
+//!   retry machinery is [`crate::cluster::mailbox`]'s, shared with the
+//!   in-process transport).
+//! - [`heartbeat`] — per-process heartbeat files + content-based lease
+//!   monitoring (fold-style liveness).
+//! - [`ledger`] — the durable wave-ownership ledger that makes a killed
+//!   worker's in-flight waves detectable as stale and reclaimable.
+//! - [`coordinator`] — spawn/assign/reorder/recover; emits waves FIFO so
+//!   the multi-process run is byte-identical to the single-process
+//!   oracle.
+//! - [`worker`] — the `gg-worker` process body.
+//!
+//! The single-process path remains the deterministic oracle: same
+//! subgraph bytes, same loss curve, at any process count.
+
+pub mod coordinator;
+pub mod heartbeat;
+pub mod ledger;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{run_coordinator, DistOptions, DistPlan, DistReport, WaveBytes};
+pub use worker::{worker_main, EXIT_COORDINATOR_LOST, EXIT_OK, EXIT_PLAN_MISMATCH};

@@ -1,0 +1,462 @@
+//! Framed message transport over Unix-domain sockets.
+//!
+//! Frames are `u64` little-endian length prefix + a tag-byte message
+//! body — the same fixed-width LE vocabulary as [`Subgraph::encode_into`]
+//! (`crate::sampler::Subgraph`), so the whole protocol stays
+//! byte-inspectable without a serialization dependency. Failure handling
+//! reuses the mailbox vocabulary: [`MailboxError::Timeout`] is transient
+//! (retry/poll again), [`MailboxError::Disconnected`] is terminal.
+//!
+//! Robustness contract (ISSUE 9):
+//! - **connect**: retried with exponential backoff up to a deadline
+//!   (workers may race the coordinator's `bind`);
+//! - **send**: position-tracked write loop — a short write never
+//!   restarts the frame, so retries cannot duplicate or corrupt bytes —
+//!   with backoff between `WouldBlock`/timeout slices, bounded by the
+//!   per-op deadline; every backoff step counts `cluster.send_retries`;
+//! - **recv**: waiting for the *start* of a frame times out softly (the
+//!   caller interleaves liveness checks and polls again), while a stall
+//!   *mid-frame* for a whole op-deadline means a half-written peer and is
+//!   terminal.
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::cluster::mailbox::{retry_with_backoff, Backoff, MailboxError};
+
+/// Hard ceiling on a frame body (4 GiB): anything larger is a corrupt
+/// length prefix, not a real message.
+pub const MAX_FRAME: u64 = 1 << 32;
+
+/// The coordinator/worker protocol. One message per frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Msg {
+    /// Worker `rank` introduces itself on a fresh connection.
+    Hello { rank: u32 },
+    /// Coordinator's reply: the wave plan this run executes. Workers
+    /// verify both fields against their locally rebuilt plan and abort
+    /// on mismatch rather than generate divergent bytes.
+    Plan { waves: u64, table_hash: u64 },
+    /// Worker asks for its next wave (pull-based assignment: a slow or
+    /// dead rank simply stops pulling, and the remaining seed ranges
+    /// rebalance onto survivors for free).
+    WaveRequest { rank: u32 },
+    /// Coordinator assigns wave index `wave` to the requester.
+    WaveAssign { wave: u64 },
+    /// Worker returns wave `wave`: `bytes` is the concatenation of the
+    /// wave's subgraphs in slot order ([`Subgraph::encode_into`]), with
+    /// the counts the coordinator's report needs without re-decoding.
+    WaveResult { rank: u32, wave: u64, subgraphs: u64, nodes: u64, bytes: Vec<u8> },
+    /// No more waves: the worker exits cleanly.
+    Done,
+    /// Unrecoverable disagreement (plan mismatch); peer should stop.
+    Abort { reason: String },
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Plan { .. } => 2,
+            Msg::WaveRequest { .. } => 3,
+            Msg::WaveAssign { .. } => 4,
+            Msg::WaveResult { .. } => 5,
+            Msg::Done => 6,
+            Msg::Abort { .. } => 7,
+        }
+    }
+
+    fn encode_body(&self, out: &mut Vec<u8>) {
+        out.push(self.tag());
+        match self {
+            Msg::Hello { rank } => out.extend_from_slice(&rank.to_le_bytes()),
+            Msg::Plan { waves, table_hash } => {
+                out.extend_from_slice(&waves.to_le_bytes());
+                out.extend_from_slice(&table_hash.to_le_bytes());
+            }
+            Msg::WaveRequest { rank } => out.extend_from_slice(&rank.to_le_bytes()),
+            Msg::WaveAssign { wave } => out.extend_from_slice(&wave.to_le_bytes()),
+            Msg::WaveResult { rank, wave, subgraphs, nodes, bytes } => {
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&wave.to_le_bytes());
+                out.extend_from_slice(&subgraphs.to_le_bytes());
+                out.extend_from_slice(&nodes.to_le_bytes());
+                out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+                out.extend_from_slice(bytes);
+            }
+            Msg::Done => {}
+            Msg::Abort { reason } => {
+                let b = reason.as_bytes();
+                out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+                out.extend_from_slice(b);
+            }
+        }
+    }
+
+    fn decode_body(buf: &[u8]) -> anyhow::Result<Msg> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+            let s = buf.get(*pos..*pos + n).ok_or_else(|| anyhow::anyhow!("truncated frame"))?;
+            *pos += n;
+            Ok(s)
+        };
+        let u32_at = |pos: &mut usize| -> anyhow::Result<u32> {
+            Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+        };
+        let u64_at = |pos: &mut usize| -> anyhow::Result<u64> {
+            Ok(u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()))
+        };
+        let tag = *buf.first().ok_or_else(|| anyhow::anyhow!("empty frame"))?;
+        pos += 1;
+        let msg = match tag {
+            1 => Msg::Hello { rank: u32_at(&mut pos)? },
+            2 => Msg::Plan { waves: u64_at(&mut pos)?, table_hash: u64_at(&mut pos)? },
+            3 => Msg::WaveRequest { rank: u32_at(&mut pos)? },
+            4 => Msg::WaveAssign { wave: u64_at(&mut pos)? },
+            5 => {
+                let rank = u32_at(&mut pos)?;
+                let wave = u64_at(&mut pos)?;
+                let subgraphs = u64_at(&mut pos)?;
+                let nodes = u64_at(&mut pos)?;
+                let len = u64_at(&mut pos)? as usize;
+                let bytes = take(&mut pos, len)?.to_vec();
+                Msg::WaveResult { rank, wave, subgraphs, nodes, bytes }
+            }
+            6 => Msg::Done,
+            7 => {
+                let len = u32_at(&mut pos)? as usize;
+                let reason = String::from_utf8_lossy(take(&mut pos, len)?).into_owned();
+                Msg::Abort { reason }
+            }
+            other => anyhow::bail!("unknown message tag {other}"),
+        };
+        anyhow::ensure!(pos == buf.len(), "trailing bytes in frame");
+        Ok(msg)
+    }
+}
+
+/// Wire size for fabric accounting: frames really are this many bytes.
+impl crate::cluster::Payload for Msg {
+    fn wire_bytes(&self) -> u64 {
+        let body = match self {
+            Msg::Hello { .. } | Msg::WaveRequest { .. } => 1 + 4,
+            Msg::Plan { .. } => 1 + 16,
+            Msg::WaveAssign { .. } => 1 + 8,
+            Msg::WaveResult { bytes, .. } => 1 + 4 + 8 * 3 + 8 + bytes.len() as u64,
+            Msg::Done => 1,
+            Msg::Abort { reason } => 1 + 4 + reason.len() as u64,
+        };
+        8 + body
+    }
+}
+
+fn map_io(e: std::io::Error) -> MailboxError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            MailboxError::Timeout(Duration::ZERO)
+        }
+        _ => MailboxError::Disconnected(e.to_string()),
+    }
+}
+
+/// One framed connection. Read/write timeouts are sliced at
+/// `POLL_SLICE` so deadlines and liveness checks stay responsive.
+pub struct FramedStream {
+    stream: UnixStream,
+    op_deadline: Duration,
+    buf: Vec<u8>,
+}
+
+const POLL_SLICE: Duration = Duration::from_millis(50);
+
+impl FramedStream {
+    /// Connect with exponential-backoff retry until `connect_deadline`
+    /// (the listener may not be bound yet when a worker starts).
+    pub fn connect(
+        path: &Path,
+        op_deadline: Duration,
+        connect_deadline: Instant,
+    ) -> Result<Self, MailboxError> {
+        let retries = crate::obs::metrics::counter("cluster.send_retries");
+        let stream = retry_with_backoff(
+            connect_deadline,
+            &mut Backoff::for_transport(),
+            || retries.inc(),
+            || match UnixStream::connect(path) {
+                Ok(s) => Ok(Some(s)),
+                // Not-yet-bound / stale-path races are retryable; real
+                // permission or path errors still retry until the
+                // deadline, which is the honest behaviour during startup.
+                Err(_) => Ok(None),
+            },
+        )?;
+        Self::from_stream(stream, op_deadline)
+    }
+
+    pub fn from_stream(stream: UnixStream, op_deadline: Duration) -> Result<Self, MailboxError> {
+        stream.set_read_timeout(Some(POLL_SLICE)).map_err(map_io)?;
+        stream.set_write_timeout(Some(POLL_SLICE)).map_err(map_io)?;
+        Ok(Self { stream, op_deadline, buf: Vec::new() })
+    }
+
+    pub fn try_clone(&self) -> Result<Self, MailboxError> {
+        Ok(Self {
+            stream: self.stream.try_clone().map_err(map_io)?,
+            op_deadline: self.op_deadline,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Send one frame within the op deadline. The write position is
+    /// tracked across retries, so a timeout slice mid-frame resumes
+    /// exactly where it left off — never duplicating bytes.
+    pub fn send(&mut self, msg: &Msg) -> Result<(), MailboxError> {
+        self.buf.clear();
+        self.buf.extend_from_slice(&0u64.to_le_bytes());
+        msg.encode_body(&mut self.buf);
+        let body_len = (self.buf.len() - 8) as u64;
+        self.buf[..8].copy_from_slice(&body_len.to_le_bytes());
+
+        let deadline = Instant::now() + self.op_deadline;
+        let retries = crate::obs::metrics::counter("cluster.send_retries");
+        let mut backoff = Backoff::for_transport();
+        let mut off = 0usize;
+        while off < self.buf.len() {
+            match self.stream.write(&self.buf[off..]) {
+                Ok(0) => return Err(MailboxError::Disconnected("peer closed (write 0)".into())),
+                Ok(n) => off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    retries.inc();
+                    if !backoff.sleep_before(deadline) {
+                        return Err(MailboxError::Timeout(self.op_deadline));
+                    }
+                }
+                Err(e) => return Err(MailboxError::Disconnected(e.to_string())),
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive one frame. Waits up to `idle_deadline` for the frame to
+    /// *begin* (timing out softly so the caller can run liveness checks
+    /// and call again); once the first byte has arrived, the rest must
+    /// land within the op deadline or the peer is declared gone.
+    pub fn recv(&mut self, idle_deadline: Instant) -> Result<Msg, MailboxError> {
+        let mut len_buf = [0u8; 8];
+        self.read_exact_deadline(&mut len_buf, idle_deadline, true)?;
+        let len = u64::from_le_bytes(len_buf);
+        if len > MAX_FRAME {
+            return Err(MailboxError::Disconnected(format!("corrupt frame length {len}")));
+        }
+        self.buf.clear();
+        self.buf.resize(len as usize, 0);
+        let (mut body, frame_deadline) = (std::mem::take(&mut self.buf), Instant::now() + self.op_deadline);
+        let res = self.read_exact_deadline(&mut body, frame_deadline, false);
+        self.buf = body;
+        res?;
+        Msg::decode_body(&self.buf).map_err(|e| MailboxError::Disconnected(e.to_string()))
+    }
+
+    /// Read exactly `out.len()` bytes by `deadline`. With `soft_start`,
+    /// timing out before *any* byte arrived is a soft `Timeout`; once
+    /// bytes have arrived (or for `soft_start = false`), missing the
+    /// deadline is terminal — a half-frame cannot be resumed by the
+    /// caller.
+    fn read_exact_deadline(
+        &mut self,
+        out: &mut [u8],
+        deadline: Instant,
+        soft_start: bool,
+    ) -> Result<(), MailboxError> {
+        let mut off = 0usize;
+        let mut frame_deadline = deadline;
+        while off < out.len() {
+            match self.stream.read(&mut out[off..]) {
+                Ok(0) => return Err(MailboxError::Disconnected("peer closed".into())),
+                Ok(n) => {
+                    if soft_start && off == 0 {
+                        // Frame under way: switch from the caller's idle
+                        // budget to the per-op deadline.
+                        frame_deadline = Instant::now() + self.op_deadline;
+                    }
+                    off += n;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    let now = Instant::now();
+                    if off == 0 && soft_start {
+                        if now >= deadline {
+                            return Err(MailboxError::Timeout(self.op_deadline));
+                        }
+                    } else if now >= frame_deadline {
+                        return Err(MailboxError::Disconnected(
+                            "peer stalled mid-frame past the op deadline".into(),
+                        ));
+                    }
+                }
+                Err(e) => return Err(MailboxError::Disconnected(e.to_string())),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Payload;
+    use std::os::unix::net::UnixListener;
+
+    fn sock_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gg-wire-{tag}-{}.sock", std::process::id()))
+    }
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        msg.encode_body(&mut buf);
+        assert_eq!(Msg::decode_body(&buf).unwrap(), msg);
+        // Payload accounting matches the real frame size.
+        assert_eq!(msg.wire_bytes(), 8 + buf.len() as u64);
+    }
+
+    #[test]
+    fn every_message_roundtrips_with_exact_wire_size() {
+        roundtrip(Msg::Hello { rank: 3 });
+        roundtrip(Msg::Plan { waves: 17, table_hash: 0xdead_beef });
+        roundtrip(Msg::WaveRequest { rank: 250 });
+        roundtrip(Msg::WaveAssign { wave: u64::MAX });
+        roundtrip(Msg::WaveResult {
+            rank: 1,
+            wave: 9,
+            subgraphs: 64,
+            nodes: 4096,
+            bytes: vec![1, 2, 3, 4, 5],
+        });
+        roundtrip(Msg::Done);
+        roundtrip(Msg::Abort { reason: "plan mismatch".into() });
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        assert!(Msg::decode_body(&[]).is_err());
+        assert!(Msg::decode_body(&[99]).is_err());
+        // Truncated WaveResult payload.
+        let mut buf = Vec::new();
+        Msg::WaveResult { rank: 0, wave: 0, subgraphs: 1, nodes: 1, bytes: vec![0; 16] }
+            .encode_body(&mut buf);
+        assert!(Msg::decode_body(&buf[..buf.len() - 1]).is_err());
+        // Trailing garbage.
+        buf.push(0);
+        assert!(Msg::decode_body(&buf).is_err());
+    }
+
+    #[test]
+    fn socket_send_recv_and_disconnect() {
+        let path = sock_path("basic");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let op = Duration::from_secs(2);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let (conn, _) = listener.accept().unwrap();
+                let mut fs = FramedStream::from_stream(conn, op).unwrap();
+                let got = fs.recv(Instant::now() + op).unwrap();
+                assert_eq!(got, Msg::Hello { rank: 7 });
+                fs.send(&Msg::Plan { waves: 4, table_hash: 11 }).unwrap();
+                // Drop → client observes Disconnected, not a hang.
+            });
+            let mut fs = FramedStream::connect(&path, op, Instant::now() + op).unwrap();
+            fs.send(&Msg::Hello { rank: 7 }).unwrap();
+            assert_eq!(fs.recv(Instant::now() + op).unwrap(), Msg::Plan { waves: 4, table_hash: 11 });
+            let err = fs.recv(Instant::now() + Duration::from_secs(10)).unwrap_err();
+            assert!(matches!(err, MailboxError::Disconnected(_)), "{err:?}");
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn idle_recv_times_out_softly_then_delivers() {
+        let path = sock_path("idle");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let op = Duration::from_secs(2);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let (conn, _) = listener.accept().unwrap();
+                let mut fs = FramedStream::from_stream(conn, op).unwrap();
+                std::thread::sleep(Duration::from_millis(150));
+                fs.send(&Msg::Done).unwrap();
+                // Hold the connection open until the client has read.
+                let _ = fs.recv(Instant::now() + Duration::from_secs(5));
+            });
+            let mut fs = FramedStream::connect(&path, op, Instant::now() + op).unwrap();
+            // First poll window expires before the peer sends: soft timeout.
+            let err = fs.recv(Instant::now() + Duration::from_millis(20)).unwrap_err();
+            assert!(err.is_timeout(), "{err:?}");
+            // Next poll gets the message — the soft timeout lost nothing.
+            assert_eq!(fs.recv(Instant::now() + Duration::from_secs(5)).unwrap(), Msg::Done);
+            fs.send(&Msg::Done).unwrap();
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn connect_retries_until_listener_appears() {
+        let path = sock_path("retry");
+        let _ = std::fs::remove_file(&path);
+        let path2 = path.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(100));
+                let listener = UnixListener::bind(&path2).unwrap();
+                let (conn, _) = listener.accept().unwrap();
+                let mut fs = FramedStream::from_stream(conn, Duration::from_secs(1)).unwrap();
+                assert_eq!(
+                    fs.recv(Instant::now() + Duration::from_secs(2)).unwrap(),
+                    Msg::WaveRequest { rank: 0 }
+                );
+            });
+            // Connect starts before the bind: backoff retries bridge it.
+            let mut fs = FramedStream::connect(
+                &path,
+                Duration::from_secs(1),
+                Instant::now() + Duration::from_secs(5),
+            )
+            .unwrap();
+            fs.send(&Msg::WaveRequest { rank: 0 }).unwrap();
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn connect_deadline_expires_without_listener() {
+        let path = sock_path("nobody");
+        let _ = std::fs::remove_file(&path);
+        let err = FramedStream::connect(
+            &path,
+            Duration::from_secs(1),
+            Instant::now() + Duration::from_millis(50),
+        )
+        .unwrap_err();
+        assert!(err.is_timeout(), "{err:?}");
+        // Retries were counted on the shared cluster counter.
+        assert!(crate::obs::metrics::counter("cluster.send_retries").get() > 0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Worker-process side of a distributed run (the `gg-worker` subcommand).
+//!
+//! A worker owns its whole working set locally: it rebuilds the graph,
+//! the feature-era seed list and the balance table deterministically from
+//! the shared `config.json` — nothing positional travels on the wire
+//! except wave *indices* — then pulls waves from the coordinator and
+//! returns their encoded subgraphs. Liveness is symmetric: the worker
+//! heartbeats `hb-worker-<rank>` for the coordinator's lease sweep, and
+//! watches `hb-coordinator` itself so a dead coordinator means a prompt
+//! clean exit (exit code [`EXIT_COORDINATOR_LOST`]) instead of a hang.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::mailbox::MailboxError;
+use crate::cluster::{Fabric, WorkLedger};
+use crate::config::RunConfig;
+use crate::engines::common::{generate_wave, plan_waves, table_hash, ScratchArena};
+use crate::engines::hop_fn_by_name;
+
+use super::heartbeat::{HeartbeatWriter, LeaseMonitor};
+use super::wire::{FramedStream, Msg};
+
+/// Worker exit codes (the coordinator logs them; tests assert on them).
+pub const EXIT_OK: i32 = 0;
+pub const EXIT_PLAN_MISMATCH: i32 = 2;
+pub const EXIT_COORDINATOR_LOST: i32 = 3;
+
+/// Test-only fault hook: sleep this many milliseconds inside every wave,
+/// so a SIGKILL injected "mid-wave" deterministically lands mid-wave.
+pub const FAULT_SLOW_WAVE_ENV: &str = "GG_FAULT_SLOW_WAVE_MS";
+
+/// Run one worker to completion. Returns the process exit code.
+pub fn worker_main(run_dir: &Path, rank: u32) -> Result<i32> {
+    let cfg = RunConfig::from_json_file(&run_dir.join("config.json"))
+        .context("worker: load shared config")?;
+    let ecfg = cfg.engine_config()?;
+    let hop = hop_fn_by_name(&cfg.engine)?;
+    let heartbeat = Duration::from_millis(cfg.heartbeat_ms.max(10));
+    let lease = Duration::from_millis(cfg.lease_ms.max(cfg.heartbeat_ms * 2).max(100));
+    let op_deadline = Duration::from_millis(cfg.op_deadline_ms.max(100));
+    let slow_wave = std::env::var(FAULT_SLOW_WAVE_ENV)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis);
+
+    // Deterministic local rebuild of the whole plan.
+    let g = crate::graph::generator::from_spec(&cfg.graph, cfg.graph_seed)?.csr();
+    let seeds = cfg.seeds(g.num_nodes());
+    let (table, wave_ranges) = plan_waves(&seeds, &ecfg);
+    let my_hash = table_hash(&table);
+
+    // Prove liveness before connecting: the lease clock starts at spawn.
+    let _hb = HeartbeatWriter::start(run_dir.join(format!("hb-worker-{rank}")), heartbeat);
+    let mut coord = LeaseMonitor::new(run_dir.join("hb-coordinator"), lease);
+
+    let socket = std::fs::read_to_string(run_dir.join("socket"))
+        .context("worker: read socket path")?;
+    let mut stream = FramedStream::connect(
+        Path::new(socket.trim()),
+        op_deadline,
+        Instant::now() + op_deadline,
+    )
+    .map_err(|e| anyhow::anyhow!("worker {rank}: connect: {e}"))?;
+
+    stream.send(&Msg::Hello { rank }).map_err(|e| anyhow::anyhow!("hello: {e}"))?;
+    match recv_alive(&mut stream, &mut coord, heartbeat)? {
+        Reply::Msg(Msg::Plan { waves, table_hash: their_hash }) => {
+            if waves != wave_ranges.len() as u64 || their_hash != my_hash {
+                // Diverged plan → generating anything would produce wrong
+                // bytes. Tell the coordinator and stop.
+                let _ = stream.send(&Msg::Abort {
+                    reason: format!(
+                        "plan mismatch: coordinator ({waves} waves, {their_hash:016x}) vs \
+                         worker {rank} ({} waves, {my_hash:016x})",
+                        wave_ranges.len()
+                    ),
+                });
+                return Ok(EXIT_PLAN_MISMATCH);
+            }
+        }
+        Reply::Msg(Msg::Abort { reason }) => {
+            log::warn!("worker {rank}: coordinator aborted: {reason}");
+            return Ok(EXIT_PLAN_MISMATCH);
+        }
+        Reply::Msg(other) => anyhow::bail!("worker {rank}: expected Plan, got {other:?}"),
+        Reply::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
+    }
+
+    // Local generation state, reused across waves exactly like the
+    // in-process engines reuse it across the wave loop.
+    let fabric = Fabric::new(ecfg.workers);
+    let mut work_ledger = WorkLedger::new(ecfg.workers);
+    let mut scratch = ScratchArena::default();
+    let mut first_wave = true;
+    let mut bytes = Vec::new();
+
+    loop {
+        // A send failing with a disconnect is the coordinator dying, not
+        // a worker bug — exit cleanly the same way the recv path does.
+        if stream.send(&Msg::WaveRequest { rank }).is_err() {
+            return Ok(EXIT_COORDINATOR_LOST);
+        }
+        let reply = match recv_alive(&mut stream, &mut coord, heartbeat)? {
+            Reply::Msg(m) => m,
+            Reply::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
+        };
+        match reply {
+            Msg::WaveAssign { wave } => {
+                let range = wave_ranges
+                    .get(wave as usize)
+                    .cloned()
+                    .with_context(|| format!("worker {rank}: wave {wave} out of range"))?;
+                if let Some(d) = slow_wave {
+                    std::thread::sleep(d);
+                }
+                let slots = generate_wave(
+                    &g,
+                    &table,
+                    range,
+                    &ecfg,
+                    hop,
+                    &fabric,
+                    &mut work_ledger,
+                    &mut scratch,
+                );
+                if first_wave {
+                    scratch.mark_warm();
+                    first_wave = false;
+                }
+                bytes.clear();
+                let (mut subgraphs, mut nodes) = (0u64, 0u64);
+                for (_worker, sg) in slots.into_subgraphs() {
+                    subgraphs += 1;
+                    nodes += sg.num_nodes();
+                    sg.encode_into(&mut bytes);
+                }
+                let result = Msg::WaveResult {
+                    rank,
+                    wave,
+                    subgraphs,
+                    nodes,
+                    bytes: std::mem::take(&mut bytes),
+                };
+                if stream.send(&result).is_err() {
+                    return Ok(EXIT_COORDINATOR_LOST);
+                }
+            }
+            Msg::Done => return Ok(EXIT_OK),
+            Msg::Abort { reason } => {
+                log::warn!("worker {rank}: coordinator aborted: {reason}");
+                return Ok(EXIT_PLAN_MISMATCH);
+            }
+            other => anyhow::bail!("worker {rank}: unexpected message {other:?}"),
+        }
+    }
+}
+
+enum Reply {
+    Msg(Msg),
+    CoordinatorLost,
+}
+
+/// Receive the next message, interleaving coordinator-liveness checks on
+/// every idle poll slice: socket EOF *or* a frozen `hb-coordinator` beat
+/// both resolve to `CoordinatorLost` so the worker exits within its
+/// lease instead of hanging on a silent peer.
+fn recv_alive(
+    stream: &mut FramedStream,
+    coord: &mut LeaseMonitor,
+    poll: Duration,
+) -> Result<Reply> {
+    loop {
+        match stream.recv(Instant::now() + poll.max(Duration::from_millis(20))) {
+            Ok(m) => return Ok(Reply::Msg(m)),
+            Err(MailboxError::Timeout(_)) => {
+                if coord.check().is_stale() {
+                    log::warn!("coordinator heartbeat stale; exiting");
+                    return Ok(Reply::CoordinatorLost);
+                }
+            }
+            Err(MailboxError::Disconnected(e)) => {
+                log::warn!("coordinator connection lost ({e}); exiting");
+                return Ok(Reply::CoordinatorLost);
+            }
+        }
+    }
+}

@@ -83,6 +83,21 @@ pub struct RunConfig {
     /// core `i % cores`. Opt-in; no-op on unsupported platforms. The
     /// `GG_PIN_CORES` env var is an alternative switch.
     pub pin_cores: bool,
+    /// Real worker *processes* for generation (0 = in-process, the
+    /// deterministic oracle). Orthogonal to `workers`, which stays the
+    /// balance-table granularity — so output bytes are identical at any
+    /// process count (see `cluster::proc`).
+    pub processes: usize,
+    /// Shared run directory for a distributed run: config, socket path,
+    /// heartbeat files, wave ledger, pid files. Empty = a fresh temp dir.
+    pub run_dir: String,
+    /// Worker/coordinator heartbeat period (milliseconds).
+    pub heartbeat_ms: u64,
+    /// Liveness lease: a rank whose heartbeat hasn't advanced for this
+    /// long is declared lost and its in-flight waves are reclaimed.
+    pub lease_ms: u64,
+    /// Per-operation transport deadline (connect, send, mid-frame recv).
+    pub op_deadline_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -118,6 +133,11 @@ impl Default for RunConfig {
             trace_out: String::new(),
             obs_snapshot_secs: 0,
             pin_cores: false,
+            processes: 0,
+            run_dir: String::new(),
+            heartbeat_ms: 200,
+            lease_ms: 2000,
+            op_deadline_ms: 10_000,
         }
     }
 }
@@ -181,6 +201,11 @@ impl RunConfig {
             "trace_out" => self.trace_out = value.into(),
             "obs_snapshot_secs" => self.obs_snapshot_secs = p(value, key)?,
             "pin_cores" => self.pin_cores = p(value, key)?,
+            "processes" => self.processes = p(value, key)?,
+            "run_dir" => self.run_dir = value.into(),
+            "heartbeat_ms" => self.heartbeat_ms = p(value, key)?,
+            "lease_ms" => self.lease_ms = p(value, key)?,
+            "op_deadline_ms" => self.op_deadline_ms = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -258,8 +283,23 @@ impl RunConfig {
             .set("gather_threads", self.gather_threads)
             .set("trace_out", self.trace_out.clone())
             .set("obs_snapshot_secs", self.obs_snapshot_secs)
-            .set("pin_cores", self.pin_cores);
+            .set("pin_cores", self.pin_cores)
+            .set("processes", self.processes)
+            .set("run_dir", self.run_dir.clone())
+            .set("heartbeat_ms", self.heartbeat_ms)
+            .set("lease_ms", self.lease_ms)
+            .set("op_deadline_ms", self.op_deadline_ms);
         o
+    }
+
+    /// Deterministic seed draw without replacement over a graph of `n`
+    /// nodes. Lives on the config (not the launcher) because every
+    /// process of a distributed run must derive the identical seed list
+    /// from the shared `config.json` alone.
+    pub fn seeds(&self, n: u32) -> Vec<u32> {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(self.sample_seed ^ 0x5eed_5eed);
+        let take = self.num_seeds.min(n as usize);
+        rng.sample_indices(n as usize, take).into_iter().map(|v| v as u32).collect()
     }
 }
 
@@ -372,6 +412,39 @@ mod tests {
         assert!(c.to_json().to_pretty().contains("memory_budget_mb"));
         // A set config value wins over the env fallback.
         assert_eq!(crate::storage::tier::memory_budget_mb(c.memory_budget_mb), 256);
+    }
+
+    #[test]
+    fn distributed_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.processes, 0);
+        assert_eq!((c.heartbeat_ms, c.lease_ms, c.op_deadline_ms), (200, 2000, 10_000));
+        c.apply_override("processes", "4").unwrap();
+        c.apply_override("run_dir", "/tmp/ggrun").unwrap();
+        c.apply_override("heartbeat_ms", "100").unwrap();
+        c.apply_override("lease_ms", "1500").unwrap();
+        c.apply_override("op_deadline_ms", "5000").unwrap();
+        assert_eq!(c.processes, 4);
+        assert_eq!(c.run_dir, "/tmp/ggrun");
+        assert_eq!((c.heartbeat_ms, c.lease_ms, c.op_deadline_ms), (100, 1500, 5000));
+        assert!(c.apply_override("processes", "many").is_err());
+        for key in ["processes", "run_dir", "heartbeat_ms", "lease_ms", "op_deadline_ms"] {
+            assert!(c.to_json().to_pretty().contains(key), "{key} missing from json");
+        }
+    }
+
+    #[test]
+    fn seed_draw_is_deterministic_and_config_derived() {
+        let c = RunConfig { num_seeds: 100, sample_seed: 42, ..Default::default() };
+        let a = c.seeds(1 << 16);
+        let b = c.seeds(1 << 16);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        // Bounded by the graph size.
+        assert_eq!(c.seeds(10).len(), 10);
+        // A different sample seed draws a different set.
+        let d = RunConfig { num_seeds: 100, sample_seed: 43, ..Default::default() };
+        assert_ne!(a, d.seeds(1 << 16));
     }
 
     #[test]

@@ -82,7 +82,7 @@ impl SubgraphEngine for AglNodeCentric {
 }
 
 /// One node-centric hop round: one task per frontier *node*, never split.
-fn node_centric_hop(
+pub(crate) fn node_centric_hop(
     g: &Csr,
     slots: &mut WaveSlots<'_>,
     hop: u32,

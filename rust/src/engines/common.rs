@@ -1870,6 +1870,39 @@ pub fn plan_waves(
     (table, waves)
 }
 
+/// Deterministic identity of a planned wave layout: any process that
+/// builds the same balance table from the same config gets the same
+/// hash. Distributed workers compare it against the coordinator's plan
+/// before claiming work, so a config drift (different seeds, mapping,
+/// shuffle seed, cluster width) aborts instead of silently producing
+/// different bytes.
+pub fn table_hash(table: &BalanceTable) -> u64 {
+    crate::util::fxhash::fxhash(&(&table.seeds, &table.worker_of))
+}
+
+/// Regenerate one wave of `table` in isolation — the distributed wave
+/// ledger's unit of work and recovery. A wave is a pure function of
+/// `(graph, table slice, cfg)`: within-wave output is slot order and
+/// waves share no state (the property the engine-equivalence suite pins
+/// across threads/pipelining), so *any* process — including a survivor
+/// reclaiming a killed worker's wave — reproduces its bytes exactly.
+pub fn generate_wave<'t>(
+    g: &Csr,
+    table: &'t BalanceTable,
+    wave: std::ops::Range<usize>,
+    cfg: &EngineConfig,
+    hop: HopFn,
+    fabric: &Fabric,
+    ledger: &mut WorkLedger,
+    scratch: &mut ScratchArena,
+) -> WaveSlots<'t> {
+    let mut slots = WaveSlots::new(&table.seeds[wave.clone()], &table.worker_of[wave]);
+    for h in 1..=cfg.fanout.fanouts.len() as u32 {
+        hop(g, &mut slots, h, cfg, fabric, ledger, scratch);
+    }
+    slots
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -358,3 +358,47 @@ pub fn by_name(name: &str) -> anyhow::Result<Box<dyn SubgraphEngine>> {
         other => anyhow::bail!("unknown engine '{other}'"),
     }
 }
+
+/// The per-hop kernel behind an engine name — what a distributed worker
+/// needs to regenerate individual waves via [`common::generate_wave`]
+/// without running the engine's full schedule. Hop kernels fully
+/// determine output bytes (schedules only reorder), so dispatching on the
+/// kernel keeps multi-process runs byte-identical to the in-process
+/// engine.
+pub fn hop_fn_by_name(name: &str) -> anyhow::Result<common::HopFn> {
+    match name {
+        "graphgen+" | "graphgen_plus" | "plus" | "graphgen" | "offline" => {
+            Ok(common::edge_centric_hop)
+        }
+        "agl" | "node-centric" => Ok(agl::node_centric_hop),
+        "sql" | "sql-like" => Ok(sql_like::sql_hop),
+        other => anyhow::bail!("unknown engine '{other}'"),
+    }
+}
+
+/// Encodes every accepted subgraph in emission order into one byte
+/// stream ([`Subgraph::encode_into`]) — the oracle side of the
+/// distributed byte-equivalence contract, and the `--subgraph-bytes-out`
+/// dump format.
+#[derive(Default)]
+pub struct EncodeSink {
+    state: std::sync::Mutex<Vec<u8>>,
+    pub subgraphs: std::sync::atomic::AtomicU64,
+    pub nodes: std::sync::atomic::AtomicU64,
+}
+
+impl SubgraphSink for EncodeSink {
+    fn accept(&self, _worker: usize, sg: Subgraph) -> anyhow::Result<()> {
+        use std::sync::atomic::Ordering;
+        self.subgraphs.fetch_add(1, Ordering::Relaxed);
+        self.nodes.fetch_add(sg.num_nodes(), Ordering::Relaxed);
+        sg.encode_into(&mut self.state.lock().unwrap());
+        Ok(())
+    }
+}
+
+impl EncodeSink {
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.state.into_inner().unwrap()
+    }
+}

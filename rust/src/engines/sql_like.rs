@@ -108,7 +108,7 @@ impl SubgraphEngine for SqlLike {
 }
 
 /// One hop as JOIN → materialize → shuffle/sort → windowed top-k.
-fn sql_hop(
+pub(crate) fn sql_hop(
     g: &Csr,
     slots: &mut WaveSlots<'_>,
     hop: u32,

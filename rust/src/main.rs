@@ -14,12 +14,13 @@
 
 use anyhow::{Context, Result};
 use graphgen_plus::cli::{flag, opt, App, CliError, CommandSpec, Parsed};
+use graphgen_plus::cluster::proc::{run_coordinator, worker_main, DistOptions, DistPlan};
 use graphgen_plus::config::RunConfig;
-use graphgen_plus::engines::{self, NullSink};
+use graphgen_plus::engines::{self, EncodeSink, NullSink};
 use graphgen_plus::featurestore::{BackendKind, FeatureService, HotCache, ShardedStore, TieredStore};
 use graphgen_plus::graph::features::FeatureStore;
 use graphgen_plus::graph::{generator, io, partition};
-use graphgen_plus::pipeline::{run_pipeline, PipelineMode};
+use graphgen_plus::pipeline::{run_pipeline, run_pipeline_distributed, PipelineMode};
 use graphgen_plus::train::ModelRuntime;
 use graphgen_plus::util::bytes::{fmt_bytes, fmt_count, fmt_rate, fmt_secs};
 use graphgen_plus::util::stats::Samples;
@@ -49,6 +50,15 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
             "tiered-memory budget (MiB) split between feature hot tier and graph page cache; 0=resident (GG_MEMORY_BUDGET_MB also applies)",
             None,
         ),
+        opt(
+            "processes",
+            "worker processes for distributed generation (0 = in-process oracle)",
+            None,
+        ),
+        opt("run-dir", "distributed run directory (config, heartbeats, ledger; empty = temp)", None),
+        opt("heartbeat-ms", "distributed heartbeat period (ms)", None),
+        opt("lease-ms", "liveness lease before a silent worker is declared lost (ms)", None),
+        opt("op-deadline-ms", "distributed transport per-op deadline (ms)", None),
         flag("dump-config", "print the effective config and exit"),
     ]
 }
@@ -64,6 +74,11 @@ fn build_app() -> App {
                 opts: {
                     let mut o = common_opts();
                     o.push(opt("engine", "graphgen+|graphgen|agl|sql-like", Some("graphgen+")));
+                    o.push(opt(
+                        "subgraph-bytes-out",
+                        "dump encoded subgraphs (emission order) to this path — the distributed byte-equivalence probe",
+                        None,
+                    ));
                     o
                 },
             },
@@ -116,6 +131,14 @@ fn build_app() -> App {
                     o
                 },
             },
+            CommandSpec {
+                name: "gg-worker",
+                about: "worker-process body of a distributed run (spawned by the coordinator)",
+                opts: vec![
+                    opt("run-dir", "shared run directory written by the coordinator", None),
+                    opt("rank", "this worker's rank", None),
+                ],
+            },
         ],
     }
 }
@@ -133,7 +156,8 @@ fn run_config(p: &Parsed) -> Result<RunConfig> {
         let key = k.replace('-', "_");
         // CLI names map 1:1 onto config keys (dash→underscore); options
         // consumed directly by a command handler are passed through.
-        const COMMAND_LOCAL: &[&str] = &["engine", "strategy", "out", "save_ckpt", "eval_seeds"];
+        const COMMAND_LOCAL: &[&str] =
+            &["engine", "strategy", "out", "save_ckpt", "eval_seeds", "subgraph_bytes_out"];
         if cfg.apply_override(&key, v).is_err() && !COMMAND_LOCAL.contains(&key.as_str()) {
             anyhow::bail!("unknown option --{k}");
         }
@@ -147,11 +171,9 @@ fn run_config(p: &Parsed) -> Result<RunConfig> {
 }
 
 fn seeds_for(cfg: &RunConfig, n: u32) -> Vec<u32> {
-    // Deterministic seed draw without replacement.
-    let mut rng =
-        graphgen_plus::util::rng::Xoshiro256::seed_from_u64(cfg.sample_seed ^ 0x5eed_5eed);
-    let take = cfg.num_seeds.min(n as usize);
-    rng.sample_indices(n as usize, take).into_iter().map(|v| v as u32).collect()
+    // Deterministic, config-derived draw — the same list every process of
+    // a distributed run rebuilds locally (see `RunConfig::seeds`).
+    cfg.seeds(n)
 }
 
 fn cmd_generate(p: &Parsed) -> Result<()> {
@@ -159,6 +181,9 @@ fn cmd_generate(p: &Parsed) -> Result<()> {
     if p.flag("dump-config") {
         println!("{}", cfg.to_json().to_pretty());
         return Ok(());
+    }
+    if cfg.processes > 0 {
+        return cmd_generate_distributed(&cfg, p);
     }
     let mut obs = start_obs(&cfg, p.get("engine").unwrap_or(&cfg.engine));
     let gen = generator::from_spec(&cfg.graph, cfg.graph_seed)?;
@@ -178,12 +203,80 @@ fn cmd_generate(p: &Parsed) -> Result<()> {
     let seeds = seeds_for(&cfg, g.num_nodes());
     let engine = engines::by_name(p.get("engine").unwrap_or(&cfg.engine))?;
     log::info!("graph {}: {} nodes, {} edges", gen.name, g.num_nodes(), g.num_edges());
-    let sink = NullSink::default();
-    let report = engine.generate(&g, &seeds, &cfg.engine_config()?, &sink)?;
+    let report = match p.get("subgraph-bytes-out") {
+        Some(path) => {
+            // Oracle byte dump: encoded subgraphs in emission order, the
+            // reference a distributed run must match byte-for-byte.
+            let sink = EncodeSink::default();
+            let report = engine.generate(&g, &seeds, &cfg.engine_config()?, &sink)?;
+            std::fs::write(path, sink.into_bytes())
+                .with_context(|| format!("write {path}"))?;
+            report
+        }
+        None => {
+            let sink = NullSink::default();
+            engine.generate(&g, &seeds, &cfg.engine_config()?, &sink)?
+        }
+    };
     println!("{}", report.render());
     print_tier_stats(&g);
     obs.finish()?;
     Ok(())
+}
+
+/// Multi-process generation (`--processes N`): spawn the coordinator in
+/// this process and N `gg-worker` children; emitted waves are FIFO and
+/// byte-identical to the in-process oracle above.
+fn cmd_generate_distributed(cfg: &RunConfig, p: &Parsed) -> Result<()> {
+    // The shared config.json must carry the *effective* engine: --engine
+    // is command-local, never folded into the config by run_config.
+    let mut dcfg = cfg.clone();
+    if let Some(e) = p.get("engine") {
+        dcfg.engine = e.to_string();
+    }
+    let mut obs = start_obs(&dcfg, &dcfg.engine);
+    let gen = generator::from_spec(&dcfg.graph, dcfg.graph_seed)?;
+    let g = gen.csr();
+    log::info!("graph {}: {} nodes, {} edges", gen.name, g.num_nodes(), g.num_edges());
+    let plan = DistPlan::from_config(&dcfg, g.num_nodes())?;
+    let opts = DistOptions::from_config(&dcfg, worker_bin()?);
+    let mut out = match p.get("subgraph-bytes-out") {
+        Some(path) => Some(std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path}"))?,
+        )),
+        None => None,
+    };
+    let report = run_coordinator(&plan, &opts, |wb| {
+        if let Some(w) = out.as_mut() {
+            std::io::Write::write_all(w, &wb.bytes)?;
+        }
+        Ok(())
+    })?;
+    if let Some(w) = out.as_mut() {
+        std::io::Write::flush(w)?;
+    }
+    println!("{}", report.render());
+    std::fs::write(opts.run_dir.join("dist_report.json"), report.to_json().to_pretty())?;
+    obs.finish()?;
+    Ok(())
+}
+
+/// The binary to spawn workers from: `GG_WORKER_BIN` overrides (tests
+/// point it at the cargo-built binary), otherwise this very executable.
+fn worker_bin() -> Result<std::path::PathBuf> {
+    match std::env::var("GG_WORKER_BIN") {
+        Ok(p) if !p.is_empty() => Ok(std::path::PathBuf::from(p)),
+        _ => std::env::current_exe().context("resolve current executable"),
+    }
+}
+
+/// `gg-worker` — never invoked by hand; the coordinator spawns it with a
+/// run directory whose config.json fully determines the work.
+fn cmd_worker(p: &Parsed) -> Result<()> {
+    let run_dir = p.get("run-dir").context("gg-worker requires --run-dir")?;
+    let rank = p.get_parse::<u32>("rank")?.context("gg-worker requires --rank")?;
+    let code = worker_main(std::path::Path::new(run_dir), rank)?;
+    std::process::exit(code)
 }
 
 /// Report hot/cold tier traffic for a paged graph (no-op when resident).
@@ -335,27 +428,42 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
     }
     let engine = engines::by_name(p.get("engine").unwrap_or(&cfg.engine))?;
     let mode: PipelineMode = cfg.mode.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    if mode == PipelineMode::Concurrent {
+    if mode == PipelineMode::Concurrent && cfg.processes == 0 {
         // Partition the pool between generation scans and feature gathers
         // so the two stop fighting over the same workers. With no explicit
         // --gather-threads, the measured E7 knee (BENCH_e7.json) seeds the
-        // gather share.
+        // gather share. (Distributed runs generate in worker processes —
+        // the gathers keep the whole local pool.)
         let (gen_threads, gather_threads) =
             graphgen_plus::pipeline::split_pool_budget_seeded(ecfg.threads, cfg.gather_threads);
         ecfg.threads = gen_threads;
         features = features.with_threads(gather_threads);
         log::info!("pool budget: {gen_threads} generation / {gather_threads} gather threads");
     }
-    let report = run_pipeline(
-        &g, &seeds, engine.as_ref(), &ecfg, &features, &runtime, &cfg.train_config()?, mode,
-    )?;
-    println!("{}", report.render());
-    println!("{}", report.gen.render());
-    println!(
-        "feature store [{}]: {}",
-        cfg.feature_backend,
-        report.train.feature_fetch.render()
-    );
+    let train = if cfg.processes > 0 {
+        // Multi-process generation streaming into local training: the
+        // shared config.json must carry the effective engine AND the
+        // artifact-matched fanout so workers rebuild the exact table.
+        let mut dcfg = cfg.clone();
+        if let Some(e) = p.get("engine") {
+            dcfg.engine = e.to_string();
+        }
+        dcfg.fanout = format!("{},{}", spec.f1, spec.f2);
+        let dplan = DistPlan::from_config(&dcfg, g.num_nodes())?;
+        let dopts = DistOptions::from_config(&dcfg, worker_bin()?);
+        let report =
+            run_pipeline_distributed(&dplan, &dopts, &features, &runtime, &cfg.train_config()?)?;
+        println!("{}", report.render());
+        report.train
+    } else {
+        let report = run_pipeline(
+            &g, &seeds, engine.as_ref(), &ecfg, &features, &runtime, &cfg.train_config()?, mode,
+        )?;
+        println!("{}", report.render());
+        println!("{}", report.gen.render());
+        report.train
+    };
+    println!("feature store [{}]: {}", cfg.feature_backend, train.feature_fetch.render());
     if let Some(cs) = features.cache_stats() {
         println!(
             "feature cache: {} hits / {} lookups ({:.0}%), {} evictions",
@@ -379,14 +487,14 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
         );
     }
     println!("loss curve (iter, loss):");
-    for (i, l) in &report.train.loss_curve {
+    for (i, l) in &train.loss_curve {
         println!("  {i:>6} {l:.4}");
     }
     if let Some(path) = p.get("save-ckpt") {
         graphgen_plus::train::checkpoint::save(
             std::path::Path::new(path),
             runtime.meta(),
-            &report.train.params,
+            &train.params,
         )?;
         println!("checkpoint written to {path}");
     }
@@ -400,7 +508,7 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
             .map(|v| v as u32)
             .collect();
         let ev = graphgen_plus::train::eval::evaluate(
-            &runtime, engine.as_ref(), &g, &features, &eval_seeds, &ecfg, &report.train.params,
+            &runtime, engine.as_ref(), &g, &features, &eval_seeds, &ecfg, &train.params,
         )?;
         println!(
             "held-out eval: {}/{} correct = {:.1}%",
@@ -503,6 +611,7 @@ fn main() {
         "partition" => cmd_partition(&parsed),
         "inspect" => cmd_inspect(&parsed),
         "make-graph" => cmd_make_graph(&parsed),
+        "gg-worker" => cmd_worker(&parsed),
         other => Err(anyhow::anyhow!("unhandled command {other}")),
     };
     if let Err(e) = result {

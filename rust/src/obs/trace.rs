@@ -51,6 +51,9 @@ pub enum Track {
     /// Cold-tier page faults (tiered memory): one marker per promotion
     /// so paging stalls line up against generation bubbles.
     TierFault,
+    /// Distributed-run fault handling on the coordinator: lease expiries,
+    /// worker losses and stale-wave reclaims (see `cluster::proc`).
+    ClusterRecovery,
     /// Trainer worker `i` of the data-parallel training loop.
     Trainer(u16),
     /// Look-ahead speculator `i` (out-of-order wave claiming).
@@ -73,6 +76,7 @@ impl Track {
             Track::SpillFlush => 3,
             Track::SpillPrefetch => 4,
             Track::TierFault => 5,
+            Track::ClusterRecovery => 6,
             Track::Trainer(i) => 10 + i as u64,
             Track::Speculator(i) => 40 + i as u64,
             Track::PoolWorker(i) => 100 + (i as u64).min(199),
@@ -89,6 +93,7 @@ impl Track {
             Track::SpillFlush => "spill-flush".into(),
             Track::SpillPrefetch => "spill-prefetch".into(),
             Track::TierFault => "tier-fault".into(),
+            Track::ClusterRecovery => "cluster-recovery".into(),
             Track::Trainer(i) => format!("trainer-{i}"),
             Track::Speculator(i) => format!("speculator-{i}"),
             Track::PoolWorker(i) => format!("pool-worker-{i}"),

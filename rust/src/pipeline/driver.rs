@@ -8,6 +8,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::cluster::proc::{run_coordinator, DistOptions, DistPlan, DistReport};
 use crate::cluster::FabricStats;
 use crate::engines::{EngineConfig, GenReport, SubgraphEngine};
 use crate::featurestore::FeatureService;
@@ -311,6 +312,81 @@ pub fn run_pipeline(
         gen: gen_report,
         train: train_report,
         feature_fabric: features.fabric_stats().delta(&feature_fabric_before),
+        wall: wall.elapsed(),
+    })
+}
+
+/// Outcome of one distributed pipeline run: multi-process generation
+/// (coordinator + `gg-worker` processes) streaming into in-process
+/// training through the same bounded queue.
+#[derive(Debug, Clone)]
+pub struct DistPipelineReport {
+    pub dist: DistReport,
+    pub train: TrainReport,
+    pub queue: QueueStats,
+    pub wall: Duration,
+}
+
+impl DistPipelineReport {
+    pub fn render(&self) -> String {
+        use crate::util::bytes::fmt_secs;
+        format!(
+            "dist-pipeline wall={} iters={} loss={:.4} acc={:.3} queue_max={}\n{}",
+            fmt_secs(self.wall.as_secs_f64()),
+            self.train.iterations,
+            self.train.final_loss,
+            self.train.accuracy,
+            self.queue.max_depth,
+            self.dist.render(),
+        )
+    }
+}
+
+/// Distributed counterpart of [`run_pipeline`]'s concurrent mode: the
+/// coordinator assigns waves to worker *processes* and emits their
+/// decoded subgraphs — FIFO by wave, slot order within a wave, exactly
+/// the in-process emission order — into the training queue. Because the
+/// stream is byte-identical to the single-process oracle, the loss curve
+/// is too.
+pub fn run_pipeline_distributed(
+    plan: &DistPlan,
+    opts: &DistOptions,
+    features: &FeatureService,
+    runtime: &ModelRuntime,
+    tcfg: &TrainConfig,
+) -> Result<DistPipelineReport> {
+    let wall = Stopwatch::new();
+    let cap = default_queue_cap(tcfg, runtime.meta().spec.batch);
+    let queue = BoundedQueue::<Subgraph>::new(cap);
+    let (dist, train_report) = std::thread::scope(|scope| -> Result<_> {
+        let coord = scope.spawn(|| {
+            crate::obs::trace::set_track(crate::obs::trace::Track::Generator);
+            let _span = crate::obs::trace::span("generate_distributed");
+            let r = run_coordinator(plan, opts, |wb| {
+                for sg in wb.decode()? {
+                    anyhow::ensure!(queue.push(sg).is_ok(), "training queue closed early");
+                }
+                Ok(())
+            });
+            queue.close(); // close even on error so the trainer exits
+            r
+        });
+        let train_report = train(runtime, features, &queue, tcfg);
+        // A dead trainer must not leave the coordinator parked in push:
+        // closing the queue fails its emit, which tears the run down
+        // (workers killed, children reaped) inside `run_coordinator`.
+        if train_report.is_err() {
+            queue.close();
+        }
+        let train_report = train_report?;
+        let dist =
+            coord.join().map_err(|_| anyhow::anyhow!("coordinator panicked"))??;
+        Ok((dist, train_report))
+    })?;
+    Ok(DistPipelineReport {
+        dist,
+        train: train_report,
+        queue: queue.stats(),
         wall: wall.elapsed(),
     })
 }

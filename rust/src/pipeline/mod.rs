@@ -19,7 +19,7 @@ pub mod driver;
 pub mod queue;
 
 pub use driver::{
-    run_pipeline, split_memory_budget, split_pool_budget, split_pool_budget_seeded, PipelineMode,
-    PipelineReport,
+    run_pipeline, run_pipeline_distributed, split_memory_budget, split_pool_budget,
+    split_pool_budget_seeded, DistPipelineReport, PipelineMode, PipelineReport,
 };
 pub use queue::{BoundedQueue, QueueSink, QueueStats};

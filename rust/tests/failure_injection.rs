@@ -1,5 +1,6 @@
 //! Failure injection: the system must fail loudly and cleanly, not hang
-//! or corrupt state, when components misbehave.
+//! or corrupt state, when components misbehave. The distributed tests
+//! use **real SIGKILLs** against real worker/coordinator processes.
 
 use graphgen_plus::engines::{by_name, EngineConfig, SubgraphSink};
 use graphgen_plus::graph::generator;
@@ -124,6 +125,242 @@ fn runtime_rejects_malformed_hlo() {
     };
     let msg = format!("{err:#}");
     assert!(msg.contains("bad.hlo.txt") || msg.contains("parse"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Distributed: real processes, real SIGKILLs.
+// ---------------------------------------------------------------------------
+
+use std::time::{Duration, Instant};
+
+use graphgen_plus::cluster::proc::{run_coordinator, DistOptions, DistPlan};
+use graphgen_plus::config::RunConfig;
+use graphgen_plus::engines::EncodeSink;
+
+fn worker_bin() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_graphgen-plus"))
+}
+
+fn dist_run_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("gg-fault-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn sigkilled_worker_mid_wave_recovers_byte_identically() {
+    let cfg = RunConfig {
+        graph: "rmat:n=2048,e=16384".into(),
+        num_seeds: 256,
+        wave_size: 32,
+        workers: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    // Oracle bytes from the in-process engine.
+    let g = generator::from_spec(&cfg.graph, cfg.graph_seed).unwrap().csr();
+    let seeds = cfg.seeds(g.num_nodes());
+    let sink = EncodeSink::default();
+    by_name(&cfg.engine)
+        .unwrap()
+        .generate(&g, &seeds, &cfg.engine_config().unwrap(), &sink)
+        .unwrap();
+    let oracle = sink.into_bytes();
+
+    // 3 workers; rank 1 is SIGKILLed right after its first wave
+    // assignment, while the slowed-down wave is in flight.
+    let dir = dist_run_dir("killworker");
+    let plan = DistPlan::from_config(&cfg, g.num_nodes()).unwrap();
+    let mut opts = DistOptions::new(3, dir.clone(), worker_bin());
+    opts.heartbeat = Duration::from_millis(50);
+    opts.lease = Duration::from_millis(500);
+    opts.fault_kill_rank = Some(1);
+    opts.fault_kill_after_claims = 0;
+    opts.worker_env = vec![("GG_FAULT_SLOW_WAVE_MS".into(), "200".into())];
+
+    let mut bytes = Vec::new();
+    let report = run_coordinator(&plan, &opts, |wb| {
+        bytes.extend_from_slice(&wb.bytes);
+        Ok(())
+    })
+    .unwrap();
+
+    assert_eq!(bytes, oracle, "bytes diverged after mid-wave SIGKILL recovery");
+    assert_eq!(report.workers_lost, 1, "{report:?}");
+    assert!(report.waves_reclaimed >= 1, "{report:?}");
+    // Graceful degradation: the survivors carried the whole run.
+    assert_eq!(report.waves_by_rank[0] + report.waves_by_rank[2], report.waves);
+    assert_eq!(report.waves_by_rank[1], 0);
+    // The ledger records the recovery: at least one R line, all waves done.
+    let text = std::fs::read_to_string(dir.join("waves.ledger")).unwrap();
+    assert!(text.lines().any(|l| l.starts_with("R ")), "no reclaim recorded:\n{text}");
+    let (claimed, done) =
+        graphgen_plus::cluster::proc::ledger::replay(&dir.join("waves.ledger")).unwrap();
+    assert!(claimed.is_empty());
+    assert_eq!(done.len() as u64, report.waves);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn frozen_worker_lease_expires_and_run_recovers() {
+    // SIGSTOP (not SIGKILL) freezes a worker with its socket still open:
+    // no EOF ever arrives, so the *heartbeat lease* is the only thing
+    // that can detect it. This pins the content-based lease sweep.
+    let cfg = RunConfig {
+        graph: "rmat:n=2048,e=16384".into(),
+        num_seeds: 256,
+        wave_size: 32,
+        workers: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    let g = generator::from_spec(&cfg.graph, cfg.graph_seed).unwrap().csr();
+    let seeds = cfg.seeds(g.num_nodes());
+    let sink = EncodeSink::default();
+    by_name(&cfg.engine)
+        .unwrap()
+        .generate(&g, &seeds, &cfg.engine_config().unwrap(), &sink)
+        .unwrap();
+    let oracle = sink.into_bytes();
+
+    let dir = dist_run_dir("freeze");
+    let plan = DistPlan::from_config(&cfg, g.num_nodes()).unwrap();
+    let mut opts = DistOptions::new(2, dir.clone(), worker_bin());
+    opts.heartbeat = Duration::from_millis(50);
+    opts.lease = Duration::from_millis(400);
+    // Slow waves keep the run alive long enough for the freeze to land
+    // mid-run (8 waves x >=150ms over 2 workers >= 600ms of runtime).
+    opts.worker_env = vec![("GG_FAULT_SLOW_WAVE_MS".into(), "150".into())];
+
+    // Side thread: once worker 1 exists, give it time to connect and
+    // claim, then freeze it.
+    let dir2 = dir.clone();
+    let stopper = std::thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let pid = loop {
+            if let Some(pid) = std::fs::read_to_string(dir2.join("worker-1.pid"))
+                .ok()
+                .and_then(|s| s.trim().parse::<u32>().ok())
+            {
+                break pid;
+            }
+            if Instant::now() > deadline {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        std::thread::sleep(Duration::from_millis(300));
+        let _ = std::process::Command::new("kill").args(["-STOP", &pid.to_string()]).status();
+    });
+
+    let mut bytes = Vec::new();
+    let report = run_coordinator(&plan, &opts, |wb| {
+        bytes.extend_from_slice(&wb.bytes);
+        Ok(())
+    })
+    .unwrap();
+    stopper.join().unwrap();
+
+    assert_eq!(bytes, oracle, "bytes diverged after frozen-worker recovery");
+    assert_eq!(report.workers_lost, 1, "{report:?}");
+    assert!(
+        report.heartbeats_missed >= 1,
+        "only the lease sweep can catch a frozen worker: {report:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Liveness check that treats zombies as dead: after the coordinator is
+/// SIGKILLed, workers reparent to init/subreaper — if nothing reaps them
+/// promptly, `/proc/<pid>` lingers in state `Z` even though the worker
+/// exited on its own.
+fn process_running(pid: u32) -> bool {
+    match std::fs::read_to_string(format!("/proc/{pid}/stat")) {
+        // stat field 3 (after the parenthesized comm) is the state.
+        Ok(s) => !s.rsplit(')').next().unwrap_or("").trim_start().starts_with('Z'),
+        Err(_) => false,
+    }
+}
+
+#[test]
+fn workers_exit_cleanly_when_coordinator_is_sigkilled() {
+    // Spawn a real CLI coordinator run (which spawns 2 real workers),
+    // SIGKILL the coordinator mid-run, and require every worker process
+    // to notice (socket EOF or frozen heartbeat) and exit on its own
+    // within the liveness deadline — no orphans, no hangs.
+    let dir = dist_run_dir("killcoord");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut coordinator = std::process::Command::new(worker_bin())
+        .args([
+            "generate",
+            "--graph",
+            "rmat:n=2048,e=16384",
+            "--num-seeds",
+            "512",
+            "--wave-size",
+            "16",
+            "--workers",
+            "4",
+            "--threads",
+            "2",
+            "--processes",
+            "2",
+            "--heartbeat-ms",
+            "50",
+            "--lease-ms",
+            "500",
+            "--run-dir",
+            dir.to_str().unwrap(),
+        ])
+        .env("GG_FAULT_SLOW_WAVE_MS", "200") // keep the run alive long enough
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+
+    // Wait until both workers exist and prove liveness (pid files appear
+    // right after spawn; heartbeat files right after each worker starts).
+    let spawn_deadline = Instant::now() + Duration::from_secs(30);
+    let worker_pids: Vec<u32> = loop {
+        let pids: Vec<u32> = (0..2)
+            .filter_map(|r| std::fs::read_to_string(dir.join(format!("worker-{r}.pid"))).ok())
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        let beating = (0..2).all(|r| dir.join(format!("hb-worker-{r}")).exists());
+        if pids.len() == 2 && beating {
+            break pids;
+        }
+        assert!(Instant::now() < spawn_deadline, "workers never came up");
+        assert!(
+            coordinator.try_wait().unwrap().is_none(),
+            "coordinator exited before workers came up"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    for &pid in &worker_pids {
+        assert!(process_running(pid), "worker pid {pid} not alive before the kill");
+    }
+
+    // SIGKILL the coordinator — no teardown runs, workers are on their own.
+    coordinator.kill().unwrap();
+    coordinator.wait().unwrap();
+
+    // Every worker must exit within the lease (500ms) plus generous
+    // scheduling slack; on EOF they exit almost immediately.
+    let exit_deadline = Instant::now() + Duration::from_secs(10);
+    for &pid in &worker_pids {
+        while process_running(pid) {
+            if Instant::now() > exit_deadline {
+                // Don't leak the orphan on failure.
+                let _ = std::process::Command::new("kill")
+                    .args(["-9", &pid.to_string()])
+                    .status();
+                panic!("worker pid {pid} still alive after coordinator SIGKILL");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 
