@@ -154,10 +154,10 @@ fn main() {
     // a real coordinator + 4 `gg-worker` processes over Unix sockets,
     // byte-equivalent to the in-process runs. Recorded under "dist" in
     // BENCH_e1.json so CI tracks real cluster_time_ms next to the model.
-    let dist_json = match option_env!("CARGO_BIN_EXE_graphgen-plus") {
+    let (dist_json, dist_ckpt_json) = match option_env!("CARGO_BIN_EXE_graphgen-plus") {
         None => {
             println!("  dist: worker binary path unavailable at build time; skipping");
-            None
+            (None, None)
         }
         Some(bin) => {
             use graphgen_plus::cluster::proc::{run_coordinator, DistOptions, DistPlan};
@@ -174,26 +174,38 @@ fn main() {
                 ..Default::default()
             };
             let run_dir = std::env::temp_dir().join(format!("gg-e1-dist-{}", std::process::id()));
-            let _ = std::fs::remove_dir_all(&run_dir);
             let plan = DistPlan::from_config(&rcfg, g.num_nodes()).unwrap();
-            let opts = DistOptions::new(processes, run_dir.clone(), bin.into());
-            let res = run_coordinator(&plan, &opts, |_| Ok(()));
-            let _ = std::fs::remove_dir_all(&run_dir);
-            match res {
-                Ok(r) => {
-                    println!(
-                        "  measured {processes}-process cluster time: {} ({}), shipped {}",
-                        fmt_secs(r.wall.as_secs_f64()),
-                        fmt_rate(r.nodes_per_sec(), "nodes"),
-                        fmt_bytes(r.result_bytes),
-                    );
-                    Some(r.to_json())
+            // Two measured points: plain, and with durable checkpoints at
+            // every 4th emitted wave — the steady-state delta between the
+            // two is the recovery subsystem's overhead, tracked in
+            // BENCH_e1.json as dist_ckpt.{cluster_time_ms,checkpoint_ms}.
+            let mut measure = |checkpoint_waves: u64| {
+                let _ = std::fs::remove_dir_all(&run_dir);
+                let mut opts = DistOptions::new(processes, run_dir.clone(), bin.into());
+                opts.checkpoint_waves = checkpoint_waves;
+                let res = run_coordinator(&plan, &opts, |_| Ok(()));
+                let _ = std::fs::remove_dir_all(&run_dir);
+                match res {
+                    Ok(r) => {
+                        let tag = if checkpoint_waves > 0 { "ckpt" } else { "plain" };
+                        println!(
+                            "  measured {processes}-process cluster time [{tag}]: {} ({}), \
+                             shipped {}, {} checkpoints ({:.1} ms)",
+                            fmt_secs(r.wall.as_secs_f64()),
+                            fmt_rate(r.nodes_per_sec(), "nodes"),
+                            fmt_bytes(r.result_bytes),
+                            r.checkpoints_written,
+                            r.checkpoint_ms,
+                        );
+                        Some(r.to_json())
+                    }
+                    Err(e) => {
+                        eprintln!("  dist measurement failed: {e:#}");
+                        None
+                    }
                 }
-                Err(e) => {
-                    eprintln!("  dist measurement failed: {e:#}");
-                    None
-                }
-            }
+            };
+            (measure(0), measure(4))
         }
     };
 
@@ -234,6 +246,9 @@ fn main() {
         .set("speedup_vs_graphgen_wall", gg / plus);
     if let Some(d) = dist_json {
         out.set("dist", d);
+    }
+    if let Some(d) = dist_ckpt_json {
+        out.set("dist_ckpt", d);
     }
     let path = std::env::var("GG_BENCH_E1_JSON").unwrap_or_else(|_| "BENCH_e1.json".into());
     match std::fs::write(&path, out.to_pretty()) {

@@ -14,18 +14,28 @@ use super::Fabric;
 
 /// Why a receive (or retried operation) failed. `Timeout` is transient —
 /// the caller may retry, check liveness, or give up; `Disconnected` is
-/// terminal — the peer closed its end and no message will ever arrive.
+/// terminal — the peer closed its end and no message will ever arrive;
+/// `Corrupt` means bytes arrived but failed their CRC-32 (or decoded to
+/// nonsense) — the connection can no longer be trusted and must be torn
+/// down and re-established, but the *peer* may be perfectly healthy, so
+/// callers reconnect instead of declaring it lost.
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 pub enum MailboxError {
     #[error("receive timed out after {0:?}")]
     Timeout(Duration),
     #[error("peer disconnected: {0}")]
     Disconnected(String),
+    #[error("corrupt frame: {0}")]
+    Corrupt(String),
 }
 
 impl MailboxError {
     pub fn is_timeout(&self) -> bool {
         matches!(self, MailboxError::Timeout(_))
+    }
+
+    pub fn is_corrupt(&self) -> bool {
+        matches!(self, MailboxError::Corrupt(_))
     }
 }
 
@@ -36,11 +46,15 @@ impl MailboxError {
 pub struct Backoff {
     next: Duration,
     cap: Duration,
+    /// Deterministic jitter stream (0 = plain exponential). Seeded per
+    /// caller (e.g. by rank) so a fleet of workers reconnecting after a
+    /// coordinator restart doesn't thunder in lockstep.
+    jitter: u64,
 }
 
 impl Backoff {
     pub fn new(initial: Duration, cap: Duration) -> Self {
-        Self { next: initial.max(Duration::from_micros(50)), cap }
+        Self { next: initial.max(Duration::from_micros(50)), cap, jitter: 0 }
     }
 
     /// A sensible default for local-socket work: 1 ms doubling to 100 ms.
@@ -48,12 +62,31 @@ impl Backoff {
         Self::new(Duration::from_millis(1), Duration::from_millis(100))
     }
 
+    /// Transport backoff with per-caller jitter: each step is stretched
+    /// by a deterministic factor in `[1.0, 1.5)` drawn from a splitmix
+    /// stream seeded with `salt`. Different salts (ranks) desynchronize;
+    /// the same salt replays the same schedule, keeping retry timing
+    /// reproducible under the chaos harness.
+    pub fn for_transport_jittered(salt: u64) -> Self {
+        let mut b = Self::for_transport();
+        // Never zero, so jitter stays enabled for every salt.
+        b.jitter = salt | (1 << 63);
+        b
+    }
+
     /// The delay to wait before the next attempt (and advance the
     /// schedule).
     pub fn step(&mut self) -> Duration {
         let d = self.next;
         self.next = (self.next * 2).min(self.cap);
-        d
+        if self.jitter != 0 {
+            let r = crate::util::rng::splitmix64(&mut self.jitter);
+            // d * [1.0, 1.5): jitter spreads, never shortens below base.
+            let extra = (d.as_nanos() * ((r >> 32) as u128)) >> 33;
+            d + Duration::from_nanos(extra as u64)
+        } else {
+            d
+        }
     }
 
     /// Sleep one backoff step, clamped so the caller never sleeps past
@@ -326,6 +359,27 @@ mod tests {
         assert_eq!(b.step(), Duration::from_millis(4));
         assert_eq!(b.step(), Duration::from_millis(7));
         assert_eq!(b.step(), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn jittered_backoff_spreads_without_shortening() {
+        let mut a = Backoff::for_transport_jittered(0);
+        let mut b = Backoff::for_transport_jittered(1);
+        let mut a2 = Backoff::for_transport_jittered(0);
+        let mut plain = Backoff::for_transport();
+        let mut diverged = false;
+        for _ in 0..8 {
+            let base = plain.step();
+            let (da, db, da2) = (a.step(), b.step(), a2.step());
+            // Jitter only ever stretches, bounded by 1.5x the base step.
+            let cap = base * 3 / 2 + Duration::from_nanos(1);
+            assert!(da >= base && da < cap, "{da:?} vs {base:?}");
+            assert!(db >= base && db < cap, "{db:?} vs {base:?}");
+            // Same salt replays the same schedule (chaos determinism).
+            assert_eq!(da, da2);
+            diverged |= da != db;
+        }
+        assert!(diverged, "distinct salts must desynchronize the schedules");
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Deterministic chaos harness for the distributed layer.
+//!
+//! Fault injection driven entirely by a seed (`GG_CHAOS_SEED` /
+//! `--chaos`): every decision is a pure hash of
+//! `(seed, respawn generation, rank, wave)` — no wall clock, no RNG
+//! state threaded through the run — so one seed names one exact fault
+//! schedule, replayable across machines and across coordinator
+//! restarts (the seed rides in the shared `config.json`).
+//!
+//! Injected faults, applied inside the worker process:
+//! - **wave stall** — sleep before returning a wave (tests reorder
+//!   windows, lease margins, parked requests);
+//! - **worker kill** — `abort()` mid-wave, *before* sending the result
+//!   (the hard case: the claim goes stale, the lease sweep must reclaim
+//!   and respawn);
+//! - **frame corruption** — one result frame is sent with a flipped
+//!   body byte ([`super::wire::FramedStream::corrupt_next_frame`]); the
+//!   coordinator's CRC rejects it, tears the connection, and the worker
+//!   reconnects and resends;
+//! - **heartbeat delay** — the heartbeat writer freezes past the lease
+//!   once ([`super::heartbeat::HeartbeatWriter::start_with_pause`]),
+//!   making a healthy worker look dead (false-positive recovery path).
+//!
+//! Coordinator kills are injected from *outside* (the CI soak SIGKILLs
+//! the coordinator and relaunches `--resume`); a process cannot
+//! meaningfully chaos-kill itself at interesting points.
+//!
+//! Each decision also folds in the worker's respawn generation
+//! (`GG_CHAOS_GEN`, stamped by the coordinator on respawn): a
+//! replacement worker re-assigned the wave that killed its predecessor
+//! draws a fresh schedule, so a single seed cannot pin one wave into an
+//! infinite kill loop. Byte-identity to the oracle is independent of
+//! the schedule — chaos perturbs *timing and failures*, never payloads
+//! that survive their CRC.
+
+use crate::util::rng::mix3;
+
+pub const CHAOS_SEED_ENV: &str = "GG_CHAOS_SEED";
+pub const CHAOS_GEN_ENV: &str = "GG_CHAOS_GEN";
+
+const SALT_STALL: u64 = 0x0005_7a11;
+const SALT_KILL: u64 = 0x0000_dead;
+const SALT_CORRUPT: u64 = 0x00c0_4475;
+const SALT_HEARTBEAT: u64 = 0x0004_ea47;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Chaos {
+    seed: u64,
+    generation: u64,
+}
+
+impl Chaos {
+    pub fn new(seed: u64, generation: u64) -> Self {
+        Self { seed, generation }
+    }
+
+    /// Worker-side constructor: explicit seed (from config.json) with
+    /// `GG_CHAOS_SEED` as an override, `GG_CHAOS_GEN` stamped by the
+    /// coordinator on respawn. Seed 0 disables chaos.
+    pub fn from_env(config_seed: u64) -> Option<Self> {
+        let seed = match std::env::var(CHAOS_SEED_ENV) {
+            Ok(v) => v.parse().unwrap_or(config_seed),
+            Err(_) => config_seed,
+        };
+        if seed == 0 {
+            return None;
+        }
+        let generation = std::env::var(CHAOS_GEN_ENV)
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        Some(Self::new(seed, generation))
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn roll(&self, salt: u64, rank: u64, wave: u64) -> u64 {
+        mix3(self.seed ^ salt, rank.wrapping_add(self.generation.wrapping_mul(0x9e37_79b9)), wave)
+    }
+
+    /// Sleep this long before returning `wave` (~1 in 4 waves, 5–40 ms).
+    pub fn wave_stall_ms(&self, rank: u32, wave: u64) -> Option<u64> {
+        let r = self.roll(SALT_STALL, rank as u64, wave);
+        (r % 4 == 0).then(|| 5 + (r >> 8) % 36)
+    }
+
+    /// Abort before sending `wave`'s result (~1 in 10 waves).
+    pub fn kill_before_result(&self, rank: u32, wave: u64) -> bool {
+        self.roll(SALT_KILL, rank as u64, wave) % 10 == 0
+    }
+
+    /// Corrupt the result frame for `wave` (~1 in 6 waves). The worker
+    /// applies this at most once per wave per process lifetime, so a
+    /// reassignment of the same wave to the same rank still terminates.
+    pub fn corrupt_result(&self, rank: u32, wave: u64) -> bool {
+        self.roll(SALT_CORRUPT, rank as u64, wave) % 6 == 0
+    }
+
+    /// One-shot heartbeat freeze for this process (~1 in 3 ranks per
+    /// generation): `(beat number to freeze before, freeze duration ms)`
+    /// — the duration lands in `[1.2, 2.2) × lease`, guaranteeing the
+    /// lease expires while the worker is in fact healthy.
+    pub fn heartbeat_pause(&self, rank: u32, lease_ms: u64) -> Option<(u64, u64)> {
+        let r = self.roll(SALT_HEARTBEAT, rank as u64, 0);
+        (r % 3 == 0).then(|| {
+            let beat = 2 + (r >> 8) % 6;
+            let ms = lease_ms + lease_ms / 5 + (r >> 16) % lease_ms.max(1);
+            (beat, ms)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_per_seed_and_generation() {
+        let a = Chaos::new(7, 0);
+        let b = Chaos::new(7, 0);
+        let c = Chaos::new(8, 0);
+        let g = Chaos::new(7, 1);
+        let mut same = 0;
+        let mut diff_seed = 0;
+        let mut diff_gen = 0;
+        for rank in 0..4u32 {
+            for wave in 0..64u64 {
+                let da = (
+                    a.wave_stall_ms(rank, wave),
+                    a.kill_before_result(rank, wave),
+                    a.corrupt_result(rank, wave),
+                );
+                let db = (
+                    b.wave_stall_ms(rank, wave),
+                    b.kill_before_result(rank, wave),
+                    b.corrupt_result(rank, wave),
+                );
+                assert_eq!(da, db, "same seed+gen must replay identically");
+                same += 1;
+                let dc = (
+                    c.wave_stall_ms(rank, wave),
+                    c.kill_before_result(rank, wave),
+                    c.corrupt_result(rank, wave),
+                );
+                let dg = (
+                    g.wave_stall_ms(rank, wave),
+                    g.kill_before_result(rank, wave),
+                    g.corrupt_result(rank, wave),
+                );
+                diff_seed += (da != dc) as u32;
+                diff_gen += (da != dg) as u32;
+            }
+        }
+        assert!(same > 0 && diff_seed > 0, "distinct seeds must diverge somewhere");
+        assert!(diff_gen > 0, "a respawned generation must draw a fresh schedule");
+    }
+
+    #[test]
+    fn fault_rates_are_in_sane_bands() {
+        let c = Chaos::new(12345, 0);
+        let (mut stalls, mut kills, mut corrupts) = (0u32, 0u32, 0u32);
+        let n = 4 * 256;
+        for rank in 0..4u32 {
+            for wave in 0..256u64 {
+                stalls += c.wave_stall_ms(rank, wave).is_some() as u32;
+                kills += c.kill_before_result(rank, wave) as u32;
+                corrupts += c.corrupt_result(rank, wave) as u32;
+                if let Some(ms) = c.wave_stall_ms(rank, wave) {
+                    assert!((5..41).contains(&ms));
+                }
+            }
+        }
+        // Loose 2x bands around the nominal 1/4, 1/10, 1/6 rates.
+        assert!(stalls > n / 8 && stalls < n / 2, "{stalls}/{n}");
+        assert!(kills > n / 20 && kills < n / 5, "{kills}/{n}");
+        assert!(corrupts > n / 12 && corrupts < n / 3, "{corrupts}/{n}");
+    }
+
+    #[test]
+    fn heartbeat_pause_expires_the_lease_when_drawn() {
+        let mut drawn = 0;
+        for seed in 1..40u64 {
+            if let Some((beat, ms)) = Chaos::new(seed, 0).heartbeat_pause(1, 500) {
+                assert!(beat >= 2);
+                assert!(ms > 500, "pause {ms} must exceed the 500 ms lease");
+                drawn += 1;
+            }
+        }
+        assert!(drawn > 0, "some seed must draw a heartbeat pause");
+    }
+
+    #[test]
+    fn env_override_and_disable() {
+        // Seed 0 disables; config seed applies without env.
+        assert!(Chaos::from_env(0).is_none() || std::env::var(CHAOS_SEED_ENV).is_ok());
+        let c = Chaos::from_env(9);
+        if std::env::var(CHAOS_SEED_ENV).is_err() {
+            assert_eq!(c.unwrap().seed(), 9);
+        }
+    }
+}

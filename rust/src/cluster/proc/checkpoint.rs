@@ -1,0 +1,287 @@
+//! Durable coordinator checkpoints.
+//!
+//! A checkpoint is one little-endian binary file, `checkpoint.bin` in
+//! the run directory, written atomically (tmp + rename) every
+//! `--checkpoint-waves` emitted waves. Layout:
+//!
+//! ```text
+//! magic    u64   "GGCKPT01"
+//! seq      u64   checkpoint sequence number (monotonic within a run)
+//! table_hash, config_hash, total_waves          u64 × 3   plan identity
+//! next_emit                                     u64       coordinator emission frontier
+//! resume_wave, skip_subgraphs, emitted_bytes    u64 × 3   consumer cut (see below)
+//! subgraphs, sampled_nodes, result_bytes        u64 × 3   report counters at the cut
+//! workers_lost, waves_reclaimed, heartbeats_missed,
+//! checkpoints_written, coordinator_resumes,
+//! workers_respawned, frames_corrupted           u64 × 7   recovery counters
+//! waves_by_rank                                 u64 len + u64 × len
+//! payload                                       u64 len + bytes (opaque consumer state)
+//! crc32 of everything above                     u32
+//! ```
+//!
+//! The **consumer cut** decouples the coordinator's emission frontier
+//! from how far the consumer has durably absorbed the stream: a byte
+//! dump absorbs instantly (`resume_wave == next_emit`, truncate the
+//! file to `emitted_bytes` and append), while the training pipeline
+//! cuts at its last completed iteration — `resume_wave` is the wave
+//! holding that iteration's next subgraph and `skip_subgraphs` how far
+//! into it the trainer already was; the `payload` carries the
+//! serialized [`crate::train::TrainState`]. Regeneration is
+//! deterministic, so re-emitting from the cut reproduces the exact
+//! bytes the crashed run would have produced.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::crc32::crc32;
+
+const MAGIC: u64 = 0x3130_5450_4b43_4747; // "GGCKPT01" little-endian
+
+/// Typed decode failures: recovery must distinguish "no checkpoint yet"
+/// (fresh start) from "checkpoint exists but cannot be trusted" (abort
+/// loudly rather than regenerate divergent state).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CheckpointError {
+    #[error("checkpoint truncated at byte {0}")]
+    Truncated(usize),
+    #[error("bad checkpoint magic {0:#018x}")]
+    BadMagic(u64),
+    #[error("checkpoint CRC mismatch: stored {stored:#010x}, computed {computed:#010x}")]
+    CrcMismatch { stored: u32, computed: u32 },
+}
+
+/// What the consumer of the emitted wave stream wants persisted at a
+/// checkpoint — see the module docs for the two concrete consumers.
+#[derive(Debug, Clone, Default)]
+pub struct ConsumerCut {
+    pub resume_wave: u64,
+    pub skip_subgraphs: u64,
+    pub emitted_bytes: u64,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub seq: u64,
+    pub table_hash: u64,
+    pub config_hash: u64,
+    pub total_waves: u64,
+    pub next_emit: u64,
+    pub resume_wave: u64,
+    pub skip_subgraphs: u64,
+    pub emitted_bytes: u64,
+    pub subgraphs: u64,
+    pub sampled_nodes: u64,
+    pub result_bytes: u64,
+    pub workers_lost: u64,
+    pub waves_reclaimed: u64,
+    pub heartbeats_missed: u64,
+    pub checkpoints_written: u64,
+    pub coordinator_resumes: u64,
+    pub workers_respawned: u64,
+    pub frames_corrupted: u64,
+    pub waves_by_rank: Vec<u64>,
+    pub payload: Vec<u8>,
+}
+
+impl Checkpoint {
+    pub fn path(run_dir: &Path) -> PathBuf {
+        run_dir.join("checkpoint.bin")
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(200 + self.waves_by_rank.len() * 8 + self.payload.len());
+        let mut w = |v: u64| out_extend(&mut out, v);
+        w(MAGIC);
+        w(self.seq);
+        w(self.table_hash);
+        w(self.config_hash);
+        w(self.total_waves);
+        w(self.next_emit);
+        w(self.resume_wave);
+        w(self.skip_subgraphs);
+        w(self.emitted_bytes);
+        w(self.subgraphs);
+        w(self.sampled_nodes);
+        w(self.result_bytes);
+        w(self.workers_lost);
+        w(self.waves_reclaimed);
+        w(self.heartbeats_missed);
+        w(self.checkpoints_written);
+        w(self.coordinator_resumes);
+        w(self.workers_respawned);
+        w(self.frames_corrupted);
+        w(self.waves_by_rank.len() as u64);
+        for &v in &self.waves_by_rank {
+            out_extend(&mut out, v);
+        }
+        out_extend(&mut out, self.payload.len() as u64);
+        out.extend_from_slice(&self.payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, CheckpointError> {
+        if buf.len() < 4 {
+            return Err(CheckpointError::Truncated(buf.len()));
+        }
+        let (body, tail) = buf.split_at(buf.len() - 4);
+        let stored = u32::from_le_bytes(tail.try_into().unwrap());
+        let computed = crc32(body);
+        if stored != computed {
+            return Err(CheckpointError::CrcMismatch { stored, computed });
+        }
+        let mut pos = 0usize;
+        let mut r = || -> Result<u64, CheckpointError> {
+            let s = body.get(pos..pos + 8).ok_or(CheckpointError::Truncated(pos))?;
+            pos += 8;
+            Ok(u64::from_le_bytes(s.try_into().unwrap()))
+        };
+        let magic = r()?;
+        if magic != MAGIC {
+            return Err(CheckpointError::BadMagic(magic));
+        }
+        let mut c = Checkpoint {
+            seq: r()?,
+            table_hash: r()?,
+            config_hash: r()?,
+            total_waves: r()?,
+            next_emit: r()?,
+            resume_wave: r()?,
+            skip_subgraphs: r()?,
+            emitted_bytes: r()?,
+            subgraphs: r()?,
+            sampled_nodes: r()?,
+            result_bytes: r()?,
+            workers_lost: r()?,
+            waves_reclaimed: r()?,
+            heartbeats_missed: r()?,
+            checkpoints_written: r()?,
+            coordinator_resumes: r()?,
+            workers_respawned: r()?,
+            frames_corrupted: r()?,
+            ..Default::default()
+        };
+        let n = r()? as usize;
+        c.waves_by_rank.reserve(n);
+        for _ in 0..n {
+            c.waves_by_rank.push(r()?);
+        }
+        let plen = r()? as usize;
+        let payload =
+            body.get(pos..pos + plen).ok_or(CheckpointError::Truncated(pos))?.to_vec();
+        pos += plen;
+        if pos != body.len() {
+            return Err(CheckpointError::Truncated(pos));
+        }
+        c.payload = payload;
+        Ok(c)
+    }
+
+    /// Atomic persist: a crash mid-write leaves the previous checkpoint
+    /// intact, never a half-written file.
+    pub fn save(&self, run_dir: &Path) -> anyhow::Result<()> {
+        let path = Self::path(run_dir);
+        let tmp = path.with_extension("bin.tmp");
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// `Ok(None)` when no checkpoint exists (resume of a run that never
+    /// reached its first checkpoint falls back to a fresh start).
+    pub fn load(run_dir: &Path) -> anyhow::Result<Option<Self>> {
+        let path = Self::path(run_dir);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let buf = std::fs::read(&path)?;
+        Ok(Some(Self::decode(&buf).map_err(|e| {
+            anyhow::anyhow!("{e} (in {}; delete it to restart from scratch)", path.display())
+        })?))
+    }
+}
+
+fn out_extend(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            seq: 3,
+            table_hash: 0xfeed_beef,
+            config_hash: 42,
+            total_waves: 16,
+            next_emit: 8,
+            resume_wave: 7,
+            skip_subgraphs: 5,
+            emitted_bytes: 12345,
+            subgraphs: 224,
+            sampled_nodes: 9001,
+            result_bytes: 99999,
+            workers_lost: 1,
+            waves_reclaimed: 2,
+            heartbeats_missed: 3,
+            checkpoints_written: 3,
+            coordinator_resumes: 1,
+            workers_respawned: 2,
+            frames_corrupted: 4,
+            waves_by_rank: vec![3, 2, 3],
+            payload: vec![9, 8, 7, 6],
+        }
+    }
+
+    #[test]
+    fn roundtrips_exactly() {
+        let c = sample();
+        assert_eq!(Checkpoint::decode(&c.encode()).unwrap(), c);
+        let empty = Checkpoint::default();
+        assert_eq!(Checkpoint::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn corruption_is_typed() {
+        let c = sample();
+        let mut buf = c.encode();
+        // Flip one byte anywhere → CRC mismatch.
+        buf[20] ^= 1;
+        assert!(matches!(
+            Checkpoint::decode(&buf).unwrap_err(),
+            CheckpointError::CrcMismatch { .. }
+        ));
+        // Truncation.
+        let buf = c.encode();
+        assert!(matches!(
+            Checkpoint::decode(&buf[..2]).unwrap_err(),
+            CheckpointError::Truncated(_)
+        ));
+        // Wrong magic with a valid CRC.
+        let mut body = c.encode();
+        body.truncate(body.len() - 4);
+        body[0] ^= 0xFF;
+        let crc = crate::util::crc32::crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(Checkpoint::decode(&body).unwrap_err(), CheckpointError::BadMagic(_)));
+    }
+
+    #[test]
+    fn save_load_is_atomic_per_directory() {
+        let dir = std::env::temp_dir().join(format!("gg-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Checkpoint::load(&dir).unwrap().is_none());
+        let c = sample();
+        c.save(&dir).unwrap();
+        assert_eq!(Checkpoint::load(&dir).unwrap().unwrap(), c);
+        // Overwrite with a later checkpoint; loader sees only the newest.
+        let mut c2 = c.clone();
+        c2.seq = 4;
+        c2.next_emit = 12;
+        c2.save(&dir).unwrap();
+        assert_eq!(Checkpoint::load(&dir).unwrap().unwrap().seq, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

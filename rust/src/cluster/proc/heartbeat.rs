@@ -15,6 +15,15 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// The clock every lease/heartbeat decision reads: `Instant` is
+/// monotonic (CLOCK_MONOTONIC on Linux), so an NTP step or an operator
+/// setting the wall clock back can never spuriously expire a lease or
+/// keep a dead peer "alive". Centralized here so the invariant is
+/// auditable at the call sites instead of implied.
+pub fn mono_now() -> Instant {
+    Instant::now()
+}
+
 /// Write `content` so readers observe either the old or the new value,
 /// never a partial line.
 pub fn write_atomic(path: &Path, content: &str) -> std::io::Result<()> {
@@ -33,6 +42,19 @@ pub struct HeartbeatWriter {
 
 impl HeartbeatWriter {
     pub fn start(path: PathBuf, period: Duration) -> Self {
+        Self::start_with_pause(path, period, None)
+    }
+
+    /// Like [`Self::start`], with an injected one-shot delay: before
+    /// writing beat number `pause.0`, the writer freezes for `pause.1`.
+    /// This is the chaos harness's "heartbeat delay" fault — a pause
+    /// longer than the lease makes a perfectly healthy worker *look*
+    /// dead, driving the coordinator's false-positive recovery path.
+    pub fn start_with_pause(
+        path: PathBuf,
+        period: Duration,
+        pause: Option<(u64, Duration)>,
+    ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::Builder::new()
@@ -42,13 +64,21 @@ impl HeartbeatWriter {
                 let mut beat = 0u64;
                 while !stop2.load(Ordering::Relaxed) {
                     beat += 1;
+                    if let Some((at, delay)) = pause {
+                        if beat == at {
+                            let frozen_until = mono_now() + delay;
+                            while !stop2.load(Ordering::Relaxed) && mono_now() < frozen_until {
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                        }
+                    }
                     // A full disk or vanished run dir must not kill the
                     // process that is trying to prove it is alive; the
                     // peer's lease expiring is the designed consequence.
                     let _ = write_atomic(&path, &format!("{beat} {pid}\n"));
                     // Sleep in slices so drop() never waits a full period.
-                    let deadline = Instant::now() + period;
-                    while !stop2.load(Ordering::Relaxed) && Instant::now() < deadline {
+                    let deadline = mono_now() + period;
+                    while !stop2.load(Ordering::Relaxed) && mono_now() < deadline {
                         std::thread::sleep(Duration::from_millis(10).min(period));
                     }
                 }
@@ -95,7 +125,7 @@ pub struct LeaseMonitor {
 
 impl LeaseMonitor {
     pub fn new(path: PathBuf, lease: Duration) -> Self {
-        Self { path, lease, last_seen: None, last_change: Instant::now() }
+        Self { path, lease, last_seen: None, last_change: mono_now() }
     }
 
     pub fn path(&self) -> &Path {
@@ -106,7 +136,7 @@ impl LeaseMonitor {
         let current = std::fs::read_to_string(&self.path).ok();
         if current.is_some() && current != self.last_seen {
             self.last_seen = current;
-            self.last_change = Instant::now();
+            self.last_change = mono_now();
             return Lease::Alive;
         }
         let idle = self.last_change.elapsed();
@@ -165,6 +195,41 @@ mod tests {
         // Revival: a fresh beat flips it back to alive.
         write_atomic(&path, "999999 1\n").unwrap();
         assert_eq!(mon.check(), Lease::Alive);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn injected_pause_freezes_the_beat_past_a_lease_then_revives() {
+        let d = dir("pause");
+        let path = d.join("hb");
+        // Freeze for 300 ms before beat 3: a 100 ms lease must observe
+        // staleness, then the resumed beat flips it back to alive.
+        let _writer = HeartbeatWriter::start_with_pause(
+            path.clone(),
+            Duration::from_millis(20),
+            Some((3, Duration::from_millis(300))),
+        );
+        let mut mon = LeaseMonitor::new(path.clone(), Duration::from_millis(100));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut went_stale = false;
+        while Instant::now() < deadline {
+            if mon.check().is_stale() {
+                went_stale = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(went_stale, "a paused heartbeat must expire its lease");
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut revived = false;
+        while Instant::now() < deadline {
+            if mon.check() == Lease::Alive {
+                revived = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(revived, "the beat resumes after the injected pause");
         let _ = std::fs::remove_dir_all(&d);
     }
 

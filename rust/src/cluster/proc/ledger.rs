@@ -4,9 +4,12 @@
 //! transition:
 //!
 //! ```text
-//! C <wave> <rank>   # wave claimed by (assigned to) rank
-//! D <wave> <rank>   # rank returned the wave's bytes
-//! R <wave> <rank>   # rank was lost; its claim is void, wave re-queued
+//! C <wave> <rank>      # wave claimed by (assigned to) rank
+//! D <wave> <rank>      # rank returned the wave's bytes
+//! R <wave> <rank>      # rank's claim is void, wave re-queued
+//! S <rank> <attempt>   # marker: replacement worker spawned for rank
+//! K <seq> <next_emit>  # marker: coordinator checkpoint written
+//! A <seq> <next_emit>  # marker: coordinator resumed from checkpoint
 //! ```
 //!
 //! The coordinator is the only writer; the file exists so that *after a
@@ -16,53 +19,153 @@
 //! the lease sweep feeds the reclaim queue with. Regeneration is
 //! deterministic per (wave, seed-range), so a reclaimed wave's bytes are
 //! identical no matter which survivor re-runs it.
+//!
+//! `S`/`K`/`A` are **markers**: they carry no ownership state (replay
+//! skips over them) but record the recovery history for forensics and
+//! the CI smoke greps. Checkpoints [`WaveLedger::compact`] the file —
+//! the claim/void churn of past recoveries collapses to the live state
+//! plus the marker history, so the ledger stays bounded across any
+//! number of restarts.
 
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::util::fxhash::{FxHashMap, FxHashSet};
 
+/// Typed replay failures. A torn *final* line (the coordinator was
+/// killed mid-`write`) is expected and tolerated; a torn or unknown
+/// *interior* line means the file was actually corrupted and recovery
+/// must not silently guess.
+#[derive(Debug, thiserror::Error)]
+pub enum LedgerError {
+    #[error("ledger io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt ledger line {line}: '{content}' (only a torn final line is tolerated)")]
+    CorruptLine { line: usize, content: String },
+    #[error("corrupt ledger tag '{tag}' at line {line}")]
+    CorruptTag { tag: String, line: usize },
+}
+
 pub struct WaveLedger {
     file: std::fs::File,
+    path: PathBuf,
     /// wave → current owner (claims voided by `R` are removed).
     claimed: FxHashMap<u64, u32>,
-    done: FxHashSet<u64>,
+    /// wave → rank that completed it (retained for compaction).
+    done: FxHashMap<u64, u32>,
+    /// Marker lines (`S`/`K`/`A`) in append order, preserved verbatim
+    /// across compactions: the recovery history of the run.
+    markers: Vec<String>,
 }
 
 impl WaveLedger {
     pub fn create(path: &Path) -> anyhow::Result<Self> {
         let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
-        Ok(Self { file, claimed: Default::default(), done: Default::default() })
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            claimed: Default::default(),
+            done: Default::default(),
+            markers: Default::default(),
+        })
     }
 
-    fn append(&mut self, tag: char, wave: u64, rank: u32) -> anyhow::Result<()> {
+    /// Reopen an existing ledger on coordinator resume: replays the file
+    /// (typed errors — a corrupt interior line aborts the resume) into
+    /// in-memory state, then appends.
+    pub fn resume(path: &Path) -> Result<Self, LedgerError> {
+        let (claimed, done, markers) = if path.exists() {
+            replay_full(path)?
+        } else {
+            Default::default()
+        };
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self { file, path: path.to_path_buf(), claimed, done, markers })
+    }
+
+    fn append(&mut self, tag: char, a: u64, b: u64) -> anyhow::Result<()> {
         // One line per transition, flushed: a SIGKILL between waves can
         // lose at most the transition being written, never reorder them.
-        writeln!(self.file, "{tag} {wave} {rank}")?;
+        writeln!(self.file, "{tag} {a} {b}")?;
         self.file.flush()?;
         Ok(())
     }
 
     pub fn claim(&mut self, wave: u64, rank: u32) -> anyhow::Result<()> {
         self.claimed.insert(wave, rank);
-        self.append('C', wave, rank)
+        self.append('C', wave, rank as u64)
     }
 
     pub fn done(&mut self, wave: u64, rank: u32) -> anyhow::Result<()> {
         self.claimed.remove(&wave);
-        self.done.insert(wave);
-        self.append('D', wave, rank)
+        self.done.insert(wave, rank);
+        self.append('D', wave, rank as u64)
     }
 
     /// Void a lost rank's claim on `wave` (recorded, then re-queued by
     /// the caller).
     pub fn reclaim(&mut self, wave: u64, lost_rank: u32) -> anyhow::Result<()> {
         self.claimed.remove(&wave);
-        self.append('R', wave, lost_rank)
+        self.append('R', wave, lost_rank as u64)
+    }
+
+    /// Marker: a replacement worker process was spawned for `rank`.
+    pub fn respawned(&mut self, rank: u32, attempt: u64) -> anyhow::Result<()> {
+        self.markers.push(format!("S {rank} {attempt}"));
+        self.append('S', rank as u64, attempt)
+    }
+
+    /// Marker: checkpoint `seq` persisted with emission frontier
+    /// `next_emit` — and compact, so the ledger's size tracks the live
+    /// in-flight set instead of the full recovery history.
+    pub fn checkpointed(&mut self, seq: u64, next_emit: u64) -> anyhow::Result<()> {
+        self.markers.push(format!("K {seq} {next_emit}"));
+        self.append('K', seq, next_emit)?;
+        self.compact()
+    }
+
+    /// Marker: the coordinator restarted from checkpoint `seq`.
+    pub fn resumed(&mut self, seq: u64, next_emit: u64) -> anyhow::Result<()> {
+        self.markers.push(format!("A {seq} {next_emit}"));
+        self.append('A', seq, next_emit)
+    }
+
+    /// Rewrite the ledger as (markers, done set, live claims) via
+    /// tmp-file + atomic rename: equivalent replay state, bounded size.
+    pub fn compact(&mut self) -> anyhow::Result<()> {
+        let tmp = self.path.with_extension("ledger.tmp");
+        {
+            let mut out = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            for m in &self.markers {
+                writeln!(out, "{m}")?;
+            }
+            let mut done: Vec<(&u64, &u32)> = self.done.iter().collect();
+            done.sort_unstable();
+            for (w, r) in done {
+                writeln!(out, "D {w} {r}")?;
+            }
+            let mut claims: Vec<(&u64, &u32)> = self.claimed.iter().collect();
+            claims.sort_unstable();
+            for (w, r) in claims {
+                writeln!(out, "C {w} {r}")?;
+            }
+            out.flush()?;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        self.file = std::fs::OpenOptions::new().append(true).open(&self.path)?;
+        Ok(())
     }
 
     pub fn is_done(&self, wave: u64) -> bool {
-        self.done.contains(&wave)
+        self.done.contains_key(&wave)
+    }
+
+    /// Forget completion state for waves at or past `wave` (resume
+    /// re-emits them; regeneration is deterministic, so replayed results
+    /// must not be deduplicated away as "already done").
+    pub fn reset_done_from(&mut self, wave: u64) {
+        self.done.retain(|&w, _| w < wave);
+        self.claimed.retain(|&w, _| w < wave);
     }
 
     pub fn owner(&self, wave: u64) -> Option<u32> {
@@ -84,44 +187,56 @@ impl WaveLedger {
     }
 }
 
-/// Replay a ledger file (crash forensics / tests): returns the in-flight
-/// claims and the done set exactly as a restarted coordinator would see
-/// them.
-pub fn replay(path: &Path) -> anyhow::Result<(FxHashMap<u64, u32>, FxHashSet<u64>)> {
+/// Full replay: (in-flight claims, done map, marker lines).
+fn replay_full(
+    path: &Path,
+) -> Result<(FxHashMap<u64, u32>, FxHashMap<u64, u32>, Vec<String>), LedgerError> {
     let text = std::fs::read_to_string(path)?;
     let mut claimed: FxHashMap<u64, u32> = Default::default();
-    let mut done: FxHashSet<u64> = Default::default();
+    let mut done: FxHashMap<u64, u32> = Default::default();
+    let mut markers: Vec<String> = Vec::new();
+    let total = text.lines().count();
     for (lineno, line) in text.lines().enumerate() {
         let mut parts = line.split_whitespace();
-        let (tag, wave, rank) = (parts.next(), parts.next(), parts.next());
-        let parse = || -> Option<(&str, u64, u32)> {
-            Some((tag?, wave?.parse().ok()?, rank?.parse().ok()?))
+        let (tag, a, b) = (parts.next(), parts.next(), parts.next());
+        let parse = || -> Option<(&str, u64, u64)> {
+            Some((tag?, a?.parse().ok()?, b?.parse().ok()?))
         };
         // A torn final line (killed mid-write) is expected; anything
         // torn *before* the end means corruption.
-        let Some((tag, wave, rank)) = parse() else {
-            anyhow::ensure!(
-                lineno + 1 == text.lines().count(),
-                "corrupt ledger line {}: '{line}'",
-                lineno + 1
-            );
-            continue;
+        let Some((tag, a, b)) = parse() else {
+            if lineno + 1 == total {
+                continue;
+            }
+            return Err(LedgerError::CorruptLine { line: lineno + 1, content: line.to_string() });
         };
         match tag {
             "C" => {
-                claimed.insert(wave, rank);
+                claimed.insert(a, b as u32);
             }
             "D" => {
-                claimed.remove(&wave);
-                done.insert(wave);
+                claimed.remove(&a);
+                done.insert(a, b as u32);
             }
             "R" => {
-                claimed.remove(&wave);
+                claimed.remove(&a);
             }
-            other => anyhow::bail!("corrupt ledger tag '{other}' at line {}", lineno + 1),
+            // Markers: no ownership state, preserved for history.
+            "S" | "K" | "A" => markers.push(line.to_string()),
+            other => {
+                return Err(LedgerError::CorruptTag { tag: other.to_string(), line: lineno + 1 })
+            }
         }
     }
-    Ok((claimed, done))
+    Ok((claimed, done, markers))
+}
+
+/// Replay a ledger file (crash forensics / tests): returns the in-flight
+/// claims and the done set exactly as a restarted coordinator would see
+/// them.
+pub fn replay(path: &Path) -> Result<(FxHashMap<u64, u32>, FxHashSet<u64>), LedgerError> {
+    let (claimed, done, _) = replay_full(path)?;
+    Ok((claimed, done.into_keys().collect()))
 }
 
 #[cfg(test)]
@@ -185,8 +300,80 @@ mod tests {
         let (claimed, done) = replay(&p).unwrap();
         assert!(done.contains(&0));
         assert!(claimed.is_empty());
-        std::fs::write(&p, "C 0 0\nX 1 1\nD 0 0\n").unwrap(); // bad tag mid-file
-        assert!(replay(&p).is_err());
+        // Torn line mid-file: typed interior-corruption error.
+        std::fs::write(&p, "C 0 0\nC 1\nD 0 0\n").unwrap();
+        match replay(&p) {
+            Err(LedgerError::CorruptLine { line: 2, .. }) => {}
+            other => panic!("expected CorruptLine at 2, got {other:?}"),
+        }
+        // Unknown tag mid-file: typed too.
+        std::fs::write(&p, "C 0 0\nX 1 1\nD 0 0\n").unwrap();
+        match replay(&p) {
+            Err(LedgerError::CorruptTag { line: 2, ref tag }) if tag == "X" => {}
+            other => panic!("expected CorruptTag at 2, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn markers_survive_replay_and_compaction_bounds_the_file() {
+        let p = path("compact");
+        let _ = std::fs::remove_file(&p);
+        let mut l = WaveLedger::create(&p).unwrap();
+        // A churny history: claims, voids, respawns across many "recoveries".
+        for round in 0..20u64 {
+            for w in 0..8u64 {
+                l.claim(w, (w % 3) as u32).unwrap();
+            }
+            for w in 0..8u64 {
+                l.reclaim(w, (w % 3) as u32).unwrap();
+            }
+            l.respawned((round % 3) as u32, round).unwrap();
+        }
+        for w in 0..6u64 {
+            l.claim(w, 0).unwrap();
+            l.done(w, 0).unwrap();
+        }
+        l.claim(6, 1).unwrap();
+        let grown = std::fs::metadata(&p).unwrap().len();
+        // Checkpoint marker compacts in place.
+        l.checkpointed(1, 6).unwrap();
+        let compacted = std::fs::metadata(&p).unwrap().len();
+        assert!(
+            compacted * 4 < grown,
+            "compaction must collapse history ({grown} -> {compacted} bytes)"
+        );
+        // Replay equivalence: same live claims + done set; markers kept.
+        let (claimed, done, markers) = replay_full(&p).unwrap();
+        assert_eq!(claimed.get(&6), Some(&1));
+        assert_eq!(done.len(), 6);
+        assert_eq!(markers.iter().filter(|m| m.starts_with("S ")).count(), 20);
+        assert!(markers.iter().any(|m| m.starts_with("K 1 6")));
+        // And the compacted file can itself be resumed + appended.
+        drop(l);
+        let mut l2 = WaveLedger::resume(&p).unwrap();
+        assert!(l2.is_done(3));
+        assert_eq!(l2.owner(6), Some(1));
+        l2.done(6, 1).unwrap();
+        l2.resumed(1, 6).unwrap();
+        let (_, done2, markers2) = replay_full(&p).unwrap();
+        assert_eq!(done2.len(), 7);
+        assert!(markers2.iter().any(|m| m.starts_with("A 1 6")));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn reset_done_from_reopens_the_tail() {
+        let p = path("reset");
+        let _ = std::fs::remove_file(&p);
+        let mut l = WaveLedger::create(&p).unwrap();
+        for w in 0..5u64 {
+            l.claim(w, 0).unwrap();
+            l.done(w, 0).unwrap();
+        }
+        l.reset_done_from(3);
+        assert!(l.is_done(2) && !l.is_done(3) && !l.is_done(4));
+        assert_eq!(l.done_count(), 3);
         let _ = std::fs::remove_file(&p);
     }
 }

@@ -7,27 +7,42 @@
 //! indices over a Unix-domain socket, returning encoded subgraph bytes.
 //!
 //! Module map:
-//! - [`wire`] — length-prefixed framed messages over Unix sockets, with
-//!   connect/send retry, exponential backoff and per-op deadlines (the
-//!   retry machinery is [`crate::cluster::mailbox`]'s, shared with the
-//!   in-process transport).
+//! - [`wire`] — CRC-checked length-prefixed framed messages over Unix
+//!   sockets, with connect/send retry, exponential backoff and per-op
+//!   deadlines (the retry machinery is [`crate::cluster::mailbox`]'s,
+//!   shared with the in-process transport).
 //! - [`heartbeat`] — per-process heartbeat files + content-based lease
-//!   monitoring (fold-style liveness).
+//!   monitoring on a monotonic clock (fold-style liveness).
 //! - [`ledger`] — the durable wave-ownership ledger that makes a killed
-//!   worker's in-flight waves detectable as stale and reclaimable.
+//!   worker's in-flight waves detectable as stale and reclaimable, with
+//!   recovery markers and checkpoint-time compaction.
+//! - [`checkpoint`] — atomic binary coordinator checkpoints under the
+//!   run directory; a SIGKILLed coordinator relaunched with `--resume`
+//!   finishes byte-identically to an uninterrupted run (PR 10).
 //! - [`coordinator`] — spawn/assign/reorder/recover; emits waves FIFO so
 //!   the multi-process run is byte-identical to the single-process
-//!   oracle.
-//! - [`worker`] — the `gg-worker` process body.
+//!   oracle; respawns lost workers under a bounded budget and
+//!   checkpoints/restarts itself.
+//! - [`worker`] — the `gg-worker` process body: reconnects and resends
+//!   across torn or corrupt connections and coordinator restarts.
+//! - [`chaos`] — seeded deterministic fault injection (worker kills,
+//!   wave stalls, frame corruption, heartbeat delays).
 //!
 //! The single-process path remains the deterministic oracle: same
-//! subgraph bytes, same loss curve, at any process count.
+//! subgraph bytes, same loss curve, at any process count, under any
+//! chaos schedule.
 
+pub mod chaos;
+pub mod checkpoint;
 pub mod coordinator;
 pub mod heartbeat;
 pub mod ledger;
 pub mod wire;
 pub mod worker;
 
-pub use coordinator::{run_coordinator, DistOptions, DistPlan, DistReport, WaveBytes};
+pub use checkpoint::{Checkpoint, ConsumerCut};
+pub use coordinator::{
+    run_coordinator, run_coordinator_with, DistOptions, DistPlan, DistReport, SnapshotFn,
+    WaveBytes,
+};
 pub use worker::{worker_main, EXIT_COORDINATOR_LOST, EXIT_OK, EXIT_PLAN_MISMATCH};

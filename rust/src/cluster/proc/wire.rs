@@ -1,11 +1,16 @@
 //! Framed message transport over Unix-domain sockets.
 //!
-//! Frames are `u64` little-endian length prefix + a tag-byte message
-//! body — the same fixed-width LE vocabulary as [`Subgraph::encode_into`]
-//! (`crate::sampler::Subgraph`), so the whole protocol stays
-//! byte-inspectable without a serialization dependency. Failure handling
-//! reuses the mailbox vocabulary: [`MailboxError::Timeout`] is transient
-//! (retry/poll again), [`MailboxError::Disconnected`] is terminal.
+//! Frames are a `u64` little-endian length prefix, a `u32` CRC-32 of the
+//! body, then a tag-byte message body — the same fixed-width LE
+//! vocabulary as [`Subgraph::encode_into`] (`crate::sampler::Subgraph`),
+//! so the whole protocol stays byte-inspectable without a serialization
+//! dependency. Failure handling reuses the mailbox vocabulary:
+//! [`MailboxError::Timeout`] is transient (retry/poll again),
+//! [`MailboxError::Disconnected`] is terminal, and
+//! [`MailboxError::Corrupt`] means the bytes arrived but failed their
+//! checksum — the connection is untrustworthy and must be re-established
+//! (the peer itself may be healthy), counted on
+//! `cluster.frames_corrupted`.
 //!
 //! Robustness contract (ISSUE 9):
 //! - **connect**: retried with exponential backoff up to a deadline
@@ -25,10 +30,14 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::cluster::mailbox::{retry_with_backoff, Backoff, MailboxError};
+use crate::util::crc32::crc32;
 
 /// Hard ceiling on a frame body (4 GiB): anything larger is a corrupt
 /// length prefix, not a real message.
 pub const MAX_FRAME: u64 = 1 << 32;
+
+/// Frame header bytes: `u64` body length + `u32` CRC-32 of the body.
+pub const FRAME_HEADER: usize = 12;
 
 /// The coordinator/worker protocol. One message per frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -148,7 +157,7 @@ impl crate::cluster::Payload for Msg {
             Msg::Done => 1,
             Msg::Abort { reason } => 1 + 4 + reason.len() as u64,
         };
-        8 + body
+        FRAME_HEADER as u64 + body
     }
 }
 
@@ -167,6 +176,10 @@ pub struct FramedStream {
     stream: UnixStream,
     op_deadline: Duration,
     buf: Vec<u8>,
+    /// Fault injection for the chaos harness: when set, the next sent
+    /// frame has one body byte flipped *after* its CRC is computed, so
+    /// the receiver's checksum is guaranteed to reject it.
+    corrupt_next: bool,
 }
 
 const POLL_SLICE: Duration = Duration::from_millis(50);
@@ -198,7 +211,7 @@ impl FramedStream {
     pub fn from_stream(stream: UnixStream, op_deadline: Duration) -> Result<Self, MailboxError> {
         stream.set_read_timeout(Some(POLL_SLICE)).map_err(map_io)?;
         stream.set_write_timeout(Some(POLL_SLICE)).map_err(map_io)?;
-        Ok(Self { stream, op_deadline, buf: Vec::new() })
+        Ok(Self { stream, op_deadline, buf: Vec::new(), corrupt_next: false })
     }
 
     pub fn try_clone(&self) -> Result<Self, MailboxError> {
@@ -206,7 +219,14 @@ impl FramedStream {
             stream: self.stream.try_clone().map_err(map_io)?,
             op_deadline: self.op_deadline,
             buf: Vec::new(),
+            corrupt_next: false,
         })
+    }
+
+    /// Chaos-harness hook: flip one byte of the next outgoing frame's
+    /// body after checksumming, so the peer's CRC detects it.
+    pub fn corrupt_next_frame(&mut self) {
+        self.corrupt_next = true;
     }
 
     /// Send one frame within the op deadline. The write position is
@@ -214,10 +234,16 @@ impl FramedStream {
     /// exactly where it left off — never duplicating bytes.
     pub fn send(&mut self, msg: &Msg) -> Result<(), MailboxError> {
         self.buf.clear();
-        self.buf.extend_from_slice(&0u64.to_le_bytes());
+        self.buf.extend_from_slice(&[0u8; FRAME_HEADER]);
         msg.encode_body(&mut self.buf);
-        let body_len = (self.buf.len() - 8) as u64;
+        let body_len = (self.buf.len() - FRAME_HEADER) as u64;
+        let crc = crc32(&self.buf[FRAME_HEADER..]);
         self.buf[..8].copy_from_slice(&body_len.to_le_bytes());
+        self.buf[8..FRAME_HEADER].copy_from_slice(&crc.to_le_bytes());
+        if std::mem::take(&mut self.corrupt_next) && self.buf.len() > FRAME_HEADER {
+            // Injected fault: the CRC above no longer covers this body.
+            self.buf[FRAME_HEADER] ^= 0x55;
+        }
 
         let deadline = Instant::now() + self.op_deadline;
         let retries = crate::obs::metrics::counter("cluster.send_retries");
@@ -250,19 +276,34 @@ impl FramedStream {
     /// and call again); once the first byte has arrived, the rest must
     /// land within the op deadline or the peer is declared gone.
     pub fn recv(&mut self, idle_deadline: Instant) -> Result<Msg, MailboxError> {
-        let mut len_buf = [0u8; 8];
-        self.read_exact_deadline(&mut len_buf, idle_deadline, true)?;
-        let len = u64::from_le_bytes(len_buf);
+        let mut header = [0u8; FRAME_HEADER];
+        self.read_exact_deadline(&mut header, idle_deadline, true)?;
+        let len = u64::from_le_bytes(header[..8].try_into().unwrap());
+        let want_crc = u32::from_le_bytes(header[8..].try_into().unwrap());
         if len > MAX_FRAME {
-            return Err(MailboxError::Disconnected(format!("corrupt frame length {len}")));
+            crate::obs::metrics::counter("cluster.frames_corrupted").inc();
+            return Err(MailboxError::Corrupt(format!("frame length {len} exceeds ceiling")));
         }
         self.buf.clear();
         self.buf.resize(len as usize, 0);
-        let (mut body, frame_deadline) = (std::mem::take(&mut self.buf), Instant::now() + self.op_deadline);
+        let frame_deadline = Instant::now() + self.op_deadline;
+        let mut body = std::mem::take(&mut self.buf);
         let res = self.read_exact_deadline(&mut body, frame_deadline, false);
         self.buf = body;
         res?;
-        Msg::decode_body(&self.buf).map_err(|e| MailboxError::Disconnected(e.to_string()))
+        let got_crc = crc32(&self.buf);
+        if got_crc != want_crc {
+            crate::obs::metrics::counter("cluster.frames_corrupted").inc();
+            return Err(MailboxError::Corrupt(format!(
+                "body CRC {got_crc:#010x} != header {want_crc:#010x} ({len}-byte frame)"
+            )));
+        }
+        Msg::decode_body(&self.buf).map_err(|e| {
+            // Checksum passed but the body doesn't parse: a protocol-level
+            // corruption (e.g. version skew), same recovery as a bad CRC.
+            crate::obs::metrics::counter("cluster.frames_corrupted").inc();
+            MailboxError::Corrupt(e.to_string())
+        })
     }
 
     /// Read exactly `out.len()` bytes by `deadline`. With `soft_start`,
@@ -332,8 +373,9 @@ mod tests {
         let mut buf = Vec::new();
         msg.encode_body(&mut buf);
         assert_eq!(Msg::decode_body(&buf).unwrap(), msg);
-        // Payload accounting matches the real frame size.
-        assert_eq!(msg.wire_bytes(), 8 + buf.len() as u64);
+        // Payload accounting matches the real frame size (12-byte
+        // length+CRC header plus the body).
+        assert_eq!(msg.wire_bytes(), FRAME_HEADER as u64 + buf.len() as u64);
     }
 
     #[test]
@@ -384,7 +426,8 @@ mod tests {
             });
             let mut fs = FramedStream::connect(&path, op, Instant::now() + op).unwrap();
             fs.send(&Msg::Hello { rank: 7 }).unwrap();
-            assert_eq!(fs.recv(Instant::now() + op).unwrap(), Msg::Plan { waves: 4, table_hash: 11 });
+            let plan = Msg::Plan { waves: 4, table_hash: 11 };
+            assert_eq!(fs.recv(Instant::now() + op).unwrap(), plan);
             let err = fs.recv(Instant::now() + Duration::from_secs(10)).unwrap_err();
             assert!(matches!(err, MailboxError::Disconnected(_)), "{err:?}");
         });
@@ -413,6 +456,115 @@ mod tests {
             // Next poll gets the message — the soft timeout lost nothing.
             assert_eq!(fs.recv(Instant::now() + Duration::from_secs(5)).unwrap(), Msg::Done);
             fs.send(&Msg::Done).unwrap();
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_frame_fails_crc_then_fresh_connection_recovers() {
+        let path = sock_path("crc");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let op = Duration::from_secs(2);
+        let before = crate::obs::metrics::counter("cluster.frames_corrupted").get();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // First connection: one poisoned frame, then a clean one.
+                let (conn, _) = listener.accept().unwrap();
+                let mut fs = FramedStream::from_stream(conn, op).unwrap();
+                fs.corrupt_next_frame();
+                fs.send(&Msg::WaveAssign { wave: 3 }).unwrap();
+                fs.send(&Msg::WaveAssign { wave: 3 }).unwrap();
+                // Hold until the client has read both.
+                let _ = fs.recv(Instant::now() + Duration::from_secs(5));
+                // Second connection (the client's reconnect): all clean.
+                let (conn, _) = listener.accept().unwrap();
+                let mut fs = FramedStream::from_stream(conn, op).unwrap();
+                fs.send(&Msg::WaveAssign { wave: 3 }).unwrap();
+                let _ = fs.recv(Instant::now() + Duration::from_secs(5));
+            });
+            let mut fs = FramedStream::connect(&path, op, Instant::now() + op).unwrap();
+            let err = fs.recv(Instant::now() + Duration::from_secs(5)).unwrap_err();
+            assert!(err.is_corrupt(), "{err:?}");
+            // The stream itself still frames correctly after a corrupt
+            // body (the header was intact), so the clean frame lands...
+            let assign = Msg::WaveAssign { wave: 3 };
+            assert_eq!(fs.recv(Instant::now() + Duration::from_secs(5)).unwrap(), assign);
+            fs.send(&Msg::Done).unwrap();
+            // ...but the recovery contract is reconnect: a fresh
+            // connection delivers untainted frames.
+            let mut fs2 = FramedStream::connect(&path, op, Instant::now() + op).unwrap();
+            assert_eq!(fs2.recv(Instant::now() + Duration::from_secs(5)).unwrap(), assign);
+            fs2.send(&Msg::Done).unwrap();
+        });
+        assert!(
+            crate::obs::metrics::counter("cluster.frames_corrupted").get() > before,
+            "corruption must be counted"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_frame_is_terminal_and_reconnect_recovers() {
+        let path = sock_path("torn");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let op = Duration::from_millis(300);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Partial write: full header promising 64 body bytes, then
+                // only 10 of them, then hard close — a torn frame.
+                let (mut conn, _) = listener.accept().unwrap();
+                let mut raw = Vec::new();
+                raw.extend_from_slice(&64u64.to_le_bytes());
+                raw.extend_from_slice(&0u32.to_le_bytes());
+                raw.extend_from_slice(&[7u8; 10]);
+                conn.write_all(&raw).unwrap();
+                drop(conn);
+                // The peer reconnects; serve it a clean frame.
+                let (conn, _) = listener.accept().unwrap();
+                let mut fs = FramedStream::from_stream(conn, op).unwrap();
+                fs.send(&Msg::Plan { waves: 2, table_hash: 5 }).unwrap();
+                let _ = fs.recv(Instant::now() + Duration::from_secs(5));
+            });
+            let mut fs =
+                FramedStream::connect(&path, op, Instant::now() + Duration::from_secs(2)).unwrap();
+            let err = fs.recv(Instant::now() + Duration::from_secs(5)).unwrap_err();
+            assert!(matches!(err, MailboxError::Disconnected(_)), "{err:?}");
+            let mut fs2 =
+                FramedStream::connect(&path, op, Instant::now() + Duration::from_secs(2)).unwrap();
+            assert_eq!(
+                fs2.recv(Instant::now() + Duration::from_secs(5)).unwrap(),
+                Msg::Plan { waves: 2, table_hash: 5 }
+            );
+            fs2.send(&Msg::Done).unwrap();
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn large_frame_survives_short_writes() {
+        // A multi-megabyte WaveResult overflows the socket buffer, so the
+        // sender's write loop takes the WouldBlock/short-write path many
+        // times while the reader drains slowly; the position-tracked loop
+        // must still deliver one exact, checksummed frame.
+        let path = sock_path("short-write");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let op = Duration::from_secs(10);
+        let payload: Vec<u8> =
+            (0..4 * 1024 * 1024u32).map(|i| (i as u64 * 2654435761 >> 7) as u8).collect();
+        let msg = Msg::WaveResult { rank: 2, wave: 5, subgraphs: 9, nodes: 33, bytes: payload };
+        std::thread::scope(|s| {
+            let msg2 = msg.clone();
+            s.spawn(move || {
+                let (conn, _) = listener.accept().unwrap();
+                let mut fs = FramedStream::from_stream(conn, op).unwrap();
+                std::thread::sleep(Duration::from_millis(100)); // let the writer hit a full buffer
+                assert_eq!(fs.recv(Instant::now() + op).unwrap(), msg2);
+            });
+            let mut fs = FramedStream::connect(&path, op, Instant::now() + op).unwrap();
+            fs.send(&msg).unwrap();
         });
         let _ = std::fs::remove_file(&path);
     }

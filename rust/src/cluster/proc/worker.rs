@@ -8,18 +8,42 @@
 //! heartbeats `hb-worker-<rank>` for the coordinator's lease sweep, and
 //! watches `hb-coordinator` itself so a dead coordinator means a prompt
 //! clean exit (exit code [`EXIT_COORDINATOR_LOST`]) instead of a hang.
+//!
+//! ## Torn connections vs dead coordinator
+//!
+//! A connection can tear without anybody dying: the coordinator shuts
+//! sockets whose frames fail CRC, and a restarting coordinator binds a
+//! fresh socket. The worker therefore treats EOF as *detached, not
+//! doomed*: while `hb-coordinator` keeps beating it re-reads the socket
+//! pointer file (a resumed coordinator rewrites it), reconnects with
+//! jittered backoff, re-verifies the plan, and resends its last
+//! unacknowledged `WaveResult` — the coordinator absorbs duplicates
+//! idempotently because regeneration is byte-identical. Only a frozen
+//! coordinator heartbeat ends the worker.
+//!
+//! ## Chaos
+//!
+//! With a nonzero chaos seed (config `chaos` key or `GG_CHAOS_SEED`),
+//! the worker injects its own faults from the seeded schedule
+//! ([`super::chaos::Chaos`]): wave stalls, `abort()` before a result
+//! (the coordinator must reclaim + respawn), one corrupted result frame
+//! per drawn wave (the coordinator's CRC must reject it and this
+//! worker must recover via reconnect + resend), and a one-shot
+//! heartbeat freeze past the lease (false-positive recovery).
 
 use std::path::Path;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::cluster::mailbox::MailboxError;
+use crate::cluster::mailbox::{Backoff, MailboxError};
 use crate::cluster::{Fabric, WorkLedger};
 use crate::config::RunConfig;
 use crate::engines::common::{generate_wave, plan_waves, table_hash, ScratchArena};
 use crate::engines::hop_fn_by_name;
+use crate::util::fxhash::FxHashSet;
 
+use super::chaos::Chaos;
 use super::heartbeat::{HeartbeatWriter, LeaseMonitor};
 use super::wire::{FramedStream, Msg};
 
@@ -45,49 +69,35 @@ pub fn worker_main(run_dir: &Path, rank: u32) -> Result<i32> {
         .ok()
         .and_then(|v| v.parse::<u64>().ok())
         .map(Duration::from_millis);
+    let chaos = Chaos::from_env(cfg.chaos);
 
     // Deterministic local rebuild of the whole plan.
     let g = crate::graph::generator::from_spec(&cfg.graph, cfg.graph_seed)?.csr();
     let seeds = cfg.seeds(g.num_nodes());
     let (table, wave_ranges) = plan_waves(&seeds, &ecfg);
     let my_hash = table_hash(&table);
+    let expect_waves = wave_ranges.len() as u64;
 
     // Prove liveness before connecting: the lease clock starts at spawn.
-    let _hb = HeartbeatWriter::start(run_dir.join(format!("hb-worker-{rank}")), heartbeat);
+    // A drawn chaos heartbeat pause freezes the beat past the lease once,
+    // making this healthy worker *look* dead to the coordinator.
+    let hb_pause = chaos
+        .and_then(|c| c.heartbeat_pause(rank, lease.as_millis() as u64))
+        .map(|(beat, ms)| (beat, Duration::from_millis(ms)));
+    let _hb = HeartbeatWriter::start_with_pause(
+        run_dir.join(format!("hb-worker-{rank}")),
+        heartbeat,
+        hb_pause,
+    );
     let mut coord = LeaseMonitor::new(run_dir.join("hb-coordinator"), lease);
 
-    let socket = std::fs::read_to_string(run_dir.join("socket"))
-        .context("worker: read socket path")?;
-    let mut stream = FramedStream::connect(
-        Path::new(socket.trim()),
-        op_deadline,
-        Instant::now() + op_deadline,
-    )
-    .map_err(|e| anyhow::anyhow!("worker {rank}: connect: {e}"))?;
-
-    stream.send(&Msg::Hello { rank }).map_err(|e| anyhow::anyhow!("hello: {e}"))?;
-    match recv_alive(&mut stream, &mut coord, heartbeat)? {
-        Reply::Msg(Msg::Plan { waves, table_hash: their_hash }) => {
-            if waves != wave_ranges.len() as u64 || their_hash != my_hash {
-                // Diverged plan → generating anything would produce wrong
-                // bytes. Tell the coordinator and stop.
-                let _ = stream.send(&Msg::Abort {
-                    reason: format!(
-                        "plan mismatch: coordinator ({waves} waves, {their_hash:016x}) vs \
-                         worker {rank} ({} waves, {my_hash:016x})",
-                        wave_ranges.len()
-                    ),
-                });
-                return Ok(EXIT_PLAN_MISMATCH);
-            }
-        }
-        Reply::Msg(Msg::Abort { reason }) => {
-            log::warn!("worker {rank}: coordinator aborted: {reason}");
-            return Ok(EXIT_PLAN_MISMATCH);
-        }
-        Reply::Msg(other) => anyhow::bail!("worker {rank}: expected Plan, got {other:?}"),
-        Reply::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
-    }
+    let session =
+        open_session(run_dir, rank, op_deadline, heartbeat, &mut coord, expect_waves, my_hash)?;
+    let mut stream = match session {
+        Session::Ready(s) => s,
+        Session::PlanMismatch => return Ok(EXIT_PLAN_MISMATCH),
+        Session::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
+    };
 
     // Local generation state, reused across waves exactly like the
     // in-process engines reuse it across the wave loop.
@@ -96,15 +106,52 @@ pub fn worker_main(run_dir: &Path, rank: u32) -> Result<i32> {
     let mut scratch = ScratchArena::default();
     let mut first_wave = true;
     let mut bytes = Vec::new();
+    // The last result whose delivery is unconfirmed — resent once after
+    // every reconnect (the coordinator drops duplicates).
+    let mut last_result: Option<Msg> = None;
+    // Waves whose result frame was already chaos-corrupted once by this
+    // process: the resend goes out clean, so recovery terminates.
+    let mut corrupted: FxHashSet<u64> = Default::default();
 
     loop {
-        // A send failing with a disconnect is the coordinator dying, not
-        // a worker bug — exit cleanly the same way the recv path does.
+        // A failing send is a torn connection, not necessarily a dead
+        // coordinator: reattach (which resends `last_result`) and retry.
         if stream.send(&Msg::WaveRequest { rank }).is_err() {
-            return Ok(EXIT_COORDINATOR_LOST);
+            match reattach(
+                run_dir,
+                rank,
+                op_deadline,
+                heartbeat,
+                &mut coord,
+                expect_waves,
+                my_hash,
+                last_result.as_ref(),
+            )? {
+                Session::Ready(s) => stream = s,
+                Session::PlanMismatch => return Ok(EXIT_PLAN_MISMATCH),
+                Session::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
+            }
+            continue;
         }
         let reply = match recv_alive(&mut stream, &mut coord, heartbeat)? {
             Reply::Msg(m) => m,
+            Reply::Torn => {
+                match reattach(
+                    run_dir,
+                    rank,
+                    op_deadline,
+                    heartbeat,
+                    &mut coord,
+                    expect_waves,
+                    my_hash,
+                    last_result.as_ref(),
+                )? {
+                    Session::Ready(s) => stream = s,
+                    Session::PlanMismatch => return Ok(EXIT_PLAN_MISMATCH),
+                    Session::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
+                }
+                continue;
+            }
             Reply::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
         };
         match reply {
@@ -113,6 +160,11 @@ pub fn worker_main(run_dir: &Path, rank: u32) -> Result<i32> {
                     .get(wave as usize)
                     .cloned()
                     .with_context(|| format!("worker {rank}: wave {wave} out of range"))?;
+                if let Some(c) = &chaos {
+                    if let Some(ms) = c.wave_stall_ms(rank, wave) {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
                 if let Some(d) = slow_wave {
                     std::thread::sleep(d);
                 }
@@ -137,6 +189,19 @@ pub fn worker_main(run_dir: &Path, rank: u32) -> Result<i32> {
                     nodes += sg.num_nodes();
                     sg.encode_into(&mut bytes);
                 }
+                if let Some(c) = &chaos {
+                    // Die with the wave claimed and the result unsent —
+                    // the exact window recovery must cover. abort() skips
+                    // destructors, so the heartbeat stops like a SIGKILL.
+                    if c.kill_before_result(rank, wave) {
+                        log::warn!("chaos: worker {rank} aborting before result of wave {wave}");
+                        std::process::abort();
+                    }
+                    if c.corrupt_result(rank, wave) && corrupted.insert(wave) {
+                        log::warn!("chaos: worker {rank} corrupting result frame of wave {wave}");
+                        stream.corrupt_next_frame();
+                    }
+                }
                 let result = Msg::WaveResult {
                     rank,
                     wave,
@@ -144,8 +209,24 @@ pub fn worker_main(run_dir: &Path, rank: u32) -> Result<i32> {
                     nodes,
                     bytes: std::mem::take(&mut bytes),
                 };
-                if stream.send(&result).is_err() {
-                    return Ok(EXIT_COORDINATOR_LOST);
+                // Stash before sending: if the send tears (or the frame
+                // is rejected by the peer's CRC), the reattach resends it.
+                last_result = Some(result);
+                if stream.send(last_result.as_ref().unwrap()).is_err() {
+                    match reattach(
+                        run_dir,
+                        rank,
+                        op_deadline,
+                        heartbeat,
+                        &mut coord,
+                        expect_waves,
+                        my_hash,
+                        last_result.as_ref(),
+                    )? {
+                        Session::Ready(s) => stream = s,
+                        Session::PlanMismatch => return Ok(EXIT_PLAN_MISMATCH),
+                        Session::CoordinatorLost => return Ok(EXIT_COORDINATOR_LOST),
+                    }
                 }
             }
             Msg::Done => return Ok(EXIT_OK),
@@ -158,15 +239,121 @@ pub fn worker_main(run_dir: &Path, rank: u32) -> Result<i32> {
     }
 }
 
+enum Session {
+    Ready(FramedStream),
+    PlanMismatch,
+    CoordinatorLost,
+}
+
+/// Establish (or re-establish) a verified session: connect to the socket
+/// currently named by the run dir's pointer file, `Hello`, and check the
+/// coordinator's `Plan` against the locally rebuilt one. Retries with
+/// jittered backoff (salted by rank, so a herd of workers reconnecting
+/// to a restarted coordinator spreads out) for as long as the
+/// coordinator's heartbeat stays fresh.
+fn open_session(
+    run_dir: &Path,
+    rank: u32,
+    op_deadline: Duration,
+    poll: Duration,
+    coord: &mut LeaseMonitor,
+    expect_waves: u64,
+    my_hash: u64,
+) -> Result<Session> {
+    let mut backoff = Backoff::for_transport_jittered(rank as u64 + 1);
+    loop {
+        if coord.check().is_stale() {
+            log::warn!("worker {rank}: coordinator heartbeat stale; giving up connecting");
+            return Ok(Session::CoordinatorLost);
+        }
+        // Re-read the socket path every attempt: a resumed coordinator
+        // binds a fresh socket and rewrites the pointer file.
+        let Ok(socket) = std::fs::read_to_string(run_dir.join("socket")) else {
+            std::thread::sleep(backoff.step());
+            continue;
+        };
+        let connect_deadline = Instant::now() + poll.max(Duration::from_millis(100));
+        let Ok(mut stream) =
+            FramedStream::connect(Path::new(socket.trim()), op_deadline, connect_deadline)
+        else {
+            std::thread::sleep(backoff.step());
+            continue;
+        };
+        if stream.send(&Msg::Hello { rank }).is_err() {
+            std::thread::sleep(backoff.step());
+            continue;
+        }
+        match recv_alive(&mut stream, coord, poll)? {
+            Reply::Msg(Msg::Plan { waves, table_hash: their_hash }) => {
+                if waves != expect_waves || their_hash != my_hash {
+                    // Diverged plan → generating anything would produce
+                    // wrong bytes. Tell the coordinator and stop.
+                    let _ = stream.send(&Msg::Abort {
+                        reason: format!(
+                            "plan mismatch: coordinator ({waves} waves, {their_hash:016x}) vs \
+                             worker {rank} ({expect_waves} waves, {my_hash:016x})"
+                        ),
+                    });
+                    return Ok(Session::PlanMismatch);
+                }
+                return Ok(Session::Ready(stream));
+            }
+            Reply::Msg(Msg::Abort { reason }) => {
+                log::warn!("worker {rank}: coordinator aborted: {reason}");
+                return Ok(Session::PlanMismatch);
+            }
+            Reply::Msg(other) => anyhow::bail!("worker {rank}: expected Plan, got {other:?}"),
+            Reply::Torn => {
+                std::thread::sleep(backoff.step());
+                continue;
+            }
+            Reply::CoordinatorLost => return Ok(Session::CoordinatorLost),
+        }
+    }
+}
+
+/// [`open_session`] + resend of the last unacknowledged result. The
+/// resend may race a survivor's regeneration of the same wave — the
+/// coordinator deduplicates, and the bytes are identical either way.
+#[allow(clippy::too_many_arguments)]
+fn reattach(
+    run_dir: &Path,
+    rank: u32,
+    op_deadline: Duration,
+    poll: Duration,
+    coord: &mut LeaseMonitor,
+    expect_waves: u64,
+    my_hash: u64,
+    last_result: Option<&Msg>,
+) -> Result<Session> {
+    log::warn!("worker {rank}: connection torn; reconnecting");
+    match open_session(run_dir, rank, op_deadline, poll, coord, expect_waves, my_hash)? {
+        Session::Ready(mut s) => {
+            crate::obs::metrics::counter("cluster.worker_reconnects").inc();
+            if let Some(r) = last_result {
+                // If this send tears too, the caller's next send fails
+                // and lands back here — no progress is lost.
+                let _ = s.send(r);
+            }
+            Ok(Session::Ready(s))
+        }
+        other => Ok(other),
+    }
+}
+
 enum Reply {
     Msg(Msg),
+    /// The connection is gone (EOF or a corrupt inbound frame) but the
+    /// coordinator's heartbeat was fresh at the last check — reconnect.
+    Torn,
     CoordinatorLost,
 }
 
 /// Receive the next message, interleaving coordinator-liveness checks on
-/// every idle poll slice: socket EOF *or* a frozen `hb-coordinator` beat
-/// both resolve to `CoordinatorLost` so the worker exits within its
-/// lease instead of hanging on a silent peer.
+/// every idle poll slice: a frozen `hb-coordinator` beat resolves to
+/// `CoordinatorLost` so the worker exits within its lease instead of
+/// hanging on a silent peer, while a mere connection tear (EOF, or an
+/// inbound frame failing its CRC) resolves to `Torn` for reconnect.
 fn recv_alive(
     stream: &mut FramedStream,
     coord: &mut LeaseMonitor,
@@ -182,8 +369,19 @@ fn recv_alive(
                 }
             }
             Err(MailboxError::Disconnected(e)) => {
-                log::warn!("coordinator connection lost ({e}); exiting");
-                return Ok(Reply::CoordinatorLost);
+                if coord.check().is_stale() {
+                    log::warn!("coordinator connection lost ({e}) and heartbeat stale; exiting");
+                    return Ok(Reply::CoordinatorLost);
+                }
+                log::warn!("connection torn ({e}); will reconnect");
+                return Ok(Reply::Torn);
+            }
+            Err(MailboxError::Corrupt(e)) => {
+                // Inbound bytes failed their CRC: this connection cannot
+                // be trusted any further in either direction.
+                stream.shutdown();
+                log::warn!("corrupt inbound frame ({e}); will reconnect");
+                return Ok(Reply::Torn);
             }
         }
     }

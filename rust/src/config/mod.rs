@@ -98,6 +98,18 @@ pub struct RunConfig {
     pub lease_ms: u64,
     /// Per-operation transport deadline (connect, send, mid-frame recv).
     pub op_deadline_ms: u64,
+    /// Coordinator checkpoint period in emitted waves (0 = off): every N
+    /// emitted waves the coordinator persists a durable checkpoint under
+    /// the run dir so a killed coordinator can `--resume` byte-identically.
+    pub checkpoint_waves: u64,
+    /// Replacement `gg-worker` spawns allowed per rank before the rank is
+    /// abandoned (its waves still migrate to surviving ranks).
+    pub respawn_budget: u32,
+    /// Deterministic chaos seed (0 = off): workers draw seeded fault
+    /// schedules (kills, stalls, frame corruption, heartbeat freezes).
+    /// Rides in the shared config.json so every process replays the same
+    /// schedule; `GG_CHAOS_SEED` overrides.
+    pub chaos: u64,
 }
 
 impl Default for RunConfig {
@@ -138,6 +150,9 @@ impl Default for RunConfig {
             heartbeat_ms: 200,
             lease_ms: 2000,
             op_deadline_ms: 10_000,
+            checkpoint_waves: 0,
+            respawn_budget: 2,
+            chaos: 0,
         }
     }
 }
@@ -206,6 +221,9 @@ impl RunConfig {
             "heartbeat_ms" => self.heartbeat_ms = p(value, key)?,
             "lease_ms" => self.lease_ms = p(value, key)?,
             "op_deadline_ms" => self.op_deadline_ms = p(value, key)?,
+            "checkpoint_waves" => self.checkpoint_waves = p(value, key)?,
+            "respawn_budget" => self.respawn_budget = p(value, key)?,
+            "chaos" => self.chaos = p(value, key)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -248,6 +266,7 @@ impl RunConfig {
             init_seed: 0x11,
             curve_every: 10,
             prefetch: self.feature_prefetch,
+            ..Default::default()
         })
     }
 
@@ -288,7 +307,10 @@ impl RunConfig {
             .set("run_dir", self.run_dir.clone())
             .set("heartbeat_ms", self.heartbeat_ms)
             .set("lease_ms", self.lease_ms)
-            .set("op_deadline_ms", self.op_deadline_ms);
+            .set("op_deadline_ms", self.op_deadline_ms)
+            .set("checkpoint_waves", self.checkpoint_waves)
+            .set("respawn_budget", self.respawn_budget as u64)
+            .set("chaos", self.chaos);
         o
     }
 
@@ -429,6 +451,21 @@ mod tests {
         assert_eq!((c.heartbeat_ms, c.lease_ms, c.op_deadline_ms), (100, 1500, 5000));
         assert!(c.apply_override("processes", "many").is_err());
         for key in ["processes", "run_dir", "heartbeat_ms", "lease_ms", "op_deadline_ms"] {
+            assert!(c.to_json().to_pretty().contains(key), "{key} missing from json");
+        }
+    }
+
+    #[test]
+    fn recovery_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!((c.checkpoint_waves, c.respawn_budget, c.chaos), (0, 2, 0));
+        c.apply_override("checkpoint_waves", "4").unwrap();
+        c.apply_override("respawn_budget", "3").unwrap();
+        c.apply_override("chaos", "12345").unwrap();
+        assert_eq!((c.checkpoint_waves, c.respawn_budget, c.chaos), (4, 3, 12345));
+        assert!(c.apply_override("checkpoint_waves", "often").is_err());
+        assert!(c.apply_override("respawn_budget", "-1").is_err());
+        for key in ["checkpoint_waves", "respawn_budget", "chaos"] {
             assert!(c.to_json().to_pretty().contains(key), "{key} missing from json");
         }
     }

@@ -14,7 +14,9 @@
 
 use anyhow::{Context, Result};
 use graphgen_plus::cli::{flag, opt, App, CliError, CommandSpec, Parsed};
-use graphgen_plus::cluster::proc::{run_coordinator, worker_main, DistOptions, DistPlan};
+use graphgen_plus::cluster::proc::{
+    run_coordinator_with, worker_main, Checkpoint, ConsumerCut, DistOptions, DistPlan, WaveBytes,
+};
 use graphgen_plus::config::RunConfig;
 use graphgen_plus::engines::{self, EncodeSink, NullSink};
 use graphgen_plus::featurestore::{BackendKind, FeatureService, HotCache, ShardedStore, TieredStore};
@@ -59,6 +61,10 @@ fn common_opts() -> Vec<graphgen_plus::cli::OptSpec> {
         opt("heartbeat-ms", "distributed heartbeat period (ms)", None),
         opt("lease-ms", "liveness lease before a silent worker is declared lost (ms)", None),
         opt("op-deadline-ms", "distributed transport per-op deadline (ms)", None),
+        opt("checkpoint-waves", "coordinator checkpoint period in emitted waves (0=off)", None),
+        opt("respawn-budget", "replacement worker spawns allowed per lost rank", None),
+        opt("chaos", "deterministic fault-injection seed (0=off; GG_CHAOS_SEED overrides)", None),
+        flag("resume", "resume a distributed run from the checkpoint in --run-dir"),
         flag("dump-config", "print the effective config and exit"),
     ]
 }
@@ -239,20 +245,59 @@ fn cmd_generate_distributed(cfg: &RunConfig, p: &Parsed) -> Result<()> {
     let g = gen.csr();
     log::info!("graph {}: {} nodes, {} edges", gen.name, g.num_nodes(), g.num_edges());
     let plan = DistPlan::from_config(&dcfg, g.num_nodes())?;
-    let opts = DistOptions::from_config(&dcfg, worker_bin()?);
-    let mut out = match p.get("subgraph-bytes-out") {
-        Some(path) => Some(std::io::BufWriter::new(
-            std::fs::File::create(path).with_context(|| format!("create {path}"))?,
-        )),
+    let mut opts = DistOptions::from_config(&dcfg, worker_bin()?);
+    let mut base_bytes = 0u64;
+    if p.flag("resume") {
+        anyhow::ensure!(
+            !dcfg.run_dir.is_empty(),
+            "--resume needs the original --run-dir (a fresh temp dir has no checkpoint)"
+        );
+        let ck = Checkpoint::load(&opts.run_dir)?
+            .with_context(|| format!("no checkpoint under {}", opts.run_dir.display()))?;
+        base_bytes = ck.emitted_bytes;
+        opts.resume_from = Some(ck);
+    }
+    let out = match p.get("subgraph-bytes-out") {
+        Some(path) => {
+            use std::io::Seek;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .write(true)
+                .open(path)
+                .with_context(|| format!("create {path}"))?;
+            // On resume, drop everything past the checkpointed cut and
+            // append from there; a fresh run starts empty.
+            f.set_len(base_bytes)?;
+            f.seek(std::io::SeekFrom::End(0))?;
+            Some(std::io::BufWriter::new(f))
+        }
         None => None,
     };
-    let report = run_coordinator(&plan, &opts, |wb| {
-        if let Some(w) = out.as_mut() {
+    let out = std::cell::RefCell::new(out);
+    let written = std::cell::Cell::new(base_bytes);
+    let mut emit = |wb: WaveBytes| -> Result<()> {
+        if let Some(w) = out.borrow_mut().as_mut() {
             std::io::Write::write_all(w, &wb.bytes)?;
         }
+        written.set(written.get() + wb.bytes.len() as u64);
         Ok(())
-    })?;
-    if let Some(w) = out.as_mut() {
+    };
+    // Checkpoint cut for the generate path: every emitted wave is already
+    // consumed (written out), so the cut sits at the emit frontier and the
+    // byte offset tells `--resume` where to truncate the dump.
+    let mut snapshot = |frontier: u64| -> Result<ConsumerCut> {
+        if let Some(w) = out.borrow_mut().as_mut() {
+            std::io::Write::flush(w)?;
+        }
+        Ok(ConsumerCut {
+            resume_wave: frontier,
+            skip_subgraphs: 0,
+            emitted_bytes: written.get(),
+            payload: Vec::new(),
+        })
+    };
+    let report = run_coordinator_with(&plan, &opts, &mut emit, Some(&mut snapshot))?;
+    if let Some(w) = out.borrow_mut().as_mut() {
         std::io::Write::flush(w)?;
     }
     println!("{}", report.render());
@@ -450,10 +495,20 @@ fn cmd_pipeline(p: &Parsed) -> Result<()> {
         }
         dcfg.fanout = format!("{},{}", spec.f1, spec.f2);
         let dplan = DistPlan::from_config(&dcfg, g.num_nodes())?;
-        let dopts = DistOptions::from_config(&dcfg, worker_bin()?);
+        let mut dopts = DistOptions::from_config(&dcfg, worker_bin()?);
+        if p.flag("resume") {
+            anyhow::ensure!(
+                !dcfg.run_dir.is_empty(),
+                "--resume needs the original --run-dir (a fresh temp dir has no checkpoint)"
+            );
+            let ck = Checkpoint::load(&dopts.run_dir)?
+                .with_context(|| format!("no checkpoint under {}", dopts.run_dir.display()))?;
+            dopts.resume_from = Some(ck);
+        }
         let report =
             run_pipeline_distributed(&dplan, &dopts, &features, &runtime, &cfg.train_config()?)?;
         println!("{}", report.render());
+        std::fs::write(dopts.run_dir.join("dist_report.json"), report.dist.to_json().to_pretty())?;
         report.train
     } else {
         let report = run_pipeline(

@@ -8,14 +8,16 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::cluster::proc::{run_coordinator, DistOptions, DistPlan, DistReport};
+use crate::cluster::proc::{
+    run_coordinator_with, ConsumerCut, DistOptions, DistPlan, DistReport, WaveBytes,
+};
 use crate::cluster::FabricStats;
 use crate::engines::{EngineConfig, GenReport, SubgraphEngine};
 use crate::featurestore::FeatureService;
 use crate::graph::csr::Csr;
 use crate::graph::NodeId;
 use crate::sampler::Subgraph;
-use crate::train::trainer::{train, TrainConfig, TrainReport};
+use crate::train::trainer::{train, TrainConfig, TrainReport, TrainState};
 use crate::train::ModelRuntime;
 use crate::util::timer::Stopwatch;
 
@@ -348,6 +350,14 @@ impl DistPipelineReport {
 /// the in-process emission order — into the training queue. Because the
 /// stream is byte-identical to the single-process oracle, the loss curve
 /// is too.
+///
+/// Checkpoint/restart: when `opts.checkpoint_waves` is set, the
+/// coordinator's snapshot hook cuts at the trainer's last *completed*
+/// iteration — the published [`TrainState`] rides in the checkpoint
+/// payload, and the cut wave + skip count locate the exact subgraph the
+/// resumed trainer needs next. A run resumed from `opts.resume_from`
+/// drops the already-trained prefix of the first re-emitted wave and
+/// finishes with the loss curve byte-identical to an uninterrupted run.
 pub fn run_pipeline_distributed(
     plan: &DistPlan,
     opts: &DistOptions,
@@ -358,16 +368,75 @@ pub fn run_pipeline_distributed(
     let wall = Stopwatch::new();
     let cap = default_queue_cap(tcfg, runtime.meta().spec.batch);
     let queue = BoundedQueue::<Subgraph>::new(cap);
+    let group = (tcfg.replicas.max(1) * runtime.meta().spec.batch) as u64;
+
+    let mut tcfg = tcfg.clone();
+    let mut skip = 0u64;
+    let resume_state = match &opts.resume_from {
+        Some(ck) => {
+            skip = ck.skip_subgraphs;
+            let st = if ck.payload.is_empty() {
+                TrainState::default()
+            } else {
+                TrainState::decode(&ck.payload)?
+            };
+            tcfg.resume = Some(st.clone());
+            st
+        }
+        None => TrainState::default(),
+    };
+    // Seeded with the resumed state so a checkpoint taken before the
+    // trainer completes any new iteration still cuts at the old spot.
+    let publish = std::sync::Arc::new(std::sync::Mutex::new(resume_state.clone()));
+    tcfg.publish = Some(publish.clone());
+    let tcfg = &tcfg;
+    // Absolute index of the first subgraph the coordinator will
+    // re-emit: everything the resumed trainer already consumed, minus
+    // the tail of the cut wave it had not finished.
+    let abs_base = (resume_state.iteration * group).saturating_sub(skip);
+
     let (dist, train_report) = std::thread::scope(|scope| -> Result<_> {
         let coord = scope.spawn(|| {
             crate::obs::trace::set_track(crate::obs::trace::Track::Generator);
             let _span = crate::obs::trace::span("generate_distributed");
-            let r = run_coordinator(plan, opts, |wb| {
-                for sg in wb.decode()? {
+            // (next absolute index, subgraphs left to skip, per-wave
+            // (wave, abs start, count)) — shared between the emit path
+            // and the snapshot hook, which both run on this thread.
+            let index = std::cell::RefCell::new((abs_base, skip, Vec::<(u64, u64, u64)>::new()));
+            let mut emit = |wb: WaveBytes| -> Result<()> {
+                let sgs = wb.decode()?;
+                let (abs_next, to_skip, waves) = &mut *index.borrow_mut();
+                waves.push((wb.wave, *abs_next, sgs.len() as u64));
+                *abs_next += sgs.len() as u64;
+                let dropped = (*to_skip).min(sgs.len() as u64);
+                *to_skip -= dropped;
+                for sg in sgs.into_iter().skip(dropped as usize) {
                     anyhow::ensure!(queue.push(sg).is_ok(), "training queue closed early");
                 }
                 Ok(())
-            });
+            };
+            let mut snapshot = |frontier: u64| -> Result<ConsumerCut> {
+                let st = publish.lock().unwrap().clone();
+                let (_, _, waves) = &*index.borrow();
+                // The trainer consumed `iteration × group` subgraphs;
+                // find the emitted wave containing that boundary. All
+                // consumed → cut at the emit frontier.
+                let consumed = st.iteration * group;
+                let mut cut = (frontier, 0u64);
+                for &(w, start, count) in waves.iter() {
+                    if consumed < start + count {
+                        cut = (w, consumed.saturating_sub(start));
+                        break;
+                    }
+                }
+                Ok(ConsumerCut {
+                    resume_wave: cut.0,
+                    skip_subgraphs: cut.1,
+                    emitted_bytes: 0,
+                    payload: st.encode(),
+                })
+            };
+            let r = run_coordinator_with(plan, opts, &mut emit, Some(&mut snapshot));
             queue.close(); // close even on error so the trainer exits
             r
         });

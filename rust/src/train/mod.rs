@@ -24,3 +24,4 @@ pub mod trainer;
 
 pub use meta::ModelMeta;
 pub use runtime::ModelRuntime;
+pub use trainer::{TrainConfig, TrainReport, TrainState};

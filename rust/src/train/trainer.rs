@@ -15,6 +15,7 @@
 //! training on iteration t ([`crate::featurestore::prefetch`]).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -41,6 +42,14 @@ pub struct TrainConfig {
     pub curve_every: u64,
     /// Materialize batch t+1's features while batch t trains.
     pub prefetch: bool,
+    /// Resume from a mid-run snapshot: parameters, loss history and
+    /// counters carry over so the finished run is byte-identical to an
+    /// uninterrupted one (coordinator checkpoint/restart).
+    pub resume: Option<TrainState>,
+    /// After every applied iteration, worker 0 publishes the full
+    /// [`TrainState`] here; the coordinator's checkpoint hook snapshots
+    /// it to cut the resume point at a consumed-iteration boundary.
+    pub publish: Option<Arc<Mutex<TrainState>>>,
 }
 
 impl Default for TrainConfig {
@@ -52,7 +61,98 @@ impl Default for TrainConfig {
             init_seed: 0x11,
             curve_every: 10,
             prefetch: false,
+            resume: None,
+            publish: None,
         }
+    }
+}
+
+/// A bit-exact mid-run snapshot of the training loop, taken at a
+/// synchronous iteration boundary (where all replicas hold identical
+/// parameters by construction).
+///
+/// The distributed pipeline serializes this into the coordinator
+/// checkpoint payload ([`crate::cluster::proc::ConsumerCut`]); on
+/// `--resume` the trainer restarts from it and the finished run's loss
+/// curve, counters and parameters are byte-identical to an
+/// uninterrupted run — f32s round-trip through raw little-endian bits,
+/// so no precision is lost in the encode/decode cycle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrainState {
+    /// Completed synchronous iterations.
+    pub iteration: u64,
+    /// Cumulative subgraphs consumed by those iterations.
+    pub subgraphs_trained: u64,
+    /// Cumulative sampled node slots consumed by those iterations.
+    pub nodes_trained: u64,
+    /// Per-iteration global mean loss, from iteration 1.
+    pub losses: Vec<f32>,
+    /// Per-iteration mean training accuracy.
+    pub accs: Vec<f32>,
+    /// Model parameters after `iteration` applied updates.
+    pub params: Vec<Vec<f32>>,
+}
+
+impl TrainState {
+    /// Serialize as little-endian binary (checkpoint payload).
+    pub fn encode(&self) -> Vec<u8> {
+        fn w64(out: &mut Vec<u8>, v: u64) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        fn wf32s(out: &mut Vec<u8>, v: &[f32]) {
+            w64(out, v.len() as u64);
+            for &f in v {
+                out.extend_from_slice(&f.to_le_bytes());
+            }
+        }
+        let mut out = Vec::new();
+        w64(&mut out, self.iteration);
+        w64(&mut out, self.subgraphs_trained);
+        w64(&mut out, self.nodes_trained);
+        wf32s(&mut out, &self.losses);
+        wf32s(&mut out, &self.accs);
+        w64(&mut out, self.params.len() as u64);
+        for layer in &self.params {
+            wf32s(&mut out, layer);
+        }
+        out
+    }
+
+    /// Inverse of [`TrainState::encode`]; bit-exact for every f32.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        fn r64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+            let s = buf.get(*pos..*pos + 8).context("train state truncated")?;
+            *pos += 8;
+            Ok(u64::from_le_bytes(s.try_into().unwrap()))
+        }
+        fn rf32s(buf: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
+            let n = r64(buf, pos)? as usize;
+            anyhow::ensure!(
+                n <= buf.len().saturating_sub(*pos) / 4,
+                "train state length field corrupt"
+            );
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let s = buf.get(*pos..*pos + 4).context("train state truncated")?;
+                *pos += 4;
+                v.push(f32::from_le_bytes(s.try_into().unwrap()));
+            }
+            Ok(v)
+        }
+        let mut pos = 0usize;
+        let iteration = r64(buf, &mut pos)?;
+        let subgraphs_trained = r64(buf, &mut pos)?;
+        let nodes_trained = r64(buf, &mut pos)?;
+        let losses = rf32s(buf, &mut pos)?;
+        let accs = rf32s(buf, &mut pos)?;
+        let layers = r64(buf, &mut pos)? as usize;
+        anyhow::ensure!(layers <= 1 << 20, "train state layer count corrupt");
+        let mut params = Vec::with_capacity(layers);
+        for _ in 0..layers {
+            params.push(rf32s(buf, &mut pos)?);
+        }
+        anyhow::ensure!(pos == buf.len(), "trailing bytes in train state");
+        Ok(Self { iteration, subgraphs_trained, nodes_trained, losses, accs, params })
     }
 }
 
@@ -151,6 +251,14 @@ pub fn train(
     let fetch_before = features.stats();
     let batch_before = features.batch_reuse();
 
+    let base = cfg.resume.clone().unwrap_or_default();
+    // Cumulative (subgraphs, nodes) totals at each iteration boundary,
+    // recorded by the dispatcher *before* batches are handed out so
+    // worker 0 can publish exact consumption alongside its snapshot.
+    // Entry k = totals after iteration `base.iteration + k + 1`.
+    let node_cap = (1 + spec.f1 + spec.f1 * spec.f2) as u64;
+    let dispatched: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+
     // Per-worker batch channels (bounded by rendezvous: dispatcher sends
     // one batch per worker per iteration).
     let mut batch_txs: Vec<Sender<Vec<Subgraph>>> = Vec::with_capacity(r);
@@ -182,6 +290,8 @@ pub fn train(
         for (worker, (coll, rx)) in collectives.into_iter().zip(batch_rxs).enumerate() {
             let runtime = runtime.clone();
             let cfg = cfg.clone();
+            let base = base.clone();
+            let dispatched = dispatched.clone();
             // Batch materialization: overlapped on a prefetch thread, or
             // inline on the worker thread.
             let feed = if cfg.prefetch {
@@ -199,9 +309,20 @@ pub fn train(
             joins.push(scope.spawn(move || -> Result<WorkerOut> {
                 crate::obs::trace::set_track(crate::obs::trace::Track::Trainer(worker as u16));
                 let store = ParamStore::init(runtime.meta(), cfg.init_seed);
-                let mut params = store.params.clone();
+                let mut params = if base.params.is_empty() {
+                    store.params.clone()
+                } else {
+                    base.params.clone()
+                };
                 let mut out = WorkerOut::default();
-                let mut iter = 0u64;
+                let mut iter = base.iteration;
+                if worker == 0 {
+                    // Pre-load the resumed history so the loss curve and
+                    // accuracy tail come out identical to an
+                    // uninterrupted run.
+                    out.losses = base.losses.clone();
+                    out.accs = base.accs.clone();
+                }
                 while let Some(next) = feed.next(features) {
                     let _step_span =
                         crate::obs::trace::span("train.step").arg("iter", iter as f64);
@@ -225,9 +346,24 @@ pub fn train(
                     iter += 1;
                     out.losses.push(mean_loss);
                     out.accs.push(mean_correct / spec.batch as f32);
-                    let _ = iter;
                     if worker == 0 {
                         log::debug!(target: "train", "iter {iter}: loss {mean_loss:.4}");
+                        if let Some(publish) = &cfg.publish {
+                            let ix = (iter - base.iteration - 1) as usize;
+                            let (subs, nodes) = dispatched
+                                .lock()
+                                .unwrap()
+                                .get(ix)
+                                .copied()
+                                .unwrap_or((0, 0));
+                            let mut st = publish.lock().unwrap();
+                            st.iteration = iter;
+                            st.subgraphs_trained = subs;
+                            st.nodes_trained = nodes;
+                            st.losses.clone_from(&out.losses);
+                            st.accs.clone_from(&out.accs);
+                            st.params.clone_from(&params);
+                        }
                     }
                 }
                 out.params = params;
@@ -244,6 +380,19 @@ pub fn train(
                 Some(sg) => {
                     pending.push(sg);
                     if pending.len() == group_size {
+                        {
+                            let mut d = dispatched.lock().unwrap();
+                            let (mut subs, mut nodes) = d
+                                .last()
+                                .copied()
+                                .unwrap_or((base.subgraphs_trained, base.nodes_trained));
+                            subs += group_size as u64;
+                            nodes += pending
+                                .iter()
+                                .map(|sg| sg.num_nodes().min(node_cap))
+                                .sum::<u64>();
+                            d.push((subs, nodes));
+                        }
                         for tx in &batch_txs {
                             let batch: Vec<Subgraph> = pending.drain(..batch_size).collect();
                             tx.send(batch).map_err(|_| anyhow::anyhow!("worker died"))?;
@@ -289,6 +438,11 @@ pub fn train(
                 report.params = out.params;
             }
         }
+        // Fold in the resumed prefix once (not per worker) so counters
+        // match an uninterrupted run exactly.
+        report.iterations += base.iteration;
+        report.subgraphs_trained += base.subgraphs_trained;
+        report.nodes_trained += base.nodes_trained;
         Ok(())
     })?;
 
@@ -401,6 +555,81 @@ mod tests {
         .unwrap();
         assert_eq!(report.iterations, 1);
         assert_eq!(report.subgraphs_dropped as usize, group / 2);
+        runtime.shutdown();
+    }
+
+    /// Snapshot serialization must round-trip every f32 bit-exactly and
+    /// reject truncated or over-long buffers with typed errors.
+    #[test]
+    fn train_state_roundtrip_is_bit_exact() {
+        let st = TrainState {
+            iteration: 7,
+            subgraphs_trained: 224,
+            nodes_trained: 9000,
+            losses: vec![1.5, f32::MIN_POSITIVE, -0.0, 3.25e-7],
+            accs: vec![0.5, 0.75],
+            params: vec![vec![1.0, -2.5], vec![], vec![0.1]],
+        };
+        let rt = TrainState::decode(&st.encode()).unwrap();
+        assert_eq!(rt, st);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&rt.losses), bits(&st.losses));
+        assert_eq!(rt.losses[2].to_bits(), (-0.0f32).to_bits());
+        let mut bytes = st.encode();
+        assert!(TrainState::decode(&bytes[..bytes.len() - 1]).is_err());
+        bytes.push(0);
+        assert!(TrainState::decode(&bytes).is_err(), "trailing bytes must be rejected");
+        let default = TrainState::default();
+        assert_eq!(TrainState::decode(&default.encode()).unwrap(), default);
+    }
+
+    /// Killing a run at an iteration boundary and resuming from the
+    /// published snapshot must reproduce the uninterrupted run exactly:
+    /// same loss curve, counters, and parameter bits.
+    #[test]
+    fn resume_mid_run_is_bit_identical() {
+        let Some(dir) = artifacts_dir() else { return };
+        let runtime = ModelRuntime::load(&dir, 1).unwrap();
+        let spec = runtime.meta().spec;
+        let sg = |i: u32| Subgraph { seed: i % 53, hop1: vec![i % 11], hop2: vec![vec![]] };
+        let group = spec.batch * 2;
+        let total = (group * 6) as u32;
+        let run = |lo: u32, hi: u32, cfg: TrainConfig| {
+            let features =
+                FeatureService::procedural(FeatureStore::hashed(spec.dim, spec.classes as u32, 7));
+            let queue = BoundedQueue::new(1024);
+            for i in lo..hi {
+                queue.push(sg(i)).unwrap();
+            }
+            queue.close();
+            train(&runtime, &features, &queue, &cfg).unwrap()
+        };
+        let base_cfg = TrainConfig { replicas: 2, curve_every: 1, ..Default::default() };
+        let full = run(0, total, base_cfg.clone());
+
+        // First half, publishing the snapshot each iteration…
+        let publish = Arc::new(Mutex::new(TrainState::default()));
+        run(
+            0,
+            (group * 3) as u32,
+            TrainConfig { publish: Some(publish.clone()), ..base_cfg.clone() },
+        );
+        let snap = publish.lock().unwrap().clone();
+        assert_eq!(snap.iteration, 3);
+        assert_eq!(snap.subgraphs_trained, (group * 3) as u64);
+        assert!(snap.nodes_trained > 0);
+
+        // …then resume through the serialized form over the second half.
+        let snap = TrainState::decode(&snap.encode()).unwrap();
+        let resumed =
+            run((group * 3) as u32, total, TrainConfig { resume: Some(snap), ..base_cfg });
+        assert_eq!(resumed.iterations, full.iterations);
+        assert_eq!(resumed.subgraphs_trained, full.subgraphs_trained);
+        assert_eq!(resumed.nodes_trained, full.nodes_trained);
+        assert_eq!(resumed.loss_curve, full.loss_curve);
+        assert_eq!(resumed.params, full.params);
+        assert_eq!(resumed.final_loss.to_bits(), full.final_loss.to_bits());
+        assert_eq!(resumed.accuracy.to_bits(), full.accuracy.to_bits());
         runtime.shutdown();
     }
 

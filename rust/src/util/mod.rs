@@ -7,6 +7,7 @@
 //! for.
 
 pub mod bytes;
+pub mod crc32;
 pub mod fxhash;
 pub mod json;
 pub mod logging;

@@ -119,6 +119,43 @@ fn node_centric_engine_is_byte_identical_too() {
 }
 
 #[test]
+fn checkpoint_cadence_writes_and_compacts() {
+    // --checkpoint-waves 2 over 8 waves → checkpoints at emission
+    // frontiers 2, 4, 6 (never at the final wave). Each checkpoint must
+    // decode, carry the plan identity, and compact the ledger behind a
+    // `K` marker — without perturbing the emitted bytes.
+    let cfg = small_config();
+    let oracle = oracle_bytes(&cfg);
+
+    let dir = run_dir("ckpt");
+    let mut opts = DistOptions::new(2, dir.clone(), worker_bin());
+    opts.checkpoint_waves = 2;
+    let (bytes, report) = dist_bytes(&cfg, &opts);
+    assert_eq!(bytes, oracle, "checkpointing changed the emitted bytes");
+    assert_eq!(report.checkpoints_written, 3, "{report:?}");
+    assert!(report.checkpoint_ms >= 0.0);
+
+    let g = generator::from_spec(&cfg.graph, cfg.graph_seed).unwrap().csr();
+    let plan = DistPlan::from_config(&cfg, g.num_nodes()).unwrap();
+    let ck = graphgen_plus::cluster::proc::Checkpoint::load(&dir).unwrap().unwrap();
+    assert_eq!(ck.seq, 3);
+    assert_eq!(ck.next_emit, 6);
+    assert_eq!(ck.resume_wave, 6); // no snapshot hook → cut at the frontier
+    assert_eq!(ck.table_hash, plan.table_hash);
+    assert_eq!(ck.config_hash, plan.config_hash());
+    assert_eq!(ck.total_waves, 8);
+
+    // Compaction kept the K markers and every done record.
+    let text = std::fs::read_to_string(dir.join("waves.ledger")).unwrap();
+    assert_eq!(text.lines().filter(|l| l.starts_with("K ")).count(), 3, "{text}");
+    let (claimed, done) =
+        graphgen_plus::cluster::proc::ledger::replay(&dir.join("waves.ledger")).unwrap();
+    assert!(claimed.is_empty());
+    assert_eq!(done.len(), 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn distributed_pipeline_matches_oracle_loss_curve() {
     use graphgen_plus::featurestore::FeatureService;
     use graphgen_plus::graph::features::FeatureStore;
@@ -169,9 +206,13 @@ fn distributed_pipeline_matches_oracle_loss_curve() {
     .unwrap();
 
     // Distributed: 2 worker processes streaming into the same trainer.
+    // Checkpointing every wave exercises the trainer's consumer-cut
+    // snapshot (TrainState publish/encode) on the hot path — it must not
+    // perturb the training stream.
     let dir = run_dir("pipe");
     let plan = DistPlan::from_config(&cfg, g.num_nodes()).unwrap();
-    let opts = DistOptions::new(2, dir.clone(), worker_bin());
+    let mut opts = DistOptions::new(2, dir.clone(), worker_bin());
+    opts.checkpoint_waves = 1;
     let dist = run_pipeline_distributed(&plan, &opts, &features, &runtime, &tcfg).unwrap();
 
     // Same subgraph stream → same batches → same loss curve.
@@ -185,6 +226,9 @@ fn distributed_pipeline_matches_oracle_loss_curve() {
     );
     assert_eq!(dist.train.loss_curve, conc.train.loss_curve);
     assert_eq!(dist.dist.workers_lost, 0);
+    if dist.dist.waves > 1 {
+        assert!(dist.dist.checkpoints_written >= 1, "{:?}", dist.dist);
+    }
     runtime.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -177,6 +177,9 @@ fn sigkilled_worker_mid_wave_recovers_byte_identically() {
     opts.lease = Duration::from_millis(500);
     opts.fault_kill_rank = Some(1);
     opts.fault_kill_after_claims = 0;
+    // Budget 0 pins graceful *degradation*: no replacement is spawned,
+    // the survivors must absorb the dead rank's waves.
+    opts.respawn_budget = 0;
     opts.worker_env = vec![("GG_FAULT_SLOW_WAVE_MS".into(), "200".into())];
 
     let mut bytes = Vec::new();
@@ -229,6 +232,7 @@ fn frozen_worker_lease_expires_and_run_recovers() {
     let mut opts = DistOptions::new(2, dir.clone(), worker_bin());
     opts.heartbeat = Duration::from_millis(50);
     opts.lease = Duration::from_millis(400);
+    opts.respawn_budget = 0; // degradation path, not respawn
     // Slow waves keep the run alive long enough for the freeze to land
     // mid-run (8 waves x >=150ms over 2 workers >= 600ms of runtime).
     opts.worker_env = vec![("GG_FAULT_SLOW_WAVE_MS".into(), "150".into())];
@@ -362,6 +366,211 @@ fn workers_exit_cleanly_when_coordinator_is_sigkilled() {
         }
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// In-process oracle bytes for `cfg`: the reference every recovery path
+/// must reproduce exactly.
+fn oracle_for(cfg: &RunConfig) -> Vec<u8> {
+    let g = generator::from_spec(&cfg.graph, cfg.graph_seed).unwrap().csr();
+    let seeds = cfg.seeds(g.num_nodes());
+    let sink = EncodeSink::default();
+    by_name(&cfg.engine)
+        .unwrap()
+        .generate(&g, &seeds, &cfg.engine_config().unwrap(), &sink)
+        .unwrap();
+    sink.into_bytes()
+}
+
+#[test]
+fn sigkilled_worker_is_respawned_and_rejoins() {
+    // Same in-flight SIGKILL as above, but with respawn budget: the
+    // coordinator must spawn a replacement rank-1 process that rejoins
+    // the same run and pulls real work — not just degrade to survivors.
+    let cfg = RunConfig {
+        graph: "rmat:n=2048,e=16384".into(),
+        num_seeds: 256,
+        wave_size: 32,
+        workers: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    let oracle = oracle_for(&cfg);
+
+    let dir = dist_run_dir("respawn");
+    let g = generator::from_spec(&cfg.graph, cfg.graph_seed).unwrap().csr();
+    let plan = DistPlan::from_config(&cfg, g.num_nodes()).unwrap();
+    let mut opts = DistOptions::new(2, dir.clone(), worker_bin());
+    opts.heartbeat = Duration::from_millis(50);
+    opts.lease = Duration::from_millis(500);
+    opts.respawn_budget = 2;
+    opts.fault_kill_rank = Some(1);
+    opts.fault_kill_after_claims = 0;
+    // Slow waves so the replacement comes up while work remains (claims
+    // are cumulative across respawns, so the kill fires exactly once).
+    opts.worker_env = vec![("GG_FAULT_SLOW_WAVE_MS".into(), "150".into())];
+
+    let mut bytes = Vec::new();
+    let report = run_coordinator(&plan, &opts, |wb| {
+        bytes.extend_from_slice(&wb.bytes);
+        Ok(())
+    })
+    .unwrap();
+
+    assert_eq!(bytes, oracle, "bytes diverged across a worker respawn");
+    assert!(report.workers_lost >= 1, "{report:?}");
+    assert!(report.workers_respawned >= 1, "{report:?}");
+    assert!(
+        report.waves_by_rank[1] >= 1,
+        "the replacement rank never served a wave: {report:?}"
+    );
+    let text = std::fs::read_to_string(dir.join("waves.ledger")).unwrap();
+    assert!(text.lines().any(|l| l.starts_with("S ")), "no respawn marker:\n{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sigkilled_coordinator_resumes_byte_identically() {
+    // The ISSUE-10 acceptance bar: a real CLI coordinator process is
+    // SIGKILLed mid-run after a checkpoint landed; relaunching the exact
+    // same command with `--resume` must finish the run with the dump
+    // file byte-identical to the in-process oracle.
+    let cfg = RunConfig {
+        graph: "rmat:n=2048,e=16384".into(),
+        num_seeds: 512,
+        wave_size: 16,
+        workers: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    let oracle = oracle_for(&cfg);
+
+    let dir = dist_run_dir("resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("subgraphs.bin");
+    let args = |resume: bool| {
+        let mut a: Vec<String> = [
+            "generate",
+            "--graph",
+            "rmat:n=2048,e=16384",
+            "--num-seeds",
+            "512",
+            "--wave-size",
+            "16",
+            "--workers",
+            "4",
+            "--threads",
+            "2",
+            "--processes",
+            "2",
+            "--heartbeat-ms",
+            "50",
+            "--lease-ms",
+            "500",
+            "--checkpoint-waves",
+            "2",
+            "--run-dir",
+            dir.to_str().unwrap(),
+            "--subgraph-bytes-out",
+            out.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        if resume {
+            a.push("--resume".into());
+        }
+        a
+    };
+
+    // First incarnation: slow waves keep it alive until a checkpoint
+    // lands, then SIGKILL — no teardown, workers orphaned mid-wave.
+    let mut first = std::process::Command::new(worker_bin())
+        .args(args(false))
+        .env("GG_FAULT_SLOW_WAVE_MS", "150")
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !dir.join("checkpoint.bin").exists() {
+        assert!(Instant::now() < deadline, "no checkpoint was ever written");
+        assert!(
+            first.try_wait().unwrap().is_none(),
+            "run finished before it could be killed; slow the waves down"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    first.kill().unwrap();
+    first.wait().unwrap();
+
+    // Second incarnation: same command + --resume. It replays the
+    // ledger, force-kills any stale worker pids, truncates the dump to
+    // the checkpointed byte offset, and finishes the run. (No slow
+    // waves: the fault env is not part of the config hash.)
+    let status = std::process::Command::new(worker_bin()).args(args(true)).status().unwrap();
+    assert!(status.success(), "resume run failed: {status:?}");
+
+    let bytes = std::fs::read(&out).unwrap();
+    assert_eq!(bytes.len(), oracle.len(), "resumed dump length diverged from the oracle");
+    assert_eq!(bytes, oracle, "resumed dump diverged from the oracle");
+    let report = std::fs::read_to_string(dir.join("dist_report.json")).unwrap();
+    assert!(report.contains("\"resumed\": true"), "{report}");
+    assert!(report.contains("\"coordinator_resumes\": 1"), "{report}");
+    let text = std::fs::read_to_string(dir.join("waves.ledger")).unwrap();
+    assert!(text.lines().any(|l| l.starts_with("A ")), "no resume marker:\n{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chaos_schedules_recover_byte_identically() {
+    // Three seeded chaos schedules, chosen (by precomputing the fault
+    // hash) to pin three distinct recovery paths:
+    //  - 23: wave 2 is a kill-wave for *both* ranks → guaranteed worker
+    //    abort mid-wave, lease reclaim, respawn;
+    //  - 12 and 30: wave 3 / wave 2 is a corrupt-wave for both ranks →
+    //    guaranteed CRC-rejected frame, torn connection, reconnect and
+    //    resend.
+    // Byte-identity to the oracle must hold under every schedule.
+    let schedules = [(23u64, true, false), (12, false, true), (30, false, true)];
+    for (seed, expect_kill, expect_corrupt) in schedules {
+        let cfg = RunConfig {
+            graph: "rmat:n=2048,e=16384".into(),
+            num_seeds: 256,
+            wave_size: 32,
+            workers: 4,
+            threads: 2,
+            chaos: seed,
+            ..Default::default()
+        };
+        let oracle = oracle_for(&cfg);
+
+        let dir = dist_run_dir(&format!("chaos{seed}"));
+        let g = generator::from_spec(&cfg.graph, cfg.graph_seed).unwrap().csr();
+        let plan = DistPlan::from_config(&cfg, g.num_nodes()).unwrap();
+        let mut opts = DistOptions::new(2, dir.clone(), worker_bin());
+        opts.heartbeat = Duration::from_millis(50);
+        opts.lease = Duration::from_millis(500);
+        opts.respawn_budget = 6;
+        opts.checkpoint_waves = 3;
+
+        let mut bytes = Vec::new();
+        let report = run_coordinator(&plan, &opts, |wb| {
+            bytes.extend_from_slice(&wb.bytes);
+            Ok(())
+        })
+        .unwrap();
+
+        assert_eq!(bytes, oracle, "chaos seed {seed} diverged from the oracle: {report:?}");
+        assert!(report.checkpoints_written >= 1, "seed {seed}: {report:?}");
+        if expect_kill {
+            assert!(report.workers_lost >= 1, "seed {seed}: {report:?}");
+            assert!(report.workers_respawned >= 1, "seed {seed}: {report:?}");
+        }
+        if expect_corrupt {
+            assert!(report.frames_corrupted >= 1, "seed {seed}: {report:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 #[test]
